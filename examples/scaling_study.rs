@@ -1,0 +1,30 @@
+//! Scaling study on the simulated Fugaku: sweeps the optimization ladder
+//! (Fig 9) and weak scaling (Fig 10) in one run — a compact view of every
+//! coordination contribution of the paper working together.
+//!
+//! ```sh
+//! cargo run --release --example scaling_study
+//! ```
+
+use dplr::config::MachineConfig;
+use dplr::experiments::{fig10_weak, fig9_stepopt};
+use dplr::perfmodel::CostTable;
+
+fn main() {
+    let machine = MachineConfig::default();
+    let cost = CostTable::default();
+
+    for (nodes, dims, rep) in fig9_stepopt::paper_configs() {
+        let stages = fig9_stepopt::run(dims, rep, &cost, &machine);
+        fig9_stepopt::print_stages(nodes, &stages);
+        let last = stages.last().unwrap();
+        println!(
+            "=> {nodes} nodes fully optimized: {:.2} ms/step, {:.1}x vs baseline\n",
+            1e3 * last.breakdown.total(),
+            last.speedup_vs_baseline
+        );
+    }
+
+    let pts = fig10_weak::run(&cost, &machine);
+    fig10_weak::print_points(&pts);
+}

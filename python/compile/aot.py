@@ -1,0 +1,178 @@
+"""AOT export: lower the L2 model to HLO **text** artifacts for the rust L3.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  dp_ef_{N}_{dt}.hlo.txt   (coords, box, nlist)        -> (E_sr, F_sr)
+  dw_fwd_{N}_{dt}.hlo.txt  (coords, box, nlist_o)      -> (delta,)
+  dw_vjp_{N}_{dt}.hlo.txt  (coords, box, nlist_o, fwc) -> (delta, f_contrib)
+  weights.json             all net parameters (rust native path)
+  manifest.json            hyper-parameters + artifact index
+
+Run once via `make artifacts`; python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model as M  # noqa: E402
+from . import params as P  # noqa: E402
+
+# (nmol, dtypes) per exported system size.  564 atoms = the paper's 188-water
+# headline box; 384 = the 128-water accuracy box (Table 1 / Fig 7); 192 = the
+# 64-water quickstart box; 12 = smoke size for fast rust unit tests.
+SIZES = [
+    (4, ["f64"]),
+    (64, ["f64"]),
+    (128, ["f64", "f32"]),
+    (188, ["f64", "f32"]),
+]
+
+DTYPES = {"f64": jnp.float64, "f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # The default printer elides large constants as `constant({...})`, which
+    # the text parser cannot round-trip — the model weights would be lost.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8's printer emits source_end_line/... metadata attributes that
+    # xla_extension 0.5.1's HLO parser rejects; drop metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_one(fn, arg_specs):
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def export(outdir: str, sizes=SIZES, quiet=False):
+    os.makedirs(outdir, exist_ok=True)
+    prm = P.ModelParams.seeded()
+    arts = []
+    for nmol, dts in sizes:
+        n = 3 * nmol
+        s = P.SEL_TOTAL
+        for dt in dts:
+            jdt = DTYPES[dt]
+            coords = jax.ShapeDtypeStruct((n, 3), jdt)
+            box = jax.ShapeDtypeStruct((3,), jdt)
+            nlist = jax.ShapeDtypeStruct((n, s), jnp.int32)
+            nlist_o = jax.ShapeDtypeStruct((nmol, s), jnp.int32)
+            fwc = jax.ShapeDtypeStruct((nmol, 3), jdt)
+            jobs = [
+                ("dp_ef", M.build_dp_ef(nmol, prm), (coords, box, nlist)),
+                ("dw_fwd", M.build_dw_fwd(nmol, prm), (coords, box, nlist_o)),
+                ("dw_vjp", M.build_dw_vjp(nmol, prm), (coords, box, nlist_o, fwc)),
+            ]
+            for kind, fn, specs in jobs:
+                name = f"{kind}_{n}_{dt}"
+                t0 = time.time()
+                text = lower_one(fn, specs)
+                path = os.path.join(outdir, name + ".hlo.txt")
+                with open(path, "w") as f:
+                    f.write(text)
+                if not quiet:
+                    print(
+                        f"  {name}: {len(text) / 1e6:.2f} MB "
+                        f"({time.time() - t0:.1f}s)"
+                    )
+                arts.append(
+                    {
+                        "name": name,
+                        "file": name + ".hlo.txt",
+                        "kind": kind,
+                        "natoms": n,
+                        "nmol": nmol,
+                        "dtype": dt,
+                        "sel_total": s,
+                    }
+                )
+    P.dump_weights(prm, os.path.join(outdir, "weights.json"))
+    manifest = {"hyper": P.hyper_dict(), "artifacts": arts}
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not quiet:
+        print(f"wrote {len(arts)} artifacts + weights.json + manifest.json")
+
+
+def export_fixtures(outdir: str):
+    """Golden numeric fixtures for the rust<->python parity tests.
+
+    For a couple of seeded water systems, dump coords/nlists plus the
+    reference-model outputs (E, F, delta, f_contrib) so the rust native and
+    PJRT paths can be checked against the exact python numbers.
+    """
+    import numpy as np
+
+    from . import testutil as TU
+    from .kernels import ref
+
+    prm = P.ModelParams.seeded()
+    cases = []
+    for nmol, seed in [(4, 3), (64, 7), (128, 7)]:
+        coords, box = TU.water_box(nmol, seed=seed)
+        nl = TU.full_nlist(coords, box, nmol)
+        nlo = TU.o_nlist(coords, box, nmol)
+        c = jnp.asarray(coords)
+        b = jnp.asarray(box)
+        e, f = jax.jit(M.build_dp_ef(nmol, prm))(c, b, jnp.asarray(nl))
+        fwc = np.asarray(
+            np.random.RandomState(nmol).standard_normal((nmol, 3)) * 0.5
+        )
+        delta, fc = jax.jit(M.build_dw_vjp(nmol, prm))(
+            c, b, jnp.asarray(nlo), jnp.asarray(fwc)
+        )
+        cases.append(
+            {
+                "nmol": nmol,
+                "box": box.tolist(),
+                "coords": np.asarray(coords).reshape(-1).tolist(),
+                "nlist": np.asarray(nl).reshape(-1).tolist(),
+                "nlist_o": np.asarray(nlo).reshape(-1).tolist(),
+                "f_wc": fwc.reshape(-1).tolist(),
+                "energy": float(e),
+                "forces": np.asarray(f).reshape(-1).tolist(),
+                "delta": np.asarray(delta).reshape(-1).tolist(),
+                "f_contrib": np.asarray(fc).reshape(-1).tolist(),
+            }
+        )
+    with open(os.path.join(outdir, "fixtures.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote fixtures.json ({len(cases)} cases)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--smoke-only",
+        action="store_true",
+        help="export only the 12-atom smoke artifacts (fast CI path)",
+    )
+    args = ap.parse_args()
+    sizes = [SIZES[0]] if args.smoke_only else SIZES
+    export(args.out, sizes)
+    export_fixtures(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the DPLR compute hot-spots + pure-jnp oracle.
+
+`ref` is the correctness oracle (and the source of all custom_vjp backward
+passes); `pallas_kernels` holds the fused forward kernels.
+"""
+
+from . import ref  # noqa: F401
+from . import pallas_kernels  # noqa: F401

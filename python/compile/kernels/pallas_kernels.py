@@ -1,0 +1,251 @@
+"""Layer-1 Pallas kernels for the DPLR compute hot-spots.
+
+Three kernels cover the per-step inner loops the paper hand-optimizes in
+section 3.4.2 (framework-free fused kernels on A64FX):
+
+  * env_mat   — switch function + environment-matrix rows, fused elementwise
+                (VPU-shaped work);
+  * embedding — the per-(atom, neighbour) embedding MLP, the dominant matmul
+                volume (MXU-shaped: rows = atom*neighbour tile);
+  * fitting   — the (240, 240, 240) ResNet fitting MLP, fused as one kernel
+                so the activations never leave VMEM.
+
+Hardware adaptation (see DESIGN.md section 3): the paper tiles for A64FX SVE
+lanes and L2; here BlockSpec tiles rows into VMEM-resident blocks whose
+widths are padded to lane multiples, and each block's whole layer stack runs
+inside one kernel body — the Pallas/TPU expression of the same fusion.
+
+All kernels run under interpret=True (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); they lower to plain HLO inside the same artifact as the
+surrounding jnp code.  Gradients: jax.custom_vjp with forward = the kernel
+and backward = jax.vjp over the pure-jnp reference (kernels/ref.py), so
+force-backprop never differentiates through pallas_call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows per VMEM block.  256 rows x 240 features x 4B = 245 KiB << 16 MiB
+# VMEM; the grid walks atom*neighbour tiles HBM->VMEM (BlockSpec schedule).
+BLOCK_ROWS = 256
+
+
+def _pad_rows(x, block):
+    r = x.shape[0]
+    pad = (-r) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+    return x, r
+
+
+# ----------------------------------------------------------------------------
+# env_mat kernel
+# ----------------------------------------------------------------------------
+
+
+def _env_kernel(d_ref, m_ref, o_ref, *, rcs, rc):
+    d = d_ref[...]
+    mask = m_ref[...]
+    r2 = jnp.sum(d * d, axis=-1, keepdims=True)
+    r = jnp.sqrt(jnp.maximum(r2, 1e-12))
+    uu = jnp.clip((r - rcs) / (rc - rcs), 0.0, 1.0)
+    sw = uu * uu * uu * (-6.0 * uu * uu + 15.0 * uu - 10.0) + 1.0
+    live = mask > 0
+    s = jnp.where(live, sw / r, 0.0)
+    unit = jnp.where(live, d / r, 0.0)
+    o_ref[...] = jnp.concatenate([s, s * unit], axis=-1)
+
+
+def _env_rows_fwd(d, mask):
+    from .. import params as P
+
+    (dp, rows) = _pad_rows(d, BLOCK_ROWS)
+    (mp, _) = _pad_rows(mask[:, None], BLOCK_ROWS)
+    grid = dp.shape[0] // BLOCK_ROWS
+    out = pl.pallas_call(
+        functools.partial(_env_kernel, rcs=P.R_CUT_SMOOTH, rc=P.R_CUT),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, 3), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((dp.shape[0], 4), d.dtype),
+        interpret=True,
+    )(dp, mp)
+    return out[:rows]
+
+
+@jax.custom_vjp
+def env_rows(d, mask):
+    """Pallas env-matrix rows; numerically identical to ref.env_rows_ref."""
+    return _env_rows_fwd(d, mask)
+
+
+def _env_vjp_fwd(d, mask):
+    return _env_rows_fwd(d, mask), (d, mask)
+
+
+def _env_vjp_bwd(res, g):
+    d, mask = res
+    _, pull = jax.vjp(lambda dd: ref.env_rows_ref(dd, mask), d)
+    return (pull(g)[0], None)
+
+
+env_rows.defvjp(_env_vjp_fwd, _env_vjp_bwd)
+
+
+# ----------------------------------------------------------------------------
+# embedding kernel: fused (1 -> w1 tanh -> M1 linear) over row blocks
+# ----------------------------------------------------------------------------
+
+
+def _embed_kernel(s_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    s = s_ref[...]
+    h = jnp.tanh(s @ w1_ref[...] + b1_ref[...])
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...]
+
+
+def _embed_fwd(s_flat, w1, b1, w2, b2):
+    (sp, rows) = _pad_rows(s_flat[:, None], BLOCK_ROWS)
+    grid = sp.shape[0] // BLOCK_ROWS
+    h1, m1 = w1.shape[1], w2.shape[1]
+    out = pl.pallas_call(
+        _embed_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, h1), lambda i: (0, 0)),
+            pl.BlockSpec((h1,), lambda i: (0,)),
+            pl.BlockSpec((h1, m1), lambda i: (0, 0)),
+            pl.BlockSpec((m1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, m1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp.shape[0], m1), s_flat.dtype),
+        interpret=True,
+    )(sp, w1, b1, w2, b2)
+    return out[:rows]
+
+
+@jax.custom_vjp
+def embedding_rows(s_flat, w1, b1, w2, b2):
+    """Pallas fused embedding MLP over flattened (atom*neighbour) rows."""
+    return _embed_fwd(s_flat, w1, b1, w2, b2)
+
+
+def _embed_vjp_fwd(s_flat, w1, b1, w2, b2):
+    return _embed_fwd(s_flat, w1, b1, w2, b2), (s_flat, w1, b1, w2, b2)
+
+
+def _embed_vjp_bwd(res, g):
+    s_flat, w1, b1, w2, b2 = res
+
+    def f(ss):
+        h = jnp.tanh(ss[:, None] @ w1 + b1)
+        return h @ w2 + b2
+
+    _, pull = jax.vjp(f, s_flat)
+    return (pull(g)[0], None, None, None, None)
+
+
+embedding_rows.defvjp(_embed_vjp_fwd, _embed_vjp_bwd)
+
+
+# ----------------------------------------------------------------------------
+# fitting kernel: fused tanh -> (tanh+skip) x 2 -> linear
+# ----------------------------------------------------------------------------
+
+
+def _fit_kernel(x_ref, w1, b1, w2, b2, w3, b3, w4, b4, o_ref):
+    x = x_ref[...]
+    h = jnp.tanh(x @ w1[...] + b1[...])
+    h = h + jnp.tanh(h @ w2[...] + b2[...])
+    h = h + jnp.tanh(h @ w3[...] + b3[...])
+    o_ref[...] = h @ w4[...] + b4[...]
+
+
+def _fit_fwd(desc, ws, bs):
+    (dp, rows) = _pad_rows(desc, BLOCK_ROWS)
+    grid = dp.shape[0] // BLOCK_ROWS
+    din = desc.shape[1]
+    dims = [w.shape for w in ws]
+    dout = dims[-1][1]
+    specs = [pl.BlockSpec((BLOCK_ROWS, din), lambda i: (i, 0))]
+    args = [dp]
+    for w, b in zip(ws, bs):
+        specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+        args.extend([w, b])
+    out = pl.pallas_call(
+        _fit_kernel,
+        grid=(grid,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((BLOCK_ROWS, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((dp.shape[0], dout), desc.dtype),
+        interpret=True,
+    )(*args)
+    return out[:rows]
+
+
+@jax.custom_vjp
+def fitting_rows(desc, w1, b1, w2, b2, w3, b3, w4, b4):
+    """Pallas fused fitting net (3 ResNet tanh layers + linear head)."""
+    return _fit_fwd(desc, [w1, w2, w3, w4], [b1, b2, b3, b4])
+
+
+def _fit_vjp_fwd(desc, w1, b1, w2, b2, w3, b3, w4, b4):
+    out = _fit_fwd(desc, [w1, w2, w3, w4], [b1, b2, b3, b4])
+    return out, (desc, w1, b1, w2, b2, w3, b3, w4, b4)
+
+
+def _fit_vjp_bwd(res, g):
+    desc, w1, b1, w2, b2, w3, b3, w4, b4 = res
+
+    def f(x):
+        h = jnp.tanh(x @ w1 + b1)
+        h = h + jnp.tanh(h @ w2 + b2)
+        h = h + jnp.tanh(h @ w3 + b3)
+        return h @ w4 + b4
+
+    _, pull = jax.vjp(f, desc)
+    return (pull(g)[0],) + (None,) * 8
+
+
+fitting_rows.defvjp(_fit_vjp_fwd, _fit_vjp_bwd)
+
+
+# ----------------------------------------------------------------------------
+# wrappers matching the ref.py call signatures
+# ----------------------------------------------------------------------------
+
+
+def embedding_pallas(s, mlp):
+    """(M, S') radial features -> (M, S', M1) via the fused Pallas kernel."""
+    dt = s.dtype
+    w = [jnp.asarray(a, dt) for a in mlp.weights]
+    b = [jnp.asarray(a, dt) for a in mlp.biases]
+    flat = embedding_rows(s.reshape(-1), w[0], b[0], w[1], b[1])
+    return flat.reshape(s.shape + (w[1].shape[1],))
+
+
+def fitting_pallas(desc, mlp):
+    dt = desc.dtype
+    w = [jnp.asarray(a, dt) for a in mlp.weights]
+    b = [jnp.asarray(a, dt) for a in mlp.biases]
+    return fitting_rows(desc, w[0], b[0], w[1], b[1], w[2], b[2], w[3], b[3])
+
+
+def env_mat_pallas(coords, box, nlist):
+    """(M, S, 4) environment matrix + (M, S) radial feature, Pallas fwd."""
+    d, mask = ref.gather_disp(coords, box, nlist)
+    mm, ss = nlist.shape
+    rows = env_rows(d.reshape(-1, 3), mask.reshape(-1))
+    env = rows.reshape(mm, ss, 4)
+    return env, env[:, :, 0]

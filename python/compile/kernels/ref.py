@@ -1,0 +1,222 @@
+"""Pure-jnp reference oracle for every Pallas kernel and for the full models.
+
+Everything here is straight jax.numpy with no Pallas: it defines the ground
+truth the kernels are tested against (python/tests/) and it also provides the
+backward passes for the kernels' jax.custom_vjp rules (we never differentiate
+*through* a pallas_call; forward = kernel, backward = jax.vjp of these
+reference functions, lowered into the same HLO artifact).
+
+Conventions (shared with rust/src/native and rust/src/md):
+  * atoms are type-sorted: indices [0, nmol) are O, [nmol, 3*nmol) are H
+    (molecule m owns O = m, H1 = nmol + 2m, H2 = nmol + 2m + 1);
+  * the neighbour list is padded per type: columns [0, SEL[0]) hold O
+    neighbours, columns [SEL[0], SEL_TOTAL) hold H neighbours, -1 = empty;
+  * boxes are orthorhombic, passed as the three edge lengths;
+  * displacements use the minimum-image convention (box edge >= 2 * r_cut).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import params as P
+
+
+# ----------------------------------------------------------------------------
+# geometry
+# ----------------------------------------------------------------------------
+
+def min_image(d, box):
+    """Minimum-image displacement for an orthorhombic box."""
+    return d - box * jnp.round(d / box)
+
+
+def gather_disp(coords, box, nlist):
+    """Displacements centre->neighbour and validity mask.
+
+    coords: (N, 3); nlist: (M, S) int32 (-1 pad).
+    Returns d: (M, S, 3), mask: (M, S) in {0, 1} (same dtype as coords).
+    """
+    m = nlist >= 0
+    safe = jnp.where(m, nlist, 0)
+    centres = coords[: nlist.shape[0]]
+    d = coords[safe] - centres[:, None, :]
+    d = min_image(d, box)
+    mask = m.astype(coords.dtype)
+    return d * mask[:, :, None], mask
+
+
+# ----------------------------------------------------------------------------
+# switch function and environment matrix (kernel: env_mat)
+# ----------------------------------------------------------------------------
+
+def switch_poly(r):
+    """DeepPot-SE smooth switch: 1 below rcs, C2 polynomial decay to 0 at rc."""
+    rcs, rc = P.R_CUT_SMOOTH, P.R_CUT
+    uu = (r - rcs) / (rc - rcs)
+    uu = jnp.clip(uu, 0.0, 1.0)
+    return uu * uu * uu * (-6.0 * uu * uu + 15.0 * uu - 10.0) + 1.0
+
+
+def env_rows_ref(d, mask):
+    """Rowwise environment matrix: (R, 3) disp + (R,) mask -> (R, 4).
+
+    Row = (s, s x/r, s y/r, s z/r) with s = switch(r) / r, zero where masked.
+    This is the flattened form the Pallas kernel computes.
+    """
+    r2 = jnp.sum(d * d, axis=-1)
+    r = jnp.sqrt(jnp.maximum(r2, 1e-12))
+    sw = switch_poly(r)
+    s = jnp.where(mask > 0, sw / r, 0.0)
+    unit = jnp.where(mask[:, None] > 0, d / r[:, None], 0.0)
+    return jnp.concatenate([s[:, None], s[:, None] * unit], axis=-1)
+
+
+def env_mat_ref(coords, box, nlist):
+    """(M, S, 4) environment matrix + (M, S) radial feature s."""
+    d, mask = gather_disp(coords, box, nlist)
+    mm, ss = nlist.shape
+    rows = env_rows_ref(d.reshape(-1, 3), mask.reshape(-1))
+    env = rows.reshape(mm, ss, 4)
+    return env, env[:, :, 0]
+
+
+# ----------------------------------------------------------------------------
+# MLPs (kernels: embedding, fitting)
+# ----------------------------------------------------------------------------
+
+def apply_mlp_ref(x, weights, biases):
+    """tanh layers (with ResNet skip when square) + linear final layer."""
+    for w, b in zip(weights[:-1], biases[:-1]):
+        y = jnp.tanh(x @ w + b)
+        x = x + y if w.shape[0] == w.shape[1] else y
+    return x @ weights[-1] + biases[-1]
+
+
+def embedding_ref(s, mlp):
+    """Per-neighbour embedding: (..., scalar feature) -> (..., M1)."""
+    w = [jnp.asarray(a, dtype=s.dtype) for a in mlp.weights]
+    b = [jnp.asarray(a, dtype=s.dtype) for a in mlp.biases]
+    return apply_mlp_ref(s[..., None], w, b)
+
+
+def fitting_ref(desc, mlp):
+    w = [jnp.asarray(a, dtype=desc.dtype) for a in mlp.weights]
+    b = [jnp.asarray(a, dtype=desc.dtype) for a in mlp.biases]
+    return apply_mlp_ref(desc, w, b)
+
+
+# ----------------------------------------------------------------------------
+# descriptor
+# ----------------------------------------------------------------------------
+
+def descriptor_ref(env, s, embed_mlps):
+    """DeepPot-SE descriptor D = (G^T R)(R^T G<) flattened to (M, M1*M2).
+
+    env: (M, S, 4); s: (M, S).  The first SEL[0] neighbour slots use the O
+    embedding net, the rest the H net.
+    """
+    s0, s1 = s[:, : P.SEL[0]], s[:, P.SEL[0] :]
+    g0 = embedding_ref(s0, embed_mlps[0])
+    g1 = embedding_ref(s1, embed_mlps[1])
+    g = jnp.concatenate([g0, g1], axis=1)  # (M, S, M1)
+    # mask embedded rows of padded neighbours (s == 0 does NOT zero the MLP
+    # output because of biases): weight by s-presence.
+    mask = (s > 0).astype(env.dtype)[:, :, None]
+    g = g * mask
+    t1 = jnp.einsum("nsm,nsf->nmf", g, env) / P.SEL_TOTAL  # (M, M1, 4)
+    t2 = t1[:, : P.M2, :]  # (M, M2, 4)
+    d = jnp.einsum("nmf,naf->nma", t1, t2)  # (M, M1, M2)
+    return d.reshape(d.shape[0], P.DESC_DIM)
+
+
+# ----------------------------------------------------------------------------
+# DP model: short-range NN energy
+# ----------------------------------------------------------------------------
+
+def dp_nn_energy_ref(coords, box, nlist, nmol, prm):
+    env, s = env_mat_ref(coords, box, nlist)
+    desc = descriptor_ref(env, s, prm.embed_dp)
+    e_o = fitting_ref(desc[:nmol], prm.fit_dp[0])
+    e_h = fitting_ref(desc[nmol:], prm.fit_dp[1])
+    return jnp.sum(e_o) + jnp.sum(e_h)
+
+
+# ----------------------------------------------------------------------------
+# physical prior (bonds + angle + Born-Mayer repulsion)
+# ----------------------------------------------------------------------------
+
+def prior_energy_ref(coords, box, nlist, nmol):
+    n = 3 * nmol
+    o = coords[:nmol]
+    h1 = coords[nmol + 0 : n : 2]
+    h2 = coords[nmol + 1 : n : 2]
+    d1 = min_image(h1 - o, box)
+    d2 = min_image(h2 - o, box)
+    r1 = jnp.sqrt(jnp.sum(d1 * d1, axis=-1))
+    r2 = jnp.sqrt(jnp.sum(d2 * d2, axis=-1))
+    e_bond = P.BOND_K * jnp.sum((r1 - P.BOND_R0) ** 2 + (r2 - P.BOND_R0) ** 2)
+    cosang = jnp.sum(d1 * d2, axis=-1) / (r1 * r2)
+    ang = jnp.arccos(jnp.clip(cosang, -1.0 + 1e-9, 1.0 - 1e-9))
+    e_ang = P.ANGLE_K * jnp.sum((ang - P.ANGLE_T0) ** 2)
+
+    # Born-Mayer repulsion over the padded neighbour list (double counts
+    # every pair -> factor 1/2), smoothly switched off at the cutoff.
+    d, mask = gather_disp(coords, box, nlist)
+    r = jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=-1), 1e-12))
+    sw = switch_poly(r)
+    # per-pair A: centre type x neighbour type (O block then H block).
+    is_h_centre = (jnp.arange(nlist.shape[0]) >= nmol).astype(coords.dtype)
+    is_h_nbr = jnp.concatenate(
+        [
+            jnp.zeros((nlist.shape[0], P.SEL[0]), coords.dtype),
+            jnp.ones((nlist.shape[0], P.SEL[1]), coords.dtype),
+        ],
+        axis=1,
+    )
+    a_oo = P.BM_A[("O", "O")]
+    a_oh = P.BM_A[("O", "H")]
+    a_hh = P.BM_A[("H", "H")]
+    ch = is_h_centre[:, None]
+    amat = (
+        a_oo * (1 - ch) * (1 - is_h_nbr)
+        + a_oh * (ch * (1 - is_h_nbr) + (1 - ch) * is_h_nbr)
+        + a_hh * ch * is_h_nbr
+    )
+    e_bm = 0.5 * jnp.sum(mask * sw * amat * jnp.exp(-r / P.BM_RHO))
+    return e_bond + e_ang + e_bm
+
+
+def dp_energy_ref(coords, box, nlist, nmol, prm):
+    """Full short-range energy: seeded NN + physical prior."""
+    return dp_nn_energy_ref(coords, box, nlist, nmol, prm) + prior_energy_ref(
+        coords, box, nlist, nmol
+    )
+
+
+# ----------------------------------------------------------------------------
+# DW model: rotation-covariant Wannier-centroid displacement
+# ----------------------------------------------------------------------------
+
+def dw_delta_ref(coords, box, nlist_o, nmol, prm):
+    """Predicted WC displacement for each O atom: (nmol, 3).
+
+    Delta_i = clamp( sum_j c_ij * d_ij ) with invariant per-neighbour gates
+    c_ij = s_ij * <G_ij, a_i>, a_i = fit_dw(D_i).  Rotation-covariant because
+    only the d_ij vectors carry direction.
+    """
+    env, s = env_mat_ref(coords, box, nlist_o)
+    desc = descriptor_ref(env, s, prm.embed_dw)
+    a = fitting_ref(desc, prm.fit_dw)  # (nmol, M1)
+    s0, s1 = s[:, : P.SEL[0]], s[:, P.SEL[0] :]
+    g = jnp.concatenate(
+        [embedding_ref(s0, prm.embed_dw[0]), embedding_ref(s1, prm.embed_dw[1])],
+        axis=1,
+    )
+    gate = jnp.einsum("nsm,nm->ns", g, a) * s  # (nmol, S); s masks padding
+    d, _ = gather_disp(coords, box, nlist_o)
+    raw = jnp.einsum("ns,nsf->nf", gate, d)
+    # radial (covariant) clamp to WC_CLAMP angstroms
+    norm = jnp.sqrt(jnp.maximum(jnp.sum(raw * raw, axis=-1), 1e-18))
+    scale = P.WC_CLAMP * jnp.tanh(norm / P.WC_CLAMP) / norm
+    return raw * scale[:, None]

@@ -1,0 +1,119 @@
+"""Layer-2 JAX model: DPLR energies/forces assembled from the L1 kernels.
+
+Three exported computations (per system size and dtype), mirroring the three
+NN stages of a DPLR time step (paper Fig. 1 and section 3.2):
+
+  dp_ef   (coords, box, nlist)        -> (E_sr, F_sr)
+  dw_fwd  (coords, box, nlist_o)      -> (delta,)
+  dw_vjp  (coords, box, nlist_o, fwc) -> (delta, f_contrib)
+
+E_sr = seeded DP network + analytic physical prior (DESIGN.md section 2's
+training substitution).  Forces come from jax.grad; the Pallas kernels carry
+jax.custom_vjp rules so backprop uses the jnp reference path while the
+forward pass runs the fused kernels — the same fwd-kernel/bwd-backprop split
+the paper's framework-free code uses.
+
+dw_vjp implements the long-range force chain of Eq. 6: given the PPPM forces
+on the Wannier centroids f_wc = -dE_Gt/dW, it pulls them back through
+W(R) = R_O + Delta(R), yielding both the direct binding-atom term and the
+-sum_n (dE_Gt/dW_n)(dDelta_n/dR_i) term in one VJP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels import ref
+from .kernels.pallas_kernels import (
+    embedding_pallas,
+    env_mat_pallas,
+    fitting_pallas,
+)
+
+
+def descriptor(env, s, embed_mlps):
+    """DeepPot-SE descriptor using the Pallas embedding kernel."""
+    s0, s1 = s[:, : P.SEL[0]], s[:, P.SEL[0] :]
+    g0 = embedding_pallas(s0, embed_mlps[0])
+    g1 = embedding_pallas(s1, embed_mlps[1])
+    g = jnp.concatenate([g0, g1], axis=1)
+    mask = (s > 0).astype(env.dtype)[:, :, None]
+    g = g * mask
+    t1 = jnp.einsum("nsm,nsf->nmf", g, env) / P.SEL_TOTAL
+    t2 = t1[:, : P.M2, :]
+    d = jnp.einsum("nmf,naf->nma", t1, t2)
+    return d.reshape(d.shape[0], P.DESC_DIM)
+
+
+def dp_energy(coords, box, nlist, nmol, prm):
+    """Short-range energy: Pallas-kernel NN + jnp physical prior."""
+    env, s = env_mat_pallas(coords, box, nlist)
+    desc = descriptor(env, s, prm.embed_dp)
+    e_o = fitting_pallas(desc[:nmol], prm.fit_dp[0])
+    e_h = fitting_pallas(desc[nmol:], prm.fit_dp[1])
+    e_nn = jnp.sum(e_o) + jnp.sum(e_h)
+    return e_nn + ref.prior_energy_ref(coords, box, nlist, nmol)
+
+
+def dw_delta(coords, box, nlist_o, nmol, prm):
+    """Wannier-centroid displacements using the Pallas kernels."""
+    env, s = env_mat_pallas(coords, box, nlist_o)
+    desc = descriptor(env, s, prm.embed_dw)
+    a = fitting_pallas(desc, prm.fit_dw)
+    s0, s1 = s[:, : P.SEL[0]], s[:, P.SEL[0] :]
+    g = jnp.concatenate(
+        [embedding_pallas(s0, prm.embed_dw[0]), embedding_pallas(s1, prm.embed_dw[1])],
+        axis=1,
+    )
+    gate = jnp.einsum("nsm,nm->ns", g, a) * s
+    d, _ = ref.gather_disp(coords, box, nlist_o)
+    raw = jnp.einsum("ns,nsf->nf", gate, d)
+    norm = jnp.sqrt(jnp.maximum(jnp.sum(raw * raw, axis=-1), 1e-18))
+    scale = P.WC_CLAMP * jnp.tanh(norm / P.WC_CLAMP) / norm
+    return raw * scale[:, None]
+
+
+# ----------------------------------------------------------------------------
+# builders for the AOT-exported entry points
+# ----------------------------------------------------------------------------
+
+
+def build_dp_ef(nmol, prm):
+    """(coords, box, nlist) -> (E_sr, F_sr); forces via backprop (Fig 1c)."""
+
+    def fn(coords, box, nlist):
+        e, grad = jax.value_and_grad(
+            lambda c: dp_energy(c, box, nlist, nmol, prm)
+        )(coords)
+        return e, -grad
+
+    return fn
+
+
+def build_dw_fwd(nmol, prm):
+    """(coords, box, nlist_o) -> (delta,); the pre-PPPM DW inference."""
+
+    def fn(coords, box, nlist_o):
+        return (dw_delta(coords, box, nlist_o, nmol, prm),)
+
+    return fn
+
+
+def build_dw_vjp(nmol, prm):
+    """(coords, box, nlist_o, f_wc) -> (delta, f_contrib).
+
+    f_contrib[i] = sum_n f_wc[n] . dW_n/dR_i  — the two long-range force
+    terms of Eq. 6 (binding-atom term + DW-Jacobian term) in one pullback.
+    """
+
+    def fn(coords, box, nlist_o, f_wc):
+        def wfn(c):
+            return c[:nmol] + dw_delta(c, box, nlist_o, nmol, prm)
+
+        w, pull = jax.vjp(wfn, coords)
+        delta = w - coords[:nmol]
+        return delta, pull(f_wc)[0]
+
+    return fn

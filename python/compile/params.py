@@ -1,0 +1,171 @@
+"""Model hyper-parameters and seeded weight initialisation for DP / DW nets.
+
+The paper's models (DeepPot-SE short-range "DP" + Deep Wannier "DW") use a
+fitting net of (240, 240, 240) [paper §4] and sel = (46, 92) neighbours for
+O / H at a 6 Angstrom cutoff.  We keep those numbers (padded to multiples of
+8 for TPU-friendly tiling) and choose a compact embedding net so the whole
+stack traces quickly under Pallas interpret mode.
+
+Weights are *seeded*, not trained: there is no network access to the paper's
+Zenodo dataset in this environment (see DESIGN.md section 2).  The physical
+prior in model.py keeps the dynamics stable; the NN contributes genuinely
+nonzero (but small) energies/forces so every code path is exercised with
+realistic tensor shapes.
+
+All weights are exported to artifacts/weights.json so that the Rust
+framework-free inference path (rust/src/native/) can reproduce the PJRT
+results bit-for-bit (modulo float summation order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+# ----------------------------------------------------------------------------
+# Hyper-parameters (shared by python and rust through manifest.json)
+# ----------------------------------------------------------------------------
+
+R_CUT = 6.0  # outer cutoff [A] (paper section 4)
+R_CUT_SMOOTH = 3.0  # inner smooth-switch start [A]
+SEL = (48, 96)  # padded max neighbours per type (O, H); paper uses 46/92
+SEL_TOTAL = SEL[0] + SEL[1]
+EMBED_WIDTHS = (24, 48)  # embedding net widths; last = M1
+M1 = EMBED_WIDTHS[-1]
+M2 = 8  # axis neurons: first M2 columns of G form G<
+FIT_WIDTHS = (240, 240, 240)  # fitting net widths (paper section 4)
+DESC_DIM = M1 * M2
+
+# DPLR charges for water: O ion +6 e, H ion +1 e, Wannier centroid -8 e
+# (8 valence electrons per molecule collapse to one WC bound to the O).
+Q_O = 6.0
+Q_H = 1.0
+Q_WC = -8.0
+
+# Ewald / PPPM smearing: exp(-k^2 / (4 alpha^2)) Gaussian screening [1/A].
+ALPHA = 1.0
+
+# Physical prior (keeps seeded-weight dynamics stable and water-like):
+# harmonic intramolecular bonds + angle, Born-Mayer intermolecular repulsion.
+BOND_K = 18.0  # eV / A^2
+BOND_R0 = 0.9572  # A
+ANGLE_K = 2.5  # eV / rad^2
+ANGLE_T0 = 1.8242  # rad (104.52 deg)
+BM_A = {("O", "O"): 450.0, ("O", "H"): 80.0, ("H", "H"): 20.0}  # eV
+BM_RHO = 0.35  # A
+NN_ENERGY_SCALE = 0.02  # eV per atom scale of the seeded NN contribution
+# Radial clamp on the predicted WC displacement [A].  Keeps the molecular
+# dipole |q_wc| * |delta| <= 0.4 e*A, i.e. water-like (~1.9 D); the seeded
+# (untrained) DW net would otherwise predict ~10 D molecules and the
+# electrostatics would dominate the dynamics unphysically.
+WC_CLAMP = 0.05
+
+MASS_O = 15.9994  # g/mol
+MASS_H = 1.008
+
+# LAMMPS "metal"-like units: eV, A, ps; Coulomb constant in eV*A/e^2.
+KE_COULOMB = 14.399645478425668
+# Boltzmann constant in eV/K.
+KB_EV = 8.617333262e-5
+
+
+@dataclasses.dataclass
+class Mlp:
+    """Dense tanh MLP parameters: y = tanh(x W + b) per layer, linear last."""
+
+    weights: list  # list of np.ndarray (in, out)
+    biases: list  # list of np.ndarray (out,)
+
+    def tolists(self):
+        return {
+            "weights": [w.tolist() for w in self.weights],
+            "biases": [b.tolist() for b in self.biases],
+        }
+
+
+def _init_mlp(rng: np.random.RandomState, widths, din, dout, out_scale=1.0):
+    ws, bs = [], []
+    prev = din
+    for w in widths:
+        ws.append(rng.standard_normal((prev, w)) / np.sqrt(prev))
+        bs.append(rng.standard_normal(w) * 0.1)
+        prev = w
+    ws.append(rng.standard_normal((prev, dout)) / np.sqrt(prev) * out_scale)
+    bs.append(np.zeros(dout))
+    return Mlp(ws, bs)
+
+
+@dataclasses.dataclass
+class ModelParams:
+    """All learnable parameters of the DP + DW models.
+
+    embed_dp / embed_dw: one embedding MLP per *neighbour* type (O, H),
+    input = the scaled radial feature s(r), output width M1.
+    fit_dp: one fitting MLP per *centre* type (O, H), desc -> atomic energy.
+    fit_dw: fitting MLP for O centres, desc -> M1 gating vector used to form
+    the rotation-covariant Wannier displacement.
+    """
+
+    embed_dp: list  # [Mlp; 2]
+    fit_dp: list  # [Mlp; 2]
+    embed_dw: list  # [Mlp; 2]
+    fit_dw: Mlp
+
+    @staticmethod
+    def seeded(seed: int = 20250710) -> "ModelParams":
+        rng = np.random.RandomState(seed)
+        embed_dp = [_init_mlp(rng, EMBED_WIDTHS[:-1], 1, M1) for _ in range(2)]
+        fit_dp = [
+            _init_mlp(rng, FIT_WIDTHS, DESC_DIM, 1, out_scale=NN_ENERGY_SCALE)
+            for _ in range(2)
+        ]
+        embed_dw = [_init_mlp(rng, EMBED_WIDTHS[:-1], 1, M1) for _ in range(2)]
+        fit_dw = _init_mlp(rng, FIT_WIDTHS, DESC_DIM, M1, out_scale=0.3)
+        return ModelParams(embed_dp, fit_dp, embed_dw, fit_dw)
+
+    def tolists(self):
+        return {
+            "embed_dp": [m.tolists() for m in self.embed_dp],
+            "fit_dp": [m.tolists() for m in self.fit_dp],
+            "embed_dw": [m.tolists() for m in self.embed_dw],
+            "fit_dw": self.fit_dw.tolists(),
+        }
+
+
+def hyper_dict():
+    """Hyper-parameters shared with rust via manifest.json."""
+    return {
+        "r_cut": R_CUT,
+        "r_cut_smooth": R_CUT_SMOOTH,
+        "sel": list(SEL),
+        "embed_widths": list(EMBED_WIDTHS),
+        "m1": M1,
+        "m2": M2,
+        "fit_widths": list(FIT_WIDTHS),
+        "desc_dim": DESC_DIM,
+        "q_o": Q_O,
+        "q_h": Q_H,
+        "q_wc": Q_WC,
+        "alpha": ALPHA,
+        "bond_k": BOND_K,
+        "bond_r0": BOND_R0,
+        "angle_k": ANGLE_K,
+        "angle_t0": ANGLE_T0,
+        "bm_a_oo": BM_A[("O", "O")],
+        "bm_a_oh": BM_A[("O", "H")],
+        "bm_a_hh": BM_A[("H", "H")],
+        "bm_rho": BM_RHO,
+        "nn_energy_scale": NN_ENERGY_SCALE,
+        "wc_clamp": WC_CLAMP,
+        "mass_o": MASS_O,
+        "mass_h": MASS_H,
+        "ke_coulomb": KE_COULOMB,
+        "kb_ev": KB_EV,
+    }
+
+
+def dump_weights(params: ModelParams, path: str):
+    with open(path, "w") as f:
+        json.dump(params.tolists(), f)

@@ -1,0 +1,87 @@
+"""Test helpers: build water boxes and padded neighbour lists in numpy.
+
+Mirrors rust/src/md/water.rs and rust/src/neighbor/ — the python tests use
+these to generate realistic inputs; the cross-language integration tests
+(rust side) check both implementations agree on the same seeds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import params as P
+
+
+def water_box(nmol: int, seed: int = 7, jitter: float = 0.05):
+    """nmol rigid-ish water molecules on a jittered cubic lattice.
+
+    Returns (coords (3*nmol, 3) f64, box (3,) f64).  Density ~= 1 g/cc
+    (29.9 A^3 per molecule).  Atom order: O block then H pairs.
+    """
+    rng = np.random.RandomState(seed)
+    vol = 29.9 * nmol
+    edge = vol ** (1.0 / 3.0)
+    ncell = int(np.ceil(nmol ** (1.0 / 3.0)))
+    a = edge / ncell
+    # stride-select nmol of the ncell^3 sites so density stays uniform when
+    # nmol is not a perfect cube (mirrors rust/src/md/water.rs)
+    nsites = ncell ** 3
+    picked = [(c * nsites) // nmol for c in range(nmol)]
+    sites = np.array(
+        [
+            (s // (ncell * ncell), (s % (ncell * ncell)) // ncell, s % ncell)
+            for s in picked
+        ],
+        dtype=np.float64,
+    )
+    o = (sites + 0.5) * a + rng.uniform(-jitter, jitter, (nmol, 3))
+    # random molecular orientation, ~gas-phase geometry
+    r0, theta = P.BOND_R0, P.ANGLE_T0
+    coords = np.zeros((3 * nmol, 3))
+    coords[:nmol] = o
+    for m in range(nmol):
+        axis = rng.standard_normal(3)
+        axis /= np.linalg.norm(axis)
+        # build an orthonormal frame around `axis`
+        ref = np.array([1.0, 0.0, 0.0])
+        if abs(axis @ ref) > 0.9:
+            ref = np.array([0.0, 1.0, 0.0])
+        u = np.cross(axis, ref)
+        u /= np.linalg.norm(u)
+        v = np.cross(axis, u)
+        h1 = o[m] + r0 * (np.cos(theta / 2) * axis + np.sin(theta / 2) * u)
+        h2 = o[m] + r0 * (np.cos(theta / 2) * axis - np.sin(theta / 2) * u)
+        coords[nmol + 2 * m] = h1
+        coords[nmol + 2 * m + 1] = h2
+    box = np.array([edge, edge, edge])
+    return coords % box, box
+
+
+def build_nlist(coords, box, centres, nmol):
+    """Padded typed neighbour list for the given centre indices.
+
+    Columns [0, SEL[0]) = O neighbours (sorted by distance, nearest first),
+    [SEL[0], SEL_TOTAL) = H neighbours; -1 padding.  Over-full shells keep
+    the nearest SEL[t] neighbours (same policy as the rust builder).
+    """
+    n = coords.shape[0]
+    d = coords[None, :, :] - coords[centres, None, :]
+    d -= box * np.round(d / box)
+    r = np.linalg.norm(d, axis=-1)
+    out = np.full((len(centres), P.SEL_TOTAL), -1, dtype=np.int32)
+    for row, i in enumerate(centres):
+        for t, (lo, cap) in enumerate(((0, P.SEL[0]), (P.SEL[0], P.SEL[1]))):
+            idx = np.arange(nmol) if t == 0 else np.arange(nmol, n)
+            rr = r[row, idx]
+            sel = idx[(rr < P.R_CUT) & (idx != i)]
+            sel = sel[np.argsort(r[row, sel])][:cap]
+            out[row, lo : lo + len(sel)] = sel
+    return out
+
+
+def full_nlist(coords, box, nmol):
+    return build_nlist(coords, box, np.arange(coords.shape[0]), nmol)
+
+
+def o_nlist(coords, box, nmol):
+    return build_nlist(coords, box, np.arange(nmol), nmol)

@@ -1,0 +1,180 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/values; these are the core correctness
+signal for the kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import params as P
+from compile.kernels import ref
+from compile.kernels.pallas_kernels import (
+    BLOCK_ROWS,
+    embedding_pallas,
+    env_mat_pallas,
+    env_rows,
+    fitting_pallas,
+)
+
+PRM = P.ModelParams.seeded()
+
+
+def tol(dt):
+    return dict(rtol=1e-10, atol=1e-12) if dt == np.float64 else dict(rtol=2e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# env_mat kernel
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 3 * BLOCK_ROWS + 7),
+    seed=st.integers(0, 2**31 - 1),
+    dt=st.sampled_from([np.float32, np.float64]),
+)
+def test_env_rows_matches_ref(rows, seed, dt):
+    rng = np.random.RandomState(seed)
+    d = rng.uniform(-7, 7, (rows, 3)).astype(dt)
+    mask = (rng.uniform(0, 1, rows) > 0.3).astype(dt)
+    d = d * mask[:, None]
+    got = env_rows(jnp.asarray(d), jnp.asarray(mask))
+    want = ref.env_rows_ref(jnp.asarray(d), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dt))
+
+
+def test_env_rows_masked_are_zero():
+    d = np.zeros((8, 3))
+    mask = np.zeros(8)
+    got = np.asarray(env_rows(jnp.asarray(d), jnp.asarray(mask)))
+    assert np.all(got == 0.0)
+
+
+def test_env_rows_inside_smooth_region_is_inverse_r():
+    d = np.array([[2.0, 0.0, 0.0]])
+    mask = np.ones(1)
+    got = np.asarray(env_rows(jnp.asarray(d), jnp.asarray(mask)))
+    # s = 1/r = 0.5 inside the smooth region; s*x/r = 0.5 * 1.0 = 0.5
+    np.testing.assert_allclose(got[0], [0.5, 0.5, 0.0, 0.0], rtol=1e-12)
+
+
+def test_env_rows_beyond_cutoff_is_zero():
+    d = np.array([[P.R_CUT + 0.5, 0.0, 0.0]])
+    got = np.asarray(env_rows(jnp.asarray(d), jnp.asarray(np.ones(1))))
+    np.testing.assert_allclose(got, 0.0, atol=1e-14)
+
+
+def test_switch_is_c1_at_cutoffs():
+    # numerically check continuity of s(r) and s'(r) at rcs and rc
+    for r0 in (P.R_CUT_SMOOTH, P.R_CUT):
+        eps = 1e-6
+        f = lambda r: float(ref.switch_poly(jnp.asarray(r)))
+        left = (f(r0) - f(r0 - eps)) / eps
+        right = (f(r0 + eps) - f(r0)) / eps
+        assert abs(f(r0 + eps) - f(r0 - eps)) < 1e-5
+        assert abs(left - right) < 1e-4
+
+
+# ----------------------------------------------------------------------------
+# embedding kernel
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    s=st.sampled_from([P.SEL[0], P.SEL[1]]),
+    seed=st.integers(0, 2**31 - 1),
+    dt=st.sampled_from([np.float32, np.float64]),
+    which=st.integers(0, 1),
+)
+def test_embedding_matches_ref(m, s, seed, dt, which):
+    rng = np.random.RandomState(seed)
+    sv = (rng.uniform(0, 1.2, (m, s)) * (rng.uniform(0, 1, (m, s)) > 0.4)).astype(dt)
+    mlp = PRM.embed_dp[which]
+    got = embedding_pallas(jnp.asarray(sv), mlp)
+    want = ref.embedding_ref(jnp.asarray(sv), mlp)
+    assert got.shape == (m, s, P.M1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dt))
+
+
+def test_embedding_row_padding_is_exact():
+    # row counts around the BLOCK boundary must not change results
+    rng = np.random.RandomState(0)
+    for rows in (BLOCK_ROWS - 1, BLOCK_ROWS, BLOCK_ROWS + 1):
+        sv = rng.uniform(0, 1, (1, rows))
+        got = embedding_pallas(jnp.asarray(sv), PRM.embed_dw[0])
+        want = ref.embedding_ref(jnp.asarray(sv), PRM.embed_dw[0])
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-14
+        )
+
+
+# ----------------------------------------------------------------------------
+# fitting kernel
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 2 * BLOCK_ROWS + 3),
+    seed=st.integers(0, 2**31 - 1),
+    dt=st.sampled_from([np.float32, np.float64]),
+    which=st.integers(0, 1),
+)
+def test_fitting_matches_ref(m, seed, dt, which):
+    rng = np.random.RandomState(seed)
+    desc = (rng.standard_normal((m, P.DESC_DIM)) * 0.05).astype(dt)
+    mlp = PRM.fit_dp[which]
+    got = fitting_pallas(jnp.asarray(desc), mlp)
+    want = ref.fitting_ref(jnp.asarray(desc), mlp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dt))
+
+
+def test_fitting_dw_head_width():
+    desc = jnp.zeros((3, P.DESC_DIM))
+    out = fitting_pallas(desc, PRM.fit_dw)
+    assert out.shape == (3, P.M1)
+    want = ref.fitting_ref(desc, PRM.fit_dw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-12)
+
+
+# ----------------------------------------------------------------------------
+# env_mat composite wrapper
+# ----------------------------------------------------------------------------
+
+
+def test_env_mat_pallas_matches_ref_on_water():
+    from compile import testutil as TU
+
+    coords, box = TU.water_box(8, seed=3)
+    nl = TU.full_nlist(coords, box, 8)
+    env_k, s_k = env_mat_pallas(jnp.asarray(coords), jnp.asarray(box), jnp.asarray(nl))
+    env_r, s_r = ref.env_mat_ref(jnp.asarray(coords), jnp.asarray(box), jnp.asarray(nl))
+    np.testing.assert_allclose(np.asarray(env_k), np.asarray(env_r), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-12)
+
+
+def test_env_rows_gradient_uses_ref_backward():
+    # custom_vjp must agree with finite differences
+    rng = np.random.RandomState(1)
+    d = rng.uniform(-4, 4, (16, 3))
+    mask = np.ones(16)
+    f = lambda dd: jnp.sum(env_rows(dd, jnp.asarray(mask)) ** 2)
+    g = jax.grad(f)(jnp.asarray(d))
+    eps = 1e-6
+    for k in [(0, 0), (5, 2), (11, 1)]:
+        dp = d.copy()
+        dp[k] += eps
+        dm = d.copy()
+        dm[k] -= eps
+        fd = (float(f(jnp.asarray(dp))) - float(f(jnp.asarray(dm)))) / (2 * eps)
+        assert abs(fd - float(g[k])) < 1e-5 * max(1.0, abs(fd))

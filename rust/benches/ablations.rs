@@ -1,0 +1,54 @@
+//! Ablation benches for the design choices DESIGN.md section 8 calls out:
+//! quantization payloads, migration strategies, overlap schemes, B-spline
+//! orders, and node- vs rank-level decomposition.
+use dplr::config::MachineConfig;
+use dplr::coordinator::nodediv;
+use dplr::coordinator::overlap::{dedicated_partition, intra_node_overlap, sequential, StageTimes};
+use dplr::coordinator::ringlb::{imbalance, migration_overhead, ring_migration, MigrationStrategy};
+use dplr::coordinator::spatial;
+use dplr::distfft::utofu_time;
+use dplr::md::water::replicated_base_box;
+use dplr::tofu::{BgPayload, Torus};
+use dplr::util::table::Table;
+
+fn main() {
+    let m = MachineConfig::default();
+
+    println!("=== Ablation: BG reduction payload (utofu-FFT, 768 nodes, 4^3/node) ===");
+    let t = Torus::new([8, 12, 8]);
+    let grid = [32, 48, 32];
+    let mut tab = Table::new(&["payload", "per-iteration [us]", "vs f64"]);
+    let base = utofu_time(grid, &t, BgPayload::F64, &m).total();
+    for (name, p) in [("f64 x3", BgPayload::F64), ("u64 x6", BgPayload::U64), ("i32 x12 packed", BgPayload::PackedI32)] {
+        let v = utofu_time(grid, &t, p, &m).total();
+        tab.row(&[name.into(), format!("{:.1}", v * 1e6), format!("{:.2}x", base / v)]);
+    }
+    tab.print();
+
+    println!("\n=== Ablation: migration strategy (10 atoms, 50-ghost growth) ===");
+    let fwd = migration_overhead(MigrationStrategy::NeighborListForwarding, 10, 144 * 4, 0, &m);
+    let ghost = migration_overhead(MigrationStrategy::GhostRegionExpansion, 10, 0, 50, &m);
+    println!("neighbor-list forwarding: {:.2} us", fwd * 1e6);
+    println!("ghost-region expansion  : {:.2} us ({:.0}x cheaper)", ghost * 1e6, fwd / ghost);
+
+    println!("\n=== Ablation: load balance strategies (96 nodes, replicated box) ===");
+    let sys = replicated_base_box([2, 2, 2], 1);
+    let torus = Torus::new([4, 6, 4]);
+    let loads = spatial::node_loads(&sys, &torus);
+    let mig = ring_migration(&loads, sys.natoms().div_ceil(torus.nodes()));
+    println!("imbalance (max/mean): none {:.3} -> ring-LB {:.3} (clamped ranks: {})",
+        imbalance(&loads), imbalance(&mig.after), mig.clamped);
+
+    println!("\n=== Ablation: overlap schemes ===");
+    let st = StageTimes { dw_fwd: 0.1e-3, short_range: 1.3e-3, kspace_1core: 0.8e-3, gather_scatter: 0.02e-3, others: 0.1e-3 };
+    println!("sequential          : {:.3} ms", sequential(&st) * 1e3);
+    let a = intra_node_overlap(&st, 48);
+    println!("intra-node 47+1 (A) : {:.3} ms (exposed k-space {:.0}%)", a.step_time * 1e3, a.exposed_fraction * 100.0);
+    let b = dedicated_partition(&st, 0.25);
+    println!("dedicated nodes (B) : {:.3} ms (exposed k-space {:.0}%)", b.step_time * 1e3, b.exposed_fraction * 100.0);
+
+    println!("\n=== Ablation: node- vs rank-level ghost exchange ===");
+    let partners = nodediv::rank_level_partners(2.6, 6.0);
+    println!("rank-level ({partners} partners): {:.1} us", nodediv::rank_level_ghost_time(partners, 400, &m) * 1e6);
+    println!("node-level (6 faces)      : {:.1} us", nodediv::node_level_ghost_time(47, 400, &m) * 1e6);
+}

@@ -1,0 +1,9 @@
+//! cargo bench target regenerating Fig 10 (weak scaling to 8400 nodes).
+use dplr::config::MachineConfig;
+use dplr::experiments::fig10_weak as f10;
+use dplr::perfmodel::CostTable;
+
+fn main() {
+    let pts = f10::run(&CostTable::default(), &MachineConfig::default());
+    f10::print_points(&pts);
+}

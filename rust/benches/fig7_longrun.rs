@@ -1,0 +1,13 @@
+//! cargo bench target regenerating Fig 7 (double vs mixed-int2 traces).
+//! Uses a bench-sized step count; `dplr longrun --steps N` for longer runs.
+use dplr::experiments::fig7_longrun as f7;
+
+fn main() {
+    let mut cfg = f7::Config::default();
+    cfg.steps = 400;
+    cfg.out_json = Some("fig7_traces.json".into());
+    match f7::run(&cfg) {
+        Ok((a, b)) => f7::print_summary(&a, &b),
+        Err(e) => eprintln!("fig7 bench skipped: {e:#} (run `make artifacts`)"),
+    }
+}

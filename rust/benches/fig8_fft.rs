@@ -1,0 +1,8 @@
+//! cargo bench target regenerating Fig 8 (distributed FFT comparison).
+use dplr::config::MachineConfig;
+use dplr::experiments::fig8_fft as f8;
+
+fn main() {
+    let rows = f8::run(&MachineConfig::default());
+    f8::print_rows(&rows);
+}

@@ -1,0 +1,13 @@
+//! cargo bench target regenerating Fig 9 (optimization ladder, 96/768 nodes).
+use dplr::config::MachineConfig;
+use dplr::experiments::fig9_stepopt as f9;
+use dplr::perfmodel::CostTable;
+
+fn main() {
+    let m = MachineConfig::default();
+    let cost = CostTable::default();
+    for (nodes, dims, rep) in f9::paper_configs() {
+        let stages = f9::run(dims, rep, &cost, &m);
+        f9::print_stages(nodes, &stages);
+    }
+}

@@ -1,0 +1,61 @@
+//! Hot-path microbenchmarks: the real per-call costs of both inference
+//! paths and the PPPM solver on this host (feeds EXPERIMENTS.md section Perf).
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::neighbor::{build_exact, NlistParams};
+use dplr::pppm::{Pppm, PppmConfig};
+use dplr::runtime::manifest::artifacts_dir;
+use dplr::runtime::{Dtype, PjrtEngine};
+use dplr::util::stats::{summarize, time_reps};
+
+fn main() {
+    let dir = artifacts_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("hotpath bench skipped: run `make artifacts` first");
+        return;
+    }
+    let nmol = 188;
+    let sys = water_box(nmol, 99);
+    let natoms = sys.natoms();
+    let coords = sys.coords_flat();
+    let p = NlistParams::default();
+    let centres: Vec<usize> = (0..natoms).collect();
+    let nlist = build_exact(&sys, &centres, &p).data;
+    let o_centres: Vec<usize> = (0..nmol).collect();
+    let nlist_o = build_exact(&sys, &o_centres, &p).data;
+    let box_len = sys.box_len;
+    let reps = 5;
+
+    println!("=== hot-path microbenchmarks (564-atom water) ===");
+    let native = NativeModel::load(&dir).unwrap();
+    let t = summarize(&time_reps(2, reps, || { let _ = native.dp_ef(&coords, box_len, &nlist); }));
+    println!("native dp_ef        : {:8.2} ms (p50)", t.p50 * 1e3);
+    let t = summarize(&time_reps(2, reps, || { let _ = native.dw_fwd(&coords, box_len, &nlist_o); }));
+    println!("native dw_fwd       : {:8.2} ms", t.p50 * 1e3);
+    let fwc = vec![0.1; nmol * 3];
+    let t = summarize(&time_reps(2, reps, || { let _ = native.dw_vjp(&coords, box_len, &nlist_o, &fwc); }));
+    println!("native dw_vjp       : {:8.2} ms", t.p50 * 1e3);
+
+    let mut pjrt = PjrtEngine::open(&dir).unwrap();
+    pjrt.ensure("dp_ef", natoms, Dtype::F64).unwrap();
+    let t = summarize(&time_reps(2, reps, || { let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap(); }));
+    println!("pjrt dp_ef (f64)    : {:8.2} ms", t.p50 * 1e3);
+    pjrt.ensure("dp_ef", natoms, Dtype::F32).unwrap();
+    let t = summarize(&time_reps(2, reps, || { let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap(); }));
+    println!("pjrt dp_ef (f32)    : {:8.2} ms", t.p50 * 1e3);
+
+    // PPPM: 564 ions + 188 WCs on a 32^3 mesh
+    let mut sites: Vec<[f64; 3]> = sys.pos.clone();
+    let mut q: Vec<f64> = (0..natoms).map(|i| if i < nmol { 6.0 } else { 1.0 }).collect();
+    for n in 0..nmol { sites.push(sys.pos[n]); q.push(-8.0); }
+    let mut pppm = Pppm::new(PppmConfig::new([32, 32, 32], 5, 0.3), box_len);
+    let t = summarize(&time_reps(2, reps, || { let _ = pppm.energy_forces(&sites, &q); }));
+    println!("pppm 32^3 (4 FFTs)  : {:8.2} ms", t.p50 * 1e3);
+    let mut pppm = Pppm::new(PppmConfig::new([12, 18, 12], 5, 0.3), box_len);
+    let t = summarize(&time_reps(2, reps, || { let _ = pppm.energy_forces(&sites, &q); }));
+    println!("pppm 12x18x12       : {:8.2} ms", t.p50 * 1e3);
+
+    // neighbour-list build
+    let t = summarize(&time_reps(2, reps, || { let _ = build_exact(&sys, &centres, &p); }));
+    println!("nlist build (564)   : {:8.2} ms", t.p50 * 1e3);
+}

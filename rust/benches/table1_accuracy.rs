@@ -1,0 +1,10 @@
+//! cargo bench target regenerating Table 1 (precision-config errors).
+use dplr::experiments::table1_accuracy as t1;
+
+fn main() {
+    let cfg = t1::Config::default();
+    match t1::run(&cfg) {
+        Ok(rows) => t1::print_rows(&rows),
+        Err(e) => eprintln!("table1 bench skipped: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,142 @@
+//! Experiment configuration: machine constants for the simulated Fugaku
+//! substrate and presets for the paper's experiments.
+//!
+//! Values come from the paper (section 2.2: BG allreduce ~7 us over 10k
+//! nodes; section 4: 4 MPI ranks/node, 2.2 GHz eco mode) and the TofuD
+//! literature; they can be overridden from a JSON file so the DES is not
+//! hard-coded to one machine.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Machine model constants (the simulated Fugaku).
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    /// compute cores per node usable by the application (A64FX: 48)
+    pub cores_per_node: usize,
+    /// MPI ranks per node (paper: 4, one per CMG)
+    pub ranks_per_node: usize,
+    /// per-hop BG relay latency [s] (~0.25 us relay-to-relay; a 10k-node binary-tree
+    /// allreduce completes in ~7 us, paper section 2.2)
+    pub bg_hop_latency: f64,
+    /// BG payload: values per reduction for f64 / u64 / packed-i32
+    pub bg_payload_f64: usize,
+    pub bg_payload_u64: usize,
+    pub bg_payload_i32: usize,
+    /// reduction chains available per TNI (12) and TNIs per dimension (2)
+    pub chains_per_tni: usize,
+    pub tnis_per_dim: usize,
+    /// point-to-point latency [s] and bandwidth [B/s] per link
+    pub p2p_latency: f64,
+    pub link_bandwidth: f64,
+    /// extra per-hop latency on the torus [s]
+    pub hop_latency: f64,
+    /// per-node flop rate for the NN kernels [flop/s], calibrated
+    pub node_flops: f64,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        MachineConfig {
+            cores_per_node: 48,
+            ranks_per_node: 4,
+            bg_hop_latency: 0.25e-6,
+            bg_payload_f64: 3,
+            bg_payload_u64: 6,
+            bg_payload_i32: 12,
+            chains_per_tni: 12,
+            tnis_per_dim: 2,
+            p2p_latency: 1.0e-6,
+            link_bandwidth: 6.8e9,
+            hop_latency: 0.1e-6,
+            // A64FX ~3 TF/s fp64 peak; NN kernels reach a modest fraction
+            node_flops: 6.0e11,
+        }
+    }
+}
+
+impl MachineConfig {
+    pub fn from_json(j: &Json) -> Result<MachineConfig> {
+        let mut m = MachineConfig::default();
+        let get = |k: &str, d: f64| -> f64 {
+            j.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(d)
+        };
+        m.cores_per_node = get("cores_per_node", m.cores_per_node as f64) as usize;
+        m.ranks_per_node = get("ranks_per_node", m.ranks_per_node as f64) as usize;
+        m.bg_hop_latency = get("bg_hop_latency", m.bg_hop_latency);
+        m.p2p_latency = get("p2p_latency", m.p2p_latency);
+        m.link_bandwidth = get("link_bandwidth", m.link_bandwidth);
+        m.hop_latency = get("hop_latency", m.hop_latency);
+        m.node_flops = get("node_flops", m.node_flops);
+        Ok(m)
+    }
+
+    pub fn load_or_default(path: &str) -> MachineConfig {
+        match Json::parse_file(path) {
+            Ok(j) => MachineConfig::from_json(&j).unwrap_or_default(),
+            Err(_) => MachineConfig::default(),
+        }
+    }
+}
+
+/// The paper's node-count / topology configurations (section 4).
+pub fn paper_topologies() -> Vec<(usize, [usize; 3])> {
+    vec![
+        (12, [2, 3, 2]),
+        (96, [4, 6, 4]),
+        (768, [8, 12, 8]),
+        (1500, [12, 15, 12]), // paper lists 1500 with 12x15x12 (=2160 slots)
+        (4608, [16, 18, 16]),
+        (8400, [20, 21, 20]),
+    ]
+}
+
+/// Weak-scaling replications (section 4.4): (nodes, box replication).
+pub fn weak_scaling_configs() -> Vec<(usize, [usize; 3])> {
+    vec![
+        (12, [1, 1, 1]),
+        (96, [2, 2, 2]),
+        (324, [3, 3, 3]),
+        (768, [4, 4, 4]),
+        (2160, [6, 5, 6]),
+        (4608, [8, 6, 8]),
+        (8400, [10, 7, 10]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let m = MachineConfig::default();
+        assert_eq!(m.cores_per_node, 48);
+        // 10k-node binary tree allreduce ~ log2(10000)*hop ~ 13 hops*0.4us
+        // ~ 5.3us, consistent with the paper's "as little as 7 us"
+        let hops = (10_000f64).log2().ceil();
+        let t = hops * m.bg_hop_latency;
+        assert!(t < 8e-6 && t > 3e-6, "allreduce model {t}");
+    }
+
+    #[test]
+    fn weak_scaling_preserves_47_atoms_per_node() {
+        for (nodes, rep) in weak_scaling_configs() {
+            let atoms = 564 * rep[0] * rep[1] * rep[2];
+            let per_node = atoms as f64 / nodes as f64;
+            assert!(
+                (per_node - 47.0).abs() < 0.5,
+                "{nodes} nodes: {per_node} atoms/node"
+            );
+        }
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let j = Json::parse(r#"{"cores_per_node": 52, "node_flops": 1e12}"#).unwrap();
+        let m = MachineConfig::from_json(&j).unwrap();
+        assert_eq!(m.cores_per_node, 52);
+        assert_eq!(m.node_flops, 1e12);
+        assert_eq!(m.ranks_per_node, 4); // default kept
+    }
+}

@@ -1,0 +1,8 @@
+//! The paper's coordination contributions: ring-based load balancing
+//! (Algorithm 1), spatial decomposition, node-level task division and the
+//! long/short-range overlap scheduler.
+
+pub mod nodediv;
+pub mod overlap;
+pub mod ringlb;
+pub mod spatial;

@@ -1,0 +1,65 @@
+//! Node-level task division (paper section 3.4.1).
+//!
+//! Rank-level bricks at ~12 atoms/rank need two layers of neighbour ranks
+//! for ghosts; gathering all local atoms node-wide and exchanging ghosts
+//! node-to-node cuts the partner count and lets all 48 cores split the
+//! work evenly.  This module provides the communication-cost comparison
+//! between the two schemes.
+
+use crate::config::MachineConfig;
+use crate::mpisim::{allgather_time, halo_time, p2p_time};
+
+/// Communication partners when each rank owns a thin brick: with domains
+/// thinner than the cutoff, ghosts come from two layers per direction.
+pub fn rank_level_partners(rank_width: f64, rc: f64) -> usize {
+    let layers = (rc / rank_width).ceil().max(1.0) as usize;
+    // (2 layers + self)^3 - 1 partner bricks
+    (2 * layers + 1).pow(3) - 1
+}
+
+/// Ghost-exchange cost at rank granularity: many small messages.
+pub fn rank_level_ghost_time(
+    partners: usize,
+    ghost_atoms: usize,
+    m: &MachineConfig,
+) -> f64 {
+    let bytes = (ghost_atoms * 24).div_ceil(partners.max(1));
+    partners as f64 * p2p_time(bytes, 1, m)
+}
+
+/// Node-level scheme: one intra-node allgather + 6 node-face halo
+/// messages (spread over the ranks/TNIs), then an intra-node broadcast
+/// which we fold into the allgather term.
+pub fn node_level_ghost_time(
+    local_atoms: usize,
+    ghost_atoms: usize,
+    m: &MachineConfig,
+) -> f64 {
+    let gather = allgather_time(m.ranks_per_node, local_atoms * 24 / m.ranks_per_node.max(1), m);
+    let halo = halo_time(ghost_atoms * 24 / 6, m);
+    gather + 2.0 * halo // collect + broadcast of ghosts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thin_ranks_need_two_layers() {
+        // paper: ~1 atom/core, rank bricks ~2.6 A thin vs 6 A cutoff
+        assert_eq!(rank_level_partners(2.6, 6.0), 342); // (2*3+1)^3-1... 7^3-1
+        assert_eq!(rank_level_partners(10.0, 6.0), 26); // healthy bricks
+    }
+
+    #[test]
+    fn node_level_wins_for_small_domains() {
+        let m = MachineConfig::default();
+        let partners = rank_level_partners(2.6, 6.0);
+        let rank_t = rank_level_ghost_time(partners, 400, &m);
+        let node_t = node_level_ghost_time(47, 400, &m);
+        assert!(
+            node_t < rank_t,
+            "node-level {node_t} should beat rank-level {rank_t}"
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Spatial decomposition: assign atoms to nodes/ranks by position (the
+//! LAMMPS brick decomposition the paper starts from), plus the per-node
+//! load census the load-balance experiments run on.
+
+use crate::md::system::System;
+use crate::tofu::Torus;
+
+/// Per-node atom counts for a brick decomposition of the box over the
+/// torus grid (node (i,j,k) owns the [i/nx, (i+1)/nx) x ... sub-box).
+pub fn node_loads(sys: &System, t: &Torus) -> Vec<usize> {
+    let mut loads = vec![0usize; t.nodes()];
+    for p in &sys.pos {
+        loads[node_of(sys, t, p)] += 1;
+    }
+    loads
+}
+
+/// Node owning a position.
+pub fn node_of(sys: &System, t: &Torus, p: &[f64; 3]) -> usize {
+    let mut c = [0usize; 3];
+    for d in 0..3 {
+        let x = p[d].rem_euclid(sys.box_len[d]);
+        c[d] = ((x / sys.box_len[d]) * t.dims[d] as f64) as usize % t.dims[d];
+    }
+    t.id_of(c)
+}
+
+/// Split one node's subdomain over its MPI ranks along the longest axis
+/// (the intra-node decomposition before node-level task division).
+pub fn rank_loads(sys: &System, t: &Torus, ranks_per_node: usize) -> Vec<usize> {
+    let mut loads = vec![0usize; t.nodes() * ranks_per_node];
+    // ranks split the node box along x
+    for p in &sys.pos {
+        let node = node_of(sys, t, p);
+        let x = p[0].rem_euclid(sys.box_len[0]);
+        let node_w = sys.box_len[0] / t.dims[0] as f64;
+        let local = (x / node_w).fract() * ranks_per_node as f64;
+        let r = (local as usize).min(ranks_per_node - 1);
+        loads[node * ranks_per_node + r] += 1;
+    }
+    loads
+}
+
+/// Count of ghost atoms a node needs: atoms of other nodes within `rc` of
+/// its sub-box boundary (measured exactly from positions).
+pub fn ghost_count(sys: &System, t: &Torus, node: usize, rc: f64) -> usize {
+    let c = t.coord_of(node);
+    let mut lo = [0.0; 3];
+    let mut hi = [0.0; 3];
+    for d in 0..3 {
+        let w = sys.box_len[d] / t.dims[d] as f64;
+        lo[d] = c[d] as f64 * w;
+        hi[d] = lo[d] + w;
+    }
+    let mut count = 0;
+    for p in &sys.pos {
+        if node_of(sys, t, p) == node {
+            continue;
+        }
+        // distance from p to the box [lo, hi] under PBC
+        let mut d2 = 0.0;
+        for d in 0..3 {
+            let x = p[d].rem_euclid(sys.box_len[d]);
+            let l = sys.box_len[d];
+            // nearest distance to the interval under wrap
+            let mut dd = f64::INFINITY;
+            for shift in [-l, 0.0, l] {
+                let xs = x + shift;
+                let gap = if xs < lo[d] {
+                    lo[d] - xs
+                } else if xs > hi[d] {
+                    xs - hi[d]
+                } else {
+                    0.0
+                };
+                dd = dd.min(gap);
+            }
+            d2 += dd * dd;
+        }
+        if d2 < rc * rc {
+            count += 1;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::water::{replicated_base_box, water_box};
+
+    #[test]
+    fn loads_partition_all_atoms() {
+        let sys = water_box(64, 3);
+        let t = Torus::new([2, 2, 2]);
+        let loads = node_loads(&sys, &t);
+        assert_eq!(loads.iter().sum::<usize>(), sys.natoms());
+        // roughly uniform water: no node empty
+        assert!(loads.iter().all(|&l| l > 0), "{loads:?}");
+    }
+
+    #[test]
+    fn rank_loads_refine_node_loads() {
+        let sys = water_box(64, 3);
+        let t = Torus::new([2, 2, 2]);
+        let nl = node_loads(&sys, &t);
+        let rl = rank_loads(&sys, &t, 4);
+        for n in 0..t.nodes() {
+            let s: usize = rl[n * 4..(n + 1) * 4].iter().sum();
+            assert_eq!(s, nl[n], "node {n}");
+        }
+    }
+
+    #[test]
+    fn paper_workload_47_atoms_per_node_on_average() {
+        // 96 nodes / (2,2,2) replication of the 188-molecule base box
+        let sys = replicated_base_box([2, 2, 2], 1);
+        let t = Torus::new([4, 6, 4]);
+        let loads = node_loads(&sys, &t);
+        let mean = loads.iter().sum::<usize>() as f64 / loads.len() as f64;
+        assert!((mean - 47.0).abs() < 0.5, "mean {mean}");
+        // replication-induced imbalance exists (the paper's observation)
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        assert!(max > min, "expected imbalance, got uniform {max}");
+    }
+
+    #[test]
+    fn ghosts_scale_with_cutoff() {
+        let sys = water_box(128, 5);
+        let t = Torus::new([2, 2, 2]);
+        let g2 = ghost_count(&sys, &t, 0, 2.0);
+        let g4 = ghost_count(&sys, &t, 0, 4.0);
+        assert!(g4 > g2, "{g2} vs {g4}");
+    }
+}

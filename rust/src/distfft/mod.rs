@@ -1,0 +1,259 @@
+//! Distributed 3-D FFT schedules — the subject of Fig. 8.
+//!
+//! Three implementations of the PPPM `brick2fft + poisson_ik` step (one
+//! forward + three inverse 3-D FFTs) over a torus of nodes:
+//!
+//!  * [`fftmpi_time`] — the LAMMPS fftMPI baseline: brick->pencil remap,
+//!    per-dimension 1-D FFTs with pencil->pencil transposes (alltoall);
+//!  * [`heffte_time`] — the heFFTe baseline: same transpose structure with
+//!    heavier per-message overhead (reshape/packing machinery) and a
+//!    minimum-points-per-rank constraint (the paper notes it "lacks
+//!    support for scenarios where each MPI rank has only a small number
+//!    of grid points");
+//!  * [`utofu_time`] — the paper's contribution: per-node partial DFT
+//!    matvecs + hardware BG ring reductions per dimension, no transposes.
+//!
+//! `mode` selects whether all ranks participate (4/node) or one master
+//! rank per node (the paper's `/master` configurations).
+
+use crate::config::MachineConfig;
+use crate::mpisim::{allgather_time, alltoall_time};
+use crate::tofu::{bg_dim_reduction_time, BgPayload, Torus};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Participation {
+    /// every MPI rank joins the FFT communicator (ranks = 4 x nodes)
+    All,
+    /// one master rank per node (and on utofu: one *core*)
+    Master,
+}
+
+/// Cost breakdown for 1000 iterations of brick2fft + poisson_ik would just
+/// scale linearly; we report a single iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FftCost {
+    pub compute: f64,
+    pub comm: f64,
+}
+
+impl FftCost {
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm
+    }
+}
+
+const BYTES_PER_VALUE: usize = 16; // complex f64
+
+/// 1-D FFT flop estimate (5 n log2 n, FFTW convention).
+fn fft1d_flops(n: usize) -> f64 {
+    5.0 * n as f64 * (n as f64).log2().max(1.0)
+}
+
+/// Serial compute time for the four 3-D FFTs, split over `ranks` workers
+/// each with one core.
+fn fft_compute_time(grid: [usize; 3], workers: usize, m: &MachineConfig) -> f64 {
+    let [gx, gy, gz] = grid;
+    let lines = (gy * gz) as f64 * fft1d_flops(gx)
+        + (gx * gz) as f64 * fft1d_flops(gy)
+        + (gx * gy) as f64 * fft1d_flops(gz);
+    let core_flops = m.node_flops / m.cores_per_node as f64;
+    4.0 * lines / core_flops / workers as f64
+}
+
+/// fftMPI-style transpose FFT (paper's FFT-MPI baseline).
+///
+/// Per 3-D FFT: brick->pencil remap + 2 pencil->pencil transposes, each an
+/// alltoall over the transpose group (~sqrt(P) ranks), moving the local
+/// grid volume; 4 FFTs per poisson_ik, brick2fft counted once.
+pub fn fftmpi_time(
+    grid: [usize; 3],
+    torus: &Torus,
+    mode: Participation,
+    m: &MachineConfig,
+) -> FftCost {
+    let nodes = torus.nodes();
+    let ranks = match mode {
+        Participation::All => nodes * m.ranks_per_node,
+        Participation::Master => nodes,
+    };
+    let total_points = grid[0] * grid[1] * grid[2];
+    let local_bytes = total_points.div_ceil(ranks) * BYTES_PER_VALUE;
+    // transpose groups: pencil decompositions are ~sqrt(ranks) x sqrt(ranks)
+    let group = (ranks as f64).sqrt().ceil() as usize;
+    let remap = alltoall_time(group, local_bytes.div_ceil(group.max(1)), m);
+    // brick2fft (one remap) + per-FFT 2 transposes x 4 FFTs
+    let comm = remap + 4.0 * 2.0 * remap;
+    let compute = fft_compute_time(grid, ranks, m);
+    FftCost { compute, comm }
+}
+
+/// heFFTe-style FFT: same structure, higher constant overhead (packing /
+/// reshape infrastructure), and `None` when a rank would hold fewer than
+/// 4 grid points (observed unsupported regime in the paper).
+pub fn heffte_time(
+    grid: [usize; 3],
+    torus: &Torus,
+    mode: Participation,
+    m: &MachineConfig,
+) -> Option<FftCost> {
+    let nodes = torus.nodes();
+    let ranks = match mode {
+        Participation::All => nodes * m.ranks_per_node,
+        Participation::Master => nodes,
+    };
+    let total_points = grid[0] * grid[1] * grid[2];
+    if total_points / ranks < 4 {
+        return None;
+    }
+    let base = fftmpi_time(grid, torus, mode, m);
+    // measured in the paper as uniformly slower: heavier reshape machinery
+    // (packing, plan management) on both sides of every exchange
+    let overhead_per_exchange = 9.0 * m.p2p_latency;
+    let exchanges = 1.0 + 8.0;
+    Some(FftCost {
+        compute: base.compute * 1.15,
+        comm: base.comm * 1.35 + exchanges * overhead_per_exchange,
+    })
+}
+
+/// utofu-FFT (paper section 3.1): per-node partial DFT matvec + BG ring
+/// reductions along each torus dimension; one dedicated core per node.
+pub fn utofu_time(
+    grid: [usize; 3],
+    torus: &Torus,
+    payload: BgPayload,
+    m: &MachineConfig,
+) -> FftCost {
+    let mut compute = 0.0;
+    let mut comm = 0.0;
+    let core_flops = m.node_flops / m.cores_per_node as f64;
+    // grid points per node along each dim
+    let g = [
+        grid[0].div_ceil(torus.dims[0]),
+        grid[1].div_ceil(torus.dims[1]),
+        grid[2].div_ceil(torus.dims[2]),
+    ];
+    for d in 0..3 {
+        let n_d = torus.dims[d]; // nodes along this dim
+        let nn = grid[d]; // global line length
+        // partial DFT X~ = F_N[:, J] x_J per line: nn outputs x g[d] inputs,
+        // 8 flops per complex multiply-add; lines per node = product of the
+        // other two local dims
+        let lines = (g[(d + 1) % 3] * g[(d + 2) % 3]) as f64;
+        let matvec_flops = lines * nn as f64 * g[d] as f64 * 8.0;
+        compute += 4.0 * matvec_flops / core_flops;
+        // reduction: every node reduces its 2 * local-points values
+        let values = 2 * g[0] * g[1] * g[2];
+        comm += 4.0 * bg_dim_reduction_time(n_d, values, payload, m);
+    }
+    FftCost { compute, comm }
+}
+
+/// One node gathers the grid contributions of its 4 ranks before a
+/// master-mode FFT (intra-node, cheap; paper section 3.2 gather/scatter).
+pub fn intra_node_gather_time(points_per_node: usize, m: &MachineConfig) -> f64 {
+    allgather_time(
+        m.ranks_per_node,
+        points_per_node * BYTES_PER_VALUE / m.ranks_per_node.max(1),
+        m,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_topologies;
+
+    fn mc() -> MachineConfig {
+        MachineConfig::default()
+    }
+
+    /// grid with 4^3 points per node (the paper's smallest config)
+    fn grid_for(t: &Torus, per_dim: usize) -> [usize; 3] {
+        [
+            t.dims[0] * per_dim,
+            t.dims[1] * per_dim,
+            t.dims[2] * per_dim,
+        ]
+    }
+
+    #[test]
+    fn utofu_beats_fftmpi_at_4cube_per_node() {
+        // Fig 8: ~2x at 4^3 grid/node
+        let m = mc();
+        for (_, dims) in paper_topologies().into_iter().skip(1) {
+            let t = Torus::new(dims);
+            let grid = grid_for(&t, 4);
+            let a = fftmpi_time(grid, &t, Participation::All, &m).total();
+            let u = utofu_time(grid, &t, BgPayload::PackedI32, &m).total();
+            assert!(u < a, "{dims:?}: utofu {u} vs fftmpi {a}");
+        }
+    }
+
+    #[test]
+    fn utofu_advantage_shrinks_at_6cube_per_node() {
+        // Fig 8: 36 reductions/dim at 6^3 erode the win
+        let m = mc();
+        let t = Torus::new([8, 12, 8]);
+        let ratio4 = {
+            let g = grid_for(&t, 4);
+            fftmpi_time(g, &t, Participation::All, &m).total()
+                / utofu_time(g, &t, BgPayload::PackedI32, &m).total()
+        };
+        let ratio6 = {
+            let g = grid_for(&t, 6);
+            fftmpi_time(g, &t, Participation::All, &m).total()
+                / utofu_time(g, &t, BgPayload::PackedI32, &m).total()
+        };
+        assert!(
+            ratio6 < ratio4,
+            "advantage should shrink: {ratio4} -> {ratio6}"
+        );
+    }
+
+    #[test]
+    fn heffte_slower_than_fftmpi_and_gated_on_tiny_grids() {
+        let m = mc();
+        let t = Torus::new([4, 6, 4]);
+        let g = grid_for(&t, 4);
+        let f = fftmpi_time(g, &t, Participation::All, &m).total();
+        let h = heffte_time(g, &t, Participation::All, &m).unwrap().total();
+        assert!(h > f, "heffte {h} vs fftmpi {f}");
+        // 96 nodes x 4 ranks = 384 ranks on a 16x24x16 grid (6144 pts) is
+        // fine, but a 2 points/rank case must be rejected
+        let tiny = Torus::new([20, 21, 20]);
+        let gt = [tiny.dims[0] * 2, tiny.dims[1], tiny.dims[2]];
+        assert!(heffte_time(gt, &tiny, Participation::All, &m).is_none());
+    }
+
+    #[test]
+    fn master_mode_reduces_fft_ranks() {
+        let m = mc();
+        let t = Torus::new([8, 12, 8]);
+        let g = grid_for(&t, 4);
+        let all = fftmpi_time(g, &t, Participation::All, &m);
+        let master = fftmpi_time(g, &t, Participation::Master, &m);
+        // fewer ranks -> less comm (the motivation for master mode)
+        assert!(master.comm < all.comm);
+    }
+
+    #[test]
+    fn i32_payload_beats_u64_end_to_end() {
+        let m = mc();
+        let t = Torus::new([12, 15, 12]);
+        let g = grid_for(&t, 4);
+        let u64t = utofu_time(g, &t, BgPayload::U64, &m).total();
+        let i32t = utofu_time(g, &t, BgPayload::PackedI32, &m).total();
+        assert!(i32t < u64t);
+    }
+
+    #[test]
+    fn utofu_fft_total_in_hundreds_of_microseconds() {
+        // paper section 3.1 closing claim
+        let m = mc();
+        let t = Torus::new([4, 6, 4]);
+        let g = grid_for(&t, 4);
+        let u = utofu_time(g, &t, BgPayload::PackedI32, &m).total();
+        assert!(u > 2e-5 && u < 2e-3, "utofu total {u}");
+    }
+}

@@ -1,0 +1,234 @@
+//! Direct reciprocal-space Ewald sum — the golden reference for E_Gt.
+//!
+//! DPLR's long-range term (paper Eq. 2-3) is *only* the smooth k-space sum
+//! over Gaussian charges; the short-range/real-space complement is absorbed
+//! into the DP network during training.  We therefore expose the recip-only
+//! energy/forces (used as the accuracy reference for Table 1 and to verify
+//! PPPM), plus a full Ewald (real + recip + self) used for the classic
+//! Madelung-constant sanity test of the electrostatics substrate.
+
+use crate::md::units::KE_COULOMB;
+
+/// Gaussian-screened reciprocal-space sum, truncated at |m_i| <= mmax.
+///
+/// E = ke * (2 pi / V) * sum_{k != 0} exp(-k^2/(4 alpha^2)) / k^2 * |S(k)|^2,
+/// k = 2 pi (m_x/L_x, m_y/L_y, m_z/L_z);  forces are the exact gradient.
+pub struct EwaldRecip {
+    pub alpha: f64,
+    pub mmax: [i32; 3],
+}
+
+impl EwaldRecip {
+    pub fn new(alpha: f64, mmax: [i32; 3]) -> Self {
+        EwaldRecip { alpha, mmax }
+    }
+
+    /// `mmax` chosen so the smallest neglected term is < tol relative.
+    pub fn auto(alpha: f64, box_len: [f64; 3], tol: f64) -> Self {
+        let mut mmax = [1i32; 3];
+        for d in 0..3 {
+            let mut m = 1;
+            loop {
+                let k = 2.0 * std::f64::consts::PI * m as f64 / box_len[d];
+                if (-k * k / (4.0 * alpha * alpha)).exp() / (k * k) < tol || m > 64 {
+                    break;
+                }
+                m += 1;
+            }
+            mmax[d] = m;
+        }
+        EwaldRecip { alpha, mmax }
+    }
+
+    /// Returns (energy, forces) for point charges `q` at `pos` in an
+    /// orthorhombic box.  Forces layout matches `pos`.
+    pub fn energy_forces(
+        &self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        box_len: [f64; 3],
+    ) -> (f64, Vec<[f64; 3]>) {
+        assert_eq!(pos.len(), q.len());
+        let v = box_len[0] * box_len[1] * box_len[2];
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let pref = KE_COULOMB * two_pi / v;
+        let mut energy = 0.0;
+        let mut forces = vec![[0.0; 3]; pos.len()];
+        let a2inv = 1.0 / (4.0 * self.alpha * self.alpha);
+
+        for mx in -self.mmax[0]..=self.mmax[0] {
+            for my in -self.mmax[1]..=self.mmax[1] {
+                for mz in -self.mmax[2]..=self.mmax[2] {
+                    if mx == 0 && my == 0 && mz == 0 {
+                        continue;
+                    }
+                    let k = [
+                        two_pi * mx as f64 / box_len[0],
+                        two_pi * my as f64 / box_len[1],
+                        two_pi * mz as f64 / box_len[2],
+                    ];
+                    let k2 = k[0] * k[0] + k[1] * k[1] + k[2] * k[2];
+                    let a = (-k2 * a2inv).exp() / k2;
+                    // S(k) = sum_i q_i e^{i k.r_i}
+                    let (mut sre, mut sim) = (0.0, 0.0);
+                    let mut phase = Vec::with_capacity(pos.len());
+                    for (p, qi) in pos.iter().zip(q) {
+                        let th = k[0] * p[0] + k[1] * p[1] + k[2] * p[2];
+                        let (s, c) = th.sin_cos();
+                        sre += qi * c;
+                        sim += qi * s;
+                        phase.push((s, c));
+                    }
+                    energy += pref * a * (sre * sre + sim * sim);
+                    // F_i = 2 pref A q_i k [sin(th_i) S_re - cos(th_i) S_im]
+                    let fpre = 2.0 * pref * a;
+                    for (i, (s, c)) in phase.iter().enumerate() {
+                        let g = fpre * q[i] * (s * sre - c * sim);
+                        forces[i][0] += g * k[0];
+                        forces[i][1] += g * k[1];
+                        forces[i][2] += g * k[2];
+                    }
+                }
+            }
+        }
+        (energy, forces)
+    }
+}
+
+/// Full Ewald (real + recip + self) for validation against known lattice
+/// energies (Madelung).  Not used on the DPLR hot path.
+pub fn full_ewald_energy(
+    pos: &[[f64; 3]],
+    q: &[f64],
+    box_len: [f64; 3],
+    alpha: f64,
+    rcut: f64,
+    mmax: [i32; 3],
+) -> f64 {
+    // real-space: 0.5 sum_{i != j, images} qi qj erfc(alpha r)/r
+    let mut e_real = 0.0;
+    let nimg = [
+        (rcut / box_len[0]).ceil() as i32,
+        (rcut / box_len[1]).ceil() as i32,
+        (rcut / box_len[2]).ceil() as i32,
+    ];
+    for i in 0..pos.len() {
+        for j in 0..pos.len() {
+            for ix in -nimg[0]..=nimg[0] {
+                for iy in -nimg[1]..=nimg[1] {
+                    for iz in -nimg[2]..=nimg[2] {
+                        if i == j && ix == 0 && iy == 0 && iz == 0 {
+                            continue;
+                        }
+                        let dx = pos[j][0] - pos[i][0] + ix as f64 * box_len[0];
+                        let dy = pos[j][1] - pos[i][1] + iy as f64 * box_len[1];
+                        let dz = pos[j][2] - pos[i][2] + iz as f64 * box_len[2];
+                        let r = (dx * dx + dy * dy + dz * dz).sqrt();
+                        if r < rcut {
+                            e_real += 0.5 * q[i] * q[j] * erfc(alpha * r) / r;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    e_real *= KE_COULOMB;
+    let (e_recip, _) = EwaldRecip::new(alpha, mmax).energy_forces(pos, q, box_len);
+    // self-energy
+    let e_self: f64 =
+        -KE_COULOMB * alpha / std::f64::consts::PI.sqrt() * q.iter().map(|x| x * x).sum::<f64>();
+    e_real + e_recip + e_self
+}
+
+/// Complementary error function (Abramowitz-Stegun 7.1.26, |err| < 1.5e-7,
+/// refined by one Newton step against erf' for ~1e-12 on typical args).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    // A&S rational approximation
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let base = poly * (-x * x).exp();
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erfc_known_values() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.157299207).abs() < 1e-6);
+        assert!((erfc(2.0) - 0.004677735).abs() < 1e-6);
+        assert!((erfc(-1.0) - (2.0 - 0.157299207)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn recip_forces_match_finite_difference() {
+        let box_len = [10.0, 10.0, 10.0];
+        let pos = vec![[1.0, 2.0, 3.0], [4.0, 5.5, 2.2], [7.3, 0.4, 8.8]];
+        let q = vec![1.0, -2.0, 1.0];
+        let ew = EwaldRecip::new(0.8, [8, 8, 8]);
+        let (_, f) = ew.energy_forces(&pos, &q, box_len);
+        let eps = 1e-5;
+        for i in 0..pos.len() {
+            for d in 0..3 {
+                let mut pp = pos.clone();
+                pp[i][d] += eps;
+                let (ep, _) = ew.energy_forces(&pp, &q, box_len);
+                let mut pm = pos.clone();
+                pm[i][d] -= eps;
+                let (em, _) = ew.energy_forces(&pm, &q, box_len);
+                let fd = -(ep - em) / (2.0 * eps);
+                assert!(
+                    (fd - f[i][d]).abs() < 1e-6 * fd.abs().max(1.0),
+                    "atom {i} dim {d}: fd {fd} vs {}",
+                    f[i][d]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recip_energy_is_translation_invariant() {
+        let box_len = [8.0, 8.0, 8.0];
+        let pos = vec![[1.0, 1.0, 1.0], [3.3, 4.4, 5.5]];
+        let q = vec![1.5, -1.5];
+        let ew = EwaldRecip::new(1.0, [6, 6, 6]);
+        let (e0, _) = ew.energy_forces(&pos, &q, box_len);
+        let shifted: Vec<[f64; 3]> = pos
+            .iter()
+            .map(|p| [p[0] + 2.7, p[1] - 1.1, p[2] + 0.3])
+            .collect();
+        let (e1, _) = ew.energy_forces(&shifted, &q, box_len);
+        assert!((e0 - e1).abs() < 1e-9 * e0.abs().max(1.0));
+    }
+
+    #[test]
+    fn madelung_constant_of_rocksalt() {
+        // NaCl: 8 ions in a cubic cell of edge 2 (nearest-neighbour dist 1).
+        // Madelung constant 1.747564594633...; E per ion pair =
+        // -ke * M / a_nn.  alpha/mmax/rcut chosen for ~1e-6 accuracy.
+        let a = 2.0;
+        let mut pos = Vec::new();
+        let mut q = Vec::new();
+        for x in 0..2 {
+            for y in 0..2 {
+                for z in 0..2 {
+                    pos.push([x as f64, y as f64, z as f64]);
+                    q.push(if (x + y + z) % 2 == 0 { 1.0 } else { -1.0 });
+                }
+            }
+        }
+        let e = full_ewald_energy(&pos, &q, [a, a, a], 1.6, 6.0, [12, 12, 12]);
+        let madelung = -e / (KE_COULOMB * 4.0); // 4 ion pairs, a_nn = 1
+        assert!(
+            (madelung - 1.7475645946).abs() < 1e-4,
+            "madelung {madelung}"
+        );
+    }
+}

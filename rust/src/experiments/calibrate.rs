@@ -1,0 +1,125 @@
+//! Host calibration: measure real per-atom costs of both inference paths
+//! and the precision ratios that parameterize the DES cost table
+//! (DESIGN.md section 7).
+
+use crate::native::NativeModel;
+use crate::neighbor::{build_exact, NlistParams};
+use crate::md::water::water_box;
+use crate::perfmodel::CostTable;
+use crate::runtime::manifest::artifacts_dir;
+use crate::runtime::{Dtype, PjrtEngine};
+use crate::util::json::Json;
+use crate::util::stats::{summarize, time_reps};
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// native framework-free path, per atom [s]
+    pub native_dp_per_atom: f64,
+    pub native_dw_fwd_per_mol: f64,
+    pub native_dw_vjp_per_mol: f64,
+    /// XLA/PJRT path (the "framework" baseline), per atom [s]
+    pub pjrt_dp_per_atom_f64: f64,
+    pub pjrt_dp_per_atom_f32: f64,
+    /// ratios feeding the cost table
+    pub framework_factor: f64,
+    pub fp32_speedup: f64,
+}
+
+pub fn run(reps: usize) -> Result<Calibration> {
+    let dir = artifacts_dir();
+    let nmol = 188; // the 564-atom headline box
+    let sys = water_box(nmol, 99);
+    let natoms = sys.natoms();
+    let coords = sys.coords_flat();
+    let p = NlistParams::default();
+    let centres: Vec<usize> = (0..natoms).collect();
+    let nlist = build_exact(&sys, &centres, &p).data;
+    let o_centres: Vec<usize> = (0..nmol).collect();
+    let nlist_o = build_exact(&sys, &o_centres, &p).data;
+    let box_len = sys.box_len;
+
+    let native = NativeModel::load(&dir)?;
+    let t_dp = summarize(&time_reps(2, reps, || {
+        let _ = native.dp_ef(&coords, box_len, &nlist);
+    }))
+    .p50;
+    let t_dwf = summarize(&time_reps(2, reps, || {
+        let _ = native.dw_fwd(&coords, box_len, &nlist_o);
+    }))
+    .p50;
+    let fwc = vec![0.1; nmol * 3];
+    let t_dwv = summarize(&time_reps(2, reps, || {
+        let _ = native.dw_vjp(&coords, box_len, &nlist_o, &fwc);
+    }))
+    .p50;
+
+    let mut pjrt = PjrtEngine::open(&dir)?;
+    pjrt.ensure("dp_ef", natoms, Dtype::F64)?;
+    let t_pj64 = summarize(&time_reps(2, reps, || {
+        let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap();
+    }))
+    .p50;
+    pjrt.ensure("dp_ef", natoms, Dtype::F32)?;
+    let t_pj32 = summarize(&time_reps(2, reps, || {
+        let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap();
+    }))
+    .p50;
+
+    Ok(Calibration {
+        native_dp_per_atom: t_dp / natoms as f64,
+        native_dw_fwd_per_mol: t_dwf / nmol as f64,
+        native_dw_vjp_per_mol: t_dwv / nmol as f64,
+        pjrt_dp_per_atom_f64: t_pj64 / natoms as f64,
+        pjrt_dp_per_atom_f32: t_pj32 / natoms as f64,
+        framework_factor: t_pj64 / t_dp,
+        fp32_speedup: t_pj64 / t_pj32,
+    })
+}
+
+impl Calibration {
+    /// Cost table for the DES: host *ratios* + the A64FX anchor
+    /// (DESIGN.md section 7 — one anchor, everything else follows).
+    pub fn to_cost_table(&self) -> CostTable {
+        let mut c = CostTable::default();
+        c.framework_factor = self.framework_factor.max(1.0);
+        c.fp32_speedup = self.fp32_speedup.max(1.0);
+        // keep per-atom *proportions* between DP and DW from the host
+        let dw_f = self.native_dw_fwd_per_mol / self.native_dp_per_atom.max(1e-12);
+        let dw_b = self.native_dw_vjp_per_mol / self.native_dp_per_atom.max(1e-12);
+        c.dw_fwd_per_mol = c.dp_per_atom * dw_f;
+        c.dw_bwd_per_mol = c.dp_per_atom * dw_b;
+        c
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        let j = Json::obj(vec![
+            ("native_dp_per_atom", Json::Num(self.native_dp_per_atom)),
+            ("native_dw_fwd_per_mol", Json::Num(self.native_dw_fwd_per_mol)),
+            ("native_dw_vjp_per_mol", Json::Num(self.native_dw_vjp_per_mol)),
+            ("pjrt_dp_per_atom_f64", Json::Num(self.pjrt_dp_per_atom_f64)),
+            ("pjrt_dp_per_atom_f32", Json::Num(self.pjrt_dp_per_atom_f32)),
+            ("framework_factor", Json::Num(self.framework_factor)),
+            ("fp32_speedup", Json::Num(self.fp32_speedup)),
+        ]);
+        std::fs::write(path, j.to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn print(&self) {
+        println!("\n=== Host calibration (564-atom water box) ===");
+        println!("native  dp_ef      : {:.3} us/atom", self.native_dp_per_atom * 1e6);
+        println!("native  dw_fwd     : {:.3} us/mol", self.native_dw_fwd_per_mol * 1e6);
+        println!("native  dw_vjp     : {:.3} us/mol", self.native_dw_vjp_per_mol * 1e6);
+        println!("pjrt    dp_ef f64  : {:.3} us/atom", self.pjrt_dp_per_atom_f64 * 1e6);
+        println!("pjrt    dp_ef f32  : {:.3} us/atom", self.pjrt_dp_per_atom_f32 * 1e6);
+        println!(
+            "framework factor (pjrt/native): {:.2}x   (paper TF/framework-free: 7.5-9.9x)",
+            self.framework_factor
+        );
+        println!(
+            "fp32 speedup (pjrt f64/f32)  : {:.2}x   (paper: 1.3-1.5x)",
+            self.fp32_speedup
+        );
+    }
+}

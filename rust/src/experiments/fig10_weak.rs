@@ -1,0 +1,80 @@
+//! Fig. 10: weak scaling, 12 -> 8400 nodes at 47 atoms/node, all
+//! optimizations on; reports ns/day (paper: 51 at 12 nodes, 32.5 at 8400).
+
+use crate::config::{weak_scaling_configs, MachineConfig};
+use crate::md::water::replicated_base_box;
+use crate::perfmodel::{ns_per_day, step_time, CostTable, StageFlags};
+use crate::tofu::Torus;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub nodes: usize,
+    pub atoms: usize,
+    pub step_ms: f64,
+    pub ns_day: f64,
+}
+
+fn all_on() -> StageFlags {
+    let mut f = StageFlags::default();
+    f.native_inference = true;
+    f.fp32 = true;
+    f.utofu_fft = true;
+    f.node_division = true;
+    f.ring_lb = true;
+    f.overlap = true;
+    f
+}
+
+/// Torus dims used for each weak-scaling node count (factored near-cubes).
+fn torus_for(nodes: usize) -> [usize; 3] {
+    match nodes {
+        12 => [2, 3, 2],
+        96 => [4, 6, 4],
+        324 => [6, 9, 6],
+        768 => [8, 12, 8],
+        2160 => [12, 15, 12],
+        4608 => [16, 18, 16],
+        8400 => [20, 21, 20],
+        n => {
+            let c = (n as f64).cbrt().round() as usize;
+            [c.max(1), c.max(1), c.max(1)]
+        }
+    }
+}
+
+pub fn run(cost: &CostTable, machine: &MachineConfig) -> Vec<Point> {
+    let flags = all_on();
+    weak_scaling_configs()
+        .into_iter()
+        .map(|(nodes, rep)| {
+            let sys = replicated_base_box(rep, 1);
+            let torus = Torus::new(torus_for(nodes));
+            let b = step_time(&sys, &torus, flags, cost, machine);
+            Point {
+                nodes,
+                atoms: sys.natoms(),
+                step_ms: b.total() * 1e3,
+                ns_day: ns_per_day(b.total()),
+            }
+        })
+        .collect()
+}
+
+pub fn print_points(points: &[Point]) {
+    println!("\n=== Fig 10: weak scaling, 47 atoms/node, all optimizations ===");
+    let mut t = Table::new(&["nodes", "atoms", "ms/step", "ns/day"]);
+    for p in points {
+        t.row(&[
+            p.nodes.to_string(),
+            p.atoms.to_string(),
+            format!("{:.3}", p.step_ms),
+            format!("{:.1}", p.ns_day),
+        ]);
+    }
+    t.print();
+    println!(
+        "(paper anchors: 51 ns/day at 12 nodes / 564 atoms, 32.5 ns/day at \
+         8400 nodes / ~400K atoms)"
+    );
+}

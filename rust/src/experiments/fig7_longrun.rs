@@ -1,0 +1,131 @@
+//! Fig. 7: long NVT trajectories under Double vs Mixed-int2 precision —
+//! energy and temperature traces must coincide and stay stable.
+//!
+//! Paper: 50k steps on the 128-water system.  Defaults here are scaled to
+//! one CPU (the trace density, not the physics, is what the figure shows);
+//! `--steps` restores any length.
+
+use crate::engine::{Backend, DplrEngine, EngineConfig};
+use crate::md::water::water_box;
+use crate::native::NativeModel;
+use crate::pppm::MeshMode;
+use crate::runtime::manifest::artifacts_dir;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+pub struct Config {
+    pub nmol: usize,
+    pub steps: usize,
+    pub sample_every: usize,
+    pub out_json: Option<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            nmol: 128,
+            steps: 1500,
+            sample_every: 10,
+            out_json: Some("fig7_traces.json".to_string()),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub label: String,
+    pub step: Vec<u64>,
+    pub energy: Vec<f64>,
+    pub temperature: Vec<f64>,
+}
+
+fn run_one(cfg: &Config, label: &str, mode: Option<MeshMode>) -> Result<Trace> {
+    let mut sys = water_box(cfg.nmol, 4242);
+    let mut rng = Rng::new(17);
+    sys.thermalize(300.0, &mut rng);
+    let backend = Backend::Native(NativeModel::load(&artifacts_dir())?);
+    let mut ec = EngineConfig::default_for(sys.box_len, 0.3);
+    ec.overlap = true;
+    let mut eng = DplrEngine::new(sys, ec, backend);
+    if let Some(mode) = mode {
+        eng.set_mesh_mode([8, 12, 8], mode, 0.3);
+    }
+    // longer relaxation than the quick examples: Fig 7 measures
+    // equilibrium stability, so shed the lattice-packing energy first
+    eng.quench(120)?;
+    eng.reheat(300.0, 23);
+    let mut tr = Trace {
+        label: label.to_string(),
+        step: Vec::new(),
+        energy: Vec::new(),
+        temperature: Vec::new(),
+    };
+    for s in 0..cfg.steps {
+        eng.step()?;
+        if s % cfg.sample_every == 0 {
+            let o = eng.last_obs.unwrap();
+            tr.step.push(s as u64);
+            tr.energy.push(o.e_sr + o.e_gt + o.kinetic);
+            tr.temperature.push(o.temperature);
+        }
+    }
+    Ok(tr)
+}
+
+pub fn run(cfg: &Config) -> Result<(Trace, Trace)> {
+    let double = run_one(cfg, "double", None)?;
+    let quant = run_one(
+        cfg,
+        "mixed-int2",
+        Some(MeshMode::QuantInt32 { nseg: [2, 3, 2] }),
+    )?;
+    if let Some(path) = &cfg.out_json {
+        let dump = |t: &Trace| {
+            Json::obj(vec![
+                ("label", Json::Str(t.label.clone())),
+                (
+                    "step",
+                    Json::Arr(t.step.iter().map(|&s| Json::Num(s as f64)).collect()),
+                ),
+                ("energy", Json::arr_f64(&t.energy)),
+                ("temperature", Json::arr_f64(&t.temperature)),
+            ])
+        };
+        let j = Json::Arr(vec![dump(&double), dump(&quant)]);
+        std::fs::write(path, j.to_string_pretty())?;
+    }
+    Ok((double, quant))
+}
+
+pub fn print_summary(a: &Trace, b: &Trace) {
+    let stat = |v: &[f64]| {
+        let n = v.len().max(1) as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let sd = (v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n).sqrt();
+        (mean, sd)
+    };
+    println!("\n=== Fig 7: long NVT run, double vs mixed-int2 ===");
+    for t in [a, b] {
+        let half = t.energy.len() / 2;
+        let (em, es) = stat(&t.energy[half..]);
+        let (tm, ts) = stat(&t.temperature[half..]);
+        println!(
+            "{:>12}: <E> = {:.3} +- {:.3} eV   <T> = {:.1} +- {:.1} K   ({} samples)",
+            t.label,
+            em,
+            es,
+            tm,
+            ts,
+            t.energy.len()
+        );
+    }
+    let half = a.energy.len() / 2;
+    let (ea, _) = stat(&a.energy[half..]);
+    let (eb, _) = stat(&b.energy[half..]);
+    println!(
+        "trace separation: |<E>_double - <E>_int2| = {:.4} eV ({:.2e} rel)",
+        (ea - eb).abs(),
+        (ea - eb).abs() / ea.abs().max(1.0)
+    );
+}

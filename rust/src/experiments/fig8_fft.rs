@@ -1,0 +1,76 @@
+//! Fig. 8: distributed 3-D FFT comparison (FFT-MPI/all, heFFTe/all,
+//! heFFTe/master, utofu-FFT/master) across per-node grids 4^3/5^3/6^3 and
+//! the paper's node counts; 1000 iterations of brick2fft + poisson_ik.
+
+use crate::config::{paper_topologies, MachineConfig};
+use crate::distfft::{fftmpi_time, heffte_time, utofu_time, Participation};
+use crate::tofu::{BgPayload, Torus};
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub nodes: usize,
+    pub grid_per_node: usize,
+    /// seconds for 1000 iterations, per method (None = unsupported)
+    pub fftmpi_all: f64,
+    pub heffte_all: Option<f64>,
+    pub heffte_master: Option<f64>,
+    pub utofu_master: f64,
+}
+
+pub fn run(machine: &MachineConfig) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for per_node in [4usize, 5, 6] {
+        for (nodes, dims) in paper_topologies() {
+            let t = Torus::new(dims);
+            let grid = [
+                dims[0] * per_node,
+                dims[1] * per_node,
+                dims[2] * per_node,
+            ];
+            let iters = 1000.0;
+            rows.push(Row {
+                nodes,
+                grid_per_node: per_node,
+                fftmpi_all: iters * fftmpi_time(grid, &t, Participation::All, machine).total(),
+                heffte_all: heffte_time(grid, &t, Participation::All, machine)
+                    .map(|c| iters * c.total()),
+                heffte_master: heffte_time(grid, &t, Participation::Master, machine)
+                    .map(|c| iters * c.total()),
+                utofu_master: iters
+                    * utofu_time(grid, &t, BgPayload::PackedI32, machine).total(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_rows(rows: &[Row]) {
+    println!("\n=== Fig 8: 1000 x (brick2fft + poisson_ik) [seconds] ===");
+    for per_node in [4usize, 5, 6] {
+        let mut t = Table::new(&[
+            "nodes",
+            "FFT-MPI/all",
+            "heFFTe/all",
+            "heFFTe/master",
+            "utofu-FFT/master",
+            "utofu speedup",
+        ]);
+        for r in rows.iter().filter(|r| r.grid_per_node == per_node) {
+            let fmt = |x: Option<f64>| match x {
+                Some(v) => format!("{v:.3}"),
+                None => "n/a".to_string(),
+            };
+            t.row(&[
+                r.nodes.to_string(),
+                format!("{:.3}", r.fftmpi_all),
+                fmt(r.heffte_all),
+                fmt(r.heffte_master),
+                format!("{:.3}", r.utofu_master),
+                format!("{:.2}x", r.fftmpi_all / r.utofu_master),
+            ]);
+        }
+        println!("--- {per_node}^3 grid points per node ---");
+        t.print();
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig. 9: step-by-step optimization ladder at 96 and 768 nodes,
+//! 47 atoms/node, 100 time-steps, with the kspace/comm/dw_fwd/
+//! dw_bwd+dp_all/others breakdown and cumulative speedups.
+
+use crate::config::MachineConfig;
+use crate::md::water::replicated_base_box;
+use crate::perfmodel::{step_time, Breakdown, CostTable, StageFlags};
+use crate::tofu::Torus;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: &'static str,
+    pub breakdown: Breakdown,
+    pub speedup_vs_baseline: f64,
+}
+
+pub fn run(
+    node_dims: [usize; 3],
+    replication: [usize; 3],
+    cost: &CostTable,
+    machine: &MachineConfig,
+) -> Vec<Stage> {
+    let sys = replicated_base_box(replication, 1);
+    let torus = Torus::new(node_dims);
+    let ladder = StageFlags::ladder();
+    let base = step_time(&sys, &torus, ladder[0].1, cost, machine).total();
+    ladder
+        .into_iter()
+        .map(|(name, flags)| {
+            let breakdown = step_time(&sys, &torus, flags, cost, machine);
+            Stage {
+                name,
+                speedup_vs_baseline: base / breakdown.total(),
+                breakdown,
+            }
+        })
+        .collect()
+}
+
+pub fn print_stages(nodes: usize, stages: &[Stage]) {
+    println!("\n=== Fig 9: step-by-step optimization, {nodes} nodes (100 steps) ===");
+    let mut t = Table::new(&[
+        "stage",
+        "kspace [s]",
+        "comm [s]",
+        "dw_fwd [s]",
+        "dw_bwd+dp_all [s]",
+        "others [s]",
+        "total/100 steps",
+        "speedup",
+    ]);
+    for s in stages {
+        let b = &s.breakdown;
+        t.row(&[
+            s.name.to_string(),
+            format!("{:.3}", 100.0 * b.kspace),
+            format!("{:.3}", 100.0 * b.comm),
+            format!("{:.3}", 100.0 * b.dw_fwd),
+            format!("{:.3}", 100.0 * b.dp_dw_bwd),
+            format!("{:.3}", 100.0 * b.others),
+            format!("{:.3}", 100.0 * b.total()),
+            format!("{:.1}x", s.speedup_vs_baseline),
+        ]);
+    }
+    t.print();
+}
+
+/// Paper configurations: 96 nodes = (4,6,4) topo + (2,2,2) replication;
+/// 768 nodes = (8,12,8) + (4,4,4).
+pub fn paper_configs() -> Vec<(usize, [usize; 3], [usize; 3])> {
+    vec![(96, [4, 6, 4], [2, 2, 2]), (768, [8, 12, 8], [4, 4, 4])]
+}

@@ -1,0 +1,9 @@
+//! Experiment harnesses: one module per paper table/figure, shared by the
+//! `dplr` CLI and the `cargo bench` targets (DESIGN.md section 6).
+
+pub mod calibrate;
+pub mod fig10_weak;
+pub mod fig7_longrun;
+pub mod fig8_fft;
+pub mod fig9_stepopt;
+pub mod table1_accuracy;

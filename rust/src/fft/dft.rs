@@ -1,0 +1,145 @@
+//! Naive DFT and twiddle-factor matrices.
+//!
+//! The O(n^2) DFT is (a) the oracle the fast paths are tested against and
+//! (b) the actual compute kernel of utofu-FFT: the paper replaces the
+//! transpose-based distributed FFT with per-node partial DFT matvecs
+//! `X~ = F_N[:, J] x_J` (Eq. 8) followed by a hardware ring reduction.
+
+use super::C64;
+
+/// Full N x N twiddle matrix F_N with F[k][n] = e^{-2 pi i k n / N}
+/// (sign = -1; +1 gives the inverse kernel without the 1/N factor).
+pub fn dft_matrix(n: usize, sign: f64) -> Vec<C64> {
+    let mut f = vec![C64::ZERO; n * n];
+    let w = sign * 2.0 * std::f64::consts::PI / n as f64;
+    for k in 0..n {
+        for j in 0..n {
+            // reduce k*j mod n before the trig for accuracy at large n
+            let kj = (k * j) % n;
+            f[k * n + j] = C64::cis(w * kj as f64);
+        }
+    }
+    f
+}
+
+/// Columns J of the twiddle matrix: the per-node partial operator
+/// `F_N[:, J]` of utofu-FFT (J = the node's local real-space indices).
+pub fn dft_matrix_cols(n: usize, cols: std::ops::Range<usize>, sign: f64) -> Vec<C64> {
+    let w = sign * 2.0 * std::f64::consts::PI / n as f64;
+    let m = cols.len();
+    let mut f = vec![C64::ZERO; n * m];
+    for k in 0..n {
+        for (c, j) in cols.clone().enumerate() {
+            let kj = (k * j) % n;
+            f[k * m + c] = C64::cis(w * kj as f64);
+        }
+    }
+    f
+}
+
+/// Naive forward DFT (sign = -1), O(n^2). Test oracle.
+pub fn dft_naive(x: &[C64]) -> Vec<C64> {
+    apply_dft(x, -1.0)
+}
+
+/// Naive inverse DFT including the 1/N normalisation.
+pub fn idft_naive(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    let mut y = apply_dft(x, 1.0);
+    let inv = 1.0 / n as f64;
+    for v in &mut y {
+        *v = v.scale(inv);
+    }
+    y
+}
+
+fn apply_dft(x: &[C64], sign: f64) -> Vec<C64> {
+    let n = x.len();
+    let w = sign * 2.0 * std::f64::consts::PI / n as f64;
+    let mut out = vec![C64::ZERO; n];
+    for k in 0..n {
+        let mut acc = C64::ZERO;
+        for (j, &xj) in x.iter().enumerate() {
+            acc += xj * C64::cis(w * ((k * j) % n) as f64);
+        }
+        out[k] = acc;
+    }
+    out
+}
+
+/// Partial DFT: one node's contribution `F_N[:, J] x_J` (utofu-FFT Fig 3b).
+pub fn partial_dft(x_local: &[C64], cols: std::ops::Range<usize>, n: usize, sign: f64) -> Vec<C64> {
+    assert_eq!(x_local.len(), cols.len());
+    let f = dft_matrix_cols(n, cols, sign);
+    let m = x_local.len();
+    let mut out = vec![C64::ZERO; n];
+    for k in 0..n {
+        let row = &f[k * m..(k + 1) * m];
+        let mut acc = C64::ZERO;
+        for (c, &xc) in x_local.iter().enumerate() {
+            acc += xc * row[c];
+        }
+        out[k] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<C64> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| C64::new(r.normal(), r.normal())).collect()
+    }
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        let mut x = vec![C64::ZERO; 8];
+        x[0] = C64::new(1.0, 0.0);
+        for v in dft_naive(&x) {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn idft_inverts_dft() {
+        for n in [4, 7, 12, 15] {
+            let x = rand_vec(n, n as u64);
+            let y = idft_naive(&dft_naive(&x));
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a.re - b.re).abs() < 1e-10 && (a.im - b.im).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_dfts_sum_to_full_dft() {
+        // the utofu-FFT identity: sum over node segments == full DFT
+        let n = 12;
+        let x = rand_vec(n, 99);
+        let full = dft_naive(&x);
+        let mut acc = vec![C64::ZERO; n];
+        for seg in 0..3 {
+            let cols = seg * 4..(seg + 1) * 4;
+            let part = partial_dft(&x[cols.clone()], cols, n, -1.0);
+            for (a, p) in acc.iter_mut().zip(&part) {
+                *a += *p;
+            }
+        }
+        for (a, f) in acc.iter().zip(&full) {
+            assert!((a.re - f.re).abs() < 1e-10 && (a.im - f.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_is_preserved() {
+        let n = 16;
+        let x = rand_vec(n, 5);
+        let y = dft_naive(&x);
+        let ex: f64 = x.iter().map(|v| v.norm_sq()).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sq()).sum::<f64>() / n as f64;
+        assert!((ex - ey).abs() < 1e-9 * ex);
+    }
+}

@@ -1,0 +1,112 @@
+//! Complex FFT substrate (own implementation — no FFTW in the image).
+//!
+//! Provides:
+//!  * [`C64`] complex arithmetic;
+//!  * serial 1-D FFT: iterative radix-2 for powers of two, Bluestein's
+//!    algorithm for arbitrary lengths (covers the paper's 8/10/12/15/18/32
+//!    grid edges);
+//!  * naive O(n^2) DFT as the test oracle and as the *matrix-vector DFT*
+//!    path that utofu-FFT (paper section 3.1) computes per node before the
+//!    hardware ring reduction;
+//!  * 3-D transforms over row-major `[nx][ny][nz]` grids.
+
+pub mod dft;
+pub mod plan;
+
+pub use dft::{dft_matrix, dft_naive};
+pub use plan::{Fft1d, Fft3d};
+
+/// Minimal complex double — kept as a bare struct so grids are just
+/// `Vec<C64>` with no layout surprises when quantizing / packing.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    /// e^{i theta}
+    #[inline]
+    pub fn cis(theta: f64) -> C64 {
+        let (s, c) = theta.sin_cos();
+        C64 { re: c, im: s }
+    }
+
+    #[inline]
+    pub fn conj(self) -> C64 {
+        C64 ::new(self.re, -self.im)
+    }
+
+    #[inline]
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, k: f64) -> C64 {
+        C64::new(self.re * k, self.im * k)
+    }
+}
+
+impl std::ops::Add for C64 {
+    type Output = C64;
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl std::ops::AddAssign for C64 {
+    #[inline]
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl std::ops::Sub for C64 {
+    type Output = C64;
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl std::ops::Mul for C64 {
+    type Output = C64;
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_algebra() {
+        let a = C64::new(1.0, 2.0);
+        let b = C64::new(3.0, -1.0);
+        let p = a * b;
+        assert!((p.re - 5.0).abs() < 1e-15);
+        assert!((p.im - 5.0).abs() < 1e-15);
+        assert!((C64::cis(std::f64::consts::PI).re + 1.0).abs() < 1e-15);
+        assert!((a.conj().im + 2.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,391 @@
+//! Fast 1-D and 3-D FFT plans.
+//!
+//! Radix-2 iterative Cooley-Tukey for powers of two; Bluestein's chirp-z
+//! (built on the radix-2 core) for every other length.  Plans precompute
+//! twiddles so the hot path is allocation-free per line.
+
+
+use super::C64;
+
+/// Direction/normalisation: `forward` uses e^{-i...}; `inverse` includes
+/// the 1/N factor so `inverse(forward(x)) == x`.
+#[derive(Debug, Clone)]
+pub struct Fft1d {
+    pub n: usize,
+    kind: Kind,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    Radix2 {
+        // bit-reversal permutation + per-stage twiddles
+        rev: Vec<u32>,
+        twiddles: Vec<C64>, // concatenated per stage, forward sign
+    },
+    Bluestein {
+        m: usize,            // padded pow2 length >= 2n-1
+        chirp: Vec<C64>,     // a_j = e^{-i pi j^2 / n}, length n
+        bfft: Vec<C64>,      // FFT of the chirp filter b, length m
+        inner: Box<Fft1d>,   // radix-2 plan of length m
+    },
+}
+
+impl Fft1d {
+    pub fn new(n: usize) -> Fft1d {
+        assert!(n >= 1);
+        if n.is_power_of_two() {
+            let lg = n.trailing_zeros();
+            let mut rev = vec![0u32; n];
+            if n > 1 {
+                for i in 1..n {
+                    rev[i] = (rev[i >> 1] >> 1) | (((i & 1) as u32) << (lg - 1));
+                }
+            }
+            // per-stage twiddles: stage len L: L/2 factors e^{-2 pi i k / L}
+            let mut tw = Vec::new();
+            let mut len = 2;
+            while len <= n {
+                for k in 0..len / 2 {
+                    tw.push(C64::cis(-2.0 * std::f64::consts::PI * k as f64 / len as f64));
+                }
+                len <<= 1;
+            }
+            Fft1d {
+                n,
+                kind: Kind::Radix2 { rev, twiddles: tw },
+            }
+        } else {
+            let m = (2 * n - 1).next_power_of_two();
+            let mut chirp = vec![C64::ZERO; n];
+            for j in 0..n {
+                // j^2 mod 2n keeps the argument small
+                let jj = (j * j) % (2 * n);
+                chirp[j] = C64::cis(-std::f64::consts::PI * jj as f64 / n as f64);
+            }
+            let inner = Fft1d::new(m);
+            let mut b = vec![C64::ZERO; m];
+            b[0] = chirp[0].conj();
+            for j in 1..n {
+                b[j] = chirp[j].conj();
+                b[m - j] = chirp[j].conj();
+            }
+            let mut bfft = b;
+            inner.forward(&mut bfft);
+            Fft1d {
+                n,
+                kind: Kind::Bluestein {
+                    m,
+                    chirp,
+                    bfft,
+                    inner: Box::new(inner),
+                },
+            }
+        }
+    }
+
+    /// In-place forward transform (sign -1, unnormalised).
+    pub fn forward(&self, x: &mut [C64]) {
+        assert_eq!(x.len(), self.n);
+        match &self.kind {
+            Kind::Radix2 { rev, twiddles } => {
+                let n = self.n;
+                for i in 0..n {
+                    let j = rev[i] as usize;
+                    if i < j {
+                        x.swap(i, j);
+                    }
+                }
+                let mut len = 2;
+                let mut toff = 0;
+                while len <= n {
+                    let half = len / 2;
+                    for start in (0..n).step_by(len) {
+                        for k in 0..half {
+                            let w = twiddles[toff + k];
+                            let u = x[start + k];
+                            let v = x[start + k + half] * w;
+                            x[start + k] = u + v;
+                            x[start + k + half] = u - v;
+                        }
+                    }
+                    toff += half;
+                    len <<= 1;
+                }
+            }
+            Kind::Bluestein {
+                m,
+                chirp,
+                bfft,
+                inner,
+            } => {
+                let n = self.n;
+                let mut a = vec![C64::ZERO; *m];
+                for j in 0..n {
+                    a[j] = x[j] * chirp[j];
+                }
+                inner.forward(&mut a);
+                for (aj, bj) in a.iter_mut().zip(bfft.iter()) {
+                    *aj = *aj * *bj;
+                }
+                inner.inverse_unscaled(&mut a);
+                let scale = 1.0 / *m as f64;
+                for k in 0..n {
+                    x[k] = a[k].scale(scale) * chirp[k];
+                }
+            }
+        }
+    }
+
+    /// In-place inverse transform including the 1/N normalisation.
+    pub fn inverse(&self, x: &mut [C64]) {
+        self.inverse_unscaled(x);
+        let s = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+
+    /// Inverse without the 1/N factor (conjugate trick).
+    pub fn inverse_unscaled(&self, x: &mut [C64]) {
+        for v in x.iter_mut() {
+            *v = v.conj();
+        }
+        self.forward(x);
+        for v in x.iter_mut() {
+            *v = v.conj();
+        }
+    }
+}
+
+/// 3-D FFT over a row-major `[nx][ny][nz]` grid.
+#[derive(Debug, Clone)]
+pub struct Fft3d {
+    pub dims: [usize; 3],
+    px: Fft1d,
+    py: Fft1d,
+    pz: Fft1d,
+}
+
+impl Fft3d {
+    pub fn new(dims: [usize; 3]) -> Fft3d {
+        Fft3d {
+            dims,
+            px: Fft1d::new(dims[0]),
+            py: Fft1d::new(dims[1]),
+            pz: Fft1d::new(dims[2]),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.dims[0] * self.dims[1] * self.dims[2]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn forward(&self, g: &mut [C64]) {
+        self.apply(g, true);
+    }
+
+    pub fn inverse(&self, g: &mut [C64]) {
+        self.apply(g, false);
+    }
+
+    fn apply(&self, g: &mut [C64], fwd: bool) {
+        let [nx, ny, nz] = self.dims;
+        assert_eq!(g.len(), nx * ny * nz);
+        // z lines are contiguous
+        let mut line = vec![C64::ZERO; nx.max(ny).max(nz)];
+        for x in 0..nx {
+            for y in 0..ny {
+                let off = (x * ny + y) * nz;
+                let seg = &mut g[off..off + nz];
+                if fwd {
+                    self.pz.forward(seg);
+                } else {
+                    self.pz.inverse(seg);
+                }
+            }
+        }
+        // y lines: stride nz
+        for x in 0..nx {
+            for z in 0..nz {
+                for y in 0..ny {
+                    line[y] = g[(x * ny + y) * nz + z];
+                }
+                let seg = &mut line[..ny];
+                if fwd {
+                    self.py.forward(seg);
+                } else {
+                    self.py.inverse(seg);
+                }
+                for y in 0..ny {
+                    g[(x * ny + y) * nz + z] = line[y];
+                }
+            }
+        }
+        // x lines: stride ny*nz
+        for y in 0..ny {
+            for z in 0..nz {
+                for x in 0..nx {
+                    line[x] = g[(x * ny + y) * nz + z];
+                }
+                let seg = &mut line[..nx];
+                if fwd {
+                    self.px.forward(seg);
+                } else {
+                    self.px.inverse(seg);
+                }
+                for x in 0..nx {
+                    g[(x * ny + y) * nz + z] = line[x];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<C64> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| C64::new(r.normal(), r.normal())).collect()
+    }
+
+    fn close(a: &[C64], b: &[C64], tol: f64) -> bool {
+        a.iter()
+            .zip(b)
+            .all(|(x, y)| (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol)
+    }
+
+    #[test]
+    fn radix2_matches_naive() {
+        for n in [1usize, 2, 4, 8, 32, 64, 128] {
+            let x = rand_vec(n, n as u64 + 1);
+            let mut y = x.clone();
+            Fft1d::new(n).forward(&mut y);
+            assert!(close(&y, &dft::dft_naive(&x), 1e-9), "n={n}");
+        }
+    }
+
+    #[test]
+    fn bluestein_matches_naive_on_paper_grid_sizes() {
+        // 8/10/12/15/18 are the paper's per-dim grid edges (Table 1)
+        for n in [3usize, 5, 6, 10, 12, 15, 18, 20, 21, 36] {
+            let x = rand_vec(n, n as u64 * 7 + 3);
+            let mut y = x.clone();
+            Fft1d::new(n).forward(&mut y);
+            assert!(close(&y, &dft::dft_naive(&x), 1e-9), "n={n}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip_property() {
+        check(
+            0xF0F0,
+            40,
+            |r| {
+                let n = 1 + r.below(40);
+                (n, r.next_u64())
+            },
+            |&(n, seed)| {
+                let x = rand_vec(n, seed);
+                let mut y = x.clone();
+                let p = Fft1d::new(n);
+                p.forward(&mut y);
+                p.inverse(&mut y);
+                if close(&x, &y, 1e-9) {
+                    Ok(())
+                } else {
+                    Err(format!("roundtrip failed for n={n}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn fft3d_roundtrip_and_oracle() {
+        // paper grids: 32^3, and mixed 8x12x8 / 10x15x10 / 12x18x12
+        for dims in [[4usize, 4, 4], [8, 12, 8], [10, 15, 10], [32, 32, 32]] {
+            let n = dims[0] * dims[1] * dims[2];
+            let x = rand_vec(n, 1234 + n as u64);
+            let plan = Fft3d::new(dims);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            // oracle: 3 nested naive DFTs via separate axes on small grids
+            if n <= 1024 {
+                let mut z = x.clone();
+                naive3d(&mut z, dims);
+                assert!(close(&y, &z, 1e-8), "dims {dims:?}");
+            }
+            plan.inverse(&mut y);
+            assert!(close(&x, &y, 1e-9), "roundtrip {dims:?}");
+        }
+    }
+
+    fn naive3d(g: &mut [C64], dims: [usize; 3]) {
+        let [nx, ny, nz] = dims;
+        // z
+        for x in 0..nx {
+            for y in 0..ny {
+                let off = (x * ny + y) * nz;
+                let line: Vec<C64> = g[off..off + nz].to_vec();
+                let f = dft::dft_naive(&line);
+                g[off..off + nz].copy_from_slice(&f);
+            }
+        }
+        // y
+        for x in 0..nx {
+            for z in 0..nz {
+                let line: Vec<C64> = (0..ny).map(|y| g[(x * ny + y) * nz + z]).collect();
+                let f = dft::dft_naive(&line);
+                for y in 0..ny {
+                    g[(x * ny + y) * nz + z] = f[y];
+                }
+            }
+        }
+        // x
+        for y in 0..ny {
+            for z in 0..nz {
+                let line: Vec<C64> = (0..nx).map(|x| g[(x * ny + y) * nz + z]).collect();
+                let f = dft::dft_naive(&line);
+                for x in 0..nx {
+                    g[(x * ny + y) * nz + z] = f[x];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn linearity_property() {
+        check(
+            7,
+            25,
+            |r| (2 + r.below(30), r.next_u64()),
+            |&(n, seed)| {
+                let a = rand_vec(n, seed);
+                let b = rand_vec(n, seed ^ 0xABCD);
+                let p = Fft1d::new(n);
+                let mut fa = a.clone();
+                p.forward(&mut fa);
+                let mut fb = b.clone();
+                p.forward(&mut fb);
+                let mut ab: Vec<C64> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+                p.forward(&mut ab);
+                for i in 0..n {
+                    let want = fa[i] + fb[i];
+                    if (ab[i].re - want.re).abs() > 1e-8 || (ab[i].im - want.im).abs() > 1e-8 {
+                        return Err(format!("linearity broken at {i} (n={n})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! # dplr — NNMD with long-range electrostatics, reproduced end to end
+//!
+//! Reproduction of *"Scaling Neural-Network-Based Molecular Dynamics with
+//! Long-Range Electrostatic Interactions to 51 Nanoseconds per Day"*
+//! (CS.DC 2025): the DPLR model (DeepPot-SE + Deep Wannier + PPPM), the
+//! LAMMPS-like MD substrate it runs in, and the paper's coordination
+//! contributions — utofu-FFT hardware-offloaded reductions, the 47+1
+//! long/short-range overlap, and ring-based load balancing — on a simulated
+//! Fugaku/TofuD substrate (see DESIGN.md).
+//!
+//! Layering (python never appears at runtime):
+//!  * [`runtime`] loads the AOT HLO-text artifacts produced by
+//!    `python/compile/aot.py` and runs them on a PJRT CPU client;
+//!  * [`native`] is the framework-free inference path (paper section 3.4.2):
+//!    the same DP/DW math hand-written in rust with analytic backprop;
+//!  * [`engine`] assembles a full DPLR time step (DW forward -> PPPM ->
+//!    DP + DW backward -> integrate) with optional real-thread overlap;
+//!  * [`simnet`]/[`tofu`]/[`mpisim`]/[`distfft`]/[`coordinator`]/
+//!    [`perfmodel`] reproduce the paper's large-scale experiments on a
+//!    calibrated discrete-event model of Fugaku.
+
+pub mod config;
+pub mod coordinator;
+pub mod distfft;
+pub mod engine;
+pub mod ewald;
+pub mod fft;
+pub mod md;
+pub mod mpisim;
+pub mod native;
+pub mod neighbor;
+pub mod perfmodel;
+pub mod pppm;
+pub mod runtime;
+pub mod simnet;
+pub mod tofu;
+pub mod util;
+pub mod experiments;

@@ -1,0 +1,204 @@
+//! `dplr` — CLI for the DPLR reproduction.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md section 6):
+//!   run          real MD on the full DPLR stack (any backend, any size)
+//!   accuracy     Table 1  — precision-configuration errors
+//!   longrun      Fig 7    — double vs mixed-int2 NVT traces
+//!   fftbench     Fig 8    — FFT-MPI / heFFTe / utofu-FFT comparison
+//!   stepopt      Fig 9    — step-by-step optimization ladder
+//!   weakscaling  Fig 10   — 12 -> 8400 nodes at 47 atoms/node
+//!   calibrate    measure host costs feeding the DES cost table
+
+use anyhow::{bail, Result};
+use dplr::engine::{Backend, DplrEngine, EngineConfig};
+use dplr::experiments::*;
+use dplr::md::units::ns_per_day;
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::runtime::manifest::artifacts_dir;
+use dplr::runtime::{Dtype, PjrtEngine};
+use dplr::util::args::Args;
+use dplr::util::rng::Rng;
+use std::sync::Mutex;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "run" => cmd_run(&args),
+        "accuracy" => cmd_accuracy(&args),
+        "longrun" => cmd_longrun(&args),
+        "fftbench" => cmd_fftbench(&args),
+        "stepopt" => cmd_stepopt(&args),
+        "weakscaling" => cmd_weakscaling(&args),
+        "calibrate" => cmd_calibrate(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "dplr — reproduction of 'Scaling NNMD with Long-Range Electrostatics \
+         to 51 ns/day'\n\n\
+         usage: dplr <command> [--flags]\n\n\
+         commands:\n\
+         \x20 run          real MD (--nmol 64 --steps 100 --backend native|pjrt\n\
+         \x20              --dtype f64|f32 --overlap --dt 1.0 --quench 30)\n\
+         \x20 accuracy     Table 1: precision-config errors (--nmol 128)\n\
+         \x20 longrun      Fig 7: NVT traces double vs mixed-int2 (--steps 1500)\n\
+         \x20 fftbench     Fig 8: distributed-FFT comparison\n\
+         \x20 stepopt      Fig 9: optimization ladder at 96/768 nodes\n\
+         \x20 weakscaling  Fig 10: 12..8400 nodes, ns/day\n\
+         \x20 calibrate    measure host inference costs (--reps 5)\n\n\
+         artifacts dir: $DPLR_ARTIFACTS (default ./artifacts); build with\n\
+         `make artifacts` first."
+    );
+}
+
+fn backend_from_args(args: &Args) -> Result<Backend> {
+    let dir = artifacts_dir();
+    match args.str_or("backend", "native").as_str() {
+        "native" => Ok(Backend::Native(NativeModel::load(&dir)?)),
+        "pjrt" => {
+            let dt = match args.str_or("dtype", "f64").as_str() {
+                "f64" => Dtype::F64,
+                "f32" => Dtype::F32,
+                other => bail!("unknown dtype {other}"),
+            };
+            Ok(Backend::Pjrt(Mutex::new(PjrtEngine::open(&dir)?), dt))
+        }
+        other => bail!("unknown backend {other}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let nmol = args.usize_or("nmol", 188)?;
+    let steps = args.usize_or("steps", 100)?;
+    let quench = args.usize_or("quench", 30)?;
+    let mut sys = water_box(nmol, args.usize_or("seed", 42)? as u64);
+    let mut rng = Rng::new(7);
+    sys.thermalize(300.0, &mut rng);
+    let mut cfg = EngineConfig::default_for(sys.box_len, 0.3);
+    cfg.overlap = args.bool("overlap");
+    cfg.dt_fs = args.f64_or("dt", 1.0)?;
+    let mut eng = DplrEngine::new(sys, cfg, backend_from_args(args)?);
+    println!(
+        "running {} atoms ({} molecules), {} steps, backend={}, overlap={}",
+        eng.sys.natoms(),
+        nmol,
+        steps,
+        args.str_or("backend", "native"),
+        args.bool("overlap"),
+    );
+    eng.quench(quench)?;
+    eng.rescale_to(300.0);
+    let mut acc = dplr::engine::StepTimes::default();
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let t = eng.step()?;
+        acc.add(&t);
+        if (s + 1) % 20 == 0 {
+            let o = eng.last_obs.unwrap();
+            println!(
+                "step {:>5}: T {:>7.1} K   E_sr {:>10.3}  E_gt {:>9.3}  cons {:>12.4}",
+                s + 1,
+                o.temperature,
+                o.e_sr,
+                o.e_gt,
+                o.conserved
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let per_step = wall / steps as f64;
+    println!(
+        "\n{} steps in {:.2} s = {:.2} ms/step = {:.3} ns/day on this host",
+        steps,
+        wall,
+        per_step * 1e3,
+        ns_per_day(per_step, eng.cfg.dt_fs)
+    );
+    println!(
+        "breakdown per step: nlist {:.2} ms  dw_fwd {:.2} ms  kspace {:.2} ms  \
+         dp {:.2} ms  dw_bwd {:.2} ms  integrate {:.2} ms",
+        1e3 * acc.nlist / steps as f64,
+        1e3 * acc.dw_fwd / steps as f64,
+        1e3 * acc.kspace / steps as f64,
+        1e3 * acc.dp_all / steps as f64,
+        1e3 * acc.dw_bwd / steps as f64,
+        1e3 * acc.integrate / steps as f64,
+    );
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let mut cfg = table1_accuracy::Config::default();
+    cfg.nmol = args.usize_or("nmol", cfg.nmol)?;
+    let rows = table1_accuracy::run(&cfg)?;
+    table1_accuracy::print_rows(&rows);
+    Ok(())
+}
+
+fn cmd_longrun(args: &Args) -> Result<()> {
+    let mut cfg = fig7_longrun::Config::default();
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.nmol = args.usize_or("nmol", cfg.nmol)?;
+    if let Some(o) = args.str_opt("out") {
+        cfg.out_json = Some(o.to_string());
+    }
+    let (a, b) = fig7_longrun::run(&cfg)?;
+    fig7_longrun::print_summary(&a, &b);
+    Ok(())
+}
+
+fn cmd_fftbench(_args: &Args) -> Result<()> {
+    let m = dplr::config::MachineConfig::default();
+    let rows = fig8_fft::run(&m);
+    fig8_fft::print_rows(&rows);
+    Ok(())
+}
+
+fn cost_table(args: &Args) -> dplr::perfmodel::CostTable {
+    if args.bool("calibrated") {
+        if let Ok(cal) = calibrate::run(3) {
+            return cal.to_cost_table();
+        }
+    }
+    dplr::perfmodel::CostTable::default()
+}
+
+fn cmd_stepopt(args: &Args) -> Result<()> {
+    let m = dplr::config::MachineConfig::default();
+    let cost = cost_table(args);
+    for (nodes, dims, rep) in fig9_stepopt::paper_configs() {
+        let stages = fig9_stepopt::run(dims, rep, &cost, &m);
+        fig9_stepopt::print_stages(nodes, &stages);
+    }
+    Ok(())
+}
+
+fn cmd_weakscaling(args: &Args) -> Result<()> {
+    let m = dplr::config::MachineConfig::default();
+    let cost = cost_table(args);
+    let pts = fig10_weak::run(&cost, &m);
+    fig10_weak::print_points(&pts);
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let reps = args.usize_or("reps", 5)?;
+    let cal = calibrate::run(reps)?;
+    cal.print();
+    let out = args.str_or("out", "configs/calibration.json");
+    std::fs::create_dir_all("configs").ok();
+    cal.save(&out)?;
+    println!("saved to {out}");
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! LAMMPS-like MD substrate: system state, water builder, integrators.
+
+pub mod integrate;
+pub mod system;
+pub mod units;
+pub mod water;
+
+pub use system::System;

@@ -1,0 +1,163 @@
+//! Simulation state for a water system (type-sorted atom layout).
+
+use super::units::*;
+use crate::util::rng::Rng;
+
+/// Atom type indices (shared with python: O block first, then H pairs).
+pub const TYPE_O: usize = 0;
+pub const TYPE_H: usize = 1;
+
+#[derive(Debug, Clone)]
+pub struct System {
+    /// number of water molecules; natoms = 3 * nmol
+    pub nmol: usize,
+    /// orthorhombic box edge lengths [A]
+    pub box_len: [f64; 3],
+    /// positions [A], layout: [O_0..O_nmol, H1_0, H2_0, H1_1, ...]
+    pub pos: Vec<[f64; 3]>,
+    /// velocities [A/ps]
+    pub vel: Vec<[f64; 3]>,
+    /// masses in internal units (eV ps^2 / A^2)
+    pub mass: Vec<f64>,
+}
+
+impl System {
+    pub fn natoms(&self) -> usize {
+        3 * self.nmol
+    }
+
+    pub fn atom_type(&self, i: usize) -> usize {
+        if i < self.nmol {
+            TYPE_O
+        } else {
+            TYPE_H
+        }
+    }
+
+    /// Ionic charge of atom i (DPLR convention: O +6, H +1).
+    pub fn ionic_charge(&self, i: usize) -> f64 {
+        if i < self.nmol {
+            Q_O
+        } else {
+            Q_H
+        }
+    }
+
+    /// Index of the O atom binding Wannier centroid n (identity here).
+    pub fn wc_binding_atom(&self, n: usize) -> usize {
+        n
+    }
+
+    /// Kinetic energy [eV].
+    pub fn kinetic_energy(&self) -> f64 {
+        let mut ke = 0.0;
+        for (v, m) in self.vel.iter().zip(&self.mass) {
+            ke += 0.5 * m * (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]);
+        }
+        ke
+    }
+
+    /// Instantaneous temperature [K] (3N - 3 degrees of freedom).
+    pub fn temperature(&self) -> f64 {
+        let dof = (3 * self.natoms() - 3) as f64;
+        2.0 * self.kinetic_energy() / (dof * KB_EV)
+    }
+
+    /// Draw Maxwell-Boltzmann velocities at T, then remove net momentum.
+    pub fn thermalize(&mut self, temp: f64, rng: &mut Rng) {
+        for i in 0..self.natoms() {
+            let s = (KB_EV * temp / self.mass[i]).sqrt();
+            self.vel[i] = [s * rng.normal(), s * rng.normal(), s * rng.normal()];
+        }
+        self.zero_momentum();
+        // rescale to the exact target temperature
+        let t = self.temperature();
+        if t > 0.0 {
+            let k = (temp / t).sqrt();
+            for v in &mut self.vel {
+                v[0] *= k;
+                v[1] *= k;
+                v[2] *= k;
+            }
+        }
+    }
+
+    pub fn zero_momentum(&mut self) {
+        let mut p = [0.0; 3];
+        let mut mtot = 0.0;
+        for (v, m) in self.vel.iter().zip(&self.mass) {
+            for d in 0..3 {
+                p[d] += m * v[d];
+            }
+            mtot += m;
+        }
+        for (v, m) in self.vel.iter_mut().zip(&self.mass) {
+            let _ = m;
+            for d in 0..3 {
+                v[d] -= p[d] / mtot;
+            }
+        }
+    }
+
+    /// Wrap all positions back into the primary box.
+    pub fn wrap(&mut self) {
+        for p in &mut self.pos {
+            for d in 0..3 {
+                p[d] = p[d].rem_euclid(self.box_len[d]);
+            }
+        }
+    }
+
+    /// Flat coordinate buffer (natoms * 3) for the inference backends.
+    pub fn coords_flat(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.natoms() * 3);
+        for p in &self.pos {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::water::water_box;
+
+    #[test]
+    fn thermalize_hits_target_temperature() {
+        let mut sys = water_box(64, 42);
+        let mut rng = Rng::new(1);
+        sys.thermalize(300.0, &mut rng);
+        assert!((sys.temperature() - 300.0).abs() < 1e-9);
+        // momentum is zero
+        let mut p = [0.0; 3];
+        for (v, m) in sys.vel.iter().zip(&sys.mass) {
+            for d in 0..3 {
+                p[d] += m * v[d];
+            }
+        }
+        for d in 0..3 {
+            assert!(p[d].abs() < 1e-12, "momentum {d} = {}", p[d]);
+        }
+    }
+
+    #[test]
+    fn charges_sum_to_zero_per_molecule() {
+        let sys = water_box(8, 3);
+        let total: f64 = (0..sys.natoms()).map(|i| sys.ionic_charge(i)).sum::<f64>()
+            + sys.nmol as f64 * Q_WC;
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn wrap_keeps_atoms_in_box() {
+        let mut sys = water_box(8, 5);
+        sys.pos[0] = [-1.0, 100.0, 3.0];
+        sys.wrap();
+        for p in &sys.pos {
+            for d in 0..3 {
+                assert!(p[d] >= 0.0 && p[d] < sys.box_len[d]);
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Unit system: eV / Angstrom / picosecond / e / (g/mol), i.e. LAMMPS
+//! "metal" units.  All constants shared with python via manifest.json are
+//! asserted equal at engine start-up.
+
+/// Coulomb constant in eV * A / e^2.
+pub const KE_COULOMB: f64 = 14.399645478425668;
+
+/// Boltzmann constant in eV / K.
+pub const KB_EV: f64 = 8.617333262e-5;
+
+/// Convert mass in g/mol to the internal unit eV * ps^2 / A^2.
+/// (1 g/mol = 1.036426965e-4 eV ps^2 / A^2.)
+pub const MASS_AMU_TO_INTERNAL: f64 = 1.0364269656262e-4;
+
+/// femtoseconds -> picoseconds.
+pub const FS: f64 = 1e-3;
+
+/// Masses (g/mol).
+pub const MASS_O: f64 = 15.9994;
+pub const MASS_H: f64 = 1.008;
+
+/// DPLR water charges in units of e (O ion, H ion, Wannier centroid).
+pub const Q_O: f64 = 6.0;
+pub const Q_H: f64 = 1.0;
+pub const Q_WC: f64 = -8.0;
+
+/// ns/day for a given seconds-per-step wall time at a 1 fs time step.
+pub fn ns_per_day(secs_per_step: f64, dt_fs: f64) -> f64 {
+    let steps_per_day = 86_400.0 / secs_per_step;
+    steps_per_day * dt_fs * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_per_day_headline() {
+        // the paper's 51 ns/day at 1 fs equals ~1.69 ms/step
+        let spd = ns_per_day(1.69e-3, 1.0);
+        assert!((spd - 51.1).abs() < 0.5, "{spd}");
+    }
+
+    #[test]
+    fn mass_conversion_sane() {
+        // thermal velocity of O at 300 K ~ 0.68 A/ps (sqrt(kB T / m))
+        let m = MASS_O * MASS_AMU_TO_INTERNAL;
+        let v = (KB_EV * 300.0 / m).sqrt();
+        assert!((v - 3.95).abs() < 0.1, "v = {v}");
+    }
+}

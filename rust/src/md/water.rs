@@ -1,0 +1,203 @@
+//! Water-box builders (the paper's benchmark system, section 4).
+
+use super::system::System;
+use super::units::*;
+use crate::util::rng::Rng;
+
+/// Geometry constants shared with python/compile/params.py.
+pub const BOND_R0: f64 = 0.9572;
+pub const ANGLE_T0: f64 = 1.8242;
+
+/// Volume per molecule at ~1 g/cc [A^3].
+pub const VOL_PER_MOL: f64 = 29.9;
+
+/// `nmol` water molecules on a jittered cubic lattice at ~1 g/cc.
+///
+/// Mirrors python/compile/testutil.py::water_box (different RNG stream, so
+/// cross-language parity tests use fixtures.json instead of seeds).
+pub fn water_box(nmol: usize, seed: u64) -> System {
+    let edge = (VOL_PER_MOL * nmol as f64).cbrt();
+    water_box_with_edge(nmol, [edge, edge, edge], seed)
+}
+
+/// Water box with an explicit edge (used by the paper's 20.85 A / 188
+/// molecule base box and the replicated weak-scaling boxes).
+pub fn water_box_with_edge(nmol: usize, box_len: [f64; 3], seed: u64) -> System {
+    let mut rng = Rng::new(seed);
+    let ncell = (nmol as f64).cbrt().ceil() as usize;
+    let a = [
+        box_len[0] / ncell as f64,
+        box_len[1] / ncell as f64,
+        box_len[2] / ncell as f64,
+    ];
+    let n = 3 * nmol;
+    let mut pos = vec![[0.0; 3]; n];
+    // pick nmol of the ncell^3 lattice sites evenly (stride selection) so
+    // the density stays uniform when nmol is not a perfect cube
+    let nsites = ncell * ncell * ncell;
+    for count in 0..nmol {
+        let site = count * nsites / nmol;
+        let (ix, rem) = (site / (ncell * ncell), site % (ncell * ncell));
+        let (iy, iz) = (rem / ncell, rem % ncell);
+        let jitter = 0.05;
+        let o = [
+            (ix as f64 + 0.5) * a[0] + rng.range(-jitter, jitter),
+            (iy as f64 + 0.5) * a[1] + rng.range(-jitter, jitter),
+            (iz as f64 + 0.5) * a[2] + rng.range(-jitter, jitter),
+        ];
+        let (h1, h2) = orient_molecule(o, &mut rng);
+        pos[count] = o;
+        pos[nmol + 2 * count] = h1;
+        pos[nmol + 2 * count + 1] = h2;
+    }
+    let mut mass = vec![MASS_O * MASS_AMU_TO_INTERNAL; nmol];
+    mass.extend(vec![MASS_H * MASS_AMU_TO_INTERNAL; 2 * nmol]);
+    let mut sys = System {
+        nmol,
+        box_len,
+        pos,
+        vel: vec![[0.0; 3]; n],
+        mass,
+    };
+    sys.wrap();
+    sys
+}
+
+fn orient_molecule(o: [f64; 3], rng: &mut Rng) -> ([f64; 3], [f64; 3]) {
+    let axis = rng.unit3();
+    // orthonormal frame around axis
+    let mut r = [1.0, 0.0, 0.0];
+    if (axis[0] * r[0] + axis[1] * r[1] + axis[2] * r[2]).abs() > 0.9 {
+        r = [0.0, 1.0, 0.0];
+    }
+    let mut u = cross(axis, r);
+    let un = norm(u);
+    u = [u[0] / un, u[1] / un, u[2] / un];
+    let (half_sin, half_cos) = ((ANGLE_T0 / 2.0).sin(), (ANGLE_T0 / 2.0).cos());
+    let h1 = [
+        o[0] + BOND_R0 * (half_cos * axis[0] + half_sin * u[0]),
+        o[1] + BOND_R0 * (half_cos * axis[1] + half_sin * u[1]),
+        o[2] + BOND_R0 * (half_cos * axis[2] + half_sin * u[2]),
+    ];
+    let h2 = [
+        o[0] + BOND_R0 * (half_cos * axis[0] - half_sin * u[0]),
+        o[1] + BOND_R0 * (half_cos * axis[1] - half_sin * u[1]),
+        o[2] + BOND_R0 * (half_cos * axis[2] - half_sin * u[2]),
+    ];
+    (h1, h2)
+}
+
+/// The paper's step-by-step / weak-scaling workload: the 20.85 A, 188-water
+/// base box replicated `rep` times per dimension (section 4.3-4.4).
+pub fn replicated_base_box(rep: [usize; 3], seed: u64) -> System {
+    let base_edge = 20.85;
+    let base_nmol = 188;
+    let base = water_box_with_edge(base_nmol, [base_edge; 3], seed);
+    if rep == [1, 1, 1] {
+        return base;
+    }
+    let nmol = base_nmol * rep[0] * rep[1] * rep[2];
+    let box_len = [
+        base_edge * rep[0] as f64,
+        base_edge * rep[1] as f64,
+        base_edge * rep[2] as f64,
+    ];
+    let n = 3 * nmol;
+    let mut pos = vec![[0.0; 3]; n];
+    let mut mol = 0;
+    for rx in 0..rep[0] {
+        for ry in 0..rep[1] {
+            for rz in 0..rep[2] {
+                let off = [
+                    rx as f64 * base_edge,
+                    ry as f64 * base_edge,
+                    rz as f64 * base_edge,
+                ];
+                for m in 0..base_nmol {
+                    let add = |p: [f64; 3]| [p[0] + off[0], p[1] + off[1], p[2] + off[2]];
+                    pos[mol] = add(base.pos[m]);
+                    pos[nmol + 2 * mol] = add(base.pos[base_nmol + 2 * m]);
+                    pos[nmol + 2 * mol + 1] = add(base.pos[base_nmol + 2 * m + 1]);
+                    mol += 1;
+                }
+            }
+        }
+    }
+    let mut mass = vec![MASS_O * MASS_AMU_TO_INTERNAL; nmol];
+    mass.extend(vec![MASS_H * MASS_AMU_TO_INTERNAL; 2 * nmol]);
+    System {
+        nmol,
+        box_len,
+        pos,
+        vel: vec![[0.0; 3]; n],
+        mass,
+    }
+}
+
+fn cross(a: [f64; 3], b: [f64; 3]) -> [f64; 3] {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+fn norm(a: [f64; 3]) -> f64 {
+    (a[0] * a[0] + a[1] * a[1] + a[2] * a[2]).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_is_waterlike() {
+        let sys = water_box(27, 9);
+        for m in 0..sys.nmol {
+            let o = sys.pos[m];
+            for h in [sys.pos[sys.nmol + 2 * m], sys.pos[sys.nmol + 2 * m + 1]] {
+                // bond length (no wrap needed right after construction mod box)
+                let mut d = [0.0; 3];
+                for k in 0..3 {
+                    let mut x = h[k] - o[k];
+                    x -= sys.box_len[k] * (x / sys.box_len[k]).round();
+                    d[k] = x;
+                }
+                let r = norm(d);
+                assert!((r - BOND_R0).abs() < 1e-9, "bond {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn headline_box_has_564_atoms() {
+        let sys = replicated_base_box([1, 1, 1], 1);
+        assert_eq!(sys.natoms(), 564);
+        assert!((sys.box_len[0] - 20.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replication_preserves_density_and_count() {
+        let sys = replicated_base_box([2, 1, 1], 1);
+        assert_eq!(sys.nmol, 376);
+        assert_eq!(sys.box_len, [41.7, 20.85, 20.85]);
+        // all atoms inside the box
+        for p in &sys.pos {
+            for d in 0..3 {
+                assert!(p[d] >= -1e-9 && p[d] <= sys.box_len[d] + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn weak_scaling_403k_box() {
+        // paper: (10, 7, 10) replication -> 403,200 atoms on 8400 nodes
+        let nmol = 188 * 10 * 7 * 10;
+        assert_eq!(3 * nmol, 394_800);
+        // note: the paper quotes 403,200; with 188 molecules the exact count
+        // is 394,800 — the difference is their rounding of 47 atoms/node
+        // (47 * 8400 = 394,800).  We reproduce the 47-atoms/node invariant.
+        let sys = replicated_base_box([2, 2, 2], 1);
+        assert_eq!(sys.natoms(), 564 * 8);
+    }
+}

@@ -1,0 +1,101 @@
+//! Simulated MPI collectives: alpha-beta cost models over the torus.
+//!
+//! Used by the distributed-FFT baselines (FFT-MPI, heFFTe) and the step
+//! model.  All costs are analytic — the *shape* (latency- vs bandwidth-
+//! bound, scaling in P) is what Figs 8-10 depend on; constants come from
+//! [`MachineConfig`].
+
+use crate::config::MachineConfig;
+use crate::tofu::Torus;
+
+/// Point-to-point message: latency + per-hop penalty + serialization.
+pub fn p2p_time(bytes: usize, hops: usize, m: &MachineConfig) -> f64 {
+    m.p2p_latency + hops as f64 * m.hop_latency + bytes as f64 / m.link_bandwidth
+}
+
+/// Ring allgather over P ranks, each contributing `bytes_each`.
+pub fn allgather_time(p: usize, bytes_each: usize, m: &MachineConfig) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 * (m.p2p_latency + bytes_each as f64 / m.link_bandwidth)
+}
+
+/// Recursive-doubling allreduce of `bytes` over P ranks (software path;
+/// the hardware BG path is [`crate::tofu::bg_allreduce_time`]).
+pub fn allreduce_time(p: usize, bytes: usize, m: &MachineConfig) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p as f64).log2().ceil() * (m.p2p_latency + bytes as f64 / m.link_bandwidth)
+}
+
+/// Pairwise-exchange alltoall: each rank sends `bytes_per_pair` to every
+/// other rank.
+pub fn alltoall_time(p: usize, bytes_per_pair: usize, m: &MachineConfig) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 * (m.p2p_latency + bytes_per_pair as f64 / m.link_bandwidth)
+}
+
+/// Halo (ghost) exchange with the 6 face neighbours on the torus, each
+/// message `bytes_per_face`, overlappable across the paper's 6 TNIs:
+/// the faces go out concurrently, so cost ~ max over faces + one latency.
+pub fn halo_time(bytes_per_face: usize, m: &MachineConfig) -> f64 {
+    m.p2p_latency + m.hop_latency + bytes_per_face as f64 / m.link_bandwidth
+}
+
+/// Average torus hop count between communicating neighbours under a
+/// rank-to-node mapping quality factor (1.0 = perfect serpentine mapping,
+/// the paper's mpi-ext optimization; larger = scattered ranks).
+pub fn mapped_hops(t: &Torus, mapping_quality: f64) -> f64 {
+    // perfect mapping: neighbours are 1 hop; scattered: average distance
+    let avg_dim = (t.dims[0] + t.dims[1] + t.dims[2]) as f64 / 3.0;
+    1.0 + (mapping_quality - 1.0) * (avg_dim / 4.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc() -> MachineConfig {
+        MachineConfig::default()
+    }
+
+    #[test]
+    fn p2p_latency_dominates_small_messages() {
+        let m = mc();
+        let t_small = p2p_time(64, 1, &m);
+        let t_big = p2p_time(64 << 20, 1, &m);
+        assert!(t_small < 2e-6);
+        assert!(t_big > 5e-3); // 64 MB over 6.8 GB/s ~ 9.8 ms
+    }
+
+    #[test]
+    fn collectives_scale_in_p() {
+        let m = mc();
+        assert_eq!(allgather_time(1, 100, &m), 0.0);
+        let a = allgather_time(8, 1024, &m);
+        let b = allgather_time(64, 1024, &m);
+        assert!(b > 7.0 * a, "{a} vs {b}");
+        let r8 = allreduce_time(8, 1024, &m);
+        let r64 = allreduce_time(64, 1024, &m);
+        assert!(r64 > r8 && r64 < 3.0 * r8);
+    }
+
+    #[test]
+    fn alltoall_grows_linearly() {
+        let m = mc();
+        let t16 = alltoall_time(16, 4096, &m);
+        let t32 = alltoall_time(32, 4096, &m);
+        assert!((t32 / t16 - 31.0 / 15.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn perfect_mapping_is_one_hop() {
+        let t = Torus::new([8, 12, 8]);
+        assert!((mapped_hops(&t, 1.0) - 1.0).abs() < 1e-12);
+        assert!(mapped_hops(&t, 2.0) > 2.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Dense row-major matrix kernels for the framework-free inference path.
+//!
+//! The ikj loop order keeps the inner loop contiguous over C and B rows so
+//! the compiler autovectorizes it (we build with target-cpu=native); at the
+//! sizes the DPLR nets use (K, N <= 384) this is within ~2-3x of MKL-class
+//! BLAS, and removing the framework dispatch overhead is the point of the
+//! paper's section 3.4.2.
+
+/// Row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub r: usize,
+    pub c: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(r: usize, c: usize) -> Mat {
+        Mat {
+            r,
+            c,
+            a: vec![0.0; r * c],
+        }
+    }
+
+    pub fn from_vec(r: usize, c: usize, a: Vec<f64>) -> Mat {
+        assert_eq!(a.len(), r * c);
+        Mat { r, c, a }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.a[i * self.c..(i + 1) * self.c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.a[i * self.c..(i + 1) * self.c]
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.c, self.r);
+        for i in 0..self.r {
+            for j in 0..self.c {
+                out.a[j * self.r + i] = self.a[i * self.c + j];
+            }
+        }
+        out
+    }
+}
+
+/// C += A @ B  (A: m x k, B: k x n, C: m x n), ikj order.
+pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat) {
+    assert_eq!(a.c, b.r);
+    assert_eq!(c.r, a.r);
+    assert_eq!(c.c, b.c);
+    let n = b.c;
+    for i in 0..a.r {
+        let arow = a.row(i);
+        let crow = &mut c.a[i * n..(i + 1) * n];
+        // dense ikj: contiguous inner loop over C/B rows autovectorizes;
+        // no zero-skip branch (it defeats vectorization on dense inputs)
+        for (k, &aik) in arow.iter().enumerate() {
+            let brow = &b.a[k * n..(k + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+}
+
+/// C = A @ B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.r, b.c);
+    matmul_acc(&mut c, a, b);
+    c
+}
+
+/// C = A @ B^T  (A: m x k, B: n x k) — dot-product micro-kernel.
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.c, b.c);
+    let mut out = Mat::zeros(a.r, b.r);
+    for i in 0..a.r {
+        let arow = a.row(i);
+        for j in 0..b.r {
+            let brow = b.row(j);
+            let mut s = 0.0;
+            for k in 0..a.c {
+                s += arow[k] * brow[k];
+            }
+            out.a[i * b.r + j] = s;
+        }
+    }
+    out
+}
+
+/// y = x + b (broadcast add of a bias row).
+pub fn add_bias(x: &mut Mat, b: &[f64]) {
+    assert_eq!(x.c, b.len());
+    for i in 0..x.r {
+        let row = &mut x.a[i * b.len()..(i + 1) * b.len()];
+        for (v, bb) in row.iter_mut().zip(b) {
+            *v += bb;
+        }
+    }
+}
+
+/// Elementwise tanh in place; returns nothing (keep activations for bwd).
+pub fn tanh_inplace(x: &mut Mat) {
+    for v in &mut x.a {
+        *v = v.tanh();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, rng: &mut Rng) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.r, b.c);
+        for i in 0..a.r {
+            for j in 0..b.c {
+                let mut s = 0.0;
+                for k in 0..a.c {
+                    s += a.a[i * a.c + k] * b.a[k * b.c + j];
+                }
+                c.a[i * b.c + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        check(
+            9,
+            25,
+            |r| (1 + r.below(20), 1 + r.below(20), 1 + r.below(20), r.next_u64()),
+            |&(m, k, n, seed)| {
+                let mut rng = Rng::new(seed);
+                let a = rand_mat(m, k, &mut rng);
+                let b = rand_mat(k, n, &mut rng);
+                let c1 = matmul(&a, &b);
+                let c2 = naive(&a, &b);
+                for (x, y) in c1.a.iter().zip(&c2.a) {
+                    if (x - y).abs() > 1e-10 {
+                        return Err(format!("mismatch {x} vs {y} ({m}x{k}x{n})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matmul_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(4);
+        let a = rand_mat(7, 5, &mut rng);
+        let b = rand_mat(9, 5, &mut rng);
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &b.t());
+        for (x, y) in c1.a.iter().zip(&c2.a) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(8);
+        let a = rand_mat(6, 11, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn bias_and_tanh() {
+        let mut x = Mat::from_vec(2, 2, vec![0.0, 1.0, -1.0, 2.0]);
+        add_bias(&mut x, &[1.0, -1.0]);
+        assert_eq!(x.a, vec![1.0, 0.0, 0.0, 1.0]);
+        tanh_inplace(&mut x);
+        assert!((x.a[0] - 1f64.tanh()).abs() < 1e-15);
+        assert_eq!(x.a[1], 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Framework-free inference path (paper section 3.4.2).
+//!
+//! The paper found TensorFlow 2.2 spent less than half its inference time in
+//! actual compute kernels and replaced it with hand-fused framework-free
+//! code for a 7.5-9.9x speedup.  This module is the same experiment for our
+//! stack: the DP/DW models hand-written in rust (fused kernels, analytic
+//! backprop, zero dispatch) against the XLA/PJRT artifact path in
+//! [`crate::runtime`].  Both paths share weights (artifacts/weights.json)
+//! and are held to numerical parity by rust/tests/native_parity.rs.
+
+pub mod linalg;
+pub mod model;
+pub mod net;
+
+pub use model::{NativeModel, Weights};

@@ -1,0 +1,676 @@
+//! Framework-free DPLR model: DeepPot-SE descriptor, DP energy/forces and
+//! DW Wannier displacements with hand-written analytic backprop.
+//!
+//! This reproduces the paper's section 3.4.2 optimization: the same math as
+//! the XLA artifacts (ref.py), restructured as fused rust kernels with no
+//! framework dispatch, no redundant gradient kernels and no initialization
+//! overhead.  Numerical parity with the python reference is enforced by
+//! rust/tests/native_parity.rs against fixtures.json.
+
+use super::linalg::Mat;
+use super::net::{backward, forward, Mlp, Tape};
+use crate::runtime::manifest::Hyper;
+
+/// All weights of the DP + DW models (from artifacts/weights.json).
+pub struct Weights {
+    pub embed_dp: [Mlp; 2],
+    pub fit_dp: [Mlp; 2],
+    pub embed_dw: [Mlp; 2],
+    pub fit_dw: Mlp,
+}
+
+impl Weights {
+    pub fn load(path: &str) -> anyhow::Result<Weights> {
+        let j = crate::util::json::Json::parse_file(path)?;
+        let arr2 = |key: &str| -> anyhow::Result<[Mlp; 2]> {
+            let a = j.req(key)?.as_arr()?;
+            Ok([Mlp::from_json(&a[0])?, Mlp::from_json(&a[1])?])
+        };
+        Ok(Weights {
+            embed_dp: arr2("embed_dp")?,
+            fit_dp: arr2("fit_dp")?,
+            embed_dw: arr2("embed_dw")?,
+            fit_dw: Mlp::from_json(j.req("fit_dw")?)?,
+        })
+    }
+}
+
+/// Geometry scratch per evaluation: displacements + radial features for
+/// every (centre, slot) pair.
+struct Geom {
+    ncentres: usize,
+    s: usize, // slots per centre
+    /// displacement centre->neighbour, zero where masked
+    d: Vec<[f64; 3]>,
+    /// mask 0/1
+    mask: Vec<f64>,
+    /// env matrix rows (s, s ux, s uy, s uz)
+    env: Vec<[f64; 4]>,
+    /// radial feature (= env[0])
+    sval: Vec<f64>,
+}
+
+/// Compacted-embedding context: forward tapes + the valid-row index maps.
+struct EmbedCtx {
+    tapes: [Tape; 2],
+    rows: [Vec<usize>; 2],
+}
+
+pub struct NativeModel {
+    pub hyper: Hyper,
+    pub weights: Weights,
+}
+
+impl NativeModel {
+    pub fn new(hyper: Hyper, weights: Weights) -> Self {
+        NativeModel { hyper, weights }
+    }
+
+    pub fn load(dir: &str) -> anyhow::Result<NativeModel> {
+        let man = crate::runtime::manifest::Manifest::load(&format!("{dir}/manifest.json"))?;
+        let weights = Weights::load(&format!("{dir}/weights.json"))?;
+        Ok(NativeModel::new(man.hyper, weights))
+    }
+
+    // ---- geometry -------------------------------------------------------
+
+    fn switch(&self, r: f64) -> (f64, f64) {
+        let (rcs, rc) = (self.hyper.r_cut_smooth, self.hyper.r_cut);
+        if r < rcs {
+            (1.0, 0.0)
+        } else if r >= rc {
+            (0.0, 0.0)
+        } else {
+            let uu = (r - rcs) / (rc - rcs);
+            let sw = uu * uu * uu * (-6.0 * uu * uu + 15.0 * uu - 10.0) + 1.0;
+            let dsw = -30.0 * uu * uu * (uu - 1.0) * (uu - 1.0) / (rc - rcs);
+            (sw, dsw)
+        }
+    }
+
+    fn geom(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32], ncentres: usize) -> Geom {
+        let s = nlist.len() / ncentres;
+        let mut g = Geom {
+            ncentres,
+            s,
+            d: vec![[0.0; 3]; ncentres * s],
+            mask: vec![0.0; ncentres * s],
+            env: vec![[0.0; 4]; ncentres * s],
+            sval: vec![0.0; ncentres * s],
+        };
+        for i in 0..ncentres {
+            for k in 0..s {
+                let j = nlist[i * s + k];
+                if j < 0 {
+                    continue;
+                }
+                let j = j as usize;
+                let mut d = [0.0; 3];
+                for t in 0..3 {
+                    let mut x = coords[3 * j + t] - coords[3 * i + t];
+                    x -= box_len[t] * (x / box_len[t]).round();
+                    d[t] = x;
+                }
+                let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+                let r = r2.max(1e-12).sqrt();
+                let (sw, _) = self.switch(r);
+                let sv = sw / r;
+                let idx = i * s + k;
+                g.d[idx] = d;
+                g.mask[idx] = 1.0;
+                g.env[idx] = [sv, sv * d[0] / r, sv * d[1] / r, sv * d[2] / r];
+                g.sval[idx] = sv;
+            }
+        }
+        g
+    }
+
+    /// Backprop of the env rows: given denv (4 cotangents per pair), add
+    /// dE/dd into `dd`.
+    fn env_backward(&self, geom: &Geom, denv: &[[f64; 4]], dd: &mut [[f64; 3]]) {
+        for idx in 0..geom.d.len() {
+            if geom.mask[idx] == 0.0 {
+                continue;
+            }
+            let d = geom.d[idx];
+            let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+            let r = r2.max(1e-12).sqrt();
+            let (sw, dsw) = self.switch(r);
+            let sv = sw / r;
+            let dsv_dr = dsw / r - sw / (r * r);
+            let u = [d[0] / r, d[1] / r, d[2] / r];
+            let g = denv[idx];
+            // row = (sv, sv*u); d(row)/dd_l accumulated into dd[idx][l]
+            let gu = g[1] * u[0] + g[2] * u[1] + g[3] * u[2];
+            for l in 0..3 {
+                // via sv: (g0 + g.u) * dsv/dr * u_l
+                let mut acc = (g[0] + gu) * dsv_dr * u[l];
+                // via u: sv * sum_k g_k (delta_kl - u_k u_l) / r
+                acc += sv * (g[l + 1] - gu * u[l]) / r;
+                dd[idx][l] += acc;
+            }
+        }
+    }
+
+    // ---- embedding + descriptor -----------------------------------------
+
+    /// Embed the radial features of a typed column block; returns the tapes
+    /// (one per neighbour type) and the concatenated raw G (R x m1 rows per
+    /// pair, unmasked).
+    fn embed(&self, geom: &Geom, nets: &[Mlp; 2]) -> (EmbedCtx, Mat) {
+        let (sel0, s) = (self.hyper.sel[0], geom.s);
+        let n = geom.ncentres;
+        let m1 = self.hyper.m1;
+        // compact valid rows per neighbour type: padded / beyond-cutoff
+        // pairs (sval == 0) never contribute (every consumer multiplies by
+        // s or the mask), so they are skipped entirely — on realistic water
+        // ~35% of the padded slots are empty (part of the section 3.4.2
+        // "remove redundant computation" optimization)
+        let mut rows0 = Vec::new();
+        let mut rows1 = Vec::new();
+        for i in 0..n {
+            for k in 0..s {
+                let idx = i * s + k;
+                if geom.sval[idx] > 0.0 {
+                    if k < sel0 {
+                        rows0.push(idx);
+                    } else {
+                        rows1.push(idx);
+                    }
+                }
+            }
+        }
+        let gather = |rows: &[usize]| {
+            let mut x = Mat::zeros(rows.len().max(1), 1);
+            for (r, &idx) in rows.iter().enumerate() {
+                x.a[r] = geom.sval[idx];
+            }
+            x
+        };
+        let t0 = forward(&nets[0], &gather(&rows0));
+        let t1 = forward(&nets[1], &gather(&rows1));
+        // scatter back into (n*s, m1); invalid rows stay zero (never read)
+        let mut g = Mat::zeros(n * s, m1);
+        for (r, &idx) in rows0.iter().enumerate() {
+            g.row_mut(idx).copy_from_slice(t0.out.row(r));
+        }
+        for (r, &idx) in rows1.iter().enumerate() {
+            g.row_mut(idx).copy_from_slice(t1.out.row(r));
+        }
+        (
+            EmbedCtx {
+                tapes: [t0, t1],
+                rows: [rows0, rows1],
+            },
+            g,
+        )
+    }
+
+    /// Backprop a (n*s, m1) cotangent through the embedding nets, adding
+    /// the resulting d/ds contributions into `dsval`.
+    fn embed_backward(
+        &self,
+        _geom: &Geom,
+        nets: &[Mlp; 2],
+        ctx: &EmbedCtx,
+        dg: &Mat,
+        dsval: &mut [f64],
+    ) {
+        let m1 = self.hyper.m1;
+        for t in 0..2 {
+            let rows = &ctx.rows[t];
+            let mut d = Mat::zeros(rows.len().max(1), m1);
+            for (r, &idx) in rows.iter().enumerate() {
+                d.row_mut(r).copy_from_slice(dg.row(idx));
+            }
+            let dx = backward(&nets[t], &ctx.tapes[t], &d);
+            for (r, &idx) in rows.iter().enumerate() {
+                dsval[idx] += dx.a[r];
+            }
+        }
+    }
+
+    /// Descriptor forward for one centre: returns (T1, desc-row).
+    /// T1 = G_masked^T R / S  (m1 x 4); D = T1 T2^T flattened (m1*m2).
+    fn descriptor_fwd(&self, geom: &Geom, g: &Mat, i: usize) -> (Mat, Vec<f64>) {
+        let (s, m1, m2) = (geom.s, self.hyper.m1, self.hyper.m2);
+        let inv = 1.0 / s as f64;
+        let mut t1 = Mat::zeros(m1, 4);
+        for k in 0..s {
+            let idx = i * s + k;
+            if geom.sval[idx] <= 0.0 {
+                continue; // mask: padded or beyond-cutoff rows
+            }
+            let grow = g.row(idx);
+            let env = geom.env[idx];
+            for m in 0..m1 {
+                let gm = grow[m] * inv;
+                let t1row = &mut t1.a[m * 4..m * 4 + 4];
+                t1row[0] += gm * env[0];
+                t1row[1] += gm * env[1];
+                t1row[2] += gm * env[2];
+                t1row[3] += gm * env[3];
+            }
+        }
+        let mut desc = vec![0.0; m1 * m2];
+        for m in 0..m1 {
+            for a in 0..m2 {
+                let mut acc = 0.0;
+                for f in 0..4 {
+                    acc += t1.a[m * 4 + f] * t1.a[a * 4 + f];
+                }
+                desc[m * m2 + a] = acc;
+            }
+        }
+        (t1, desc)
+    }
+
+    /// Backprop one centre's descriptor cotangent `ddesc` (m1*m2) into
+    /// dG rows and denv rows.
+    fn descriptor_bwd(
+        &self,
+        geom: &Geom,
+        g: &Mat,
+        i: usize,
+        t1: &Mat,
+        ddesc: &[f64],
+        dg: &mut Mat,
+        denv: &mut [[f64; 4]],
+    ) {
+        let (s, m1, m2) = (geom.s, self.hyper.m1, self.hyper.m2);
+        let inv = 1.0 / s as f64;
+        // dT1 from D = T1 T2^T (T2 = first m2 rows of T1)
+        let mut dt1 = Mat::zeros(m1, 4);
+        for m in 0..m1 {
+            for a in 0..m2 {
+                let dd = ddesc[m * m2 + a];
+                if dd == 0.0 {
+                    continue;
+                }
+                for f in 0..4 {
+                    dt1.a[m * 4 + f] += dd * t1.a[a * 4 + f];
+                    dt1.a[a * 4 + f] += dd * t1.a[m * 4 + f];
+                }
+            }
+        }
+        // dG = R dT1^T / S ; dR = G dT1 / S   (per pair row)
+        for k in 0..s {
+            let idx = i * s + k;
+            if geom.sval[idx] <= 0.0 {
+                continue;
+            }
+            let env = geom.env[idx];
+            let grow = g.row(idx);
+            let dgrow = dg.row_mut(idx);
+            let de = &mut denv[idx];
+            for m in 0..m1 {
+                let dt1row = &dt1.a[m * 4..m * 4 + 4];
+                let mut acc = 0.0;
+                for f in 0..4 {
+                    acc += dt1row[f] * env[f];
+                    de[f] += dt1row[f] * grow[m] * inv;
+                }
+                dgrow[m] += acc * inv;
+            }
+        }
+    }
+
+    // ---- DP model: short-range NN energy + forces ------------------------
+
+    /// NN part of E_sr and its forces (prior handled separately).
+    pub fn dp_nn_ef(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nmol: usize,
+    ) -> (f64, Vec<f64>) {
+        let natoms = coords.len() / 3;
+        let geom = self.geom(coords, box_len, nlist, natoms);
+        let (ectx, g) = self.embed(&geom, &self.weights.embed_dp);
+        let (m1, m2) = (self.hyper.m1, self.hyper.m2);
+        // per-centre descriptors
+        let mut descs = Mat::zeros(natoms, m1 * m2);
+        let mut t1s = Vec::with_capacity(natoms);
+        for i in 0..natoms {
+            let (t1, d) = self.descriptor_fwd(&geom, &g, i);
+            descs.row_mut(i).copy_from_slice(&d);
+            t1s.push(t1);
+        }
+        // typed fitting: O rows then H rows (atoms are type-sorted)
+        let d_o = Mat::from_vec(nmol, m1 * m2, descs.a[..nmol * m1 * m2].to_vec());
+        let d_h = Mat::from_vec(
+            natoms - nmol,
+            m1 * m2,
+            descs.a[nmol * m1 * m2..].to_vec(),
+        );
+        let tape_o = forward(&self.weights.fit_dp[0], &d_o);
+        let tape_h = forward(&self.weights.fit_dp[1], &d_h);
+        let energy: f64 = tape_o.out.a.iter().sum::<f64>() + tape_h.out.a.iter().sum::<f64>();
+
+        // ---- backward ----
+        let ones_o = Mat::from_vec(nmol, 1, vec![1.0; nmol]);
+        let ones_h = Mat::from_vec(natoms - nmol, 1, vec![1.0; natoms - nmol]);
+        let dd_o = backward(&self.weights.fit_dp[0], &tape_o, &ones_o);
+        let dd_h = backward(&self.weights.fit_dp[1], &tape_h, &ones_h);
+        let mut dg = Mat::zeros(g.r, g.c);
+        let mut denv = vec![[0.0; 4]; geom.d.len()];
+        for i in 0..natoms {
+            let ddesc = if i < nmol {
+                dd_o.row(i)
+            } else {
+                dd_h.row(i - nmol)
+            };
+            self.descriptor_bwd(&geom, &g, i, &t1s[i], ddesc, &mut dg, &mut denv);
+        }
+        // embedding backward -> dsval; merge into env cotangent channel 0
+        // (the radial feature s *is* env row 0)
+        let mut dsval = vec![0.0; geom.sval.len()];
+        self.embed_backward(&geom, &self.weights.embed_dp, &ectx, &dg, &mut dsval);
+        for idx in 0..denv.len() {
+            denv[idx][0] += dsval[idx];
+        }
+        let mut dd = vec![[0.0; 3]; geom.d.len()];
+        self.env_backward(&geom, &denv, &mut dd);
+        // scatter dE/dd into forces: d = c_j - c_i => F_i += dd, F_j -= dd
+        let mut forces = vec![0.0; natoms * 3];
+        let s = geom.s;
+        for i in 0..natoms {
+            for k in 0..s {
+                let j = nlist[i * s + k];
+                if j < 0 {
+                    continue;
+                }
+                let j = j as usize;
+                let idx = i * s + k;
+                for t in 0..3 {
+                    forces[3 * i + t] += dd[idx][t];
+                    forces[3 * j + t] -= dd[idx][t];
+                }
+            }
+        }
+        (energy, forces)
+    }
+
+    // ---- physical prior ---------------------------------------------------
+
+    /// Analytic prior (bonds + angle + Born-Mayer): energy + forces.
+    pub fn prior_ef(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nmol: usize,
+    ) -> (f64, Vec<f64>) {
+        let natoms = coords.len() / 3;
+        let h = &self.hyper;
+        let mut energy = 0.0;
+        let mut forces = vec![0.0; natoms * 3];
+        let mi = |mut x: f64, l: f64| {
+            x -= l * (x / l).round();
+            x
+        };
+        // bonds + angle per molecule
+        for m in 0..nmol {
+            let o = m;
+            let h1 = nmol + 2 * m;
+            let h2 = nmol + 2 * m + 1;
+            let mut d1 = [0.0; 3];
+            let mut d2 = [0.0; 3];
+            for t in 0..3 {
+                d1[t] = mi(coords[3 * h1 + t] - coords[3 * o + t], box_len[t]);
+                d2[t] = mi(coords[3 * h2 + t] - coords[3 * o + t], box_len[t]);
+            }
+            let r1 = (d1[0] * d1[0] + d1[1] * d1[1] + d1[2] * d1[2]).sqrt();
+            let r2 = (d2[0] * d2[0] + d2[1] * d2[1] + d2[2] * d2[2]).sqrt();
+            energy += h.bond_k * ((r1 - h.bond_r0).powi(2) + (r2 - h.bond_r0).powi(2));
+            // dE/dr * unit vector; force on H = -dE/dd, on O = +dE/dd
+            for (d, r, hi) in [(d1, r1, h1), (d2, r2, h2)] {
+                let c = 2.0 * h.bond_k * (r - h.bond_r0) / r;
+                for t in 0..3 {
+                    forces[3 * hi + t] -= c * d[t];
+                    forces[3 * o + t] += c * d[t];
+                }
+            }
+            // angle
+            let dot = d1[0] * d2[0] + d1[1] * d2[1] + d1[2] * d2[2];
+            let cosv = (dot / (r1 * r2)).clamp(-1.0 + 1e-9, 1.0 - 1e-9);
+            let ang = cosv.acos();
+            energy += h.angle_k * (ang - h.angle_t0).powi(2);
+            let dang = 2.0 * h.angle_k * (ang - h.angle_t0);
+            let dcos = -dang / (1.0 - cosv * cosv).sqrt();
+            for t in 0..3 {
+                let g1 = dcos * (d2[t] / (r1 * r2) - cosv * d1[t] / (r1 * r1));
+                let g2 = dcos * (d1[t] / (r1 * r2) - cosv * d2[t] / (r2 * r2));
+                forces[3 * h1 + t] -= g1;
+                forces[3 * h2 + t] -= g2;
+                forces[3 * o + t] += g1 + g2;
+            }
+        }
+        // Born-Mayer over the padded nlist (double counted -> 0.5)
+        let s = nlist.len() / natoms;
+        let sel0 = h.sel[0];
+        for i in 0..natoms {
+            for k in 0..s {
+                let j = nlist[i * s + k];
+                if j < 0 {
+                    continue;
+                }
+                let j = j as usize;
+                let mut d = [0.0; 3];
+                for t in 0..3 {
+                    d[t] = mi(coords[3 * j + t] - coords[3 * i + t], box_len[t]);
+                }
+                let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).max(1e-12).sqrt();
+                let (sw, dsw) = self.switch(r);
+                let a = match (i < nmol, k < sel0) {
+                    (true, true) => h.bm_a_oo,
+                    (false, false) => h.bm_a_hh,
+                    _ => h.bm_a_oh,
+                };
+                let ex = (-r / h.bm_rho).exp();
+                energy += 0.5 * sw * a * ex;
+                let dedr = 0.5 * a * ex * (dsw - sw / h.bm_rho);
+                for t in 0..3 {
+                    let g = dedr * d[t] / r;
+                    forces[3 * i + t] += g;
+                    forces[3 * j + t] -= g;
+                }
+            }
+        }
+        (energy, forces)
+    }
+
+    /// Full short-range model: NN + prior (same contract as runtime dp_ef).
+    pub fn dp_ef(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+    ) -> (f64, Vec<f64>) {
+        let natoms = coords.len() / 3;
+        let nmol = natoms / 3;
+        let (e1, f1) = self.dp_nn_ef(coords, box_len, nlist, nmol);
+        let (e2, f2) = self.prior_ef(coords, box_len, nlist, nmol);
+        let forces = f1.iter().zip(&f2).map(|(a, b)| a + b).collect();
+        (e1 + e2, forces)
+    }
+
+    // ---- DW model ---------------------------------------------------------
+
+    /// Forward-only Wannier displacements (nmol x 3 flat).
+    pub fn dw_fwd(&self, coords: &[f64], box_len: [f64; 3], nlist_o: &[i32]) -> Vec<f64> {
+        self.dw_run(coords, box_len, nlist_o, None).0
+    }
+
+    /// Delta + VJP given WC forces: f_contrib = sum_n f_wc . dW/dR.
+    pub fn dw_vjp(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist_o: &[i32],
+        f_wc: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let (delta, fc) = self.dw_run(coords, box_len, nlist_o, Some(f_wc));
+        (delta, fc.unwrap())
+    }
+
+    fn dw_run(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist_o: &[i32],
+        f_wc: Option<&[f64]>,
+    ) -> (Vec<f64>, Option<Vec<f64>>) {
+        let natoms = coords.len() / 3;
+        let nmol = natoms / 3;
+        let geom = self.geom(coords, box_len, nlist_o, nmol);
+        let (ectx, g) = self.embed(&geom, &self.weights.embed_dw);
+        let (m1, m2, s) = (self.hyper.m1, self.hyper.m2, geom.s);
+        let mut descs = Mat::zeros(nmol, m1 * m2);
+        let mut t1s = Vec::with_capacity(nmol);
+        for i in 0..nmol {
+            let (t1, d) = self.descriptor_fwd(&geom, &g, i);
+            descs.row_mut(i).copy_from_slice(&d);
+            t1s.push(t1);
+        }
+        let tape_fit = forward(&self.weights.fit_dw, &descs); // (nmol, m1)
+        let a = &tape_fit.out;
+        // gates: c_ik = (g_ik . a_i) * s_ik ; raw_i = sum_k c_ik d_ik
+        let mut gate = vec![0.0; nmol * s];
+        let mut raw = vec![[0.0f64; 3]; nmol];
+        for i in 0..nmol {
+            let arow = a.row(i);
+            for k in 0..s {
+                let idx = i * s + k;
+                if geom.mask[idx] == 0.0 {
+                    continue;
+                }
+                let grow = g.row(idx);
+                let mut dot = 0.0;
+                for m in 0..m1 {
+                    dot += grow[m] * arow[m];
+                }
+                let c = dot * geom.sval[idx];
+                gate[idx] = c;
+                for t in 0..3 {
+                    raw[i][t] += c * geom.d[idx][t];
+                }
+            }
+        }
+        // radial clamp
+        let clamp = self.hyper.wc_clamp;
+        let mut delta = vec![0.0; nmol * 3];
+        let mut scales = vec![(0.0, 0.0); nmol]; // (scale, dscale/dnorm)
+        for i in 0..nmol {
+            let norm = (raw[i][0] * raw[i][0] + raw[i][1] * raw[i][1] + raw[i][2] * raw[i][2])
+                .max(1e-18)
+                .sqrt();
+            let t = (norm / clamp).tanh();
+            let scale = clamp * t / norm;
+            let dscale = ((1.0 - t * t) - scale) / norm;
+            scales[i] = (scale, dscale);
+            for tt in 0..3 {
+                delta[3 * i + tt] = raw[i][tt] * scale;
+            }
+        }
+        let f_wc = match f_wc {
+            Some(f) => f,
+            None => return (delta, None),
+        };
+
+        // ---- backward with cotangent f_wc on W = R_O + Delta ----
+        let mut draw = vec![[0.0f64; 3]; nmol];
+        for i in 0..nmol {
+            let (scale, dscale) = scales[i];
+            let norm = (raw[i][0] * raw[i][0] + raw[i][1] * raw[i][1] + raw[i][2] * raw[i][2])
+                .max(1e-18)
+                .sqrt();
+            let gdot =
+                f_wc[3 * i] * raw[i][0] + f_wc[3 * i + 1] * raw[i][1] + f_wc[3 * i + 2] * raw[i][2];
+            for t in 0..3 {
+                draw[i][t] = scale * f_wc[3 * i + t] + gdot * dscale * raw[i][t] / norm;
+            }
+        }
+        // raw -> gate, d
+        let mut dgate = vec![0.0; nmol * s];
+        let mut dd = vec![[0.0f64; 3]; nmol * s];
+        for i in 0..nmol {
+            for k in 0..s {
+                let idx = i * s + k;
+                if geom.mask[idx] == 0.0 {
+                    continue;
+                }
+                for t in 0..3 {
+                    dgate[idx] += draw[i][t] * geom.d[idx][t];
+                    dd[idx][t] += gate[idx] * draw[i][t];
+                }
+            }
+        }
+        // gate -> a, g(raw), sval
+        let mut da = Mat::zeros(nmol, m1);
+        let mut dg = Mat::zeros(g.r, g.c);
+        let mut dsval = vec![0.0; nmol * s];
+        for i in 0..nmol {
+            let arow = a.row(i);
+            let darow = da.row_mut(i);
+            for k in 0..s {
+                let idx = i * s + k;
+                if geom.mask[idx] == 0.0 || dgate[idx] == 0.0 {
+                    continue;
+                }
+                let grow = g.row(idx);
+                let dgrow = dg.row_mut(idx);
+                let sv = geom.sval[idx];
+                let dgk = dgate[idx];
+                let mut dot = 0.0;
+                for m in 0..m1 {
+                    darow[m] += dgk * sv * grow[m];
+                    dgrow[m] += dgk * sv * arow[m];
+                    dot += grow[m] * arow[m];
+                }
+                dsval[idx] += dgk * dot;
+            }
+        }
+        // a -> desc -> (G, env)
+        let ddesc_all = backward(&self.weights.fit_dw, &tape_fit, &da);
+        let mut denv = vec![[0.0; 4]; geom.d.len()];
+        for i in 0..nmol {
+            self.descriptor_bwd(
+                &geom,
+                &g,
+                i,
+                &t1s[i],
+                ddesc_all.row(i),
+                &mut dg,
+                &mut denv,
+            );
+        }
+        // G (raw, both contributions) -> sval
+        self.embed_backward(&geom, &self.weights.embed_dw, &ectx, &dg, &mut dsval);
+        for idx in 0..denv.len() {
+            denv[idx][0] += dsval[idx];
+        }
+        self.env_backward(&geom, &denv, &mut dd);
+        // scatter: W_n = R_O(n) + Delta_n ; f_contrib = f_wc (on O) + chain
+        let mut fc = vec![0.0; natoms * 3];
+        for i in 0..nmol {
+            for t in 0..3 {
+                fc[3 * i + t] += f_wc[3 * i + t];
+            }
+            for k in 0..s {
+                let j = nlist_o[i * s + k];
+                if j < 0 {
+                    continue;
+                }
+                let j = j as usize;
+                let idx = i * s + k;
+                for t in 0..3 {
+                    fc[3 * i + t] -= dd[idx][t];
+                    fc[3 * j + t] += dd[idx][t];
+                }
+            }
+        }
+        (delta, Some(fc))
+    }
+}

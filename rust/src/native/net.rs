@@ -1,0 +1,225 @@
+//! MLP forward + analytic backward for the DP/DW nets.
+//!
+//! Architecture (mirrors python/compile/params.py and ref.py):
+//! tanh layers with a ResNet skip wherever in == out, linear final layer.
+
+use super::linalg::{add_bias, matmul, tanh_inplace, Mat};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// One dense MLP: weights[i] is (in x out) row-major.  Transposed copies
+/// are cached at load time so the backward pass never re-transposes on the
+/// hot path (part of the section 3.4.2 framework-free optimization).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub ws: Vec<Mat>,
+    pub bs: Vec<Vec<f64>>,
+    pub wts: Vec<Mat>,
+}
+
+impl Mlp {
+    pub fn from_json(j: &Json) -> Result<Mlp> {
+        let wj = j.req("weights")?.as_arr()?;
+        let bj = j.req("biases")?.as_arr()?;
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for (w, b) in wj.iter().zip(bj) {
+            let rows = w.as_arr()?;
+            let r = rows.len();
+            let c = rows[0].as_arr()?.len();
+            let flat = w.as_f64_vec()?;
+            if flat.len() != r * c {
+                return Err(anyhow!("ragged weight matrix"));
+            }
+            ws.push(Mat::from_vec(r, c, flat));
+            bs.push(b.as_f64_vec()?);
+        }
+        let wts = ws.iter().map(|w| w.t()).collect();
+        Ok(Mlp { ws, bs, wts })
+    }
+
+    pub fn din(&self) -> usize {
+        self.ws[0].r
+    }
+
+    pub fn dout(&self) -> usize {
+        self.ws.last().unwrap().c
+    }
+}
+
+/// Activation tape from a forward pass (needed for backprop).
+pub struct Tape {
+    /// tanh outputs per hidden layer (t_i), for the 1 - t^2 factors
+    pub ts: Vec<Mat>,
+    pub out: Mat,
+}
+
+/// Forward pass over a batch (rows = samples).
+pub fn forward(mlp: &Mlp, x: &Mat) -> Tape {
+    let nl = mlp.ws.len();
+    let mut cur = x.clone();
+    let mut ts = Vec::new();
+    for l in 0..nl - 1 {
+        let w = &mlp.ws[l];
+        let mut t = matmul(&cur, w);
+        add_bias(&mut t, &mlp.bs[l]);
+        tanh_inplace(&mut t);
+        if w.r == w.c {
+            // ResNet skip: cur <- cur + t
+            for (v, p) in cur.a.iter_mut().zip(&t.a) {
+                *v += p;
+            }
+        } else {
+            cur = t.clone();
+        }
+        ts.push(t);
+    }
+    let mut out = matmul(&cur, mlp.ws.last().unwrap());
+    add_bias(&mut out, mlp.bs.last().unwrap());
+    Tape { ts, out }
+}
+
+/// Backward pass: given dL/dout, return dL/dinput (batch).
+pub fn backward(mlp: &Mlp, tape: &Tape, dout: &Mat) -> Mat {
+    let nl = mlp.ws.len();
+    // through the linear head: dx = dout @ W_last^T (cached transpose)
+    let mut dx = matmul(dout, &mlp.wts[nl - 1]);
+    for l in (0..nl - 1).rev() {
+        let w = &mlp.ws[l];
+        let t = &tape.ts[l];
+        // y = [x +] tanh(x W + b); dy -> dtanh = dy * (1 - t^2)
+        let mut dt = dx.clone();
+        for (v, tv) in dt.a.iter_mut().zip(&t.a) {
+            *v *= 1.0 - tv * tv;
+        }
+        let mut dxl = matmul(&dt, &mlp.wts[l]);
+        if w.r == w.c {
+            // skip connection adds dy straight through
+            for (v, g) in dxl.a.iter_mut().zip(&dx.a) {
+                *v += g;
+            }
+        }
+        dx = dxl;
+    }
+    dx
+}
+
+/// Convenience: forward + backward in one call for scalar-sum loss dL = 1.
+pub fn forward_only(mlp: &Mlp, x: &Mat) -> Mat {
+    forward(mlp, x).out
+}
+
+/// C += A^T @ B helper exposed for the descriptor math.
+pub fn at_b_acc(c: &mut Mat, a: &Mat, b: &Mat) {
+    // (a: r x m)^T (b: r x n) -> m x n
+    assert_eq!(a.r, b.r);
+    assert_eq!(c.r, a.c);
+    assert_eq!(c.c, b.c);
+    for k in 0..a.r {
+        let arow = a.row(k);
+        let brow = b.row(k);
+        for (i, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.a[i * b.c..(i + 1) * b.c];
+            for (j, &bkj) in brow.iter().enumerate() {
+                crow[j] += aik * bkj;
+            }
+        }
+    }
+}
+
+pub use super::linalg::Mat as NMat;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mlp(widths: &[usize], din: usize, dout: usize, seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        let mut prev = din;
+        for &w in widths.iter().chain(std::iter::once(&dout)) {
+            let m = Mat::from_vec(
+                prev,
+                w,
+                (0..prev * w)
+                    .map(|_| rng.normal() / (prev as f64).sqrt())
+                    .collect(),
+            );
+            ws.push(m);
+            bs.push((0..w).map(|_| rng.normal() * 0.1).collect());
+            prev = w;
+        }
+        let wts = ws.iter().map(|m| m.t()).collect();
+        Mlp { ws, bs, wts }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        // fitting-net-like shape with skips: 10 -> 16 -> 16 -> 16 -> 1
+        let mlp = rand_mlp(&[16, 16, 16], 10, 1, 3);
+        let mut rng = Rng::new(7);
+        let x = Mat::from_vec(4, 10, (0..40).map(|_| rng.normal()).collect());
+        let tape = forward(&mlp, &x);
+        let ones = Mat::from_vec(4, 1, vec![1.0; 4]);
+        let dx = backward(&mlp, &tape, &ones);
+        let eps = 1e-6;
+        for &(i, j) in &[(0usize, 0usize), (1, 3), (3, 9), (2, 5)] {
+            let mut xp = x.clone();
+            xp.a[i * 10 + j] += eps;
+            let mut xm = x.clone();
+            xm.a[i * 10 + j] -= eps;
+            let yp: f64 = forward(&mlp, &xp).out.a.iter().sum();
+            let ym: f64 = forward(&mlp, &xm).out.a.iter().sum();
+            let fd = (yp - ym) / (2.0 * eps);
+            let an = dx.a[i * 10 + j];
+            assert!(
+                (fd - an).abs() < 1e-6 * fd.abs().max(1.0),
+                "({i},{j}): fd {fd} vs {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn skip_connections_active_only_on_square_layers() {
+        // embedding-like: 1 -> 24 -> 48 (no skips)
+        let mlp = rand_mlp(&[24], 1, 48, 5);
+        let x = Mat::from_vec(3, 1, vec![0.1, 0.5, -0.3]);
+        let tape = forward(&mlp, &x);
+        assert_eq!(tape.out.r, 3);
+        assert_eq!(tape.out.c, 48);
+        // hand-compute row 0
+        let mut h = vec![0.0; 24];
+        for j in 0..24 {
+            h[j] = (0.1 * mlp.ws[0].a[j] + mlp.bs[0][j]).tanh();
+        }
+        let mut y0 = vec![0.0; 48];
+        for j in 0..48 {
+            let mut s = mlp.bs[1][j];
+            for k in 0..24 {
+                s += h[k] * mlp.ws[1].a[k * 48 + j];
+            }
+            y0[j] = s;
+        }
+        for j in 0..48 {
+            assert!((tape.out.a[j] - y0[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn at_b_acc_matches_transpose_matmul() {
+        let mut rng = Rng::new(11);
+        let a = Mat::from_vec(7, 3, (0..21).map(|_| rng.normal()).collect());
+        let b = Mat::from_vec(7, 5, (0..35).map(|_| rng.normal()).collect());
+        let mut c = Mat::zeros(3, 5);
+        at_b_acc(&mut c, &a, &b);
+        let want = matmul(&a.t(), &b);
+        for (x, y) in c.a.iter().zip(&want.a) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,371 @@
+//! Neighbour lists: padded typed lists (the NN input format), exact O(N^2)
+//! builder, cell-list accelerated builder, and a Verlet skin manager
+//! (paper: cutoff 6 A, skin 2 A, rebuild every 50 steps).
+
+use crate::md::system::System;
+
+/// Neighbour-list hyper-parameters (mirror python/compile/params.py).
+#[derive(Debug, Clone, Copy)]
+pub struct NlistParams {
+    pub r_cut: f64,
+    pub skin: f64,
+    pub sel: [usize; 2], // max O / H neighbours kept
+}
+
+impl Default for NlistParams {
+    fn default() -> Self {
+        NlistParams {
+            r_cut: 6.0,
+            skin: 2.0,
+            sel: [48, 96],
+        }
+    }
+}
+
+impl NlistParams {
+    pub fn sel_total(&self) -> usize {
+        self.sel[0] + self.sel[1]
+    }
+}
+
+/// Padded typed neighbour list: row i holds the O neighbours of centre i in
+/// columns [0, sel0) (sorted by distance, nearest first) and H neighbours
+/// in [sel0, sel0+sel1); -1 = empty slot.
+#[derive(Debug, Clone)]
+pub struct PaddedNlist {
+    pub ncentres: usize,
+    pub sel: [usize; 2],
+    pub data: Vec<i32>, // ncentres x sel_total
+    /// true if some shell overflowed `sel` and was truncated
+    pub truncated: bool,
+}
+
+impl PaddedNlist {
+    pub fn row(&self, i: usize) -> &[i32] {
+        let s = self.sel[0] + self.sel[1];
+        &self.data[i * s..(i + 1) * s]
+    }
+}
+
+fn min_image(mut d: [f64; 3], box_len: [f64; 3]) -> [f64; 3] {
+    for k in 0..3 {
+        d[k] -= box_len[k] * (d[k] / box_len[k]).round();
+    }
+    d
+}
+
+/// Exact O(N^2) builder over the given centres (r < r_cut, typed, sorted).
+pub fn build_exact(sys: &System, centres: &[usize], p: &NlistParams) -> PaddedNlist {
+    let n = sys.natoms();
+    let s = p.sel_total();
+    let mut data = vec![-1i32; centres.len() * s];
+    let mut truncated = false;
+    let mut cand: Vec<(f64, usize)> = Vec::with_capacity(n);
+    for (row, &i) in centres.iter().enumerate() {
+        for (t, (lo, cap)) in [(0usize, (0usize, p.sel[0])), (1, (p.sel[0], p.sel[1]))] {
+            cand.clear();
+            let range = if t == 0 { 0..sys.nmol } else { sys.nmol..n };
+            for j in range {
+                if j == i {
+                    continue;
+                }
+                let d = min_image(
+                    [
+                        sys.pos[j][0] - sys.pos[i][0],
+                        sys.pos[j][1] - sys.pos[i][1],
+                        sys.pos[j][2] - sys.pos[i][2],
+                    ],
+                    sys.box_len,
+                );
+                let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+                if r2 < p.r_cut * p.r_cut {
+                    cand.push((r2, j));
+                }
+            }
+            cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            if cand.len() > cap {
+                truncated = true;
+            }
+            for (k, (_, j)) in cand.iter().take(cap).enumerate() {
+                data[row * s + lo + k] = *j as i32;
+            }
+        }
+    }
+    PaddedNlist {
+        ncentres: centres.len(),
+        sel: p.sel,
+        data,
+        truncated,
+    }
+}
+
+/// Cell-list accelerated builder — same output contract as `build_exact`
+/// (tested for equality), O(N) for large systems.
+pub fn build_cells(sys: &System, centres: &[usize], p: &NlistParams) -> PaddedNlist {
+    let n = sys.natoms();
+    let rc = p.r_cut;
+    // cell grid; >= 1 cell, cells no smaller than rc (so 27 neighbours cover)
+    let mut ncell = [1usize; 3];
+    for d in 0..3 {
+        ncell[d] = (sys.box_len[d] / rc).floor().max(1.0) as usize;
+    }
+    let cell_of = |pos: &[f64; 3]| -> [usize; 3] {
+        let mut c = [0usize; 3];
+        for d in 0..3 {
+            let x = pos[d].rem_euclid(sys.box_len[d]);
+            c[d] = ((x / sys.box_len[d] * ncell[d] as f64) as usize).min(ncell[d] - 1);
+        }
+        c
+    };
+    let idx = |c: [usize; 3]| (c[0] * ncell[1] + c[1]) * ncell[2] + c[2];
+    let mut cells: Vec<Vec<usize>> = vec![Vec::new(); ncell[0] * ncell[1] * ncell[2]];
+    for j in 0..n {
+        cells[idx(cell_of(&sys.pos[j]))].push(j);
+    }
+    let s = p.sel_total();
+    let mut data = vec![-1i32; centres.len() * s];
+    let mut truncated = false;
+    // number of cell layers to scan per dim (when box/rc < 3 cells wrap)
+    let mut scan = [1i64; 3];
+    for d in 0..3 {
+        if ncell[d] < 3 {
+            scan[d] = (ncell[d] as i64 - 1).max(0); // avoid double visiting
+        }
+    }
+    let mut cand0: Vec<(f64, usize)> = Vec::new();
+    let mut cand1: Vec<(f64, usize)> = Vec::new();
+    for (row, &i) in centres.iter().enumerate() {
+        cand0.clear();
+        cand1.clear();
+        let ci = cell_of(&sys.pos[i]);
+        let mut seen_cells = std::collections::HashSet::new();
+        for dx in -scan[0]..=scan[0] {
+            for dy in -scan[1]..=scan[1] {
+                for dz in -scan[2]..=scan[2] {
+                    let c = [
+                        (ci[0] as i64 + dx).rem_euclid(ncell[0] as i64) as usize,
+                        (ci[1] as i64 + dy).rem_euclid(ncell[1] as i64) as usize,
+                        (ci[2] as i64 + dz).rem_euclid(ncell[2] as i64) as usize,
+                    ];
+                    if !seen_cells.insert(idx(c)) {
+                        continue;
+                    }
+                    for &j in &cells[idx(c)] {
+                        if j == i {
+                            continue;
+                        }
+                        let d = min_image(
+                            [
+                                sys.pos[j][0] - sys.pos[i][0],
+                                sys.pos[j][1] - sys.pos[i][1],
+                                sys.pos[j][2] - sys.pos[i][2],
+                            ],
+                            sys.box_len,
+                        );
+                        let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+                        if r2 < rc * rc {
+                            if j < sys.nmol {
+                                cand0.push((r2, j));
+                            } else {
+                                cand1.push((r2, j));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for (t, cand) in [(&mut cand0, 0usize), (&mut cand1, 1usize)]
+            .map(|(c, t)| (t, c))
+        {
+            cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let (lo, cap) = if t == 0 { (0, p.sel[0]) } else { (p.sel[0], p.sel[1]) };
+            if cand.len() > cap {
+                truncated = true;
+            }
+            for (k, (_, j)) in cand.iter().take(cap).enumerate() {
+                data[row * s + lo + k] = *j as i32;
+            }
+        }
+    }
+    PaddedNlist {
+        ncentres: centres.len(),
+        sel: p.sel,
+        data,
+        truncated,
+    }
+}
+
+/// Verlet-list manager: rebuilds when any atom moved more than skin/2 since
+/// the last build, or after `max_age` steps (paper: every 50).
+pub struct VerletManager {
+    pub params: NlistParams,
+    last_pos: Vec<[f64; 3]>,
+    age: usize,
+    pub max_age: usize,
+    pub rebuilds: usize,
+}
+
+impl VerletManager {
+    pub fn new(params: NlistParams, max_age: usize) -> Self {
+        VerletManager {
+            params,
+            last_pos: Vec::new(),
+            age: 0,
+            max_age,
+            rebuilds: 0,
+        }
+    }
+
+    pub fn needs_rebuild(&mut self, sys: &System) -> bool {
+        if self.last_pos.len() != sys.natoms() || self.age >= self.max_age {
+            return true;
+        }
+        let lim = 0.25 * self.params.skin * self.params.skin; // (skin/2)^2
+        for (p, q) in sys.pos.iter().zip(&self.last_pos) {
+            let d = min_image(
+                [p[0] - q[0], p[1] - q[1], p[2] - q[2]],
+                sys.box_len,
+            );
+            if d[0] * d[0] + d[1] * d[1] + d[2] * d[2] > lim {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn mark_built(&mut self, sys: &System) {
+        self.last_pos = sys.pos.clone();
+        self.age = 0;
+        self.rebuilds += 1;
+    }
+
+    pub fn tick(&mut self) {
+        self.age += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::water::water_box;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn exact_and_cells_agree() {
+        for nmol in [8usize, 27, 64] {
+            let sys = water_box(nmol, 2024 + nmol as u64);
+            let p = NlistParams::default();
+            let centres: Vec<usize> = (0..sys.natoms()).collect();
+            let a = build_exact(&sys, &centres, &p);
+            let b = build_cells(&sys, &centres, &p);
+            // same neighbours per row (order can differ only on exact ties)
+            for i in 0..sys.natoms() {
+                let mut ra: Vec<i32> = a.row(i).to_vec();
+                let mut rb: Vec<i32> = b.row(i).to_vec();
+                ra.sort();
+                rb.sort();
+                assert_eq!(ra, rb, "row {i} nmol {nmol}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_neighbours_within_cutoff_and_sorted() {
+        let sys = water_box(64, 7);
+        let p = NlistParams::default();
+        let centres: Vec<usize> = (0..sys.natoms()).collect();
+        let nl = build_exact(&sys, &centres, &p);
+        for i in 0..sys.natoms() {
+            let row = nl.row(i);
+            for (lo, cap) in [(0, p.sel[0]), (p.sel[0], p.sel[1])] {
+                let mut prev = 0.0;
+                for k in 0..cap {
+                    let j = row[lo + k];
+                    if j < 0 {
+                        // padding must be contiguous at the tail
+                        for kk in k..cap {
+                            assert_eq!(row[lo + kk], -1);
+                        }
+                        break;
+                    }
+                    let j = j as usize;
+                    let mut d = [0.0; 3];
+                    for t in 0..3 {
+                        let mut x = sys.pos[j][t] - sys.pos[i][t];
+                        x -= sys.box_len[t] * (x / sys.box_len[t]).round();
+                        d[t] = x;
+                    }
+                    let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+                    assert!(r < p.r_cut, "r {r}");
+                    assert!(r >= prev - 1e-12, "not sorted");
+                    prev = r;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn realistic_water_shell_sizes() {
+        // at 1 g/cc with rc = 6 A, O centres see ~30 O and ~60 H neighbours;
+        // paper's sel = (46, 92) must therefore never truncate.
+        let sys = water_box(128, 3);
+        let p = NlistParams::default();
+        let centres: Vec<usize> = (0..sys.nmol).collect();
+        let nl = build_exact(&sys, &centres, &p);
+        assert!(!nl.truncated);
+        let row = nl.row(0);
+        let n_o = row[..p.sel[0]].iter().filter(|&&x| x >= 0).count();
+        let n_h = row[p.sel[0]..].iter().filter(|&&x| x >= 0).count();
+        assert!((20..=46).contains(&n_o), "O shell {n_o}");
+        assert!((40..=92).contains(&n_h), "H shell {n_h}");
+    }
+
+    #[test]
+    fn verlet_manager_triggers_on_motion() {
+        let mut sys = water_box(8, 1);
+        let mut vm = VerletManager::new(NlistParams::default(), 50);
+        assert!(vm.needs_rebuild(&sys));
+        vm.mark_built(&sys);
+        assert!(!vm.needs_rebuild(&sys));
+        // move one atom by more than skin/2
+        sys.pos[3][0] += 1.1;
+        assert!(vm.needs_rebuild(&sys));
+    }
+
+    #[test]
+    fn verlet_manager_max_age() {
+        let sys = water_box(8, 1);
+        let mut vm = VerletManager::new(NlistParams::default(), 5);
+        vm.mark_built(&sys);
+        for _ in 0..5 {
+            vm.tick();
+        }
+        assert!(vm.needs_rebuild(&sys));
+    }
+
+    #[test]
+    fn property_cells_equals_exact_on_random_sizes() {
+        check(
+            0xBEEF,
+            6,
+            |r| (2 + r.below(40), r.next_u64()),
+            |&(nmol, seed)| {
+                let sys = water_box(nmol, seed);
+                let p = NlistParams::default();
+                let centres: Vec<usize> = (0..sys.natoms()).collect();
+                let a = build_exact(&sys, &centres, &p);
+                let b = build_cells(&sys, &centres, &p);
+                for i in 0..sys.natoms() {
+                    let mut ra = a.row(i).to_vec();
+                    let mut rb = b.row(i).to_vec();
+                    ra.sort();
+                    rb.sort();
+                    if ra != rb {
+                        return Err(format!("mismatch at row {i} (nmol={nmol})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! Calibrated performance model: composes the compute/communication pieces
+//! into full DPLR steps on the simulated Fugaku (Figs 9 and 10).
+//!
+//! Calibration: `dplr calibrate` measures per-atom inference costs of the
+//! real native and PJRT paths (and the fp64/fp32 ratio) on this host; the
+//! table below carries those *ratios* and one absolute anchor chosen so
+//! the fully-optimized 12-node configuration lands at the paper's
+//! headline 1.7 ms/step (51 ns/day).  Every other point — other node
+//! counts, other optimization stages, all baselines — follows from the
+//! model with no further fitting (DESIGN.md section 7).
+
+use crate::config::MachineConfig;
+use crate::coordinator::nodediv;
+use crate::coordinator::overlap::StageTimes;
+use crate::coordinator::ringlb::{imbalance, ring_migration, serpentine_ring};
+use crate::coordinator::spatial;
+use crate::distfft::{fftmpi_time, utofu_time, Participation};
+use crate::md::system::System;
+use crate::tofu::{BgPayload, Torus};
+
+/// Per-atom / per-site cost table [seconds on one A64FX core].
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    /// DP forward+backward per atom (native framework-free path, f64)
+    pub dp_per_atom: f64,
+    /// DW forward per O atom
+    pub dw_fwd_per_mol: f64,
+    /// DW backward (VJP) per O atom
+    pub dw_bwd_per_mol: f64,
+    /// framework (TF-like) inference slowdown factor (measured XLA/native)
+    pub framework_factor: f64,
+    /// additional framework startup/dispatch overhead per step [s]
+    pub framework_dispatch: f64,
+    /// fp64 -> fp32 speedup on NN + FFT compute
+    pub fp32_speedup: f64,
+    /// PPPM spread+gather per charged site (on one core)
+    pub spread_gather_per_site: f64,
+    /// integration/output/etc. per atom
+    pub others_per_atom: f64,
+}
+
+impl Default for CostTable {
+    fn default() -> Self {
+        // Anchored so the all-optimized 12-node / 564-atom configuration
+        // reproduces ~1.7 ms/step (51 ns/day): 47 atoms/node over 47
+        // usable cores with dp_per_atom ~= 1.45 ms.  Ratios (framework
+        // 7.5-9.9x, fp32 1.3-1.5x) are the paper's measured bands, which
+        // our host measurements fall inside (EXPERIMENTS.md section Perf).
+        CostTable {
+            dp_per_atom: 1.9e-3,
+            dw_fwd_per_mol: 0.35e-3,
+            dw_bwd_per_mol: 0.45e-3,
+            framework_factor: 8.5,
+            framework_dispatch: 6.0e-3,
+            fp32_speedup: 1.45,
+            spread_gather_per_site: 2.0e-6,
+            others_per_atom: 2.0e-6,
+        }
+    }
+}
+
+/// Which optimizations are active (the Fig 9 stage ladder).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageFlags {
+    pub native_inference: bool,
+    pub fp32: bool,
+    pub utofu_fft: bool,
+    pub node_division: bool,
+    pub ring_lb: bool,
+    pub overlap: bool,
+}
+
+impl StageFlags {
+    /// The cumulative ladder of Fig 9, in order.
+    pub fn ladder() -> Vec<(&'static str, StageFlags)> {
+        let mut flags = StageFlags::default();
+        let mut out = vec![("Baseline", flags)];
+        flags.native_inference = true;
+        out.push(("+Inference-opt", flags));
+        flags.fp32 = true;
+        out.push(("+FP32", flags));
+        flags.utofu_fft = true;
+        out.push(("+utofu-FFT", flags));
+        flags.node_division = true;
+        out.push(("+Node-LB", flags));
+        flags.ring_lb = true;
+        out.push(("+Ring-LB", flags));
+        flags.overlap = true;
+        out.push(("+Overlap", flags));
+        out
+    }
+}
+
+/// Per-step time breakdown (the Fig 9 bar categories).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub kspace: f64,
+    pub comm: f64,
+    pub dw_fwd: f64,
+    pub dp_dw_bwd: f64,
+    pub others: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.kspace + self.comm + self.dw_fwd + self.dp_dw_bwd + self.others
+    }
+}
+
+/// Model one DPLR step for `sys` on `torus` with the given stages.
+pub fn step_time(
+    sys: &System,
+    torus: &Torus,
+    flags: StageFlags,
+    cost: &CostTable,
+    m: &MachineConfig,
+) -> Breakdown {
+    let natoms = sys.natoms();
+    let nmol = sys.nmol;
+    let nodes = torus.nodes();
+    let cores = m.cores_per_node as f64;
+
+    // ---- load distribution ----
+    let mut loads = spatial::node_loads(sys, torus);
+    let mut lb_comm = 0.0;
+    if flags.ring_lb {
+        let order = serpentine_ring(torus);
+        let ring_loads: Vec<usize> = order.iter().map(|&n| loads[n]).collect();
+        let goal = natoms.div_ceil(nodes);
+        let mig = ring_migration(&ring_loads, goal);
+        if mig.clamped == 0 {
+            for (pos, &n) in order.iter().enumerate() {
+                loads[n] = mig.after[pos];
+            }
+            // ghost-region-expansion overhead + amortized allgather
+            let max_sent = mig.send.iter().max().copied().unwrap_or(0);
+            lb_comm += crate::coordinator::ringlb::migration_overhead(
+                crate::coordinator::ringlb::MigrationStrategy::GhostRegionExpansion,
+                max_sent,
+                0,
+                max_sent * 8,
+                m,
+            );
+            lb_comm += crate::mpisim::allgather_time(nodes, 8, m) / 50.0; // every ~50 steps
+        }
+        // clamped: fall back to intra-node balance only (paper, 768 nodes)
+    }
+    let max_load = *loads.iter().max().unwrap_or(&1) as f64;
+    let imb = imbalance(&loads);
+
+    // ---- per-node compute ----
+    let framework = if flags.native_inference {
+        1.0
+    } else {
+        cost.framework_factor
+    };
+    let fp = if flags.fp32 { cost.fp32_speedup } else { 1.0 };
+    let mols_per_node = max_load / 3.0;
+    // cores usable for the NN work
+    let nn_cores = if flags.node_division {
+        cores // node-level: all cores share the node's atoms
+    } else {
+        // rank-level decomposition wastes cores on rank imbalance (~20%)
+        cores * 0.8
+    };
+    let dispatch = if flags.native_inference {
+        0.0
+    } else {
+        cost.framework_dispatch
+    };
+    let t_dw_fwd = mols_per_node * cost.dw_fwd_per_mol * framework / fp / nn_cores + dispatch / 3.0;
+    let t_dp = max_load * cost.dp_per_atom * framework / fp / nn_cores + dispatch / 3.0;
+    let t_dw_bwd = mols_per_node * cost.dw_bwd_per_mol * framework / fp / nn_cores + dispatch / 3.0;
+
+    // ---- k-space ----
+    let grid = [
+        (torus.dims[0] * 4).max(8),
+        (torus.dims[1] * 4).max(8),
+        (torus.dims[2] * 4).max(8),
+    ];
+    let fft = if flags.utofu_fft {
+        let payload = if flags.fp32 {
+            BgPayload::PackedI32
+        } else {
+            BgPayload::U64
+        };
+        utofu_time(grid, torus, payload, m)
+    } else {
+        let mode = if flags.node_division {
+            Participation::Master
+        } else {
+            Participation::All
+        };
+        let mut c = fftmpi_time(grid, torus, mode, m);
+        c.compute /= fp;
+        c
+    };
+    let sites_per_node = max_load + mols_per_node; // ions + WCs
+    let spread = sites_per_node * cost.spread_gather_per_site;
+    let t_kspace_compute = fft.compute + spread;
+    let t_kspace_comm = fft.comm;
+
+    // ---- ghost/halo communication ----
+    let ghost = spatial::ghost_count(sys, torus, 0, 6.0).max(100);
+    let halo = if flags.node_division {
+        nodediv::node_level_ghost_time(max_load as usize, ghost, m)
+    } else {
+        let rank_w = sys.box_len[0] / torus.dims[0] as f64 / m.ranks_per_node as f64;
+        let partners = nodediv::rank_level_partners(rank_w, 6.0);
+        nodediv::rank_level_ghost_time(partners, ghost, m)
+    };
+    // waiting from load imbalance shows up as comm (paper section 4.3)
+    let wait = (imb - 1.0).max(0.0) * (t_dp + t_dw_fwd + t_dw_bwd) * 0.5;
+    let comm = halo + lb_comm + wait;
+
+    // ---- others ----
+    let others = max_load * cost.others_per_atom + 3.0 * (nmol as f64 / nodes as f64) * 1e-7;
+
+    // ---- schedule ----
+    if flags.overlap {
+        let st = StageTimes {
+            dw_fwd: t_dw_fwd,
+            short_range: t_dp + t_dw_bwd,
+            kspace_1core: (t_kspace_compute + t_kspace_comm) * cores, // one core
+            gather_scatter: sites_per_node * 24.0 * 2.0 / m.link_bandwidth + 2.0 * m.p2p_latency,
+            others,
+        };
+        // note: utofu/master already models single-core compute; avoid
+        // double scaling for the utofu path
+        let k1 = if flags.utofu_fft {
+            t_kspace_compute + t_kspace_comm + st.gather_scatter
+        } else {
+            (t_kspace_compute * cores).max(t_kspace_compute) + t_kspace_comm + st.gather_scatter
+        };
+        let grow = cores / (cores - 1.0);
+        let sr = (t_dp + t_dw_bwd) * grow;
+        let body = sr.max(k1);
+        let exposed_k = (k1 - sr).max(0.0);
+        Breakdown {
+            kspace: exposed_k,
+            comm,
+            dw_fwd: t_dw_fwd,
+            dp_dw_bwd: body - exposed_k,
+            others,
+        }
+    } else {
+        Breakdown {
+            kspace: t_kspace_compute + t_kspace_comm,
+            comm,
+            dw_fwd: t_dw_fwd,
+            dp_dw_bwd: t_dp + t_dw_bwd,
+            others,
+        }
+    }
+}
+
+/// ns/day at 1 fs for a per-step time.
+pub fn ns_per_day(step: f64) -> f64 {
+    crate::md::units::ns_per_day(step, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::water::replicated_base_box;
+
+    fn setup(nodes_dims: [usize; 3], rep: [usize; 3]) -> (System, Torus) {
+        (replicated_base_box(rep, 1), Torus::new(nodes_dims))
+    }
+
+    #[test]
+    fn headline_51_ns_per_day_at_12_nodes() {
+        let (sys, t) = setup([2, 3, 2], [1, 1, 1]);
+        let mut flags = StageFlags::default();
+        flags.native_inference = true;
+        flags.fp32 = true;
+        flags.utofu_fft = true;
+        flags.node_division = true;
+        flags.ring_lb = true;
+        flags.overlap = true;
+        let b = step_time(&sys, &t, flags, &CostTable::default(), &MachineConfig::default());
+        let nsd = ns_per_day(b.total());
+        assert!(
+            (35.0..70.0).contains(&nsd),
+            "12-node all-opt: {nsd} ns/day ({} s/step)",
+            b.total()
+        );
+    }
+
+    #[test]
+    fn ladder_is_monotone_improvement() {
+        let (sys, t) = setup([4, 6, 4], [2, 2, 2]);
+        let cost = CostTable::default();
+        let m = MachineConfig::default();
+        let mut prev = f64::INFINITY;
+        for (name, flags) in StageFlags::ladder() {
+            let total = step_time(&sys, &t, flags, &cost, &m).total();
+            assert!(
+                total <= prev * 1.05,
+                "{name} regressed: {total} vs {prev}"
+            );
+            prev = total;
+        }
+    }
+
+    #[test]
+    fn cumulative_speedup_order_of_magnitude_matches_paper() {
+        // paper: 29x (96 nodes) and 37x (768 nodes) baseline -> all-opt
+        let (sys, t) = setup([4, 6, 4], [2, 2, 2]);
+        let cost = CostTable::default();
+        let m = MachineConfig::default();
+        let ladder = StageFlags::ladder();
+        let base = step_time(&sys, &t, ladder[0].1, &cost, &m).total();
+        let opt = step_time(&sys, &t, ladder.last().unwrap().1, &cost, &m).total();
+        let speedup = base / opt;
+        assert!(
+            (10.0..80.0).contains(&speedup),
+            "cumulative speedup {speedup}"
+        );
+    }
+
+    #[test]
+    fn inference_opt_is_the_largest_single_step() {
+        let (sys, t) = setup([4, 6, 4], [2, 2, 2]);
+        let cost = CostTable::default();
+        let m = MachineConfig::default();
+        let ladder = StageFlags::ladder();
+        let mut gains = Vec::new();
+        let mut prev = step_time(&sys, &t, ladder[0].1, &cost, &m).total();
+        for (name, flags) in ladder.iter().skip(1) {
+            let cur = step_time(&sys, &t, *flags, &cost, &m).total();
+            gains.push((*name, prev / cur));
+            prev = cur;
+        }
+        let max = gains
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(max.0, "+Inference-opt", "gains: {gains:?}");
+        assert!(max.1 > 4.0, "inference gain {}", max.1);
+    }
+
+    #[test]
+    fn weak_scaling_degrades_gracefully() {
+        // Fig 10: ns/day decreases with node count but stays >30 at 8400
+        let cost = CostTable::default();
+        let m = MachineConfig::default();
+        let mut flags = StageFlags::default();
+        flags.native_inference = true;
+        flags.fp32 = true;
+        flags.utofu_fft = true;
+        flags.node_division = true;
+        flags.ring_lb = true;
+        flags.overlap = true;
+        let configs = [
+            ([2usize, 3, 2], [1usize, 1, 1]),
+            ([4, 6, 4], [2, 2, 2]),
+            ([8, 12, 8], [4, 4, 4]),
+        ];
+        let mut prev = f64::INFINITY;
+        for (dims, rep) in configs {
+            let (sys, t) = setup(dims, rep);
+            let nsd = ns_per_day(step_time(&sys, &t, flags, &cost, &m).total());
+            assert!(nsd < prev * 1.02, "not weakly decreasing: {nsd} vs {prev}");
+            assert!(nsd > 15.0, "collapsed at {dims:?}: {nsd}");
+            prev = nsd;
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Cardinal B-splines for PME/PPPM charge assignment.
+
+/// Weights w[j] = M_p(t + j), j = 0..p-1, for fractional offset t in [0,1).
+///
+/// M_p is the order-p cardinal B-spline (support (0, p)); the weights sum
+/// to exactly 1 for any t (partition of unity).  Standard iterative
+/// recurrence: M_2 is the hat function, and
+///   M_n(x) = x/(n-1) M_{n-1}(x) + (n-x)/(n-1) M_{n-1}(x-1).
+pub fn bspline_weights(t: f64, p: usize) -> Vec<f64> {
+    assert!(p >= 2, "spline order must be >= 2");
+    // w[j] holds M_n(t + j) as n grows from 2 to p
+    let mut w = vec![0.0; p];
+    // M_2(t) = 1 - |t - 1| on (0,2): M_2(t + 0) = ?  For t in [0,1):
+    // M_2(t) = t ... careful: M_2(x) = x on [0,1], 2-x on [1,2].
+    w[0] = t; // hmm: M_2(t) with t in [0,1) = t
+    w[1] = 1.0 - t; // M_2(t+1) = 2 - (t+1) = 1 - t
+    for n in 3..=p {
+        // expand in place from order n-1 to n (reverse order to reuse)
+        // after the update, w[j] = M_n(t + j) for j = 0..n-1
+        let div = 1.0 / (n as f64 - 1.0);
+        // j = n-1 uses only M_{n-1}(t + n - 2)
+        w[n - 1] = div * (n as f64 - (t + (n - 1) as f64)) * w[n - 2];
+        for j in (1..n - 1).rev() {
+            let x = t + j as f64;
+            w[j] = div * (x * w[j] + (n as f64 - x) * w[j - 1]);
+        }
+        w[0] = div * t * w[0];
+    }
+    w
+}
+
+/// |b(m)|^2 Euler-spline factors for the PME influence-function denominator.
+///
+/// b(m) = e^{2 pi i (p-1) m / n} / sum_{k=0}^{p-2} M_p(k+1) e^{2 pi i m k / n}
+/// Returns the squared magnitudes for m = 0..n-1.  For odd n and even p the
+/// denominator never vanishes; where it is tiny (aliasing poles at m = n/2
+/// for odd p) we clamp — the Gaussian screen kills those modes anyway.
+pub fn bspline_fourier_sq(n: usize, p: usize) -> Vec<f64> {
+    // M_p at integer nodes 1..p-1
+    let m_at_int = bspline_weights(0.0, p); // w[j] = M_p(j) -> j=0 gives 0
+    let mut out = vec![0.0; n];
+    for m in 0..n {
+        let (mut dre, mut dim) = (0.0, 0.0);
+        for k in 0..p - 1 {
+            // coefficient M_p(k+1) = weights-at-0 entry (k+1)... w[j]=M_p(0+j)
+            let c = m_at_int.get(k + 1).copied().unwrap_or(0.0);
+            let th = 2.0 * std::f64::consts::PI * (m as f64) * (k as f64) / n as f64;
+            dre += c * th.cos();
+            dim += c * th.sin();
+        }
+        // for odd p and even n the denominator vanishes at the Nyquist mode;
+        // standard practice (LAMMPS, smooth PME) is to drop those modes
+        let den = dre * dre + dim * dim;
+        out[m] = if den < 1e-7 { 0.0 } else { 1.0 / den };
+    }
+    // |b|^2 = 1/|denominator|^2 (the phase factor has unit magnitude)
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weights_partition_of_unity() {
+        check(
+            42,
+            200,
+            |r: &mut Rng| (2 + r.below(6), r.uniform()),
+            |&(p, t)| {
+                let w = bspline_weights(t, p);
+                let s: f64 = w.iter().sum();
+                if (s - 1.0).abs() < 1e-12 && w.iter().all(|&x| x >= -1e-15) {
+                    Ok(())
+                } else {
+                    Err(format!("sum {s}, w {w:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn order2_is_linear_interpolation() {
+        let w = bspline_weights(0.25, 2);
+        assert!((w[0] - 0.25).abs() < 1e-15);
+        assert!((w[1] - 0.75).abs() < 1e-15);
+    }
+
+    #[test]
+    fn order3_known_values() {
+        // M_3(x): x^2/2 on [0,1]; (-2x^2+6x-3)/2 on [1,2]; (3-x)^2/2 on [2,3]
+        let t = 0.5;
+        let w = bspline_weights(t, 3);
+        let m3 = |x: f64| -> f64 {
+            if (0.0..1.0).contains(&x) {
+                0.5 * x * x
+            } else if (1.0..2.0).contains(&x) {
+                0.5 * (-2.0 * x * x + 6.0 * x - 3.0)
+            } else if (2.0..3.0).contains(&x) {
+                0.5 * (3.0 - x) * (3.0 - x)
+            } else {
+                0.0
+            }
+        };
+        for j in 0..3 {
+            assert!(
+                (w[j] - m3(t + j as f64)).abs() < 1e-14,
+                "j={j}: {} vs {}",
+                w[j],
+                m3(t + j as f64)
+            );
+        }
+    }
+
+    #[test]
+    fn weights_are_smooth_in_t() {
+        // continuity across t: w(t=1-eps) vs shifted w(t=0+eps)
+        let p = 5;
+        let eps = 1e-8;
+        let w1 = bspline_weights(1.0 - eps, p);
+        let w0 = bspline_weights(0.0 + eps, p);
+        // M_p(1 - eps + j) ~= M_p(eps + (j+1)) => w1[j] ~ w0[j+1]... shifted
+        for j in 0..p - 1 {
+            assert!(
+                (w1[j] - w0[j + 1]).abs() < 1e-6,
+                "j={j}: {} vs {}",
+                w1[j],
+                w0[j + 1]
+            );
+        }
+    }
+
+    #[test]
+    fn fourier_factors_positive_and_unit_at_zero() {
+        for (n, p) in [(8, 4), (12, 5), (15, 5), (32, 5), (18, 6)] {
+            let b = bspline_fourier_sq(n, p);
+            // non-negative; exactly zero only at the dropped Nyquist mode
+            // (odd p, even n)
+            assert!(b.iter().all(|&x| x >= 0.0));
+            for (m, &x) in b.iter().enumerate() {
+                let nyquist = p % 2 == 1 && n % 2 == 0 && m == n / 2;
+                assert_eq!(x == 0.0, nyquist, "n={n} p={p} m={m}: {x}");
+            }
+            // at m = 0 the denominator is sum M_p(k) = 1 -> |b|^2 = 1
+            assert!((b[0] - 1.0).abs() < 1e-10, "n={n} p={p}: b0 {}", b[0]);
+        }
+    }
+}

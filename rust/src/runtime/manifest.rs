@@ -1,0 +1,168 @@
+//! manifest.json: artifact index + model hyper-parameters shared with the
+//! python build step (python/compile/aot.py).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub natoms: usize,
+    pub nmol: usize,
+    pub dtype: String,
+    pub sel_total: usize,
+}
+
+/// Model hyper-parameters (mirrors python/compile/params.py).
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    pub r_cut: f64,
+    pub r_cut_smooth: f64,
+    pub sel: [usize; 2],
+    pub embed_widths: Vec<usize>,
+    pub m1: usize,
+    pub m2: usize,
+    pub fit_widths: Vec<usize>,
+    pub desc_dim: usize,
+    pub q_o: f64,
+    pub q_h: f64,
+    pub q_wc: f64,
+    pub alpha: f64,
+    pub bond_k: f64,
+    pub bond_r0: f64,
+    pub angle_k: f64,
+    pub angle_t0: f64,
+    pub bm_a_oo: f64,
+    pub bm_a_oh: f64,
+    pub bm_a_hh: f64,
+    pub bm_rho: f64,
+    pub wc_clamp: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub hyper: Hyper,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(path: &str) -> Result<Manifest> {
+        let j = Json::parse_file(path)?;
+        let h = j.req("hyper")?;
+        let sel = h.req("sel")?.as_arr()?;
+        let hyper = Hyper {
+            r_cut: h.req("r_cut")?.as_f64()?,
+            r_cut_smooth: h.req("r_cut_smooth")?.as_f64()?,
+            sel: [sel[0].as_usize()?, sel[1].as_usize()?],
+            embed_widths: h
+                .req("embed_widths")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            m1: h.req("m1")?.as_usize()?,
+            m2: h.req("m2")?.as_usize()?,
+            fit_widths: h
+                .req("fit_widths")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            desc_dim: h.req("desc_dim")?.as_usize()?,
+            q_o: h.req("q_o")?.as_f64()?,
+            q_h: h.req("q_h")?.as_f64()?,
+            q_wc: h.req("q_wc")?.as_f64()?,
+            alpha: h.req("alpha")?.as_f64()?,
+            bond_k: h.req("bond_k")?.as_f64()?,
+            bond_r0: h.req("bond_r0")?.as_f64()?,
+            angle_k: h.req("angle_k")?.as_f64()?,
+            angle_t0: h.req("angle_t0")?.as_f64()?,
+            bm_a_oo: h.req("bm_a_oo")?.as_f64()?,
+            bm_a_oh: h.req("bm_a_oh")?.as_f64()?,
+            bm_a_hh: h.req("bm_a_hh")?.as_f64()?,
+            bm_rho: h.req("bm_rho")?.as_f64()?,
+            wc_clamp: h.req("wc_clamp")?.as_f64()?,
+        };
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| -> Result<Artifact> {
+                Ok(Artifact {
+                    name: a.req("name")?.as_str()?.to_string(),
+                    file: a.req("file")?.as_str()?.to_string(),
+                    kind: a.req("kind")?.as_str()?.to_string(),
+                    natoms: a.req("natoms")?.as_usize()?,
+                    nmol: a.req("nmol")?.as_usize()?,
+                    dtype: a.req("dtype")?.as_str()?.to_string(),
+                    sel_total: a.req("sel_total")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { hyper, artifacts })
+    }
+
+    pub fn find(&self, kind: &str, natoms: usize, dtype: &str) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.natoms == natoms && a.dtype == dtype)
+    }
+
+    /// Sizes (natoms) available for a given kind/dtype.
+    pub fn sizes(&self, kind: &str, dtype: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.dtype == dtype)
+            .map(|a| a.natoms)
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Resolve the artifacts directory: $DPLR_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> String {
+    std::env::var("DPLR_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Load the golden fixtures produced by python (fixtures.json).
+#[derive(Debug)]
+pub struct Fixture {
+    pub nmol: usize,
+    pub box_len: [f64; 3],
+    pub coords: Vec<f64>,
+    pub nlist: Vec<i32>,
+    pub nlist_o: Vec<i32>,
+    pub f_wc: Vec<f64>,
+    pub energy: f64,
+    pub forces: Vec<f64>,
+    pub delta: Vec<f64>,
+    pub f_contrib: Vec<f64>,
+}
+
+pub fn load_fixtures(dir: &str) -> Result<Vec<Fixture>> {
+    let j = Json::parse_file(&format!("{dir}/fixtures.json"))?;
+    j.req("cases")?
+        .as_arr()?
+        .iter()
+        .map(|c| -> Result<Fixture> {
+            let b = c.req("box")?.as_f64_vec()?;
+            Ok(Fixture {
+                nmol: c.req("nmol")?.as_usize()?,
+                box_len: [b[0], b[1], b[2]],
+                coords: c.req("coords")?.as_f64_vec()?,
+                nlist: c.req("nlist")?.as_i32_vec()?,
+                nlist_o: c.req("nlist_o")?.as_i32_vec()?,
+                f_wc: c.req("f_wc")?.as_f64_vec()?,
+                energy: c.req("energy")?.as_f64()?,
+                forces: c.req("forces")?.as_f64_vec()?,
+                delta: c.req("delta")?.as_f64_vec()?,
+                f_contrib: c.req("f_contrib")?.as_f64_vec()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()
+        .map_err(|e| anyhow!("fixtures.json: {e}"))
+}

@@ -1,0 +1,113 @@
+//! Minimal discrete-event calendar with counted resources.
+//!
+//! The large-scale experiments are mostly phase-algebra (max/sum over rank
+//! timelines), but utofu-FFT chain scheduling needs real contention: rings
+//! queue on a bounded pool of BG chain slots.  This module provides exactly
+//! that: jobs with durations, FIFO resource pools, and a virtual clock.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Event {
+    time: f64,
+    id: u64,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (then id for determinism)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Schedule `jobs` (durations in seconds) onto `slots` identical servers,
+/// FIFO, work-conserving; returns the makespan.  This is the contention
+/// model for BG chain slots and for per-core task queues.
+pub fn makespan_fifo(jobs: &[f64], slots: usize) -> f64 {
+    assert!(slots >= 1);
+    if jobs.is_empty() {
+        return 0.0;
+    }
+    let mut heap: BinaryHeap<Event> = (0..slots.min(jobs.len()))
+        .map(|i| Event { time: 0.0, id: i as u64 })
+        .collect();
+    let mut makespan = 0.0f64;
+    for (k, &d) in jobs.iter().enumerate() {
+        let slot = heap.pop().unwrap();
+        let end = slot.time + d;
+        makespan = makespan.max(end);
+        heap.push(Event {
+            time: end,
+            id: slot.id.max(k as u64),
+        });
+    }
+    makespan
+}
+
+/// Series of dependent phases, each a parallel bag of per-worker times:
+/// total = sum over phases of max over workers (bulk-synchronous model).
+pub fn bsp_total(phases: &[Vec<f64>]) -> f64 {
+    phases
+        .iter()
+        .map(|p| p.iter().cloned().fold(0.0, f64::max))
+        .sum()
+}
+
+/// Overlap of two independent timelines with a final join (the section 3.2
+/// pattern): total = max(a, b).
+pub fn overlap2(a: f64, b: f64) -> f64 {
+    a.max(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_slot_is_sum() {
+        let jobs = [1.0, 2.0, 3.0];
+        assert!((makespan_fifo(&jobs, 1) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinite_slots_is_max() {
+        let jobs = [1.0, 2.0, 3.0];
+        assert!((makespan_fifo(&jobs, 100) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_slots_balances() {
+        let jobs = [3.0, 1.0, 1.0, 1.0];
+        assert!((makespan_fifo(&jobs, 2) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_monotone_in_slots() {
+        let jobs: Vec<f64> = (0..20).map(|i| 0.1 + 0.05 * i as f64).collect();
+        let mut prev = f64::INFINITY;
+        for s in 1..8 {
+            let m = makespan_fifo(&jobs, s);
+            assert!(m <= prev + 1e-12, "slots {s}");
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn bsp_sums_phase_maxima() {
+        let t = bsp_total(&[vec![1.0, 2.0], vec![0.5, 0.25]]);
+        assert!((t - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,416 @@
+//! Minimal JSON parser / writer (no serde in the offline image).
+//!
+//! Covers the full JSON grammar we exchange with the python build step:
+//! manifest.json, weights.json (14 MB of nested float arrays — the parser is
+//! written to stay allocation-light on those), fixtures.json and the
+//! experiment config files.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed JSON value. Object keys keep insertion order irrelevant; we use
+/// a BTreeMap for deterministic iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let b = text.as_bytes();
+        let mut p = Parser { b, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != b.len() {
+            bail!("trailing bytes at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn parse_file(path: &str) -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        Self::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup that errors with the key name (for manifests).
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("expected non-negative integer, got {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        Ok(self.as_f64()? as i64)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("expected array, got scalar/object"),
+        }
+    }
+
+    /// Flatten a (possibly nested) numeric array into f64s.
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        fn walk(v: &Json, out: &mut Vec<f64>) -> Result<()> {
+            match v {
+                Json::Num(x) => out.push(*x),
+                Json::Arr(a) => {
+                    for e in a {
+                        walk(e, out)?;
+                    }
+                }
+                _ => bail!("expected numeric array"),
+            }
+            Ok(())
+        }
+        walk(self, &mut out)?;
+        Ok(out)
+    }
+
+    pub fn as_i32_vec(&self) -> Result<Vec<i32>> {
+        Ok(self.as_f64_vec()?.into_iter().map(|x| x as i32).collect())
+    }
+
+    // ---- writers -----------------------------------------------------
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, true);
+        s
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x:e}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (k, e) in a.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    e.write(out, indent, pretty);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (k, (key, v)) in m.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    if pretty {
+                        out.push('\n');
+                        for _ in 0..indent + 1 {
+                            out.push(' ');
+                        }
+                    }
+                    write_escaped(out, key);
+                    out.push(':');
+                    v.write(out, indent + 1, pretty);
+                }
+                if pretty && !m.is_empty() {
+                    out.push('\n');
+                    for _ in 0..indent {
+                        out.push(' ');
+                    }
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        if self.i >= self.b.len() {
+            bail!("unexpected end of input");
+        }
+        match self.b[self.i] {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.i += 1; // {
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            if self.i >= self.b.len() || self.b[self.i] != b':' {
+                bail!("expected ':' at offset {}", self.i);
+            }
+            self.i += 1;
+            self.ws();
+            let v = self.value()?;
+            m.insert(key, v);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.i += 1; // [
+        let mut a = Vec::new();
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            self.ws();
+            a.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        if self.b.get(self.i) != Some(&b'"') {
+            bail!("expected string at offset {}", self.i);
+        }
+        self.i += 1;
+        let mut s = String::new();
+        // fast path: copy runs of plain bytes
+        loop {
+            let start = self.i;
+            while self.i < self.b.len() && self.b[self.i] != b'"' && self.b[self.i] != b'\\' {
+                self.i += 1;
+            }
+            s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+            match self.b.get(self.i) {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let c = *self
+                        .b
+                        .get(self.i)
+                        .ok_or_else(|| anyhow!("bad escape at end"))?;
+                    self.i += 1;
+                    match c {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                self.b
+                                    .get(self.i..self.i + 4)
+                                    .ok_or_else(|| anyhow!("bad \\u escape"))?,
+                            )?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape \\{}", c as char),
+                    }
+                }
+                _ => bail!("unterminated string"),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let tok = std::str::from_utf8(&self.b[start..self.i])?;
+        let x: f64 = tok
+            .parse()
+            .map_err(|_| anyhow!("bad number '{tok}' at offset {start}"))?;
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": null}], "c": "x\ny"}"#).unwrap();
+        assert_eq!(j.get("c").unwrap().as_str().unwrap(), "x\ny");
+        let a = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[1].as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn roundtrips() {
+        let src = r#"{"x": [1.5, -2, true, "a\"b"], "y": {"z": []}}"#;
+        let j = Json::parse(src).unwrap();
+        let j2 = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(j, j2);
+        let j3 = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(j, j3);
+    }
+
+    #[test]
+    fn flattens_nested_numeric_arrays() {
+        let j = Json::parse("[[1,2],[3,4],[5,6]]").unwrap();
+        assert_eq!(j.as_f64_vec().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let j = Json::parse(r#""Aé""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "Aé");
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrates the offline image forces us to hand-roll: JSON,
+//! PRNG, CLI args, statistics, table printing and property-test helpers
+//! (no serde / rand / clap / criterion / proptest available — see
+//! DESIGN.md section 9).
+
+pub mod args;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;

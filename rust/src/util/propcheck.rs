@@ -1,0 +1,57 @@
+//! Property-based testing helper (no proptest in the offline image).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! and reports the failing seed + case index for reproduction.  Generators
+//! take an [`Rng`] so every case is deterministic given (seed, index).
+
+use super::rng::Rng;
+
+/// Run a property over `cases` generated inputs; panics with the case seed
+/// on the first failure so it can be replayed exactly.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x100000001B3)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}, case_seed={case_seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 50, |r| r.range(0.0, 10.0), |x| {
+            if *x >= 0.0 && *x < 10.0 {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        check(2, 50, |r| r.below(100), |x| {
+            if *x < 90 {
+                Ok(())
+            } else {
+                Err("too big".to_string())
+            }
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! End-to-end engine tests: full DPLR steps on real water, both backends,
+//! overlap on/off, NVE conservation and precision-mode consistency.
+
+use dplr::engine::{Backend, DplrEngine, EngineConfig};
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::pppm::MeshMode;
+use dplr::runtime::manifest::artifacts_dir;
+use dplr::runtime::{Dtype, PjrtEngine};
+use dplr::util::rng::Rng;
+use std::sync::Mutex;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
+}
+
+fn native_backend() -> Backend {
+    Backend::Native(NativeModel::load(&artifacts_dir()).expect("native model"))
+}
+
+fn make_engine(nmol: usize, overlap: bool, backend: Backend) -> DplrEngine {
+    let mut sys = water_box(nmol, 42);
+    let mut rng = Rng::new(7);
+    sys.thermalize(300.0, &mut rng);
+    let alpha = 0.35;
+    let mut cfg = EngineConfig::default_for(sys.box_len, alpha);
+    cfg.overlap = overlap;
+    DplrEngine::new(sys, cfg, backend)
+}
+
+#[test]
+fn engine_steps_run_and_observables_are_finite() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut eng = make_engine(64, false, native_backend());
+    eng.quench(20).unwrap();
+    eng.rescale_to(300.0);
+    for _ in 0..20 {
+        let t = eng.step().expect("step");
+        assert!(t.total > 0.0);
+    }
+    let obs = eng.last_obs.unwrap();
+    assert!(obs.e_sr.is_finite() && obs.e_gt.is_finite());
+    assert!(
+        obs.temperature > 50.0 && obs.temperature < 1500.0,
+        "T = {}",
+        obs.temperature
+    );
+    assert_eq!(eng.pppm_saturations(), 0);
+}
+
+#[test]
+fn overlap_gives_same_physics_as_sequential() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut a = make_engine(64, false, native_backend());
+    let mut b = make_engine(64, true, native_backend());
+    for _ in 0..3 {
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    let (oa, ob) = (a.last_obs.unwrap(), b.last_obs.unwrap());
+    // identical trajectories: overlap only changes scheduling
+    assert!(
+        (oa.conserved - ob.conserved).abs() < 1e-9 * oa.conserved.abs().max(1.0),
+        "{} vs {}",
+        oa.conserved,
+        ob.conserved
+    );
+    assert!((oa.temperature - ob.temperature).abs() < 1e-9 * oa.temperature);
+}
+
+#[test]
+fn nve_energy_is_conserved_on_full_dplr_stack() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut sys = water_box(64, 11);
+    let mut rng = Rng::new(3);
+    sys.thermalize(300.0, &mut rng);
+    let mut cfg = EngineConfig::default_for(sys.box_len, 0.35);
+    cfg.thermostat_tau_ps = None; // NVE
+    cfg.dt_fs = 0.25; // conservative step for the conservation check
+    let mut eng = DplrEngine::new(sys, cfg, native_backend());
+    // relax packing clashes first, then measure conservation
+    eng.quench(30).unwrap();
+    eng.rescale_to(300.0);
+    eng.step().unwrap();
+    let e0 = eng.last_obs.unwrap().conserved;
+    for _ in 0..60 {
+        eng.step().unwrap();
+    }
+    let e1 = eng.last_obs.unwrap().conserved;
+    let drift = (e1 - e0).abs() / e0.abs().max(1.0);
+    assert!(drift < 5e-4, "NVE drift {drift} ({e0} -> {e1})");
+}
+
+#[test]
+fn pjrt_and_native_backends_agree_on_trajectory() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let pjrt = PjrtEngine::open(&artifacts_dir()).expect("pjrt");
+    let mut a = make_engine(64, false, native_backend());
+    let mut b = make_engine(64, false, Backend::Pjrt(Mutex::new(pjrt), Dtype::F64));
+    for _ in 0..3 {
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    let (oa, ob) = (a.last_obs.unwrap(), b.last_obs.unwrap());
+    assert!(
+        (oa.conserved - ob.conserved).abs() < 1e-6 * oa.conserved.abs().max(1.0),
+        "native {} vs pjrt {}",
+        oa.conserved,
+        ob.conserved
+    );
+}
+
+#[test]
+fn quantized_mesh_tracks_double_over_steps() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut a = make_engine(64, false, native_backend());
+    let mut b = make_engine(64, false, native_backend());
+    let grid = a.cfg.pppm.grid;
+    b.set_mesh_mode(grid, MeshMode::QuantInt32 { nseg: [2, 3, 2] }, 0.35);
+    for _ in 0..5 {
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    let (oa, ob) = (a.last_obs.unwrap(), b.last_obs.unwrap());
+    // quantization error must stay far below thermal energy scales
+    assert!(
+        (oa.conserved - ob.conserved).abs() < 1e-4 * oa.conserved.abs().max(1.0),
+        "double {} vs quant {}",
+        oa.conserved,
+        ob.conserved
+    );
+    assert_eq!(b.pppm_saturations(), 0);
+}

@@ -1,0 +1,82 @@
+//! Integration: the framework-free rust inference path reproduces the
+//! python reference numbers (fixtures.json) — the correctness guarantee
+//! behind the paper's section 3.4.2 "remove the framework" optimization.
+
+use dplr::native::NativeModel;
+use dplr::runtime::manifest::{artifacts_dir, load_fixtures};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/weights.json", artifacts_dir())).exists()
+}
+
+#[test]
+fn native_matches_python_fixtures() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = NativeModel::load(&dir).expect("load native model");
+    let fixtures = load_fixtures(&dir).expect("fixtures");
+    assert!(!fixtures.is_empty());
+    for fx in &fixtures {
+        // dp_ef
+        let (e, f) = model.dp_ef(&fx.coords, fx.box_len, &fx.nlist);
+        assert!(
+            (e - fx.energy).abs() < 1e-8 * fx.energy.abs().max(1.0),
+            "nmol {}: E {} vs {}",
+            fx.nmol,
+            e,
+            fx.energy
+        );
+        let mut worst: f64 = 0.0;
+        for (a, b) in f.iter().zip(&fx.forces) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-8, "nmol {}: force diff {}", fx.nmol, worst);
+
+        // dw_fwd
+        let delta = model.dw_fwd(&fx.coords, fx.box_len, &fx.nlist_o);
+        let mut worst: f64 = 0.0;
+        for (a, b) in delta.iter().zip(&fx.delta) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-10, "nmol {}: delta diff {}", fx.nmol, worst);
+
+        // dw_vjp
+        let (_, fc) = model.dw_vjp(&fx.coords, fx.box_len, &fx.nlist_o, &fx.f_wc);
+        let mut worst: f64 = 0.0;
+        for (a, b) in fc.iter().zip(&fx.f_contrib) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-9, "nmol {}: f_contrib diff {}", fx.nmol, worst);
+    }
+}
+
+#[test]
+fn native_forces_are_gradient_of_energy() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = NativeModel::load(&dir).expect("load");
+    let fixtures = load_fixtures(&dir).expect("fixtures");
+    let fx = &fixtures[0]; // smallest case
+    let (_, f) = model.dp_ef(&fx.coords, fx.box_len, &fx.nlist);
+    let eps = 1e-6;
+    for &idx in &[0usize, 7, 20, 33] {
+        let mut cp = fx.coords.clone();
+        cp[idx] += eps;
+        let (ep, _) = model.dp_ef(&cp, fx.box_len, &fx.nlist);
+        let mut cm = fx.coords.clone();
+        cm[idx] -= eps;
+        let (em, _) = model.dp_ef(&cm, fx.box_len, &fx.nlist);
+        let fd = -(ep - em) / (2.0 * eps);
+        assert!(
+            (fd - f[idx]).abs() < 1e-5 * fd.abs().max(1.0),
+            "coord {idx}: fd {fd} vs analytic {}",
+            f[idx]
+        );
+    }
+}

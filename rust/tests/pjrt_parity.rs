@@ -1,0 +1,100 @@
+//! Integration: the PJRT runtime reproduces the python reference numbers
+//! (fixtures.json) bit-for-bit modulo float summation order.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+
+use dplr::runtime::manifest::{artifacts_dir, load_fixtures};
+use dplr::runtime::{Dtype, PjrtEngine};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
+}
+
+#[test]
+fn pjrt_matches_python_fixtures() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let mut eng = PjrtEngine::open(&dir).expect("open engine");
+    let fixtures = load_fixtures(&dir).expect("fixtures");
+    assert!(!fixtures.is_empty());
+    for fx in &fixtures {
+        let natoms = 3 * fx.nmol;
+        if eng.manifest.find("dp_ef", natoms, "f64").is_none() {
+            continue; // fixture size not exported (e.g. smoke-only build)
+        }
+        // dp_ef
+        let out = eng
+            .dp_ef(&fx.coords, fx.box_len, &fx.nlist, Dtype::F64)
+            .expect("dp_ef");
+        assert!(
+            (out.energy - fx.energy).abs() < 1e-8 * fx.energy.abs().max(1.0),
+            "nmol {}: E {} vs {}",
+            fx.nmol,
+            out.energy,
+            fx.energy
+        );
+        let mut worst: f64 = 0.0;
+        for (a, b) in out.forces.iter().zip(&fx.forces) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-8, "nmol {}: force diff {}", fx.nmol, worst);
+
+        // dw_fwd
+        let delta = eng
+            .dw_fwd(&fx.coords, fx.box_len, &fx.nlist_o, Dtype::F64)
+            .expect("dw_fwd");
+        let mut worst: f64 = 0.0;
+        for (a, b) in delta.iter().zip(&fx.delta) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-10, "nmol {}: delta diff {}", fx.nmol, worst);
+
+        // dw_vjp
+        let v = eng
+            .dw_vjp(&fx.coords, fx.box_len, &fx.nlist_o, &fx.f_wc, Dtype::F64)
+            .expect("dw_vjp");
+        let mut worst: f64 = 0.0;
+        for (a, b) in v.f_contrib.iter().zip(&fx.f_contrib) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-9, "nmol {}: f_contrib diff {}", fx.nmol, worst);
+    }
+}
+
+#[test]
+fn f32_artifacts_track_f64() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let mut eng = PjrtEngine::open(&dir).expect("open engine");
+    let fixtures = load_fixtures(&dir).expect("fixtures");
+    for fx in &fixtures {
+        let natoms = 3 * fx.nmol;
+        if eng.manifest.find("dp_ef", natoms, "f32").is_none() {
+            continue;
+        }
+        let o64 = eng
+            .dp_ef(&fx.coords, fx.box_len, &fx.nlist, Dtype::F64)
+            .unwrap();
+        let o32 = eng
+            .dp_ef(&fx.coords, fx.box_len, &fx.nlist, Dtype::F32)
+            .unwrap();
+        // Mixed-fp32 must track double at single precision level
+        assert!(
+            (o64.energy - o32.energy).abs() < 1e-3 * o64.energy.abs().max(1.0),
+            "E {} vs {}",
+            o64.energy,
+            o32.energy
+        );
+        let mut worst: f64 = 0.0;
+        for (a, b) in o64.forces.iter().zip(&o32.forces) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 5e-2, "f32 force divergence {worst}");
+    }
+}
