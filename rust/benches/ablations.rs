@@ -7,12 +7,23 @@ use dplr::coordinator::overlap::{dedicated_partition, intra_node_overlap, sequen
 use dplr::coordinator::ringlb::{imbalance, migration_overhead, ring_migration, MigrationStrategy};
 use dplr::coordinator::spatial;
 use dplr::distfft::utofu_time;
-use dplr::md::water::replicated_base_box;
+use dplr::md::water::{replicated_base_box, water_box};
+use dplr::native::NativeModel;
+use dplr::neighbor::{build_exact, NlistParams};
+use dplr::pool::ThreadPool;
 use dplr::tofu::{BgPayload, Torus};
+use dplr::util::args::Args;
+use dplr::util::stats::{summarize, time_reps};
 use dplr::util::table::Table;
+use std::sync::Arc;
 
 fn main() {
     let m = MachineConfig::default();
+    let args = Args::from_env();
+    let nthreads = args
+        .usize_or("threads", 4)
+        .expect("--threads expects an integer")
+        .max(1);
 
     println!("=== Ablation: BG reduction payload (utofu-FFT, 768 nodes, 4^3/node) ===");
     let t = Torus::new([8, 12, 8]);
@@ -51,4 +62,36 @@ fn main() {
     let partners = nodediv::rank_level_partners(2.6, 6.0);
     println!("rank-level ({partners} partners): {:.1} us", nodediv::rank_level_ghost_time(partners, 400, &m) * 1e6);
     println!("node-level (6 faces)      : {:.1} us", nodediv::node_level_ghost_time(47, 400, &m) * 1e6);
+
+    println!("\n=== Ablation: thread-pool sharding (real DP on 192-atom water, --threads {nthreads}) ===");
+    let sys = water_box(64, 5);
+    let coords = sys.coords_flat();
+    let p = NlistParams::default();
+    let centres: Vec<usize> = (0..sys.natoms()).collect();
+    let nlist = build_exact(&sys, &centres, &p).data;
+    let mut base = 0.0;
+    let mut ladder = vec![1usize];
+    for t in [2usize, nthreads] {
+        if t <= nthreads && !ladder.contains(&t) {
+            ladder.push(t);
+        }
+    }
+    for threads in ladder {
+        let mut model = NativeModel::synthetic(3);
+        model.set_pool(Arc::new(ThreadPool::new(threads)));
+        let t = summarize(&time_reps(1, 3, || {
+            let _ = model.dp_ef(&coords, sys.box_len, &nlist);
+        }))
+        .p50;
+        if threads == 1 {
+            base = t;
+        }
+        println!("  dp_ef, {threads} thread(s): {:7.2} ms ({:.2}x)", t * 1e3, base / t);
+    }
+    let pool = ThreadPool::new(nthreads);
+    let t = summarize(&time_reps(10, 50, || {
+        pool.run(nthreads, &|_| {});
+    }))
+    .p50;
+    println!("  fork-join latency over {nthreads} shards: {:.1} us", t * 1e6);
 }

@@ -1,19 +1,40 @@
 //! Hot-path microbenchmarks: the real per-call costs of both inference
-//! paths and the PPPM solver on this host (feeds EXPERIMENTS.md section Perf).
+//! paths, the PPPM solver and the neighbour builders on this host, plus
+//! the 1-vs-N-thread scaling of the pool-sharded combined DP+PPPM step
+//! (feeds EXPERIMENTS.md section Perf).
+//!
+//! Flags: `--threads N` (default 4) sets the parallel pool size for the
+//! scaling section.  Runs with artifacts when present, otherwise with
+//! synthetic seeded weights (same architecture).
 use dplr::md::water::water_box;
 use dplr::native::NativeModel;
-use dplr::neighbor::{build_exact, NlistParams};
+use dplr::neighbor::{build_cells_par, build_exact, NlistParams};
+use dplr::pool::ThreadPool;
 use dplr::pppm::{Pppm, PppmConfig};
 use dplr::runtime::manifest::artifacts_dir;
 use dplr::runtime::{Dtype, PjrtEngine};
+use dplr::util::args::Args;
 use dplr::util::stats::{summarize, time_reps};
+use std::sync::Arc;
 
 fn main() {
-    let dir = artifacts_dir();
-    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        eprintln!("hotpath bench skipped: run `make artifacts` first");
-        return;
-    }
+    let args = Args::from_env();
+    let nthreads = args
+        .usize_or("threads", 4)
+        .expect("--threads expects an integer")
+        .max(1);
+    let reps = 5;
+    // one artifact load shared by every section (weights are identical;
+    // only the pool changes between scaling runs)
+    let mut native = match NativeModel::load(&artifacts_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("(artifacts not found; benching with synthetic seeded weights)");
+            NativeModel::synthetic(20250710)
+        }
+    };
+
+    // ---- per-kernel costs on the 564-atom headline box ----
     let nmol = 188;
     let sys = water_box(nmol, 99);
     let natoms = sys.natoms();
@@ -24,38 +45,123 @@ fn main() {
     let o_centres: Vec<usize> = (0..nmol).collect();
     let nlist_o = build_exact(&sys, &o_centres, &p).data;
     let box_len = sys.box_len;
-    let reps = 5;
 
-    println!("=== hot-path microbenchmarks (564-atom water) ===");
-    let native = NativeModel::load(&dir).unwrap();
-    let t = summarize(&time_reps(2, reps, || { let _ = native.dp_ef(&coords, box_len, &nlist); }));
+    println!("=== hot-path microbenchmarks (564-atom water, 1 thread) ===");
+    let t = summarize(&time_reps(2, reps, || {
+        let _ = native.dp_ef(&coords, box_len, &nlist);
+    }));
     println!("native dp_ef        : {:8.2} ms (p50)", t.p50 * 1e3);
-    let t = summarize(&time_reps(2, reps, || { let _ = native.dw_fwd(&coords, box_len, &nlist_o); }));
+    let t = summarize(&time_reps(2, reps, || {
+        let _ = native.dw_fwd(&coords, box_len, &nlist_o);
+    }));
     println!("native dw_fwd       : {:8.2} ms", t.p50 * 1e3);
     let fwc = vec![0.1; nmol * 3];
-    let t = summarize(&time_reps(2, reps, || { let _ = native.dw_vjp(&coords, box_len, &nlist_o, &fwc); }));
+    let t = summarize(&time_reps(2, reps, || {
+        let _ = native.dw_vjp(&coords, box_len, &nlist_o, &fwc);
+    }));
     println!("native dw_vjp       : {:8.2} ms", t.p50 * 1e3);
 
-    let mut pjrt = PjrtEngine::open(&dir).unwrap();
-    pjrt.ensure("dp_ef", natoms, Dtype::F64).unwrap();
-    let t = summarize(&time_reps(2, reps, || { let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap(); }));
-    println!("pjrt dp_ef (f64)    : {:8.2} ms", t.p50 * 1e3);
-    pjrt.ensure("dp_ef", natoms, Dtype::F32).unwrap();
-    let t = summarize(&time_reps(2, reps, || { let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap(); }));
-    println!("pjrt dp_ef (f32)    : {:8.2} ms", t.p50 * 1e3);
+    match PjrtEngine::open(&artifacts_dir()) {
+        Ok(mut pjrt) => {
+            pjrt.ensure("dp_ef", natoms, Dtype::F64).unwrap();
+            let t = summarize(&time_reps(2, reps, || {
+                let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap();
+            }));
+            println!("pjrt dp_ef (f64)    : {:8.2} ms", t.p50 * 1e3);
+            pjrt.ensure("dp_ef", natoms, Dtype::F32).unwrap();
+            let t = summarize(&time_reps(2, reps, || {
+                let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap();
+            }));
+            println!("pjrt dp_ef (f32)    : {:8.2} ms", t.p50 * 1e3);
+        }
+        Err(_) => println!("pjrt dp_ef          : skipped (pjrt backend unavailable)"),
+    }
 
     // PPPM: 564 ions + 188 WCs on a 32^3 mesh
     let mut sites: Vec<[f64; 3]> = sys.pos.clone();
     let mut q: Vec<f64> = (0..natoms).map(|i| if i < nmol { 6.0 } else { 1.0 }).collect();
-    for n in 0..nmol { sites.push(sys.pos[n]); q.push(-8.0); }
+    for n in 0..nmol {
+        sites.push(sys.pos[n]);
+        q.push(-8.0);
+    }
     let mut pppm = Pppm::new(PppmConfig::new([32, 32, 32], 5, 0.3), box_len);
-    let t = summarize(&time_reps(2, reps, || { let _ = pppm.energy_forces(&sites, &q); }));
+    let t = summarize(&time_reps(2, reps, || {
+        let _ = pppm.energy_forces(&sites, &q);
+    }));
     println!("pppm 32^3 (4 FFTs)  : {:8.2} ms", t.p50 * 1e3);
     let mut pppm = Pppm::new(PppmConfig::new([12, 18, 12], 5, 0.3), box_len);
-    let t = summarize(&time_reps(2, reps, || { let _ = pppm.energy_forces(&sites, &q); }));
+    let t = summarize(&time_reps(2, reps, || {
+        let _ = pppm.energy_forces(&sites, &q);
+    }));
     println!("pppm 12x18x12       : {:8.2} ms", t.p50 * 1e3);
 
-    // neighbour-list build
-    let t = summarize(&time_reps(2, reps, || { let _ = build_exact(&sys, &centres, &p); }));
-    println!("nlist build (564)   : {:8.2} ms", t.p50 * 1e3);
+    // neighbour-list builders
+    let t = summarize(&time_reps(2, reps, || {
+        let _ = build_exact(&sys, &centres, &p);
+    }));
+    println!("nlist exact (564)   : {:8.2} ms", t.p50 * 1e3);
+    let serial = ThreadPool::serial();
+    let t = summarize(&time_reps(2, reps, || {
+        let _ = build_cells_par(&sys, &centres, &p, &serial);
+    }));
+    println!("nlist cells (564)   : {:8.2} ms", t.p50 * 1e3);
+
+    // ---- thread scaling: combined DP + PPPM step on a 256-molecule box ----
+    let nmol = 256;
+    let sys = water_box(nmol, 7);
+    let natoms = sys.natoms();
+    let coords = sys.coords_flat();
+    let box_len = sys.box_len;
+    let centres: Vec<usize> = (0..natoms).collect();
+    let nlist = build_cells_par(&sys, &centres, &p, &serial).data;
+    let mut sites: Vec<[f64; 3]> = sys.pos.clone();
+    let mut q: Vec<f64> = (0..natoms).map(|i| if i < nmol { 6.0 } else { 1.0 }).collect();
+    for n in 0..nmol {
+        sites.push(sys.pos[n]);
+        q.push(-8.0);
+    }
+    println!("\n=== thread scaling: DP + PPPM combined step (256-molecule box) ===");
+    let mut t1 = 0.0;
+    for threads in [1usize, nthreads] {
+        let pool = Arc::new(ThreadPool::new(threads));
+        native.set_pool(pool.clone());
+        let mut pppm = Pppm::new(PppmConfig::new([32, 32, 32], 5, 0.3), box_len);
+        pppm.set_pool(pool.clone());
+        let t = summarize(&time_reps(1, reps, || {
+            let _ = native.dp_ef(&coords, box_len, &nlist);
+            let _ = pppm.energy_forces(&sites, &q);
+        }))
+        .p50;
+        if threads == 1 {
+            t1 = t;
+        }
+        println!(
+            "dp+pppm, {threads:>2} thread(s): {:8.2} ms   speedup {:.2}x",
+            t * 1e3,
+            t1 / t
+        );
+        if threads == 1 && nthreads == 1 {
+            break;
+        }
+    }
+    // parallel neighbour rebuild
+    let mut tn1 = 0.0;
+    for threads in [1usize, nthreads] {
+        let pool = ThreadPool::new(threads);
+        let t = summarize(&time_reps(1, reps, || {
+            let _ = build_cells_par(&sys, &centres, &p, &pool);
+        }))
+        .p50;
+        if threads == 1 {
+            tn1 = t;
+        }
+        println!(
+            "nlist cells, {threads:>2} thread(s): {:6.2} ms   speedup {:.2}x",
+            t * 1e3,
+            tn1 / t
+        );
+        if threads == 1 && nthreads == 1 {
+            break;
+        }
+    }
 }

@@ -17,11 +17,12 @@ use crate::md::integrate::{NoseHoover, VelocityVerlet};
 use crate::md::system::System;
 use crate::md::units::{FS, Q_H, Q_O, Q_WC};
 use crate::native::NativeModel;
-use crate::neighbor::{build_exact, NlistParams, PaddedNlist, VerletManager};
+use crate::neighbor::{build_cells_par, NlistParams, PaddedNlist, VerletManager};
+use crate::pool::ThreadPool;
 use crate::pppm::{MeshMode, Pppm, PppmConfig};
 use crate::runtime::{Dtype, PjrtEngine};
 use anyhow::Result;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Inference backend for DP/DW.
@@ -115,6 +116,9 @@ pub struct EngineConfig {
     pub overlap: bool,
     pub nlist: NlistParams,
     pub nlist_max_age: usize,
+    /// worker-pool size for the per-atom hot loops (DP/DW/PPPM/nlist);
+    /// 1 = serial.  Results are bit-for-bit identical for any value.
+    pub threads: usize,
 }
 
 impl EngineConfig {
@@ -129,6 +133,7 @@ impl EngineConfig {
             overlap: false,
             nlist: NlistParams::default(),
             nlist_max_age: 50,
+            threads: 1,
         }
     }
 }
@@ -138,6 +143,8 @@ pub struct DplrEngine {
     pub cfg: EngineConfig,
     backend: Backend,
     pppm: Pppm,
+    /// shared worker pool driving the DP/DW/PPPM/nlist hot loops
+    pool: Arc<ThreadPool>,
     verlet: VerletManager,
     nlist: Option<PaddedNlist>,
     nlist_o: Option<PaddedNlist>,
@@ -150,8 +157,13 @@ pub struct DplrEngine {
 }
 
 impl DplrEngine {
-    pub fn new(sys: System, cfg: EngineConfig, backend: Backend) -> DplrEngine {
-        let pppm = Pppm::new(cfg.pppm.clone(), sys.box_len);
+    pub fn new(sys: System, cfg: EngineConfig, mut backend: Backend) -> DplrEngine {
+        let pool = Arc::new(ThreadPool::new(cfg.threads));
+        let mut pppm = Pppm::new(cfg.pppm.clone(), sys.box_len);
+        pppm.set_pool(pool.clone());
+        if let Backend::Native(m) = &mut backend {
+            m.set_pool(pool.clone());
+        }
         let vv = VelocityVerlet::new(cfg.dt_fs * FS);
         let nh = cfg
             .thermostat_tau_ps
@@ -160,6 +172,7 @@ impl DplrEngine {
         DplrEngine {
             verlet: VerletManager::new(cfg.nlist, cfg.nlist_max_age),
             pppm,
+            pool,
             vv,
             nh,
             sys,
@@ -175,10 +188,22 @@ impl DplrEngine {
 
     fn rebuild_nlist_if_needed(&mut self) {
         if self.nlist.is_none() || self.verlet.needs_rebuild(&self.sys) {
+            // cell-list builder sharded over the pool (build_exact stays
+            // available as the O(N^2) oracle for tests/parity checks)
             let centres: Vec<usize> = (0..self.sys.natoms()).collect();
-            self.nlist = Some(build_exact(&self.sys, &centres, &self.cfg.nlist));
+            self.nlist = Some(build_cells_par(
+                &self.sys,
+                &centres,
+                &self.cfg.nlist,
+                &self.pool,
+            ));
             let o_centres: Vec<usize> = (0..self.sys.nmol).collect();
-            self.nlist_o = Some(build_exact(&self.sys, &o_centres, &self.cfg.nlist));
+            self.nlist_o = Some(build_cells_par(
+                &self.sys,
+                &o_centres,
+                &self.cfg.nlist,
+                &self.pool,
+            ));
             self.verlet.mark_built(&self.sys);
         }
         self.verlet.tick();
@@ -195,12 +220,14 @@ impl DplrEngine {
         let box_len = self.sys.box_len;
         let nmol = self.sys.nmol;
         let natoms = self.sys.natoms();
-        let nlist = self.nlist.as_ref().unwrap().data.clone();
-        let nlist_o = self.nlist_o.as_ref().unwrap().data.clone();
+        // borrow the padded lists in place (disjoint fields; no per-step
+        // copies of ~natoms * sel_total i32 on the hot path)
+        let nlist: &[i32] = &self.nlist.as_ref().unwrap().data;
+        let nlist_o: &[i32] = &self.nlist_o.as_ref().unwrap().data;
 
         // --- DW forward (always precedes PPPM: it defines the WCs) ---
         let t = Instant::now();
-        let delta = self.backend.dw_fwd(&coords, box_len, &nlist_o)?;
+        let delta = self.backend.dw_fwd(&coords, box_len, nlist_o)?;
         times.dw_fwd += t.elapsed().as_secs_f64();
 
         // site set: ions then WCs
@@ -225,7 +252,7 @@ impl DplrEngine {
             let pppm = &mut self.pppm;
             let backend = &self.backend;
             let (sites_ref, charges_ref) = (&sites, &charges);
-            let (coords_ref, nlist_ref) = (&coords, &nlist);
+            let (coords_ref, nlist_ref) = (&coords, nlist);
             let result = std::thread::scope(|s| {
                 // dedicated long-range thread (the "1 core of rank 3")
                 let h_k = s.spawn(move || {
@@ -246,7 +273,7 @@ impl DplrEngine {
             let k = self.pppm.energy_forces(&sites, &charges);
             t_k = t.elapsed().as_secs_f64();
             let t = Instant::now();
-            dp_out = self.backend.dp_ef(&coords, box_len, &nlist);
+            dp_out = self.backend.dp_ef(&coords, box_len, nlist);
             t_dp = t.elapsed().as_secs_f64();
             kspace_out = k;
         }
@@ -263,7 +290,7 @@ impl DplrEngine {
                 f_wc[3 * n + d] = f_sites[natoms + n][d];
             }
         }
-        let (_, f_contrib) = self.backend.dw_vjp(&coords, box_len, &nlist_o, &f_wc)?;
+        let (_, f_contrib) = self.backend.dw_vjp(&coords, box_len, nlist_o, &f_wc)?;
         times.dw_bwd += t.elapsed().as_secs_f64();
 
         let mut forces = vec![[0.0; 3]; natoms];
@@ -291,14 +318,16 @@ impl DplrEngine {
         if let Some(nh) = &mut self.nh {
             nh.half_step(&mut self.sys, dt);
         }
-        self.vv.kick_drift(&mut self.sys, &self.forces.clone());
+        // disjoint field borrows: vv (shared), sys (mut), forces (shared) —
+        // no per-step clone of the force buffer
+        self.vv.kick_drift(&mut self.sys, &self.forces);
         times.integrate += t.elapsed().as_secs_f64();
 
         let (f, e_sr, e_gt) = self.evaluate_forces(&mut times)?;
         self.forces = f;
 
         let t = Instant::now();
-        self.vv.kick(&mut self.sys, &self.forces.clone());
+        self.vv.kick(&mut self.sys, &self.forces);
         if let Some(nh) = &mut self.nh {
             nh.half_step(&mut self.sys, dt);
         }
@@ -371,6 +400,7 @@ impl DplrEngine {
         let mut cfg = PppmConfig::new(grid, self.cfg.pppm.order, alpha);
         cfg.mode = mode;
         self.pppm = Pppm::new(cfg.clone(), self.sys.box_len);
+        self.pppm.set_pool(self.pool.clone());
         self.cfg.pppm = cfg;
     }
 }

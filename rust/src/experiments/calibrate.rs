@@ -24,6 +24,9 @@ pub struct Calibration {
     /// ratios feeding the cost table
     pub framework_factor: f64,
     pub fp32_speedup: f64,
+    /// false when the PJRT numbers are the paper-band fallback (the PJRT
+    /// path was unavailable), not host measurements
+    pub pjrt_measured: bool,
 }
 
 pub fn run(reps: usize) -> Result<Calibration> {
@@ -54,17 +57,28 @@ pub fn run(reps: usize) -> Result<Calibration> {
     }))
     .p50;
 
-    let mut pjrt = PjrtEngine::open(&dir)?;
-    pjrt.ensure("dp_ef", natoms, Dtype::F64)?;
-    let t_pj64 = summarize(&time_reps(2, reps, || {
-        let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap();
-    }))
-    .p50;
-    pjrt.ensure("dp_ef", natoms, Dtype::F32)?;
-    let t_pj32 = summarize(&time_reps(2, reps, || {
-        let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap();
-    }))
-    .p50;
+    let (t_pj64, t_pj32, pjrt_measured) = match PjrtEngine::open(&dir) {
+        Ok(mut pjrt) => {
+            pjrt.ensure("dp_ef", natoms, Dtype::F64)?;
+            let t64 = summarize(&time_reps(2, reps, || {
+                let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap();
+            }))
+            .p50;
+            pjrt.ensure("dp_ef", natoms, Dtype::F32)?;
+            let t32 = summarize(&time_reps(2, reps, || {
+                let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap();
+            }))
+            .p50;
+            (t64, t32, true)
+        }
+        Err(e) => {
+            // PJRT path unavailable (stub build / missing artifacts):
+            // fall back to the paper's measured framework bands so the
+            // cost table stays populated — flagged via pjrt_measured
+            eprintln!("calibrate: pjrt path unavailable ({e:#}); using paper-band ratios");
+            (t_dp * 8.5, t_dp * 8.5 / 1.45, false)
+        }
+    };
 
     Ok(Calibration {
         native_dp_per_atom: t_dp / natoms as f64,
@@ -74,6 +88,7 @@ pub fn run(reps: usize) -> Result<Calibration> {
         pjrt_dp_per_atom_f32: t_pj32 / natoms as f64,
         framework_factor: t_pj64 / t_dp,
         fp32_speedup: t_pj64 / t_pj32,
+        pjrt_measured,
     })
 }
 
@@ -101,6 +116,7 @@ impl Calibration {
             ("pjrt_dp_per_atom_f32", Json::Num(self.pjrt_dp_per_atom_f32)),
             ("framework_factor", Json::Num(self.framework_factor)),
             ("fp32_speedup", Json::Num(self.fp32_speedup)),
+            ("pjrt_measured", Json::Bool(self.pjrt_measured)),
         ]);
         std::fs::write(path, j.to_string_pretty())?;
         Ok(())
@@ -108,6 +124,9 @@ impl Calibration {
 
     pub fn print(&self) {
         println!("\n=== Host calibration (564-atom water box) ===");
+        if !self.pjrt_measured {
+            println!("(pjrt rows are PAPER-BAND ESTIMATES — the PJRT path was unavailable)");
+        }
         println!("native  dp_ef      : {:.3} us/atom", self.native_dp_per_atom * 1e6);
         println!("native  dw_fwd     : {:.3} us/mol", self.native_dw_fwd_per_mol * 1e6);
         println!("native  dw_vjp     : {:.3} us/mol", self.native_dw_vjp_per_mol * 1e6);

@@ -125,13 +125,36 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
 
     for (name, grid, mode, f32_nn) in configs {
         // NN precision: f32 rows use the f32 PJRT artifacts (the paper's
-        // "neural network computations reduced to single precision")
+        // "neural network computations reduced to single precision"); when
+        // the PJRT path is unavailable (stub build) they fall back to the
+        // native f64 NN, leaving only the mesh precision under test
         let pjrt;
+        let mut nn_fallback = false;
         let nn: BackendRef = if f32_nn {
-            pjrt = Mutex::new(PjrtEngine::open(&dir)?);
-            BackendRef::Pjrt(&pjrt)
+            match PjrtEngine::open(&dir) {
+                Ok(e) => {
+                    pjrt = Mutex::new(e);
+                    BackendRef::Pjrt(&pjrt)
+                }
+                Err(e) => {
+                    eprintln!(
+                        "table1: row '{name}' requested the f32 PJRT NN but the PJRT \
+                         path is unavailable ({e:#}); computing this row with the \
+                         native f64 NN — only the mesh precision differs"
+                    );
+                    nn_fallback = true;
+                    BackendRef::Native(&native)
+                }
+            }
         } else {
             BackendRef::Native(&native)
+        };
+        // carry the substitution in the row label so persisted/printed
+        // rows are never mistaken for real f32-NN measurements
+        let name = if nn_fallback {
+            format!("{name} [NN=f64 fallback]")
+        } else {
+            name.to_string()
         };
         let mut mesh_cfg = crate::pppm::PppmConfig::new(grid, 5, alpha);
         mesh_cfg.mode = mode;
@@ -187,7 +210,7 @@ fn full_forces(
     // short-range + DW through the chosen NN path
     let (e_sr, f_sr, delta) = match nn {
         None | Some(BackendRef::Native(_)) => {
-            let m = match nn {
+            let m: &NativeModel = match nn {
                 Some(BackendRef::Native(m)) => m,
                 _ => native_ref,
             };
@@ -225,7 +248,7 @@ fn full_forces(
     }
     let fc = match nn {
         None | Some(BackendRef::Native(_)) => {
-            let m = match nn {
+            let m: &NativeModel = match nn {
                 Some(BackendRef::Native(m)) => m,
                 _ => native_ref,
             };

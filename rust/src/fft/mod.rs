@@ -41,7 +41,7 @@ impl C64 {
 
     #[inline]
     pub fn conj(self) -> C64 {
-        C64 ::new(self.re, -self.im)
+        C64::new(self.re, -self.im)
     }
 
     #[inline]

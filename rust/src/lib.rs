@@ -19,6 +19,16 @@
 //!    [`perfmodel`] reproduce the paper's large-scale experiments on a
 //!    calibrated discrete-event model of Fugaku.
 
+// Style lints that fight the index-heavy numeric kernels in this crate
+// (explicit `for i in 0..n` loops over multiple coupled arrays, physics
+// notation single-letter names).  Correctness lints stay on.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::many_single_char_names)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::manual_memcpy)]
+#![allow(clippy::field_reassign_with_default)]
+
 pub mod config;
 pub mod coordinator;
 pub mod distfft;
@@ -30,6 +40,7 @@ pub mod mpisim;
 pub mod native;
 pub mod neighbor;
 pub mod perfmodel;
+pub mod pool;
 pub mod pppm;
 pub mod runtime;
 pub mod simnet;

@@ -6,10 +6,24 @@
 //! framework dispatch, no redundant gradient kernels and no initialization
 //! overhead.  Numerical parity with the python reference is enforced by
 //! rust/tests/native_parity.rs against fixtures.json.
+//!
+//! All per-atom hot loops shard contiguous centre ranges across the shared
+//! [`crate::pool::ThreadPool`] (the single-node analogue of the paper's
+//! 47-core short-range partition).  Each shard computes per-centre /
+//! per-pair quantities into its own buffers; the caller then reduces them
+//! in *global item order*, so energies and forces are bit-for-bit
+//! identical for any thread count and any shard boundaries.  Boundaries
+//! are load-balanced between calls by a thread-granularity ring pass
+//! ([`crate::pool::balance::ShardPlan`], paper section 3.3).
 
 use super::linalg::Mat;
-use super::net::{backward, forward, Mlp, Tape};
+use super::net::{backward, forward, seeded_mlp, Mlp, Tape};
+use crate::pool::balance::ShardPlan;
+use crate::pool::ThreadPool;
 use crate::runtime::manifest::Hyper;
+use crate::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// All weights of the DP + DW models (from artifacts/weights.json).
 pub struct Weights {
@@ -33,10 +47,38 @@ impl Weights {
             fit_dw: Mlp::from_json(j.req("fit_dw")?)?,
         })
     }
+
+    /// Seeded random weights with the same architecture and init scheme as
+    /// python/compile/params.py (different RNG stream, so not numerically
+    /// identical to `make artifacts` weights).  Used by benches and tests
+    /// when the artifacts directory is absent.
+    pub fn synthetic(hyper: &Hyper, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let hidden = &hyper.embed_widths[..hyper.embed_widths.len().saturating_sub(1)];
+        let embed = |rng: &mut Rng| {
+            [
+                seeded_mlp(rng, hidden, 1, hyper.m1, 1.0),
+                seeded_mlp(rng, hidden, 1, hyper.m1, 1.0),
+            ]
+        };
+        let embed_dp = embed(&mut rng);
+        let fit_dp = [
+            seeded_mlp(&mut rng, &hyper.fit_widths, hyper.desc_dim, 1, 0.02),
+            seeded_mlp(&mut rng, &hyper.fit_widths, hyper.desc_dim, 1, 0.02),
+        ];
+        let embed_dw = embed(&mut rng);
+        let fit_dw = seeded_mlp(&mut rng, &hyper.fit_widths, hyper.desc_dim, hyper.m1, 0.3);
+        Weights {
+            embed_dp,
+            fit_dp,
+            embed_dw,
+            fit_dw,
+        }
+    }
 }
 
 /// Geometry scratch per evaluation: displacements + radial features for
-/// every (centre, slot) pair.
+/// every (centre, slot) pair of one shard (locally indexed).
 struct Geom {
     ncentres: usize,
     s: usize, // slots per centre
@@ -56,20 +98,74 @@ struct EmbedCtx {
     rows: [Vec<usize>; 2],
 }
 
+/// Per-shard output of the DP NN pipeline.
+struct DpShard {
+    /// per-centre energies, ascending centre order within the shard
+    e: Vec<f64>,
+    /// per-pair dE/dd vectors (local pair indexing)
+    dd: Vec<[f64; 3]>,
+    secs: f64,
+}
+
+/// Per-shard output of the physical-prior pair pipeline.
+struct PriorShard {
+    /// per-pair Born-Mayer energies
+    e: Vec<f64>,
+    /// per-pair force vectors dE/dd
+    g: Vec<[f64; 3]>,
+    secs: f64,
+}
+
+/// Per-shard output of the DW pipeline.
+struct DwShard {
+    /// per-molecule WC displacements (3 per centre)
+    delta: Vec<f64>,
+    /// per-pair dE/dd vectors (vjp mode only)
+    dd: Option<Vec<[f64; 3]>>,
+    secs: f64,
+}
+
 pub struct NativeModel {
     pub hyper: Hyper,
     pub weights: Weights,
+    pool: Arc<ThreadPool>,
+    plan_dp: Mutex<ShardPlan>,
+    plan_prior: Mutex<ShardPlan>,
+    plan_dw: Mutex<ShardPlan>,
 }
 
 impl NativeModel {
     pub fn new(hyper: Hyper, weights: Weights) -> Self {
-        NativeModel { hyper, weights }
+        NativeModel {
+            hyper,
+            weights,
+            pool: Arc::new(ThreadPool::serial()),
+            plan_dp: Mutex::new(ShardPlan::new(0, 1)),
+            plan_prior: Mutex::new(ShardPlan::new(0, 1)),
+            plan_dw: Mutex::new(ShardPlan::new(0, 1)),
+        }
     }
 
     pub fn load(dir: &str) -> anyhow::Result<NativeModel> {
         let man = crate::runtime::manifest::Manifest::load(&format!("{dir}/manifest.json"))?;
         let weights = Weights::load(&format!("{dir}/weights.json"))?;
         Ok(NativeModel::new(man.hyper, weights))
+    }
+
+    /// Model with seeded random weights (no artifacts directory needed).
+    pub fn synthetic(seed: u64) -> NativeModel {
+        let hyper = Hyper::water_default();
+        let weights = Weights::synthetic(&hyper, seed);
+        NativeModel::new(hyper, weights)
+    }
+
+    /// Share a worker pool; all hot loops shard across it.
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
     }
 
     // ---- geometry -------------------------------------------------------
@@ -88,17 +184,28 @@ impl NativeModel {
         }
     }
 
-    fn geom(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32], ncentres: usize) -> Geom {
-        let s = nlist.len() / ncentres;
+    /// Geometry for the centre range `lo..hi` of a padded nlist with `s`
+    /// slots per centre.  Rows are locally indexed: row r = centre lo + r.
+    fn geom_range(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        s: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Geom {
+        let n = hi - lo;
         let mut g = Geom {
-            ncentres,
+            ncentres: n,
             s,
-            d: vec![[0.0; 3]; ncentres * s],
-            mask: vec![0.0; ncentres * s],
-            env: vec![[0.0; 4]; ncentres * s],
-            sval: vec![0.0; ncentres * s],
+            d: vec![[0.0; 3]; n * s],
+            mask: vec![0.0; n * s],
+            env: vec![[0.0; 4]; n * s],
+            sval: vec![0.0; n * s],
         };
-        for i in 0..ncentres {
+        for r in 0..n {
+            let i = lo + r;
             for k in 0..s {
                 let j = nlist[i * s + k];
                 if j < 0 {
@@ -112,13 +219,13 @@ impl NativeModel {
                     d[t] = x;
                 }
                 let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
-                let r = r2.max(1e-12).sqrt();
-                let (sw, _) = self.switch(r);
-                let sv = sw / r;
-                let idx = i * s + k;
+                let rr = r2.max(1e-12).sqrt();
+                let (sw, _) = self.switch(rr);
+                let sv = sw / rr;
+                let idx = r * s + k;
                 g.d[idx] = d;
                 g.mask[idx] = 1.0;
-                g.env[idx] = [sv, sv * d[0] / r, sv * d[1] / r, sv * d[2] / r];
+                g.env[idx] = [sv, sv * d[0] / rr, sv * d[1] / rr, sv * d[2] / rr];
                 g.sval[idx] = sv;
             }
         }
@@ -267,6 +374,7 @@ impl NativeModel {
 
     /// Backprop one centre's descriptor cotangent `ddesc` (m1*m2) into
     /// dG rows and denv rows.
+    #[allow(clippy::too_many_arguments)]
     fn descriptor_bwd(
         &self,
         geom: &Geom,
@@ -317,51 +425,56 @@ impl NativeModel {
 
     // ---- DP model: short-range NN energy + forces ------------------------
 
-    /// NN part of E_sr and its forces (prior handled separately).
-    pub fn dp_nn_ef(
+    /// Full forward + backward NN pipeline for the centre range `lo..hi`.
+    #[allow(clippy::too_many_arguments)]
+    fn dp_nn_shard(
         &self,
         coords: &[f64],
         box_len: [f64; 3],
         nlist: &[i32],
         nmol: usize,
-    ) -> (f64, Vec<f64>) {
-        let natoms = coords.len() / 3;
-        let geom = self.geom(coords, box_len, nlist, natoms);
+        lo: usize,
+        hi: usize,
+        s: usize,
+    ) -> DpShard {
+        let t0 = Instant::now();
+        let n = hi - lo;
+        let geom = self.geom_range(coords, box_len, nlist, s, lo, hi);
         let (ectx, g) = self.embed(&geom, &self.weights.embed_dp);
         let (m1, m2) = (self.hyper.m1, self.hyper.m2);
         // per-centre descriptors
-        let mut descs = Mat::zeros(natoms, m1 * m2);
-        let mut t1s = Vec::with_capacity(natoms);
-        for i in 0..natoms {
-            let (t1, d) = self.descriptor_fwd(&geom, &g, i);
-            descs.row_mut(i).copy_from_slice(&d);
+        let mut descs = Mat::zeros(n, m1 * m2);
+        let mut t1s = Vec::with_capacity(n);
+        for r in 0..n {
+            let (t1, d) = self.descriptor_fwd(&geom, &g, r);
+            descs.row_mut(r).copy_from_slice(&d);
             t1s.push(t1);
         }
-        // typed fitting: O rows then H rows (atoms are type-sorted)
-        let d_o = Mat::from_vec(nmol, m1 * m2, descs.a[..nmol * m1 * m2].to_vec());
-        let d_h = Mat::from_vec(
-            natoms - nmol,
-            m1 * m2,
-            descs.a[nmol * m1 * m2..].to_vec(),
-        );
+        // typed fitting: atoms are globally type-sorted (O block then H),
+        // so the shard's O/H split is one cut at global index nmol
+        let o_end = nmol.saturating_sub(lo).min(n);
+        let d_o = Mat::from_vec(o_end, m1 * m2, descs.a[..o_end * m1 * m2].to_vec());
+        let d_h = Mat::from_vec(n - o_end, m1 * m2, descs.a[o_end * m1 * m2..].to_vec());
         let tape_o = forward(&self.weights.fit_dp[0], &d_o);
         let tape_h = forward(&self.weights.fit_dp[1], &d_h);
-        let energy: f64 = tape_o.out.a.iter().sum::<f64>() + tape_h.out.a.iter().sum::<f64>();
+        let mut e = Vec::with_capacity(n);
+        e.extend_from_slice(&tape_o.out.a);
+        e.extend_from_slice(&tape_h.out.a);
 
         // ---- backward ----
-        let ones_o = Mat::from_vec(nmol, 1, vec![1.0; nmol]);
-        let ones_h = Mat::from_vec(natoms - nmol, 1, vec![1.0; natoms - nmol]);
+        let ones_o = Mat::from_vec(o_end, 1, vec![1.0; o_end]);
+        let ones_h = Mat::from_vec(n - o_end, 1, vec![1.0; n - o_end]);
         let dd_o = backward(&self.weights.fit_dp[0], &tape_o, &ones_o);
         let dd_h = backward(&self.weights.fit_dp[1], &tape_h, &ones_h);
         let mut dg = Mat::zeros(g.r, g.c);
         let mut denv = vec![[0.0; 4]; geom.d.len()];
-        for i in 0..natoms {
-            let ddesc = if i < nmol {
-                dd_o.row(i)
+        for r in 0..n {
+            let ddesc = if r < o_end {
+                dd_o.row(r)
             } else {
-                dd_h.row(i - nmol)
+                dd_h.row(r - o_end)
             };
-            self.descriptor_bwd(&geom, &g, i, &t1s[i], ddesc, &mut dg, &mut denv);
+            self.descriptor_bwd(&geom, &g, r, &t1s[r], ddesc, &mut dg, &mut denv);
         }
         // embedding backward -> dsval; merge into env cotangent channel 0
         // (the radial feature s *is* env row 0)
@@ -372,9 +485,50 @@ impl NativeModel {
         }
         let mut dd = vec![[0.0; 3]; geom.d.len()];
         self.env_backward(&geom, &denv, &mut dd);
+        DpShard {
+            e,
+            dd,
+            secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// NN part of E_sr and its forces (prior handled separately).
+    pub fn dp_nn_ef(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nmol: usize,
+    ) -> (f64, Vec<f64>) {
+        let natoms = coords.len() / 3;
+        let s = nlist.len() / natoms;
+        let shards = {
+            let mut plan = self.plan_dp.lock().unwrap();
+            plan.ensure(natoms, self.pool.nthreads());
+            plan.ranges()
+        };
+        let outs = self.pool.map(shards.len(), |k| {
+            self.dp_nn_shard(coords, box_len, nlist, nmol, shards[k].start, shards[k].end, s)
+        });
+        {
+            let mut plan = self.plan_dp.lock().unwrap();
+            let times: Vec<f64> = outs.iter().map(|o| o.secs).collect();
+            plan.record(&times);
+            plan.rebalance();
+        }
+        // deterministic reduction: energies in ascending centre order, the
+        // force scatter in global pair order — independent of sharding
+        let mut energy = 0.0;
+        let mut dd_all = vec![[0.0f64; 3]; natoms * s];
+        for (k, out) in outs.iter().enumerate() {
+            for &ec in &out.e {
+                energy += ec;
+            }
+            let lo = shards[k].start;
+            dd_all[lo * s..lo * s + out.dd.len()].copy_from_slice(&out.dd);
+        }
         // scatter dE/dd into forces: d = c_j - c_i => F_i += dd, F_j -= dd
         let mut forces = vec![0.0; natoms * 3];
-        let s = geom.s;
         for i in 0..natoms {
             for k in 0..s {
                 let j = nlist[i * s + k];
@@ -382,10 +536,10 @@ impl NativeModel {
                     continue;
                 }
                 let j = j as usize;
-                let idx = i * s + k;
+                let dd = dd_all[i * s + k];
                 for t in 0..3 {
-                    forces[3 * i + t] += dd[idx][t];
-                    forces[3 * j + t] -= dd[idx][t];
+                    forces[3 * i + t] += dd[t];
+                    forces[3 * j + t] -= dd[t];
                 }
             }
         }
@@ -393,6 +547,63 @@ impl NativeModel {
     }
 
     // ---- physical prior ---------------------------------------------------
+
+    /// Born-Mayer per-pair terms for the centre range `lo..hi`.
+    #[allow(clippy::too_many_arguments)]
+    fn prior_shard(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nmol: usize,
+        lo: usize,
+        hi: usize,
+        s: usize,
+    ) -> PriorShard {
+        let t0 = Instant::now();
+        let h = &self.hyper;
+        let n = hi - lo;
+        let sel0 = h.sel[0];
+        let mi = |mut x: f64, l: f64| {
+            x -= l * (x / l).round();
+            x
+        };
+        let mut e = vec![0.0; n * s];
+        let mut gv = vec![[0.0; 3]; n * s];
+        for r in 0..n {
+            let i = lo + r;
+            for k in 0..s {
+                let j = nlist[i * s + k];
+                if j < 0 {
+                    continue;
+                }
+                let j = j as usize;
+                let mut d = [0.0; 3];
+                for t in 0..3 {
+                    d[t] = mi(coords[3 * j + t] - coords[3 * i + t], box_len[t]);
+                }
+                let rr = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).max(1e-12).sqrt();
+                let (sw, dsw) = self.switch(rr);
+                let a = match (i < nmol, k < sel0) {
+                    (true, true) => h.bm_a_oo,
+                    (false, false) => h.bm_a_hh,
+                    _ => h.bm_a_oh,
+                };
+                let ex = (-rr / h.bm_rho).exp();
+                let idx = r * s + k;
+                e[idx] = 0.5 * sw * a * ex;
+                let dedr = 0.5 * a * ex * (dsw - sw / h.bm_rho);
+                for t in 0..3 {
+                    gv[idx][t] = dedr * d[t] / rr;
+                }
+            }
+        }
+        PriorShard {
+            e,
+            g: gv,
+            secs: t0.elapsed().as_secs_f64(),
+        }
+    }
 
     /// Analytic prior (bonds + angle + Born-Mayer): energy + forces.
     pub fn prior_ef(
@@ -403,6 +614,7 @@ impl NativeModel {
         nmol: usize,
     ) -> (f64, Vec<f64>) {
         let natoms = coords.len() / 3;
+        let s = nlist.len() / natoms;
         let h = &self.hyper;
         let mut energy = 0.0;
         let mut forces = vec![0.0; natoms * 3];
@@ -410,7 +622,8 @@ impl NativeModel {
             x -= l * (x / l).round();
             x
         };
-        // bonds + angle per molecule
+        // bonds + angle per molecule: O(nmol), kept serial (negligible
+        // next to the O(natoms * sel) Born-Mayer scan below)
         for m in 0..nmol {
             let o = m;
             let h1 = nmol + 2 * m;
@@ -447,34 +660,39 @@ impl NativeModel {
                 forces[3 * o + t] += g1 + g2;
             }
         }
-        // Born-Mayer over the padded nlist (double counted -> 0.5)
-        let s = nlist.len() / natoms;
-        let sel0 = h.sel[0];
-        for i in 0..natoms {
-            for k in 0..s {
-                let j = nlist[i * s + k];
-                if j < 0 {
-                    continue;
-                }
-                let j = j as usize;
-                let mut d = [0.0; 3];
-                for t in 0..3 {
-                    d[t] = mi(coords[3 * j + t] - coords[3 * i + t], box_len[t]);
-                }
-                let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).max(1e-12).sqrt();
-                let (sw, dsw) = self.switch(r);
-                let a = match (i < nmol, k < sel0) {
-                    (true, true) => h.bm_a_oo,
-                    (false, false) => h.bm_a_hh,
-                    _ => h.bm_a_oh,
-                };
-                let ex = (-r / h.bm_rho).exp();
-                energy += 0.5 * sw * a * ex;
-                let dedr = 0.5 * a * ex * (dsw - sw / h.bm_rho);
-                for t in 0..3 {
-                    let g = dedr * d[t] / r;
-                    forces[3 * i + t] += g;
-                    forces[3 * j + t] -= g;
+        // Born-Mayer over the padded nlist (double counted -> 0.5),
+        // sharded over the pool
+        let shards = {
+            let mut plan = self.plan_prior.lock().unwrap();
+            plan.ensure(natoms, self.pool.nthreads());
+            plan.ranges()
+        };
+        let outs = self.pool.map(shards.len(), |k| {
+            self.prior_shard(coords, box_len, nlist, nmol, shards[k].start, shards[k].end, s)
+        });
+        {
+            let mut plan = self.plan_prior.lock().unwrap();
+            let times: Vec<f64> = outs.iter().map(|o| o.secs).collect();
+            plan.record(&times);
+            plan.rebalance();
+        }
+        // stitch in global pair order (matches the original serial loop)
+        for (kk, out) in outs.iter().enumerate() {
+            let lo = shards[kk].start;
+            for r in 0..(shards[kk].end - lo) {
+                let i = lo + r;
+                for k in 0..s {
+                    let j = nlist[i * s + k];
+                    if j < 0 {
+                        continue;
+                    }
+                    let j = j as usize;
+                    let idx = r * s + k;
+                    energy += out.e[idx];
+                    for t in 0..3 {
+                        forces[3 * i + t] += out.g[idx][t];
+                        forces[3 * j + t] -= out.g[idx][t];
+                    }
                 }
             }
         }
@@ -482,12 +700,7 @@ impl NativeModel {
     }
 
     /// Full short-range model: NN + prior (same contract as runtime dp_ef).
-    pub fn dp_ef(
-        &self,
-        coords: &[f64],
-        box_len: [f64; 3],
-        nlist: &[i32],
-    ) -> (f64, Vec<f64>) {
+    pub fn dp_ef(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32]) -> (f64, Vec<f64>) {
         let natoms = coords.len() / 3;
         let nmol = natoms / 3;
         let (e1, f1) = self.dp_nn_ef(coords, box_len, nlist, nmol);
@@ -515,34 +728,40 @@ impl NativeModel {
         (delta, fc.unwrap())
     }
 
-    fn dw_run(
+    /// DW forward (+ optional backward) for the molecule range `lo..hi`.
+    #[allow(clippy::too_many_arguments)]
+    fn dw_shard(
         &self,
         coords: &[f64],
         box_len: [f64; 3],
         nlist_o: &[i32],
+        s: usize,
+        lo: usize,
+        hi: usize,
         f_wc: Option<&[f64]>,
-    ) -> (Vec<f64>, Option<Vec<f64>>) {
-        let natoms = coords.len() / 3;
-        let nmol = natoms / 3;
-        let geom = self.geom(coords, box_len, nlist_o, nmol);
+    ) -> DwShard {
+        let t0 = Instant::now();
+        let n = hi - lo;
+        let geom = self.geom_range(coords, box_len, nlist_o, s, lo, hi);
         let (ectx, g) = self.embed(&geom, &self.weights.embed_dw);
-        let (m1, m2, s) = (self.hyper.m1, self.hyper.m2, geom.s);
-        let mut descs = Mat::zeros(nmol, m1 * m2);
-        let mut t1s = Vec::with_capacity(nmol);
-        for i in 0..nmol {
-            let (t1, d) = self.descriptor_fwd(&geom, &g, i);
-            descs.row_mut(i).copy_from_slice(&d);
+        let m1 = self.hyper.m1;
+        let m2 = self.hyper.m2;
+        let mut descs = Mat::zeros(n, m1 * m2);
+        let mut t1s = Vec::with_capacity(n);
+        for r in 0..n {
+            let (t1, d) = self.descriptor_fwd(&geom, &g, r);
+            descs.row_mut(r).copy_from_slice(&d);
             t1s.push(t1);
         }
-        let tape_fit = forward(&self.weights.fit_dw, &descs); // (nmol, m1)
+        let tape_fit = forward(&self.weights.fit_dw, &descs); // (n, m1)
         let a = &tape_fit.out;
         // gates: c_ik = (g_ik . a_i) * s_ik ; raw_i = sum_k c_ik d_ik
-        let mut gate = vec![0.0; nmol * s];
-        let mut raw = vec![[0.0f64; 3]; nmol];
-        for i in 0..nmol {
-            let arow = a.row(i);
+        let mut gate = vec![0.0; n * s];
+        let mut raw = vec![[0.0f64; 3]; n];
+        for r in 0..n {
+            let arow = a.row(r);
             for k in 0..s {
-                let idx = i * s + k;
+                let idx = r * s + k;
                 if geom.mask[idx] == 0.0 {
                     continue;
                 }
@@ -554,68 +773,76 @@ impl NativeModel {
                 let c = dot * geom.sval[idx];
                 gate[idx] = c;
                 for t in 0..3 {
-                    raw[i][t] += c * geom.d[idx][t];
+                    raw[r][t] += c * geom.d[idx][t];
                 }
             }
         }
         // radial clamp
         let clamp = self.hyper.wc_clamp;
-        let mut delta = vec![0.0; nmol * 3];
-        let mut scales = vec![(0.0, 0.0); nmol]; // (scale, dscale/dnorm)
-        for i in 0..nmol {
-            let norm = (raw[i][0] * raw[i][0] + raw[i][1] * raw[i][1] + raw[i][2] * raw[i][2])
+        let mut delta = vec![0.0; n * 3];
+        let mut scales = vec![(0.0, 0.0); n]; // (scale, dscale/dnorm)
+        for r in 0..n {
+            let norm = (raw[r][0] * raw[r][0] + raw[r][1] * raw[r][1] + raw[r][2] * raw[r][2])
                 .max(1e-18)
                 .sqrt();
             let t = (norm / clamp).tanh();
             let scale = clamp * t / norm;
             let dscale = ((1.0 - t * t) - scale) / norm;
-            scales[i] = (scale, dscale);
+            scales[r] = (scale, dscale);
             for tt in 0..3 {
-                delta[3 * i + tt] = raw[i][tt] * scale;
+                delta[3 * r + tt] = raw[r][tt] * scale;
             }
         }
         let f_wc = match f_wc {
             Some(f) => f,
-            None => return (delta, None),
+            None => {
+                return DwShard {
+                    delta,
+                    dd: None,
+                    secs: t0.elapsed().as_secs_f64(),
+                }
+            }
         };
 
         // ---- backward with cotangent f_wc on W = R_O + Delta ----
-        let mut draw = vec![[0.0f64; 3]; nmol];
-        for i in 0..nmol {
-            let (scale, dscale) = scales[i];
-            let norm = (raw[i][0] * raw[i][0] + raw[i][1] * raw[i][1] + raw[i][2] * raw[i][2])
+        let mut draw = vec![[0.0f64; 3]; n];
+        for r in 0..n {
+            let i = lo + r;
+            let (scale, dscale) = scales[r];
+            let norm = (raw[r][0] * raw[r][0] + raw[r][1] * raw[r][1] + raw[r][2] * raw[r][2])
                 .max(1e-18)
                 .sqrt();
-            let gdot =
-                f_wc[3 * i] * raw[i][0] + f_wc[3 * i + 1] * raw[i][1] + f_wc[3 * i + 2] * raw[i][2];
+            let gdot = f_wc[3 * i] * raw[r][0]
+                + f_wc[3 * i + 1] * raw[r][1]
+                + f_wc[3 * i + 2] * raw[r][2];
             for t in 0..3 {
-                draw[i][t] = scale * f_wc[3 * i + t] + gdot * dscale * raw[i][t] / norm;
+                draw[r][t] = scale * f_wc[3 * i + t] + gdot * dscale * raw[r][t] / norm;
             }
         }
         // raw -> gate, d
-        let mut dgate = vec![0.0; nmol * s];
-        let mut dd = vec![[0.0f64; 3]; nmol * s];
-        for i in 0..nmol {
+        let mut dgate = vec![0.0; n * s];
+        let mut dd = vec![[0.0f64; 3]; n * s];
+        for r in 0..n {
             for k in 0..s {
-                let idx = i * s + k;
+                let idx = r * s + k;
                 if geom.mask[idx] == 0.0 {
                     continue;
                 }
                 for t in 0..3 {
-                    dgate[idx] += draw[i][t] * geom.d[idx][t];
-                    dd[idx][t] += gate[idx] * draw[i][t];
+                    dgate[idx] += draw[r][t] * geom.d[idx][t];
+                    dd[idx][t] += gate[idx] * draw[r][t];
                 }
             }
         }
         // gate -> a, g(raw), sval
-        let mut da = Mat::zeros(nmol, m1);
+        let mut da = Mat::zeros(n, m1);
         let mut dg = Mat::zeros(g.r, g.c);
-        let mut dsval = vec![0.0; nmol * s];
-        for i in 0..nmol {
-            let arow = a.row(i);
-            let darow = da.row_mut(i);
+        let mut dsval = vec![0.0; n * s];
+        for r in 0..n {
+            let arow = a.row(r);
+            let darow = da.row_mut(r);
             for k in 0..s {
-                let idx = i * s + k;
+                let idx = r * s + k;
                 if geom.mask[idx] == 0.0 || dgate[idx] == 0.0 {
                     continue;
                 }
@@ -635,16 +862,8 @@ impl NativeModel {
         // a -> desc -> (G, env)
         let ddesc_all = backward(&self.weights.fit_dw, &tape_fit, &da);
         let mut denv = vec![[0.0; 4]; geom.d.len()];
-        for i in 0..nmol {
-            self.descriptor_bwd(
-                &geom,
-                &g,
-                i,
-                &t1s[i],
-                ddesc_all.row(i),
-                &mut dg,
-                &mut denv,
-            );
+        for r in 0..n {
+            self.descriptor_bwd(&geom, &g, r, &t1s[r], ddesc_all.row(r), &mut dg, &mut denv);
         }
         // G (raw, both contributions) -> sval
         self.embed_backward(&geom, &self.weights.embed_dw, &ectx, &dg, &mut dsval);
@@ -652,7 +871,54 @@ impl NativeModel {
             denv[idx][0] += dsval[idx];
         }
         self.env_backward(&geom, &denv, &mut dd);
+        DwShard {
+            delta,
+            dd: Some(dd),
+            secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    fn dw_run(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist_o: &[i32],
+        f_wc: Option<&[f64]>,
+    ) -> (Vec<f64>, Option<Vec<f64>>) {
+        let natoms = coords.len() / 3;
+        let nmol = natoms / 3;
+        let s = nlist_o.len() / nmol;
+        let shards = {
+            let mut plan = self.plan_dw.lock().unwrap();
+            plan.ensure(nmol, self.pool.nthreads());
+            plan.ranges()
+        };
+        let outs = self.pool.map(shards.len(), |k| {
+            self.dw_shard(coords, box_len, nlist_o, s, shards[k].start, shards[k].end, f_wc)
+        });
+        {
+            let mut plan = self.plan_dw.lock().unwrap();
+            let times: Vec<f64> = outs.iter().map(|o| o.secs).collect();
+            plan.record(&times);
+            plan.rebalance();
+        }
+        let mut delta = vec![0.0; nmol * 3];
+        for (k, out) in outs.iter().enumerate() {
+            let lo = shards[k].start;
+            delta[3 * lo..3 * lo + out.delta.len()].copy_from_slice(&out.delta);
+        }
+        let f_wc = match f_wc {
+            Some(f) => f,
+            None => return (delta, None),
+        };
+        let mut dd_all = vec![[0.0f64; 3]; nmol * s];
+        for (k, out) in outs.iter().enumerate() {
+            let lo = shards[k].start;
+            let dd = out.dd.as_ref().expect("vjp shard output");
+            dd_all[lo * s..lo * s + dd.len()].copy_from_slice(dd);
+        }
         // scatter: W_n = R_O(n) + Delta_n ; f_contrib = f_wc (on O) + chain
+        // (global molecule/pair order — identical for any sharding)
         let mut fc = vec![0.0; natoms * 3];
         for i in 0..nmol {
             for t in 0..3 {
@@ -664,10 +930,10 @@ impl NativeModel {
                     continue;
                 }
                 let j = j as usize;
-                let idx = i * s + k;
+                let dd = dd_all[i * s + k];
                 for t in 0..3 {
-                    fc[3 * i + t] -= dd[idx][t];
-                    fc[3 * j + t] += dd[idx][t];
+                    fc[3 * i + t] -= dd[t];
+                    fc[3 * j + t] += dd[t];
                 }
             }
         }

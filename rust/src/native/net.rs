@@ -5,6 +5,7 @@
 
 use super::linalg::{add_bias, matmul, tanh_inplace, Mat};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
 /// One dense MLP: weights[i] is (in x out) row-major.  Transposed copies
@@ -45,6 +46,38 @@ impl Mlp {
     pub fn dout(&self) -> usize {
         self.ws.last().unwrap().c
     }
+}
+
+/// Seeded random MLP with the python init scheme (params.py `_init_mlp`):
+/// hidden weights N(0,1)/sqrt(fan_in) + small random biases, final layer
+/// scaled by `out_scale` with zero bias.  Used for synthetic (no-artifacts)
+/// models in benches and tests.
+pub fn seeded_mlp(rng: &mut Rng, hidden: &[usize], din: usize, dout: usize, out_scale: f64) -> Mlp {
+    let mut ws = Vec::new();
+    let mut bs = Vec::new();
+    let mut prev = din;
+    for &w in hidden {
+        let m = Mat::from_vec(
+            prev,
+            w,
+            (0..prev * w)
+                .map(|_| rng.normal() / (prev as f64).sqrt())
+                .collect(),
+        );
+        ws.push(m);
+        bs.push((0..w).map(|_| rng.normal() * 0.1).collect());
+        prev = w;
+    }
+    ws.push(Mat::from_vec(
+        prev,
+        dout,
+        (0..prev * dout)
+            .map(|_| rng.normal() / (prev as f64).sqrt() * out_scale)
+            .collect(),
+    ));
+    bs.push(vec![0.0; dout]);
+    let wts = ws.iter().map(|m| m.t()).collect();
+    Mlp { ws, bs, wts }
 }
 
 /// Activation tape from a forward pass (needed for backprop).

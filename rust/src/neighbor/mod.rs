@@ -3,6 +3,7 @@
 //! (paper: cutoff 6 A, skin 2 A, rebuild every 50 steps).
 
 use crate::md::system::System;
+use crate::pool::{even_shards, ThreadPool};
 
 /// Neighbour-list hyper-parameters (mirror python/compile/params.py).
 #[derive(Debug, Clone, Copy)]
@@ -100,57 +101,102 @@ pub fn build_exact(sys: &System, centres: &[usize], p: &NlistParams) -> PaddedNl
 }
 
 /// Cell-list accelerated builder — same output contract as `build_exact`
-/// (tested for equality), O(N) for large systems.
+/// (tested for equality), O(N) for large systems.  Serial convenience
+/// wrapper around [`build_cells_par`].
 pub fn build_cells(sys: &System, centres: &[usize], p: &NlistParams) -> PaddedNlist {
-    let n = sys.natoms();
-    let rc = p.r_cut;
-    // cell grid; >= 1 cell, cells no smaller than rc (so 27 neighbours cover)
-    let mut ncell = [1usize; 3];
-    for d in 0..3 {
-        ncell[d] = (sys.box_len[d] / rc).floor().max(1.0) as usize;
+    build_cells_par(sys, centres, p, &ThreadPool::serial())
+}
+
+/// Precomputed cell decomposition shared by all centre shards.
+struct CellGrid {
+    ncell: [usize; 3],
+    /// atom indices per cell
+    cells: Vec<Vec<usize>>,
+    /// unique wrapped per-dim cell offsets to scan (dedups the wrap when
+    /// a dimension has fewer than 3 cells)
+    offsets: [Vec<i64>; 3],
+}
+
+impl CellGrid {
+    fn build(sys: &System, rc: f64) -> CellGrid {
+        // cell grid; >= 1 cell, cells no smaller than rc (27 neighbours cover)
+        let mut ncell = [1usize; 3];
+        for d in 0..3 {
+            ncell[d] = (sys.box_len[d] / rc).floor().max(1.0) as usize;
+        }
+        let mut grid = CellGrid {
+            ncell,
+            cells: vec![Vec::new(); ncell[0] * ncell[1] * ncell[2]],
+            offsets: [Vec::new(), Vec::new(), Vec::new()],
+        };
+        for j in 0..sys.natoms() {
+            let c = grid.cell_of(sys, &sys.pos[j]);
+            let id = grid.idx(c);
+            grid.cells[id].push(j);
+        }
+        // scan layers per dim; when the box holds < 3 cells the wrapped
+        // offsets collide, so keep only distinct residues mod ncell
+        for d in 0..3 {
+            let scan: i64 = if ncell[d] < 3 {
+                (ncell[d] as i64 - 1).max(0)
+            } else {
+                1
+            };
+            let mut seen = Vec::new();
+            for o in -scan..=scan {
+                let r = o.rem_euclid(ncell[d] as i64);
+                if !seen.contains(&r) {
+                    seen.push(r);
+                    grid.offsets[d].push(o);
+                }
+            }
+        }
+        grid
     }
-    let cell_of = |pos: &[f64; 3]| -> [usize; 3] {
+
+    fn cell_of(&self, sys: &System, pos: &[f64; 3]) -> [usize; 3] {
         let mut c = [0usize; 3];
         for d in 0..3 {
             let x = pos[d].rem_euclid(sys.box_len[d]);
-            c[d] = ((x / sys.box_len[d] * ncell[d] as f64) as usize).min(ncell[d] - 1);
+            c[d] = ((x / sys.box_len[d] * self.ncell[d] as f64) as usize).min(self.ncell[d] - 1);
         }
         c
-    };
-    let idx = |c: [usize; 3]| (c[0] * ncell[1] + c[1]) * ncell[2] + c[2];
-    let mut cells: Vec<Vec<usize>> = vec![Vec::new(); ncell[0] * ncell[1] * ncell[2]];
-    for j in 0..n {
-        cells[idx(cell_of(&sys.pos[j]))].push(j);
     }
+
+    fn idx(&self, c: [usize; 3]) -> usize {
+        (c[0] * self.ncell[1] + c[1]) * self.ncell[2] + c[2]
+    }
+}
+
+/// Fill the padded rows for centres `centres[range]`; returns (rows,
+/// truncated).  Row contents depend only on the centre, never on the
+/// sharding, so the parallel build is deterministic.
+fn cells_rows(
+    sys: &System,
+    centres: &[usize],
+    range: std::ops::Range<usize>,
+    p: &NlistParams,
+    grid: &CellGrid,
+) -> (Vec<i32>, bool) {
+    let rc = p.r_cut;
     let s = p.sel_total();
-    let mut data = vec![-1i32; centres.len() * s];
+    let mut data = vec![-1i32; range.len() * s];
     let mut truncated = false;
-    // number of cell layers to scan per dim (when box/rc < 3 cells wrap)
-    let mut scan = [1i64; 3];
-    for d in 0..3 {
-        if ncell[d] < 3 {
-            scan[d] = (ncell[d] as i64 - 1).max(0); // avoid double visiting
-        }
-    }
     let mut cand0: Vec<(f64, usize)> = Vec::new();
     let mut cand1: Vec<(f64, usize)> = Vec::new();
-    for (row, &i) in centres.iter().enumerate() {
+    for (row, &i) in centres[range.clone()].iter().enumerate() {
         cand0.clear();
         cand1.clear();
-        let ci = cell_of(&sys.pos[i]);
-        let mut seen_cells = std::collections::HashSet::new();
-        for dx in -scan[0]..=scan[0] {
-            for dy in -scan[1]..=scan[1] {
-                for dz in -scan[2]..=scan[2] {
+        let ci = grid.cell_of(sys, &sys.pos[i]);
+        for &dx in &grid.offsets[0] {
+            for &dy in &grid.offsets[1] {
+                for &dz in &grid.offsets[2] {
                     let c = [
-                        (ci[0] as i64 + dx).rem_euclid(ncell[0] as i64) as usize,
-                        (ci[1] as i64 + dy).rem_euclid(ncell[1] as i64) as usize,
-                        (ci[2] as i64 + dz).rem_euclid(ncell[2] as i64) as usize,
+                        (ci[0] as i64 + dx).rem_euclid(grid.ncell[0] as i64) as usize,
+                        (ci[1] as i64 + dy).rem_euclid(grid.ncell[1] as i64) as usize,
+                        (ci[2] as i64 + dz).rem_euclid(grid.ncell[2] as i64) as usize,
                     ];
-                    if !seen_cells.insert(idx(c)) {
-                        continue;
-                    }
-                    for &j in &cells[idx(c)] {
+                    for &j in &grid.cells[grid.idx(c)] {
                         if j == i {
                             continue;
                         }
@@ -174,9 +220,7 @@ pub fn build_cells(sys: &System, centres: &[usize], p: &NlistParams) -> PaddedNl
                 }
             }
         }
-        for (t, cand) in [(&mut cand0, 0usize), (&mut cand1, 1usize)]
-            .map(|(c, t)| (t, c))
-        {
+        for (t, cand) in [(&mut cand0, 0usize), (&mut cand1, 1usize)].map(|(c, t)| (t, c)) {
             cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
             let (lo, cap) = if t == 0 { (0, p.sel[0]) } else { (p.sel[0], p.sel[1]) };
             if cand.len() > cap {
@@ -186,6 +230,33 @@ pub fn build_cells(sys: &System, centres: &[usize], p: &NlistParams) -> PaddedNl
                 data[row * s + lo + k] = *j as i32;
             }
         }
+    }
+    (data, truncated)
+}
+
+/// Cell-list builder sharded over a worker pool: cells are binned once,
+/// then contiguous centre ranges scan in parallel (each row is written by
+/// exactly one shard, so the result is identical for any thread count).
+/// This is the engine's default rebuild path; `build_exact` remains as the
+/// O(N^2) oracle for tests and parity checks.
+pub fn build_cells_par(
+    sys: &System,
+    centres: &[usize],
+    p: &NlistParams,
+    pool: &ThreadPool,
+) -> PaddedNlist {
+    let grid = CellGrid::build(sys, p.r_cut);
+    let s = p.sel_total();
+    let shards = even_shards(centres.len(), pool.nthreads());
+    let chunks: Vec<(Vec<i32>, bool)> = pool.map(shards.len(), |k| {
+        cells_rows(sys, centres, shards[k].clone(), p, &grid)
+    });
+    let mut data = vec![-1i32; centres.len() * s];
+    let mut truncated = false;
+    for (k, (rows, trunc)) in chunks.iter().enumerate() {
+        let lo = shards[k].start;
+        data[lo * s..lo * s + rows.len()].copy_from_slice(rows);
+        truncated |= *trunc;
     }
     PaddedNlist {
         ncentres: centres.len(),
@@ -341,6 +412,20 @@ mod tests {
             vm.tick();
         }
         assert!(vm.needs_rebuild(&sys));
+    }
+
+    #[test]
+    fn parallel_build_bitwise_matches_serial() {
+        let sys = water_box(64, 99);
+        let p = NlistParams::default();
+        let centres: Vec<usize> = (0..sys.natoms()).collect();
+        let serial = build_cells(&sys, &centres, &p);
+        for nthreads in [2usize, 4, 7] {
+            let pool = ThreadPool::new(nthreads);
+            let par = build_cells_par(&sys, &centres, &p, &pool);
+            assert_eq!(par.data, serial.data, "nthreads={nthreads}");
+            assert_eq!(par.truncated, serial.truncated);
+        }
     }
 
     #[test]

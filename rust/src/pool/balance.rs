@@ -1,0 +1,223 @@
+//! Shard-boundary load balancing: the paper's Algorithm 1 ring pass
+//! (coordinator/ringlb.rs) reused at *thread* granularity.
+//!
+//! The engine shards contiguous atom ranges over pool executors.  Water is
+//! type-sorted (O block then H pairs), so shards are heterogeneous: an
+//! O-heavy shard runs the wide O fitting net plus denser neighbour shells
+//! and takes measurably longer than an H shard of equal atom count.
+//! Between calls we measure per-shard wall time and move shard boundaries
+//! with the same single-hop ring-migration update the paper uses between
+//! nodes (section 3.3): loads are the measured times, the ring is the
+//! shard chain, and each "migration" is a boundary shift.
+//!
+//! Crucially this never changes results: shard boundaries only partition
+//! the *computation*; all reductions happen in global item order (see
+//! `pool` module docs), so dynamics stay bit-for-bit reproducible while
+//! boundaries chase the load.
+
+use crate::coordinator::ringlb::ring_migration;
+use std::ops::Range;
+
+/// Contiguous partition of `0..nitems` into shards, with measured-time
+/// feedback moving the boundaries between calls.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// boundary items: `bounds[s]..bounds[s+1]` is shard s
+    bounds: Vec<usize>,
+    /// last measured wall time per shard [s]; cleared by `rebalance`
+    times: Vec<f64>,
+    /// number of boundary updates applied so far
+    pub rebalances: usize,
+}
+
+impl ShardPlan {
+    /// Even split of `nitems` into at most `nshards` shards.
+    pub fn new(nitems: usize, nshards: usize) -> ShardPlan {
+        let ranges = crate::pool::even_shards(nitems, nshards);
+        let mut bounds = vec![0usize];
+        for r in &ranges {
+            bounds.push(r.end);
+        }
+        if ranges.is_empty() {
+            bounds = vec![0, 0];
+        }
+        let n = bounds.len() - 1;
+        ShardPlan {
+            bounds,
+            times: vec![0.0; n],
+            rebalances: 0,
+        }
+    }
+
+    /// Re-initialise (even split) if the item count or shard count changed;
+    /// otherwise keep the balanced boundaries from previous calls.
+    pub fn ensure(&mut self, nitems: usize, nshards: usize) {
+        let want = nshards.max(1).min(nitems.max(1));
+        if self.nitems() != nitems || self.nshards() != want {
+            *self = ShardPlan::new(nitems, want);
+        }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn nitems(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    pub fn range(&self, s: usize) -> Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Snapshot of all shard ranges (to iterate without holding a lock).
+    pub fn ranges(&self) -> Vec<Range<usize>> {
+        (0..self.nshards()).map(|s| self.range(s)).collect()
+    }
+
+    /// Record measured per-shard wall times (ignored on shape mismatch,
+    /// e.g. when another caller resized the plan mid-flight).
+    pub fn record(&mut self, times: &[f64]) {
+        if times.len() == self.times.len() {
+            self.times.copy_from_slice(times);
+        }
+    }
+
+    /// One ring pass over the measured times: convert times to integer
+    /// loads, run the paper's `ring_migration`, gauge the circulating flow
+    /// so the (non-contiguous) wrap edge carries zero, and apply each
+    /// boundary flow as an item shift using the shard's measured per-item
+    /// cost.  Clears the time measurements.
+    pub fn rebalance(&mut self) {
+        let n = self.nshards();
+        let nitems = self.nitems();
+        let measured = self.times.iter().all(|&t| t > 0.0);
+        if n < 2 || nitems < 2 * n || !measured {
+            self.times.iter_mut().for_each(|t| *t = 0.0);
+            return;
+        }
+        let counts: Vec<usize> = (0..n).map(|s| self.bounds[s + 1] - self.bounds[s]).collect();
+        // integer loads in tenths of microseconds (>= 1 to keep the ring
+        // update well-defined)
+        let loads: Vec<usize> = self
+            .times
+            .iter()
+            .map(|t| ((t * 1e7) as usize).max(1))
+            .collect();
+        let per_item: Vec<f64> = loads
+            .iter()
+            .zip(&counts)
+            .map(|(&l, &c)| l as f64 / c.max(1) as f64)
+            .collect();
+        let total: usize = loads.iter().sum();
+        let goal = (total / n).max(1);
+        let mig = ring_migration(&loads, goal);
+        // The ring solution is defined up to a circulating constant; pick
+        // the gauge where the wrap edge (last shard -> shard 0, which has
+        // no contiguous boundary) carries zero flow.
+        let wrap = mig.send[n - 1] as i64;
+        for b in 0..n - 1 {
+            let flow = mig.send[b] as i64 - wrap; // >0: downstream (b -> b+1)
+            if flow > 0 {
+                let mv = ((flow as f64 / per_item[b]).round() as usize)
+                    .min(self.bounds[b + 1] - self.bounds[b] - 1);
+                self.bounds[b + 1] -= mv;
+            } else if flow < 0 {
+                let mv = (((-flow) as f64 / per_item[b + 1]).round() as usize)
+                    .min(self.bounds[b + 2] - self.bounds[b + 1] - 1);
+                self.bounds[b + 1] += mv;
+            }
+        }
+        self.rebalances += 1;
+        self.times.iter_mut().for_each(|t| *t = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Simulated per-item cost model: returns per-shard "wall times".
+    fn simulate(plan: &ShardPlan, cost: &dyn Fn(usize) -> f64) -> Vec<f64> {
+        (0..plan.nshards())
+            .map(|s| plan.range(s).map(cost).sum())
+            .collect()
+    }
+
+    fn imbalance(times: &[f64]) -> f64 {
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        max / mean
+    }
+
+    #[test]
+    fn even_split_initially() {
+        let plan = ShardPlan::new(100, 4);
+        assert_eq!(plan.nshards(), 4);
+        assert_eq!(plan.nitems(), 100);
+        for s in 0..4 {
+            assert_eq!(plan.range(s).len(), 25);
+        }
+    }
+
+    #[test]
+    fn ensure_keeps_balanced_bounds_when_shape_unchanged() {
+        let mut plan = ShardPlan::new(100, 4);
+        plan.record(&simulate(&plan, &|i| if i < 50 { 3.0e-3 } else { 1.0e-3 }));
+        plan.rebalance();
+        let bounds_after = plan.ranges();
+        plan.ensure(100, 4);
+        assert_eq!(plan.ranges(), bounds_after);
+        plan.ensure(90, 4);
+        assert_eq!(plan.nitems(), 90);
+    }
+
+    #[test]
+    fn rebalance_converges_on_skewed_costs() {
+        // first half of the items is 3x as expensive (O vs H centres)
+        let cost = |i: usize| if i < 50 { 3.0e-3 } else { 1.0e-3 };
+        let mut plan = ShardPlan::new(100, 4);
+        let before = imbalance(&simulate(&plan, &cost));
+        for _ in 0..10 {
+            let t = simulate(&plan, &cost);
+            plan.record(&t);
+            plan.rebalance();
+        }
+        let after = imbalance(&simulate(&plan, &cost));
+        assert!(plan.rebalances > 0);
+        assert!(
+            after < before && after < 1.15,
+            "imbalance {before} -> {after} ({:?})",
+            plan.ranges()
+        );
+    }
+
+    #[test]
+    fn shards_stay_valid_partitions() {
+        let cost = |i: usize| 1.0e-3 + (i % 7) as f64 * 1.0e-3;
+        let mut plan = ShardPlan::new(64, 5);
+        for _ in 0..8 {
+            let t = simulate(&plan, &cost);
+            plan.record(&t);
+            plan.rebalance();
+            let r = plan.ranges();
+            assert_eq!(r[0].start, 0);
+            assert_eq!(r.last().unwrap().end, 64);
+            for s in 0..r.len() {
+                assert!(!r[s].is_empty(), "empty shard {s}: {r:?}");
+                if s > 0 {
+                    assert_eq!(r[s - 1].end, r[s].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_plans_do_not_rebalance() {
+        let mut plan = ShardPlan::new(4, 4);
+        plan.record(&[1.0, 2.0, 3.0, 4.0]);
+        plan.rebalance();
+        assert_eq!(plan.rebalances, 0);
+        assert_eq!(plan.ranges(), ShardPlan::new(4, 4).ranges());
+    }
+}

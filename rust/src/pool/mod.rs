@@ -1,0 +1,345 @@
+//! Shared worker pool: persistent threads + scoped fork-join over shards.
+//!
+//! The paper extracts its per-node speed from keeping all 48 A64FX cores
+//! busy on the short-range NN work while one core runs PPPM (sections 3.2
+//! and 3.3).  This module is the single-node analogue for our engine: a
+//! persistent pool of N-1 worker threads (the caller is the Nth executor)
+//! with scoped fork-join over contiguous atom shards.  std-only — no rayon
+//! in the offline image.
+//!
+//! Design constraints the hot paths rely on:
+//!  * **Determinism.** `run`/`map` only parallelise the *computation* of
+//!    per-shard results; every reduction across shards is performed by the
+//!    caller in shard order.  Users additionally keep all cross-shard
+//!    writes disjoint, so results are bit-for-bit identical for any thread
+//!    count (the `--threads 1` vs `--threads N` invariance the engine
+//!    tests enforce).
+//!  * **Concurrent scopes.** Two threads may submit jobs at once (the
+//!    section-3.2 overlap runs PPPM and DP on different threads, both
+//!    sharding through the same pool).  Workers pull chunks from any live
+//!    job; each caller waits only for its own job.
+//!  * **No allocation on the job path** beyond one `Arc<Job>` per scope.
+//!
+//! Shard boundaries are load-balanced between calls by
+//! [`balance::ShardPlan`], a thread-granularity reuse of the paper's
+//! Algorithm 1 ring pass (see `coordinator/ringlb.rs`).
+
+pub mod balance;
+
+use std::any::Any;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased shard function. Safety: `ThreadPool::run` does not
+/// return until every shard invocation has completed, so the erased
+/// reference never outlives the closure it points to.
+#[derive(Clone, Copy)]
+struct ShardFn(&'static (dyn Fn(usize) + Sync));
+
+/// One fork-join scope: a bag of `nshards` chunks claimed by atomic
+/// increment, with a completion latch the submitting caller waits on.
+struct Job {
+    func: ShardFn,
+    nshards: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    /// first panic payload from any shard, re-raised by the caller so
+    /// the original message/location is preserved
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    latch: Mutex<()>,
+    cv: Condvar,
+}
+
+struct Shared {
+    /// live jobs; exhausted jobs are removed by their submitting caller
+    queue: Mutex<Vec<Arc<Job>>>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Persistent fork-join worker pool.  `new(1)` (or [`ThreadPool::serial`])
+/// spawns no threads and runs every shard inline on the caller.
+pub struct ThreadPool {
+    shared: Option<Arc<Shared>>,
+    handles: Vec<JoinHandle<()>>,
+    nthreads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `nthreads` total executors: `nthreads - 1` persistent
+    /// workers plus the calling thread.
+    pub fn new(nthreads: usize) -> ThreadPool {
+        let nthreads = nthreads.max(1);
+        if nthreads == 1 {
+            return ThreadPool {
+                shared: None,
+                handles: Vec::new(),
+                nthreads: 1,
+            };
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..nthreads - 1)
+            .map(|k| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("dplr-pool-{k}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            shared: Some(shared),
+            handles,
+            nthreads,
+        }
+    }
+
+    /// Single-threaded pool (no workers; everything runs inline).
+    pub fn serial() -> ThreadPool {
+        ThreadPool::new(1)
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Run `f(shard)` for every shard in `0..nshards`, in parallel across
+    /// the pool (the caller participates).  Returns after ALL shards have
+    /// completed.  Panics if any shard panicked.
+    pub fn run(&self, nshards: usize, f: &(dyn Fn(usize) + Sync)) {
+        if nshards == 0 {
+            return;
+        }
+        let shared = match &self.shared {
+            Some(sh) if nshards > 1 => sh,
+            _ => {
+                for i in 0..nshards {
+                    f(i);
+                }
+                return;
+            }
+        };
+        // Safety: see ShardFn — the job is drained and removed from the
+        // queue before this function returns.
+        let func = ShardFn(unsafe { erase(f) });
+        let job = Arc::new(Job {
+            func,
+            nshards,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            latch: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = shared.queue.lock().unwrap();
+            q.push(job.clone());
+            shared.ready.notify_all();
+        }
+        run_shards(&job); // caller works too
+        {
+            let mut g = job.latch.lock().unwrap();
+            while job.done.load(Ordering::Acquire) < nshards {
+                g = job.cv.wait(g).unwrap();
+            }
+        }
+        {
+            let mut q = shared.queue.lock().unwrap();
+            q.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Parallel map: `f(shard)` for each shard, results returned in shard
+    /// order (the deterministic-reduction building block).
+    pub fn map<T, F>(&self, nshards: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut slots: Vec<Mutex<Option<T>>> = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            slots.push(Mutex::new(None));
+        }
+        self.run(nshards, &|i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("missing shard result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(sh) = &self.shared {
+            sh.shutdown.store(true, Ordering::Release);
+            let guard = sh.queue.lock().unwrap();
+            sh.ready.notify_all();
+            drop(guard);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Erase the closure lifetime (sound: callers join before returning).
+unsafe fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> &'static (dyn Fn(usize) + Sync + 'static) {
+    std::mem::transmute(f)
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(j) = q
+                    .iter()
+                    .find(|j| j.next.load(Ordering::Relaxed) < j.nshards)
+                {
+                    break j.clone();
+                }
+                q = sh.ready.wait(q).unwrap();
+            }
+        };
+        run_shards(&job);
+    }
+}
+
+/// Claim and execute chunks of `job` until none are left.
+fn run_shards(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.nshards {
+            return;
+        }
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (job.func.0)(i))) {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let d = job.done.fetch_add(1, Ordering::AcqRel) + 1;
+        if d == job.nshards {
+            // notify under the latch so the caller cannot miss the wakeup
+            let _g = job.latch.lock().unwrap();
+            job.cv.notify_all();
+        }
+    }
+}
+
+/// Split `0..nitems` into at most `max_shards` contiguous, near-even
+/// ranges (never more ranges than items; at least one range when
+/// `nitems > 0`).
+pub fn even_shards(nitems: usize, max_shards: usize) -> Vec<Range<usize>> {
+    if nitems == 0 {
+        return Vec::new();
+    }
+    let n = max_shards.max(1).min(nitems);
+    let base = nitems / n;
+    let extra = nitems % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for s in 0..n {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ThreadPool::serial();
+        assert_eq!(pool.nthreads(), 1);
+        let out = pool.map(7, |i| i * i);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36]);
+    }
+
+    #[test]
+    fn map_returns_results_in_shard_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(100, |i| 3 * i + 1);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 3 * i + 1);
+        }
+    }
+
+    #[test]
+    fn run_executes_every_shard_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(64, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_scopes_from_two_threads() {
+        // the section-3.2 overlap pattern: two callers share one pool
+        let pool = ThreadPool::new(4);
+        std::thread::scope(|s| {
+            let pa = &pool;
+            let a = s.spawn(move || pa.map(50, |i| i as u64));
+            let b: Vec<u64> = pool.map(50, |i| 2 * i as u64);
+            let a = a.join().unwrap();
+            for i in 0..50 {
+                assert_eq!(a[i], i as u64);
+                assert_eq!(b[i], 2 * i as u64);
+            }
+        });
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let work = |i: usize| (i as f64 + 0.5).sin() * (i as f64).sqrt();
+        let serial = ThreadPool::serial().map(200, work);
+        for n in [2usize, 4, 8] {
+            let par = ThreadPool::new(n).map(200, work);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "nthreads={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn even_shards_cover_and_balance() {
+        for (n, k) in [(10usize, 3usize), (3, 8), (100, 7), (1, 1), (0, 4)] {
+            let sh = even_shards(n, k);
+            let total: usize = sh.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            if n > 0 {
+                assert_eq!(sh[0].start, 0);
+                assert_eq!(sh.last().unwrap().end, n);
+                let min = sh.iter().map(|r| r.len()).min().unwrap();
+                let max = sh.iter().map(|r| r.len()).max().unwrap();
+                assert!(max - min <= 1, "{n} items over {k}: {sh:?}");
+                for w in sh.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+}

@@ -23,8 +23,17 @@ pub mod spline;
 
 use crate::fft::{C64, Fft3d};
 use crate::md::units::KE_COULOMB;
+use crate::pool::{even_shards, ThreadPool};
 use quant::QuantSpec;
 use spline::{bspline_fourier_sq, bspline_weights};
+use std::sync::Arc;
+
+/// Fixed shard count for the reductions whose grouping affects low-order
+/// bits (charge spread, energy sum).  Keeping it constant — instead of
+/// tying it to the pool size — makes the mesh solve bit-for-bit identical
+/// for any `--threads N` (the engine's determinism contract); the pool
+/// simply executes these fixed shards with however many workers it has.
+const REDUCE_SHARDS: usize = 8;
 
 /// Precision / reduction mode of the mesh solve (Table 1 rows).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -68,6 +77,8 @@ pub struct Pppm {
     kvec: [Vec<f64>; 3],
     /// saturation / overflow counters from the quantized path
     pub quant_saturations: u64,
+    /// shared worker pool (serial by default)
+    pool: Arc<ThreadPool>,
 }
 
 impl Pppm {
@@ -114,45 +125,90 @@ impl Pppm {
             green,
             kvec,
             quant_saturations: 0,
+            pool: Arc::new(ThreadPool::serial()),
         }
+    }
+
+    /// Share a worker pool; spread, Poisson solve, the three field FFTs
+    /// and the force gather all shard across it.
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
     }
 
     /// Energy + forces on the given charged sites.
     pub fn energy_forces(&mut self, pos: &[[f64; 3]], q: &[f64]) -> (f64, Vec<[f64; 3]>) {
+        let (energy, forces, sat) = self.energy_forces_inner(pos, q);
+        self.quant_saturations += sat;
+        (energy, forces)
+    }
+
+    /// The actual solve (&self so parallel shards can borrow it); returns
+    /// the quantization saturation count separately.
+    fn energy_forces_inner(&self, pos: &[[f64; 3]], q: &[f64]) -> (f64, Vec<[f64; 3]>, u64) {
         assert_eq!(pos.len(), q.len());
         let [n1, n2, n3] = self.cfg.grid;
         let ntot = n1 * n2 * n3;
         let p = self.cfg.order;
+        let pool = &self.pool;
+        let nsites = pos.len();
+        let mut sat = 0u64;
 
-        // 1. charge assignment
-        let mut mesh = vec![C64::ZERO; ntot];
-        let mut stencils = Vec::with_capacity(pos.len());
-        for (r, qi) in pos.iter().zip(q) {
-            let st = self.stencil(r, p);
-            for &(g, w) in &st {
-                mesh[g].re += qi * w;
+        // 1a. B-spline stencils (per site, disjoint outputs)
+        let site_shards = even_shards(nsites, pool.nthreads());
+        let stencil_chunks: Vec<Vec<Vec<(usize, f64)>>> = pool.map(site_shards.len(), |k| {
+            site_shards[k].clone().map(|i| self.stencil(&pos[i], p)).collect()
+        });
+        let stencils: Vec<Vec<(usize, f64)>> = stencil_chunks.into_iter().flatten().collect();
+
+        // 1b. charge assignment: per-shard grid accumulators merged in a
+        // fixed-order reduction pass (REDUCE_SHARDS is thread-count
+        // independent, so the mesh is bit-identical for any pool size)
+        let spread_shards = even_shards(nsites, REDUCE_SHARDS);
+        let partials: Vec<Vec<f64>> = pool.map(spread_shards.len(), |k| {
+            let mut m = vec![0.0f64; ntot];
+            for i in spread_shards[k].clone() {
+                let qi = q[i];
+                for &(g, w) in &stencils[i] {
+                    m[g] += qi * w;
+                }
             }
-            stencils.push(st);
+            m
+        });
+        let mut mesh = vec![C64::ZERO; ntot];
+        for part in &partials {
+            for (mg, &v) in mesh.iter_mut().zip(part) {
+                mg.re += v;
+            }
         }
 
         // 2. forward FFT
-        self.transform(&mut mesh, true);
+        sat += self.transform(&mut mesh, true);
 
-        // 3. energy + Poisson solve
+        // 3. energy + Poisson solve over fixed grid shards
+        let grid_shards = even_shards(ntot, REDUCE_SHARDS);
+        let ephi: Vec<(f64, Vec<C64>)> = pool.map(grid_shards.len(), |k| {
+            let mut e = 0.0;
+            let mut chunk = Vec::with_capacity(grid_shards[k].len());
+            for g in grid_shards[k].clone() {
+                let gg = self.green[g];
+                e += gg * mesh[g].norm_sq();
+                // dE/dQ(grid) chain: phi_hat = 2 * Ntot * G * Q_hat (the
+                // Ntot compensates our normalised inverse FFT)
+                chunk.push(mesh[g].scale(2.0 * gg * ntot as f64));
+            }
+            (e, chunk)
+        });
         let mut energy = 0.0;
-        let mut phi = vec![C64::ZERO; ntot];
-        for g in 0..ntot {
-            let gg = self.green[g];
-            energy += gg * mesh[g].norm_sq();
-            // dE/dQ(grid) chain: phi_hat = 2 * Ntot * G * Q_hat (the Ntot
-            // compensates our normalised inverse FFT)
-            phi[g] = mesh[g].scale(2.0 * gg * ntot as f64);
+        let mut phi = Vec::with_capacity(ntot);
+        for (e, chunk) in ephi {
+            energy += e;
+            phi.extend_from_slice(&chunk);
         }
 
-        // 4. ik differentiation: three inverse FFTs -> field grids
-        let mut field = [vec![0.0f64; ntot], vec![0.0; ntot], vec![0.0; ntot]];
-        let mut scratch = vec![C64::ZERO; ntot];
-        for d in 0..3 {
+        // 4. ik differentiation: three *independent* inverse FFTs run
+        // concurrently on the pool -> field grids
+        let field: Vec<(Vec<f64>, u64)> = pool.map(3, |d| {
+            let mut scratch = vec![C64::ZERO; ntot];
             for i in 0..n1 {
                 for j in 0..n2 {
                     for k in 0..n3 {
@@ -167,26 +223,31 @@ impl Pppm {
                     }
                 }
             }
-            self.transform(&mut scratch, false);
-            for g in 0..ntot {
-                field[d][g] = scratch[g].re;
-            }
+            let s = self.transform(&mut scratch, false);
+            (scratch.iter().map(|c| c.re).collect(), s)
+        });
+        for (_, s) in &field {
+            sat += *s;
         }
 
         // 5. gather forces: F_i = q_i * sum_g w_i(g) * E_d(g)
-        let mut forces = vec![[0.0; 3]; pos.len()];
-        for (i, st) in stencils.iter().enumerate() {
-            let mut f = [0.0; 3];
-            for &(g, w) in st {
-                f[0] += w * field[0][g];
-                f[1] += w * field[1][g];
-                f[2] += w * field[2][g];
-            }
-            for d in 0..3 {
-                forces[i][d] = q[i] * f[d];
-            }
-        }
-        (energy, forces)
+        // (per-site outputs, disjoint and order-independent)
+        let force_chunks: Vec<Vec<[f64; 3]>> = pool.map(site_shards.len(), |k| {
+            site_shards[k]
+                .clone()
+                .map(|i| {
+                    let mut f = [0.0; 3];
+                    for &(g, w) in &stencils[i] {
+                        f[0] += w * field[0].0[g];
+                        f[1] += w * field[1].0[g];
+                        f[2] += w * field[2].0[g];
+                    }
+                    [q[i] * f[0], q[i] * f[1], q[i] * f[2]]
+                })
+                .collect()
+        });
+        let forces: Vec<[f64; 3]> = force_chunks.into_iter().flatten().collect();
+        (energy, forces, sat)
     }
 
     /// B-spline stencil of (grid index, weight) pairs for a position.
@@ -217,8 +278,10 @@ impl Pppm {
         out
     }
 
-    /// Apply the configured 3-D transform (fwd or inverse-normalised).
-    fn transform(&mut self, g: &mut [C64], forward: bool) {
+    /// Apply the configured 3-D transform (fwd or inverse-normalised);
+    /// returns the quantization saturation count (&self so concurrent
+    /// shards can each transform their own grid).
+    fn transform(&self, g: &mut [C64], forward: bool) -> u64 {
         match self.cfg.mode {
             MeshMode::Double => {
                 if forward {
@@ -226,6 +289,7 @@ impl Pppm {
                 } else {
                     self.fft.inverse(g);
                 }
+                0
             }
             MeshMode::F32 => {
                 // emulate single-precision FFT arithmetic: round the input,
@@ -241,11 +305,11 @@ impl Pppm {
                 for v in g.iter_mut() {
                     *v = C64::new(v.re as f32 as f64, v.im as f32 as f64);
                 }
+                0
             }
             MeshMode::QuantInt32 { nseg } => {
                 let spec = QuantSpec::default();
-                let sat = quant::quantized_fft3d(g, self.cfg.grid, nseg, forward, &spec);
-                self.quant_saturations += sat;
+                quant::quantized_fft3d(g, self.cfg.grid, nseg, forward, &spec)
             }
         }
     }

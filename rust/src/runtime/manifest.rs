@@ -41,6 +41,36 @@ pub struct Hyper {
     pub wc_clamp: f64,
 }
 
+impl Hyper {
+    /// The water-model hyper-parameters of python/compile/params.py, for
+    /// synthetic (no-artifacts) models in benches and tests.
+    pub fn water_default() -> Hyper {
+        Hyper {
+            r_cut: 6.0,
+            r_cut_smooth: 3.0,
+            sel: [48, 96],
+            embed_widths: vec![24, 48],
+            m1: 48,
+            m2: 8,
+            fit_widths: vec![240, 240, 240],
+            desc_dim: 48 * 8,
+            q_o: 6.0,
+            q_h: 1.0,
+            q_wc: -8.0,
+            alpha: 1.0,
+            bond_k: 18.0,
+            bond_r0: 0.9572,
+            angle_k: 2.5,
+            angle_t0: 1.8242,
+            bm_a_oo: 450.0,
+            bm_a_oh: 80.0,
+            bm_a_hh: 20.0,
+            bm_rho: 0.35,
+            wc_clamp: 0.05,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub hyper: Hyper,

@@ -6,13 +6,14 @@
 //! the PJRT CPU client and run it from the rust hot loop.  HLO *text* is the
 //! interchange format because xla_extension 0.5.1 rejects jax >= 0.5 protos
 //! (64-bit instruction ids) — see /opt/xla-example/README.md.
+//!
+//! The XLA runtime needs the `xla` crate and its native `xla_extension`
+//! library, which the offline image does not ship.  The real implementation
+//! is therefore gated behind the `pjrt` cargo feature; the default build
+//! uses a stub whose `open()` returns an error, so every caller that
+//! already handles a missing artifacts directory degrades the same way.
 
 pub mod manifest;
-
-use anyhow::{anyhow, bail, Context, Result};
-use manifest::{Artifact, Manifest};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 
 /// Numeric precision of an artifact set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -28,23 +29,6 @@ impl Dtype {
             Dtype::F32 => "f32",
         }
     }
-}
-
-/// One loaded-and-compiled model variant.
-struct Loaded {
-    exe: xla::PjRtLoadedExecutable,
-    #[allow(dead_code)]
-    art: Artifact,
-}
-
-/// PJRT engine: one CPU client + lazily compiled executables per artifact.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    loaded: HashMap<String, Loaded>,
-    /// cumulative executions (for perf accounting)
-    pub calls: u64,
 }
 
 /// Outputs of a dp_ef evaluation.
@@ -64,168 +48,265 @@ pub struct DwVjpOutput {
     pub f_contrib: Vec<f64>,
 }
 
-impl PjrtEngine {
-    /// Open the artifacts directory (manifest.json + *.hlo.txt).
-    pub fn open(dir: &str) -> Result<PjrtEngine> {
-        let manifest = Manifest::load(&format!("{dir}/manifest.json"))
-            .with_context(|| format!("loading manifest from {dir}"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(PjrtEngine {
-            client,
-            dir: Path::new(dir).to_path_buf(),
-            manifest,
-            loaded: HashMap::new(),
-            calls: 0,
-        })
+#[cfg(feature = "pjrt")]
+mod pjrt_xla {
+    use super::{DpOutput, Dtype, DwVjpOutput};
+    use super::manifest::{Artifact, Manifest};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// One loaded-and-compiled model variant.
+    struct Loaded {
+        exe: xla::PjRtLoadedExecutable,
+        #[allow(dead_code)]
+        art: Artifact,
     }
 
-    /// Compile (once) the artifact for `kind`/`natoms`/`dtype`.
-    pub fn ensure(&mut self, kind: &str, natoms: usize, dtype: Dtype) -> Result<()> {
-        let name = format!("{kind}_{natoms}_{}", dtype.tag());
-        if self.loaded.contains_key(&name) {
-            return Ok(());
+    /// PJRT engine: one CPU client + lazily compiled executables per artifact.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        pub manifest: Manifest,
+        loaded: HashMap<String, Loaded>,
+        /// cumulative executions (for perf accounting)
+        pub calls: u64,
+    }
+
+    impl PjrtEngine {
+        /// Open the artifacts directory (manifest.json + *.hlo.txt).
+        pub fn open(dir: &str) -> Result<PjrtEngine> {
+            let manifest = Manifest::load(&format!("{dir}/manifest.json"))
+                .with_context(|| format!("loading manifest from {dir}"))?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+            Ok(PjrtEngine {
+                client,
+                dir: Path::new(dir).to_path_buf(),
+                manifest,
+                loaded: HashMap::new(),
+                calls: 0,
+            })
         }
-        let art = self
-            .manifest
-            .find(kind, natoms, dtype.tag())
-            .ok_or_else(|| anyhow!("no artifact {name} in manifest"))?
-            .clone();
-        let path = self.dir.join(&art.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", art.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", art.file))?;
-        self.loaded.insert(name, Loaded { exe, art });
-        Ok(())
-    }
 
-    fn lit_f(&self, data: &[f64], dims: &[i64], dtype: Dtype) -> Result<xla::Literal> {
-        let lit = match dtype {
-            Dtype::F64 => xla::Literal::vec1(data),
-            Dtype::F32 => {
-                let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
-                xla::Literal::vec1(&f32s)
+        /// Compile (once) the artifact for `kind`/`natoms`/`dtype`.
+        pub fn ensure(&mut self, kind: &str, natoms: usize, dtype: Dtype) -> Result<()> {
+            let name = format!("{kind}_{natoms}_{}", dtype.tag());
+            if self.loaded.contains_key(&name) {
+                return Ok(());
             }
-        };
-        lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
-    }
-
-    fn lit_i32(&self, data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-        xla::Literal::vec1(data)
-            .reshape(dims)
-            .map_err(|e| anyhow!("reshape: {e:?}"))
-    }
-
-    fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let l = self
-            .loaded
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not loaded (call ensure)"))?;
-        self.calls += 1;
-        let result = l
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
-    }
-
-    fn out_f64(&self, lit: &xla::Literal, dtype: Dtype) -> Result<Vec<f64>> {
-        match dtype {
-            Dtype::F64 => lit.to_vec::<f64>().map_err(|e| anyhow!("{e:?}")),
-            Dtype::F32 => Ok(lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("{e:?}"))?
-                .into_iter()
-                .map(|x| x as f64)
-                .collect()),
+            let art = self
+                .manifest
+                .find(kind, natoms, dtype.tag())
+                .ok_or_else(|| anyhow!("no artifact {name} in manifest"))?
+                .clone();
+            let path = self.dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", art.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", art.file))?;
+            self.loaded.insert(name, Loaded { exe, art });
+            Ok(())
         }
-    }
 
-    /// Short-range energy + forces: runs the dp_ef artifact.
-    pub fn dp_ef(
-        &mut self,
-        coords: &[f64],
-        box_len: [f64; 3],
-        nlist: &[i32],
-        dtype: Dtype,
-    ) -> Result<DpOutput> {
-        let natoms = coords.len() / 3;
-        self.ensure("dp_ef", natoms, dtype)?;
-        let name = format!("dp_ef_{natoms}_{}", dtype.tag());
-        let sel = (nlist.len() / natoms) as i64;
-        let inputs = vec![
-            self.lit_f(coords, &[natoms as i64, 3], dtype)?,
-            self.lit_f(&box_len, &[3], dtype)?,
-            self.lit_i32(nlist, &[natoms as i64, sel])?,
-        ];
-        let out = self.run(&name, &inputs)?;
-        if out.len() != 2 {
-            bail!("dp_ef returned {} outputs", out.len());
+        fn lit_f(&self, data: &[f64], dims: &[i64], dtype: Dtype) -> Result<xla::Literal> {
+            let lit = match dtype {
+                Dtype::F64 => xla::Literal::vec1(data),
+                Dtype::F32 => {
+                    let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                    xla::Literal::vec1(&f32s)
+                }
+            };
+            lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
         }
-        let e = self.out_f64(&out[0], dtype)?;
-        let f = self.out_f64(&out[1], dtype)?;
-        Ok(DpOutput {
-            energy: e[0],
-            forces: f,
-        })
-    }
 
-    /// DW forward only: predicted WC displacements (pre-PPPM phase).
-    pub fn dw_fwd(
-        &mut self,
-        coords: &[f64],
-        box_len: [f64; 3],
-        nlist_o: &[i32],
-        dtype: Dtype,
-    ) -> Result<Vec<f64>> {
-        let natoms = coords.len() / 3;
-        let nmol = natoms / 3;
-        self.ensure("dw_fwd", natoms, dtype)?;
-        let name = format!("dw_fwd_{natoms}_{}", dtype.tag());
-        let sel = (nlist_o.len() / nmol) as i64;
-        let inputs = vec![
-            self.lit_f(coords, &[natoms as i64, 3], dtype)?,
-            self.lit_f(&box_len, &[3], dtype)?,
-            self.lit_i32(nlist_o, &[nmol as i64, sel])?,
-        ];
-        let out = self.run(&name, &inputs)?;
-        self.out_f64(&out[0], dtype)
-    }
-
-    /// DW VJP: delta + long-range force contribution given WC forces.
-    pub fn dw_vjp(
-        &mut self,
-        coords: &[f64],
-        box_len: [f64; 3],
-        nlist_o: &[i32],
-        f_wc: &[f64],
-        dtype: Dtype,
-    ) -> Result<DwVjpOutput> {
-        let natoms = coords.len() / 3;
-        let nmol = natoms / 3;
-        self.ensure("dw_vjp", natoms, dtype)?;
-        let name = format!("dw_vjp_{natoms}_{}", dtype.tag());
-        let sel = (nlist_o.len() / nmol) as i64;
-        let inputs = vec![
-            self.lit_f(coords, &[natoms as i64, 3], dtype)?,
-            self.lit_f(&box_len, &[3], dtype)?,
-            self.lit_i32(nlist_o, &[nmol as i64, sel])?,
-            self.lit_f(f_wc, &[nmol as i64, 3], dtype)?,
-        ];
-        let out = self.run(&name, &inputs)?;
-        if out.len() != 2 {
-            bail!("dw_vjp returned {} outputs", out.len());
+        fn lit_i32(&self, data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))
         }
-        Ok(DwVjpOutput {
-            delta: self.out_f64(&out[0], dtype)?,
-            f_contrib: self.out_f64(&out[1], dtype)?,
-        })
+
+        fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let l = self
+                .loaded
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name} not loaded (call ensure)"))?;
+            self.calls += 1;
+            let result = l
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+            result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+        }
+
+        fn out_f64(&self, lit: &xla::Literal, dtype: Dtype) -> Result<Vec<f64>> {
+            match dtype {
+                Dtype::F64 => lit.to_vec::<f64>().map_err(|e| anyhow!("{e:?}")),
+                Dtype::F32 => Ok(lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .into_iter()
+                    .map(|x| x as f64)
+                    .collect()),
+            }
+        }
+
+        /// Short-range energy + forces: runs the dp_ef artifact.
+        pub fn dp_ef(
+            &mut self,
+            coords: &[f64],
+            box_len: [f64; 3],
+            nlist: &[i32],
+            dtype: Dtype,
+        ) -> Result<DpOutput> {
+            let natoms = coords.len() / 3;
+            self.ensure("dp_ef", natoms, dtype)?;
+            let name = format!("dp_ef_{natoms}_{}", dtype.tag());
+            let sel = (nlist.len() / natoms) as i64;
+            let inputs = vec![
+                self.lit_f(coords, &[natoms as i64, 3], dtype)?,
+                self.lit_f(&box_len, &[3], dtype)?,
+                self.lit_i32(nlist, &[natoms as i64, sel])?,
+            ];
+            let out = self.run(&name, &inputs)?;
+            if out.len() != 2 {
+                bail!("dp_ef returned {} outputs", out.len());
+            }
+            let e = self.out_f64(&out[0], dtype)?;
+            let f = self.out_f64(&out[1], dtype)?;
+            Ok(DpOutput {
+                energy: e[0],
+                forces: f,
+            })
+        }
+
+        /// DW forward only: predicted WC displacements (pre-PPPM phase).
+        pub fn dw_fwd(
+            &mut self,
+            coords: &[f64],
+            box_len: [f64; 3],
+            nlist_o: &[i32],
+            dtype: Dtype,
+        ) -> Result<Vec<f64>> {
+            let natoms = coords.len() / 3;
+            let nmol = natoms / 3;
+            self.ensure("dw_fwd", natoms, dtype)?;
+            let name = format!("dw_fwd_{natoms}_{}", dtype.tag());
+            let sel = (nlist_o.len() / nmol) as i64;
+            let inputs = vec![
+                self.lit_f(coords, &[natoms as i64, 3], dtype)?,
+                self.lit_f(&box_len, &[3], dtype)?,
+                self.lit_i32(nlist_o, &[nmol as i64, sel])?,
+            ];
+            let out = self.run(&name, &inputs)?;
+            self.out_f64(&out[0], dtype)
+        }
+
+        /// DW VJP: delta + long-range force contribution given WC forces.
+        pub fn dw_vjp(
+            &mut self,
+            coords: &[f64],
+            box_len: [f64; 3],
+            nlist_o: &[i32],
+            f_wc: &[f64],
+            dtype: Dtype,
+        ) -> Result<DwVjpOutput> {
+            let natoms = coords.len() / 3;
+            let nmol = natoms / 3;
+            self.ensure("dw_vjp", natoms, dtype)?;
+            let name = format!("dw_vjp_{natoms}_{}", dtype.tag());
+            let sel = (nlist_o.len() / nmol) as i64;
+            let inputs = vec![
+                self.lit_f(coords, &[natoms as i64, 3], dtype)?,
+                self.lit_f(&box_len, &[3], dtype)?,
+                self.lit_i32(nlist_o, &[nmol as i64, sel])?,
+                self.lit_f(f_wc, &[nmol as i64, 3], dtype)?,
+            ];
+            let out = self.run(&name, &inputs)?;
+            if out.len() != 2 {
+                bail!("dw_vjp returned {} outputs", out.len());
+            }
+            Ok(DwVjpOutput {
+                delta: self.out_f64(&out[0], dtype)?,
+                f_contrib: self.out_f64(&out[1], dtype)?,
+            })
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_xla::PjrtEngine;
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use super::manifest::Manifest;
+    use super::{DpOutput, Dtype, DwVjpOutput};
+    use anyhow::{bail, Result};
+
+    /// API-compatible stand-in for the XLA-backed engine.  `open()` always
+    /// errors, so an instance can never exist; callers treat it like a
+    /// missing artifacts directory.
+    pub struct PjrtEngine {
+        pub manifest: Manifest,
+        pub calls: u64,
+        _unconstructible: (),
+    }
+
+    impl PjrtEngine {
+        pub fn open(_dir: &str) -> Result<PjrtEngine> {
+            bail!(
+                "PJRT backend unavailable: dplr was built without the `pjrt` \
+                 feature (the xla crate / xla_extension runtime is not \
+                 present in this environment)"
+            )
+        }
+
+        fn unavailable<T>(&self) -> Result<T> {
+            bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+        }
+
+        pub fn ensure(&mut self, _kind: &str, _natoms: usize, _dtype: Dtype) -> Result<()> {
+            self.unavailable()
+        }
+
+        pub fn dp_ef(
+            &mut self,
+            _coords: &[f64],
+            _box_len: [f64; 3],
+            _nlist: &[i32],
+            _dtype: Dtype,
+        ) -> Result<DpOutput> {
+            self.unavailable()
+        }
+
+        pub fn dw_fwd(
+            &mut self,
+            _coords: &[f64],
+            _box_len: [f64; 3],
+            _nlist_o: &[i32],
+            _dtype: Dtype,
+        ) -> Result<Vec<f64>> {
+            self.unavailable()
+        }
+
+        pub fn dw_vjp(
+            &mut self,
+            _coords: &[f64],
+            _box_len: [f64; 3],
+            _nlist_o: &[i32],
+            _f_wc: &[f64],
+            _dtype: Dtype,
+        ) -> Result<DwVjpOutput> {
+            self.unavailable()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::PjrtEngine;

@@ -1,0 +1,166 @@
+//! Thread-count invariance: the pool-sharded hot paths (DP, DW, PPPM,
+//! neighbour build, full engine steps) must produce bit-for-bit identical
+//! results at `threads = 1` and `threads = N`.  Shard boundaries only
+//! partition the computation; all reductions run in global item order, so
+//! nothing here is a tolerance check — equality is exact.
+//!
+//! Uses synthetic seeded weights (same architecture/init as the python
+//! export) so the suite runs from a clean checkout, no artifacts needed.
+
+use dplr::engine::{Backend, DplrEngine, EngineConfig};
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::neighbor::{build_cells_par, build_exact, NlistParams};
+use dplr::pool::ThreadPool;
+use dplr::pppm::{Pppm, PppmConfig};
+use dplr::util::rng::Rng;
+use std::sync::Arc;
+
+fn bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: {x:?} vs {y:?} differ"
+        );
+    }
+}
+
+fn model_with_threads(threads: usize) -> NativeModel {
+    let mut m = NativeModel::synthetic(7);
+    m.set_pool(Arc::new(ThreadPool::new(threads)));
+    m
+}
+
+/// Shared inputs: a 64-molecule water box with full + O-centre nlists.
+fn inputs() -> (Vec<f64>, [f64; 3], Vec<i32>, Vec<i32>, usize) {
+    let sys = water_box(64, 2025);
+    let p = NlistParams::default();
+    let centres: Vec<usize> = (0..sys.natoms()).collect();
+    let nlist = build_exact(&sys, &centres, &p).data;
+    let o_centres: Vec<usize> = (0..sys.nmol).collect();
+    let nlist_o = build_exact(&sys, &o_centres, &p).data;
+    (sys.coords_flat(), sys.box_len, nlist, nlist_o, sys.nmol)
+}
+
+#[test]
+fn dp_ef_invariant_under_thread_count() {
+    let (coords, box_len, nlist, _, _) = inputs();
+    let m1 = model_with_threads(1);
+    let (e1, f1) = m1.dp_ef(&coords, box_len, &nlist);
+    for threads in [2usize, 4] {
+        let mn = model_with_threads(threads);
+        let (en, fn_) = mn.dp_ef(&coords, box_len, &nlist);
+        assert_eq!(e1.to_bits(), en.to_bits(), "energy at threads={threads}");
+        bits_eq(&f1, &fn_, "dp forces");
+    }
+}
+
+#[test]
+fn dp_ef_stays_invariant_after_ring_rebalancing() {
+    // repeated calls move shard boundaries (ring-LB); results must not
+    let (coords, box_len, nlist, _, _) = inputs();
+    let m1 = model_with_threads(1);
+    let m4 = model_with_threads(4);
+    let (e_ref, f_ref) = m1.dp_ef(&coords, box_len, &nlist);
+    for round in 0..5 {
+        let (e, f) = m4.dp_ef(&coords, box_len, &nlist);
+        assert_eq!(e_ref.to_bits(), e.to_bits(), "round {round}");
+        bits_eq(&f_ref, &f, "dp forces after rebalance");
+    }
+}
+
+#[test]
+fn dw_fwd_and_vjp_invariant_under_thread_count() {
+    let (coords, box_len, _, nlist_o, nmol) = inputs();
+    let mut rng = Rng::new(3);
+    let f_wc: Vec<f64> = (0..nmol * 3).map(|_| 0.3 * rng.normal()).collect();
+    let m1 = model_with_threads(1);
+    let d1 = m1.dw_fwd(&coords, box_len, &nlist_o);
+    let (dv1, fc1) = m1.dw_vjp(&coords, box_len, &nlist_o, &f_wc);
+    for threads in [2usize, 4] {
+        let mn = model_with_threads(threads);
+        let dn = mn.dw_fwd(&coords, box_len, &nlist_o);
+        bits_eq(&d1, &dn, "dw_fwd delta");
+        let (dvn, fcn) = mn.dw_vjp(&coords, box_len, &nlist_o, &f_wc);
+        bits_eq(&dv1, &dvn, "dw_vjp delta");
+        bits_eq(&fc1, &fcn, "dw_vjp f_contrib");
+    }
+}
+
+#[test]
+fn pppm_invariant_under_thread_count() {
+    let sys = water_box(32, 11);
+    let mut pos = sys.pos.clone();
+    let mut q: Vec<f64> = (0..sys.natoms())
+        .map(|i| if i < sys.nmol { 6.0 } else { 1.0 })
+        .collect();
+    for n in 0..sys.nmol {
+        let mut w = sys.pos[n];
+        w[0] += 0.08;
+        pos.push(w);
+        q.push(-8.0);
+    }
+    let mut p1 = Pppm::new(PppmConfig::new([16, 16, 16], 5, 0.35), sys.box_len);
+    p1.set_pool(Arc::new(ThreadPool::new(1)));
+    let (e1, f1) = p1.energy_forces(&pos, &q);
+    for threads in [2usize, 4] {
+        let mut pn = Pppm::new(PppmConfig::new([16, 16, 16], 5, 0.35), sys.box_len);
+        pn.set_pool(Arc::new(ThreadPool::new(threads)));
+        let (en, fnn) = pn.energy_forces(&pos, &q);
+        assert_eq!(e1.to_bits(), en.to_bits(), "pppm E at threads={threads}");
+        for (i, (a, b)) in f1.iter().zip(&fnn).enumerate() {
+            for d in 0..3 {
+                assert_eq!(a[d].to_bits(), b[d].to_bits(), "pppm F[{i}][{d}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn build_cells_parallel_matches_exact_on_64_molecules() {
+    let sys = water_box(64, 42);
+    let p = NlistParams::default();
+    let centres: Vec<usize> = (0..sys.natoms()).collect();
+    let exact = build_exact(&sys, &centres, &p);
+    let pool = ThreadPool::new(4);
+    let cells = build_cells_par(&sys, &centres, &p, &pool);
+    for i in 0..sys.natoms() {
+        let mut ra = exact.row(i).to_vec();
+        let mut rb = cells.row(i).to_vec();
+        ra.sort();
+        rb.sort();
+        assert_eq!(ra, rb, "row {i}");
+    }
+}
+
+#[test]
+fn engine_trajectory_bit_identical_across_thread_counts() {
+    // the acceptance check of the `--threads` flag: full MD steps (nlist +
+    // DW + PPPM + DP + integrate) agree bit-for-bit at 1 vs 4 threads
+    let run = |threads: usize| -> Vec<(u64, u64, u64)> {
+        let mut sys = water_box(27, 5);
+        let mut rng = Rng::new(9);
+        sys.thermalize(300.0, &mut rng);
+        let mut cfg = EngineConfig::default_for(sys.box_len, 0.35);
+        cfg.dt_fs = 0.5; // conservative step: fresh lattice box, no quench
+        cfg.threads = threads;
+        let backend = Backend::Native(NativeModel::synthetic(7));
+        let mut eng = DplrEngine::new(sys, cfg, backend);
+        let mut trace = Vec::new();
+        for _ in 0..5 {
+            eng.step().expect("step");
+            let o = eng.last_obs.unwrap();
+            trace.push((
+                o.e_sr.to_bits(),
+                o.e_gt.to_bits(),
+                o.conserved.to_bits(),
+            ));
+        }
+        trace
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert_eq!(t1, t4, "trajectories diverged between 1 and 4 threads");
+}
