@@ -1,8 +1,91 @@
-//! cargo bench target regenerating Fig 8 (distributed FFT comparison).
+//! cargo bench target regenerating Fig 8 (distributed FFT comparison),
+//! plus a host-FFT section measuring the real [`Fft3d`] forward/inverse
+//! transforms with the pool-parallel line batching: `--threads N` sets
+//! the pool size, and the printed speedup is the acceptance signal that
+//! the *forward* FFT now scales with the pool like the inverse field
+//! transforms always did.
+//!
+//! Flags: `--quick` (CI configuration: fewer reps, skip the model table),
+//! `--json PATH` writes `{"bench": "fig8_fft", "results": {...}}` for the
+//! bench-regression job.
 use dplr::config::MachineConfig;
 use dplr::experiments::fig8_fft as f8;
+use dplr::fft::{C64, Fft3d, Fft3dScratch};
+use dplr::pool::ThreadPool;
+use dplr::util::args::Args;
+use dplr::util::json::Json;
+use dplr::util::rng::Rng;
+use dplr::util::stats::{summarize, time_reps};
+use std::collections::BTreeMap;
 
 fn main() {
-    let rows = f8::run(&MachineConfig::default());
-    f8::print_rows(&rows);
+    let args = Args::from_env();
+    let nthreads = args
+        .usize_or("threads", 4)
+        .expect("--threads expects an integer")
+        .max(1);
+    let quick = args.bool("quick");
+    let reps = if quick { 3 } else { 7 };
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+
+    if !quick {
+        let rows = f8::run(&MachineConfig::default());
+        f8::print_rows(&rows);
+    }
+
+    println!("\n=== host 3-D FFT: line-parallel forward/inverse vs --threads ===");
+    for (tag, dims) in [("32", [32usize, 32, 32]), ("mixed", [12, 18, 12])] {
+        let plan = Fft3d::new(dims);
+        let n = plan.len();
+        let mut rng = Rng::new(2025 + n as u64);
+        let base: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut t1 = 0.0;
+        for threads in [1usize, nthreads] {
+            let pool = ThreadPool::new(threads);
+            let mut scratch = Fft3dScratch::default();
+            let mut grid = base.clone();
+            // warm the scratch, then time forward+inverse round trips
+            plan.forward_par(&mut grid, &pool, &mut scratch);
+            plan.inverse_par(&mut grid, &pool, &mut scratch);
+            let tf = summarize(&time_reps(1, reps, || {
+                plan.forward_par(&mut grid, &pool, &mut scratch);
+            }))
+            .p50;
+            let ti = summarize(&time_reps(1, reps, || {
+                plan.inverse_par(&mut grid, &pool, &mut scratch);
+            }))
+            .p50;
+            if threads == 1 {
+                t1 = tf;
+                results.insert(format!("fft_fwd_{tag}_1t"), Json::Num(tf));
+                results.insert(format!("fft_inv_{tag}_1t"), Json::Num(ti));
+            } else {
+                results.insert(format!("fft_fwd_{tag}_nt"), Json::Num(tf));
+                results.insert(format!("fft_inv_{tag}_nt"), Json::Num(ti));
+            }
+            println!(
+                "{:>9} fwd, {threads:>2} thread(s): {:8.3} ms   speedup {:.2}x   (inv {:8.3} ms)",
+                format!("{}x{}x{}", dims[0], dims[1], dims[2]),
+                tf * 1e3,
+                t1 / tf,
+                ti * 1e3,
+            );
+            if threads == 1 && nthreads == 1 {
+                break;
+            }
+        }
+    }
+
+    if let Some(path) = args.str_opt("json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("fig8_fft".to_string())),
+            ("threads", Json::Num(nthreads as f64)),
+            ("quick", Json::Bool(quick)),
+            ("results", Json::Obj(results)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty()).expect("writing bench json");
+        println!("\nwrote {path}");
+    }
 }

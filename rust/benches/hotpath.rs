@@ -4,8 +4,12 @@
 //! (feeds EXPERIMENTS.md section Perf).
 //!
 //! Flags: `--threads N` (default 4) sets the parallel pool size for the
-//! scaling section.  Runs with artifacts when present, otherwise with
-//! synthetic seeded weights (same architecture).
+//! scaling section; `--quick` shrinks the boxes/reps to the deterministic
+//! CI configuration; `--json PATH` writes the p50 timings as
+//! `{"bench": "hotpath", "results": {...}}` for the bench-regression job
+//! (compared against BENCH_baseline.json by scripts/bench_compare.py).
+//! Runs with artifacts when present, otherwise with synthetic seeded
+//! weights (same architecture).
 use dplr::md::water::water_box;
 use dplr::native::NativeModel;
 use dplr::neighbor::{build_cells_par, build_exact, NlistParams};
@@ -14,7 +18,9 @@ use dplr::pppm::{Pppm, PppmConfig};
 use dplr::runtime::manifest::artifacts_dir;
 use dplr::runtime::{Dtype, PjrtEngine};
 use dplr::util::args::Args;
+use dplr::util::json::Json;
 use dplr::util::stats::{summarize, time_reps};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 fn main() {
@@ -23,7 +29,12 @@ fn main() {
         .usize_or("threads", 4)
         .expect("--threads expects an integer")
         .max(1);
-    let reps = 5;
+    let quick = args.bool("quick");
+    let reps = if quick { 3 } else { 5 };
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    let mut record = |name: &str, secs: f64| {
+        results.insert(name.to_string(), Json::Num(secs));
+    };
     // one artifact load shared by every section (weights are identical;
     // only the pool changes between scaling runs)
     let mut native = match NativeModel::load(&artifacts_dir()) {
@@ -34,8 +45,8 @@ fn main() {
         }
     };
 
-    // ---- per-kernel costs on the 564-atom headline box ----
-    let nmol = 188;
+    // ---- per-kernel costs on the headline box ----
+    let nmol = if quick { 64 } else { 188 };
     let sys = water_box(nmol, 99);
     let natoms = sys.natoms();
     let coords = sys.coords_flat();
@@ -46,68 +57,79 @@ fn main() {
     let nlist_o = build_exact(&sys, &o_centres, &p).data;
     let box_len = sys.box_len;
 
-    println!("=== hot-path microbenchmarks (564-atom water, 1 thread) ===");
+    println!("=== hot-path microbenchmarks ({natoms}-atom water, 1 thread) ===");
     let t = summarize(&time_reps(2, reps, || {
         let _ = native.dp_ef(&coords, box_len, &nlist);
     }));
     println!("native dp_ef        : {:8.2} ms (p50)", t.p50 * 1e3);
+    record("dp_ef", t.p50);
     let t = summarize(&time_reps(2, reps, || {
         let _ = native.dw_fwd(&coords, box_len, &nlist_o);
     }));
     println!("native dw_fwd       : {:8.2} ms", t.p50 * 1e3);
+    record("dw_fwd", t.p50);
     let fwc = vec![0.1; nmol * 3];
     let t = summarize(&time_reps(2, reps, || {
         let _ = native.dw_vjp(&coords, box_len, &nlist_o, &fwc);
     }));
     println!("native dw_vjp       : {:8.2} ms", t.p50 * 1e3);
+    record("dw_vjp", t.p50);
 
-    match PjrtEngine::open(&artifacts_dir()) {
-        Ok(mut pjrt) => {
-            pjrt.ensure("dp_ef", natoms, Dtype::F64).unwrap();
-            let t = summarize(&time_reps(2, reps, || {
-                let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap();
-            }));
-            println!("pjrt dp_ef (f64)    : {:8.2} ms", t.p50 * 1e3);
-            pjrt.ensure("dp_ef", natoms, Dtype::F32).unwrap();
-            let t = summarize(&time_reps(2, reps, || {
-                let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap();
-            }));
-            println!("pjrt dp_ef (f32)    : {:8.2} ms", t.p50 * 1e3);
+    if !quick {
+        match PjrtEngine::open(&artifacts_dir()) {
+            Ok(mut pjrt) => {
+                pjrt.ensure("dp_ef", natoms, Dtype::F64).unwrap();
+                let t = summarize(&time_reps(2, reps, || {
+                    let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F64).unwrap();
+                }));
+                println!("pjrt dp_ef (f64)    : {:8.2} ms", t.p50 * 1e3);
+                pjrt.ensure("dp_ef", natoms, Dtype::F32).unwrap();
+                let t = summarize(&time_reps(2, reps, || {
+                    let _ = pjrt.dp_ef(&coords, box_len, &nlist, Dtype::F32).unwrap();
+                }));
+                println!("pjrt dp_ef (f32)    : {:8.2} ms", t.p50 * 1e3);
+            }
+            Err(_) => println!("pjrt dp_ef          : skipped (pjrt backend unavailable)"),
         }
-        Err(_) => println!("pjrt dp_ef          : skipped (pjrt backend unavailable)"),
     }
 
-    // PPPM: 564 ions + 188 WCs on a 32^3 mesh
+    // PPPM: ions + WCs, steady state through the zero-allocation entry
+    // point (scratch + output buffers reused across reps, as in the engine)
     let mut sites: Vec<[f64; 3]> = sys.pos.clone();
     let mut q: Vec<f64> = (0..natoms).map(|i| if i < nmol { 6.0 } else { 1.0 }).collect();
     for n in 0..nmol {
         sites.push(sys.pos[n]);
         q.push(-8.0);
     }
+    let mut fout: Vec<[f64; 3]> = Vec::new();
     let mut pppm = Pppm::new(PppmConfig::new([32, 32, 32], 5, 0.3), box_len);
     let t = summarize(&time_reps(2, reps, || {
-        let _ = pppm.energy_forces(&sites, &q);
+        let _ = pppm.energy_forces_into(&sites, &q, &mut fout);
     }));
     println!("pppm 32^3 (4 FFTs)  : {:8.2} ms", t.p50 * 1e3);
+    record("pppm_32", t.p50);
     let mut pppm = Pppm::new(PppmConfig::new([12, 18, 12], 5, 0.3), box_len);
     let t = summarize(&time_reps(2, reps, || {
-        let _ = pppm.energy_forces(&sites, &q);
+        let _ = pppm.energy_forces_into(&sites, &q, &mut fout);
     }));
     println!("pppm 12x18x12       : {:8.2} ms", t.p50 * 1e3);
+    record("pppm_mixed", t.p50);
 
     // neighbour-list builders
     let t = summarize(&time_reps(2, reps, || {
         let _ = build_exact(&sys, &centres, &p);
     }));
-    println!("nlist exact (564)   : {:8.2} ms", t.p50 * 1e3);
+    println!("nlist exact         : {:8.2} ms", t.p50 * 1e3);
+    record("nlist_exact", t.p50);
     let serial = ThreadPool::serial();
     let t = summarize(&time_reps(2, reps, || {
         let _ = build_cells_par(&sys, &centres, &p, &serial);
     }));
-    println!("nlist cells (564)   : {:8.2} ms", t.p50 * 1e3);
+    println!("nlist cells         : {:8.2} ms", t.p50 * 1e3);
+    record("nlist_cells", t.p50);
 
-    // ---- thread scaling: combined DP + PPPM step on a 256-molecule box ----
-    let nmol = 256;
+    // ---- thread scaling: combined DP + PPPM step ----
+    let nmol = if quick { 64 } else { 256 };
     let sys = water_box(nmol, 7);
     let natoms = sys.natoms();
     let coords = sys.coords_flat();
@@ -120,20 +142,24 @@ fn main() {
         sites.push(sys.pos[n]);
         q.push(-8.0);
     }
-    println!("\n=== thread scaling: DP + PPPM combined step (256-molecule box) ===");
+    println!("\n=== thread scaling: DP + PPPM combined step ({nmol}-molecule box) ===");
     let mut t1 = 0.0;
     for threads in [1usize, nthreads] {
         let pool = Arc::new(ThreadPool::new(threads));
         native.set_pool(pool.clone());
         let mut pppm = Pppm::new(PppmConfig::new([32, 32, 32], 5, 0.3), box_len);
         pppm.set_pool(pool.clone());
+        let mut fout: Vec<[f64; 3]> = Vec::new();
         let t = summarize(&time_reps(1, reps, || {
             let _ = native.dp_ef(&coords, box_len, &nlist);
-            let _ = pppm.energy_forces(&sites, &q);
+            let _ = pppm.energy_forces_into(&sites, &q, &mut fout);
         }))
         .p50;
         if threads == 1 {
             t1 = t;
+            record("dp_pppm_1t", t);
+        } else {
+            record("dp_pppm_nt", t);
         }
         println!(
             "dp+pppm, {threads:>2} thread(s): {:8.2} ms   speedup {:.2}x",
@@ -154,6 +180,9 @@ fn main() {
         .p50;
         if threads == 1 {
             tn1 = t;
+            record("nlist_cells_1t", t);
+        } else {
+            record("nlist_cells_nt", t);
         }
         println!(
             "nlist cells, {threads:>2} thread(s): {:6.2} ms   speedup {:.2}x",
@@ -163,5 +192,16 @@ fn main() {
         if threads == 1 && nthreads == 1 {
             break;
         }
+    }
+
+    if let Some(path) = args.str_opt("json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("hotpath".to_string())),
+            ("threads", Json::Num(nthreads as f64)),
+            ("quick", Json::Bool(quick)),
+            ("results", Json::Obj(results)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty()).expect("writing bench json");
+        println!("\nwrote {path}");
     }
 }

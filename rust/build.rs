@@ -1,0 +1,14 @@
+//! Emits the `xla_runtime` cfg when the build environment vendors the
+//! `xla` crate (signalled by DPLR_XLA=1; see src/runtime/mod.rs and the
+//! `pjrt` feature notes in Cargo.toml).  The `pjrt` feature alone selects
+//! the API surface only — without this cfg the stub backend is compiled,
+//! so `cargo check --features pjrt` works in offline environments where
+//! the xla dependency cannot exist.
+
+fn main() {
+    println!("cargo:rerun-if-env-changed=DPLR_XLA");
+    println!("cargo:rustc-check-cfg=cfg(xla_runtime)");
+    if std::env::var("DPLR_XLA").map(|v| v == "1").unwrap_or(false) {
+        println!("cargo:rustc-cfg=xla_runtime");
+    }
+}

@@ -125,6 +125,14 @@ impl EngineConfig {
     pub fn default_for(box_len: [f64; 3], alpha: f64) -> EngineConfig {
         // ~2 grid points per Angstrom, rounded to even
         let grid = box_len.map(|l| (((l * 1.6).round() as usize) / 2 * 2).max(8));
+        // DPLR_THREADS lets whole test/bench suites run at a different pool
+        // size without touching call sites (CI exercises 1 and 4; results
+        // are bit-identical either way per the determinism contract)
+        let threads = std::env::var("DPLR_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1);
         EngineConfig {
             dt_fs: 1.0,
             target_t: 300.0,
@@ -133,7 +141,7 @@ impl EngineConfig {
             overlap: false,
             nlist: NlistParams::default(),
             nlist_max_age: 50,
-            threads: 1,
+            threads,
         }
     }
 }
@@ -152,6 +160,16 @@ pub struct DplrEngine {
     nh: Option<NoseHoover>,
     /// forces from the previous evaluation (for the second Verlet kick)
     forces: Vec<[f64; 3]>,
+    /// persistent per-step buffers (ion+WC sites, their charges, the PPPM
+    /// site forces and the DW-VJP seed): reused so the k-space path does
+    /// no per-step heap allocation after the first evaluation
+    sites: Vec<[f64; 3]>,
+    charges: Vec<f64>,
+    site_forces: Vec<[f64; 3]>,
+    f_wc: Vec<f64>,
+    /// spare combined-force buffer: ping-pongs with `forces` through
+    /// `step()` so `evaluate_forces` never allocates its output either
+    fbuf: Vec<[f64; 3]>,
     pub steps_done: u64,
     pub last_obs: Option<StepObservables>,
 }
@@ -181,6 +199,11 @@ impl DplrEngine {
             nlist: None,
             nlist_o: None,
             forces: vec![[0.0; 3]; natoms],
+            sites: Vec::new(),
+            charges: Vec::new(),
+            site_forces: Vec::new(),
+            f_wc: Vec::new(),
+            fbuf: Vec::new(),
             steps_done: 0,
             last_obs: None,
         }
@@ -230,73 +253,84 @@ impl DplrEngine {
         let delta = self.backend.dw_fwd(&coords, box_len, nlist_o)?;
         times.dw_fwd += t.elapsed().as_secs_f64();
 
-        // site set: ions then WCs
-        let mut sites: Vec<[f64; 3]> = Vec::with_capacity(natoms + nmol);
-        let mut charges = Vec::with_capacity(natoms + nmol);
+        // site set: ions then WCs (persistent buffers; clear + extend keep
+        // capacity, so steady-state steps allocate nothing here)
+        self.sites.clear();
+        self.charges.clear();
+        self.sites.reserve(natoms + nmol);
+        self.charges.reserve(natoms + nmol);
         for i in 0..natoms {
-            sites.push([coords[3 * i], coords[3 * i + 1], coords[3 * i + 2]]);
-            charges.push(if i < nmol { Q_O } else { Q_H });
+            self.sites
+                .push([coords[3 * i], coords[3 * i + 1], coords[3 * i + 2]]);
+            self.charges.push(if i < nmol { Q_O } else { Q_H });
         }
         for n in 0..nmol {
-            sites.push([
+            self.sites.push([
                 coords[3 * n] + delta[3 * n],
                 coords[3 * n + 1] + delta[3 * n + 1],
                 coords[3 * n + 2] + delta[3 * n + 2],
             ]);
-            charges.push(Q_WC);
+            self.charges.push(Q_WC);
         }
 
         // --- PPPM || DP (the section 3.2 overlap, on real threads) ---
-        let (kspace_out, dp_out, t_k, t_dp);
+        // PPPM writes its site forces into the persistent self.site_forces
+        // through the zero-allocation energy_forces_into entry point.
+        let (e_gt, dp_out, t_k, t_dp);
         if self.cfg.overlap {
             let pppm = &mut self.pppm;
+            let site_forces = &mut self.site_forces;
             let backend = &self.backend;
-            let (sites_ref, charges_ref) = (&sites, &charges);
+            let (sites_ref, charges_ref) = (&self.sites, &self.charges);
             let (coords_ref, nlist_ref) = (&coords, nlist);
             let result = std::thread::scope(|s| {
                 // dedicated long-range thread (the "1 core of rank 3")
                 let h_k = s.spawn(move || {
                     let t = Instant::now();
-                    let out = pppm.energy_forces(sites_ref, charges_ref);
-                    (out, t.elapsed().as_secs_f64())
+                    let e = pppm.energy_forces_into(sites_ref, charges_ref, site_forces);
+                    (e, t.elapsed().as_secs_f64())
                 });
                 // short-range on the main thread (the other 47 cores)
                 let t = Instant::now();
                 let dp = backend.dp_ef(coords_ref, box_len, nlist_ref);
                 let t_dp = t.elapsed().as_secs_f64();
-                let (k, t_k) = h_k.join().expect("pppm thread");
-                (k, dp, t_k, t_dp)
+                let (e, t_k) = h_k.join().expect("pppm thread");
+                (e, dp, t_k, t_dp)
             });
-            (kspace_out, dp_out, t_k, t_dp) = result;
+            (e_gt, dp_out, t_k, t_dp) = result;
         } else {
             let t = Instant::now();
-            let k = self.pppm.energy_forces(&sites, &charges);
+            let e = self
+                .pppm
+                .energy_forces_into(&self.sites, &self.charges, &mut self.site_forces);
             t_k = t.elapsed().as_secs_f64();
             let t = Instant::now();
             dp_out = self.backend.dp_ef(&coords, box_len, nlist);
             t_dp = t.elapsed().as_secs_f64();
-            kspace_out = k;
+            e_gt = e;
         }
         times.kspace += t_k;
         times.dp_all += t_dp;
-        let (e_gt, f_sites) = kspace_out;
+        let f_sites = &self.site_forces;
         let (e_sr, f_sr) = dp_out?;
 
         // --- DW backward: chain WC forces into atomic forces (Eq. 6) ---
         let t = Instant::now();
-        let mut f_wc = vec![0.0; nmol * 3];
+        self.f_wc.resize(nmol * 3, 0.0);
         for n in 0..nmol {
             for d in 0..3 {
-                f_wc[3 * n + d] = f_sites[natoms + n][d];
+                self.f_wc[3 * n + d] = f_sites[natoms + n][d];
             }
         }
-        let (_, f_contrib) = self.backend.dw_vjp(&coords, box_len, nlist_o, &f_wc)?;
+        let (_, f_contrib) = self.backend.dw_vjp(&coords, box_len, nlist_o, &self.f_wc)?;
         times.dw_bwd += t.elapsed().as_secs_f64();
 
-        let mut forces = vec![[0.0; 3]; natoms];
+        // combine into the recycled spare buffer (every entry overwritten)
+        let mut forces = std::mem::take(&mut self.fbuf);
+        forces.resize(natoms, [0.0; 3]);
         for i in 0..natoms {
             for d in 0..3 {
-                forces[i][d] = f_sr[3 * i + d] + f_sites[i][d] + f_contrib[3 * i + d];
+                forces[i][d] = f_sr[3 * i + d] + self.site_forces[i][d] + f_contrib[3 * i + d];
             }
         }
         Ok((forces, e_sr, e_gt))
@@ -311,7 +345,7 @@ impl DplrEngine {
         if self.steps_done == 0 {
             // prime forces for the first half-kick
             let (f, _, _) = self.evaluate_forces(&mut times)?;
-            self.forces = f;
+            self.fbuf = std::mem::replace(&mut self.forces, f);
         }
 
         let t = Instant::now();
@@ -324,7 +358,8 @@ impl DplrEngine {
         times.integrate += t.elapsed().as_secs_f64();
 
         let (f, e_sr, e_gt) = self.evaluate_forces(&mut times)?;
-        self.forces = f;
+        // recycle the outgoing buffer; steady-state steps allocate nothing
+        self.fbuf = std::mem::replace(&mut self.forces, f);
 
         let t = Instant::now();
         self.vv.kick(&mut self.sys, &self.forces);

@@ -14,7 +14,7 @@ pub mod dft;
 pub mod plan;
 
 pub use dft::{dft_matrix, dft_naive};
-pub use plan::{Fft1d, Fft3d};
+pub use plan::{Fft1d, Fft3d, Fft3dScratch, LINE_SHARDS};
 
 /// Minimal complex double — kept as a bare struct so grids are just
 /// `Vec<C64>` with no layout surprises when quantizing / packing.

@@ -100,7 +100,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::default_for(sys.box_len, 0.3);
     cfg.overlap = args.bool("overlap");
     cfg.dt_fs = args.f64_or("dt", 1.0)?;
-    cfg.threads = args.usize_or("threads", 1)?.max(1);
+    // default comes from EngineConfig::default_for (honours DPLR_THREADS)
+    cfg.threads = args.usize_or("threads", cfg.threads)?.max(1);
     let threads = cfg.threads;
     let mut eng = DplrEngine::new(sys, cfg, backend_from_args(args)?);
     println!(

@@ -242,6 +242,65 @@ fn run_shards(job: &Job) {
     }
 }
 
+/// Shared view of a mutable slice for fork-join shards that write disjoint
+/// regions.  The pool's determinism contract already requires all
+/// cross-shard writes to be disjoint; this type makes that pattern
+/// allocation-free — shards write straight into one persistent buffer
+/// instead of returning per-shard `Vec`s for the caller to merge.
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _life: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// Safety: SyncSlice hands out &mut T only through the unsafe accessors,
+// whose contract (disjoint indices across concurrent callers) makes the
+// aliasing rules hold; T: Send is required because shards run on pool
+// threads.
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SyncSlice<'a, T> {
+        SyncSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _life: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable subslice for one shard.
+    ///
+    /// # Safety
+    /// Ranges handed to concurrently running shards must be pairwise
+    /// disjoint, and no other access to those elements may overlap the
+    /// shard's lifetime.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, r: Range<usize>) -> &'a mut [T] {
+        assert!(r.start <= r.end && r.end <= self.len, "shard range oob");
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+
+    /// Mutable reference to one element (for strided line access where a
+    /// contiguous range cannot express the shard's footprint).
+    ///
+    /// # Safety
+    /// Same contract as [`Self::slice_mut`], per index.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn index_mut(&self, i: usize) -> &'a mut T {
+        debug_assert!(i < self.len, "index oob");
+        &mut *self.ptr.add(i)
+    }
+}
+
 /// Split `0..nitems` into at most `max_shards` contiguous, near-even
 /// ranges (never more ranges than items; at least one range when
 /// `nitems > 0`).
@@ -321,6 +380,27 @@ mod tests {
             for (a, b) in serial.iter().zip(&par) {
                 assert_eq!(a.to_bits(), b.to_bits(), "nthreads={n}");
             }
+        }
+    }
+
+    #[test]
+    fn sync_slice_disjoint_parallel_writes() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 1000];
+        let shards = even_shards(data.len(), 16);
+        {
+            let view = SyncSlice::new(&mut data);
+            pool.run(shards.len(), &|k| {
+                let r = shards[k].clone();
+                // Safety: even_shards ranges are pairwise disjoint
+                let s = unsafe { view.slice_mut(r.clone()) };
+                for (v, i) in s.iter_mut().zip(r) {
+                    *v = 7 * i as u64;
+                }
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, 7 * i as u64);
         }
     }
 

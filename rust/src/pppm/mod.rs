@@ -17,16 +17,38 @@
 //! The FFT backend is pluggable: exact ([`crate::fft::Fft3d`]) or the
 //! int32-quantized utofu emulation ([`quant`]) that reproduces the paper's
 //! mixed-precision Table 1 configurations with *real* quantization math.
+//!
+//! Hot-path structure (this is the kernel layer the section-3.2 overlap
+//! relies on being lean):
+//!   * every buffer the solve touches lives in a persistent [`PppmScratch`]
+//!     owned by [`Pppm`], so `energy_forces*` performs **no heap
+//!     allocation** in steady state (guarded by `rust/tests/alloc_free.rs`;
+//!     with a parallel pool the only allocation is the pool's one
+//!     `Arc<Job>` per fork-join scope);
+//!   * spread/gather use flat, MAX_ORDER-stride separable per-axis weights
+//!     with contiguous z-line inner loops (auto-vectorizable; an explicit
+//!     AVX variant sits behind the `simd` cargo feature);
+//!   * the forward FFT is line-parallel across the shared [`ThreadPool`],
+//!     like the three inverse field FFTs (see [`Fft3d::forward_par`]).
+//! All of it preserves the engine's bit-for-bit thread-count invariance:
+//! reductions whose grouping matters run over fixed shard counts, and
+//! per-line/per-site arithmetic is independent of the pool size.
 
 pub mod quant;
 pub mod spline;
 
-use crate::fft::{C64, Fft3d};
+use crate::fft::{C64, Fft3d, Fft3dScratch};
 use crate::md::units::KE_COULOMB;
-use crate::pool::{even_shards, ThreadPool};
+use crate::pool::{even_shards, SyncSlice, ThreadPool};
 use quant::QuantSpec;
-use spline::{bspline_fourier_sq, bspline_weights};
+use spline::{bspline_fourier_sq, bspline_weights_into, MAX_ORDER};
+use std::ops::Range;
 use std::sync::Arc;
+
+/// One per-axis B-spline stencil: wrapped grid indices in ascending grid
+/// order plus the matching weights; only the first `order` entries of each
+/// fixed-size array are meaningful.
+type AxisStencil = ([usize; MAX_ORDER], [f64; MAX_ORDER]);
 
 /// Fixed shard count for the reductions whose grouping affects low-order
 /// bits (charge spread, energy sum).  Keeping it constant — instead of
@@ -67,6 +89,63 @@ impl PppmConfig {
     }
 }
 
+/// Persistent hot-path buffers owned by [`Pppm`].  Sized on the first
+/// `energy_forces*` call (and again only if the site count or pool size
+/// changes); after that warm-up the solve reuses everything — including
+/// the ~2 MB of spread accumulators a 32^3 mesh needs — instead of
+/// reallocating it every step.
+#[derive(Default)]
+struct PppmScratch {
+    /// per-site per-axis grid indices, MAX_ORDER stride: [site][dim][j]
+    si: Vec<u32>,
+    /// matching B-spline weights, same layout
+    sw: Vec<f64>,
+    /// REDUCE_SHARDS spread accumulator grids, flat [shard][grid]
+    partials: Vec<f64>,
+    /// charge mesh, then (after the forward FFT) its spectrum
+    mesh: Vec<C64>,
+    /// Poisson-solved potential spectrum
+    phi: Vec<C64>,
+    /// ik-differentiated spectra / inverse-transformed grids, flat x3
+    fgrid: Vec<C64>,
+    /// real-space field components E_x/E_y/E_z, flat [dim][grid]
+    field: Vec<f64>,
+    /// per-shard energy partials, reduced in shard order by the caller
+    epart: Vec<f64>,
+    /// cached shard plans (recomputed only when sizes / pool change)
+    site_shards: Vec<Range<usize>>,
+    spread_shards: Vec<Range<usize>>,
+    grid_shards: Vec<Range<usize>>,
+    /// per-shard FFT line + Bluestein work space
+    fft_scratch: Fft3dScratch,
+    nsites: usize,
+    nthreads: usize,
+}
+
+impl PppmScratch {
+    fn ensure(&mut self, nsites: usize, fft: &Fft3d, nthreads: usize) {
+        let ntot = fft.len();
+        if self.mesh.len() != ntot {
+            self.partials.resize(REDUCE_SHARDS * ntot, 0.0);
+            self.mesh.resize(ntot, C64::ZERO);
+            self.phi.resize(ntot, C64::ZERO);
+            self.fgrid.resize(3 * ntot, C64::ZERO);
+            self.field.resize(3 * ntot, 0.0);
+            self.epart.resize(REDUCE_SHARDS, 0.0);
+            self.grid_shards = even_shards(ntot, REDUCE_SHARDS);
+            self.fft_scratch.ensure(fft);
+        }
+        if self.nsites != nsites || self.nthreads != nthreads {
+            self.si.resize(nsites * 3 * MAX_ORDER, 0);
+            self.sw.resize(nsites * 3 * MAX_ORDER, 0.0);
+            self.site_shards = even_shards(nsites, nthreads);
+            self.spread_shards = even_shards(nsites, REDUCE_SHARDS);
+            self.nsites = nsites;
+            self.nthreads = nthreads;
+        }
+    }
+}
+
 pub struct Pppm {
     pub cfg: PppmConfig,
     box_len: [f64; 3],
@@ -79,10 +158,16 @@ pub struct Pppm {
     pub quant_saturations: u64,
     /// shared worker pool (serial by default)
     pool: Arc<ThreadPool>,
+    /// persistent buffers; see [`PppmScratch`]
+    scratch: PppmScratch,
 }
 
 impl Pppm {
     pub fn new(cfg: PppmConfig, box_len: [f64; 3]) -> Pppm {
+        assert!(
+            (2..=MAX_ORDER).contains(&cfg.order),
+            "spline order must be in 2..={MAX_ORDER}"
+        );
         let [n1, n2, n3] = cfg.grid;
         let mut kvec = [Vec::new(), Vec::new(), Vec::new()];
         for d in 0..3 {
@@ -126,168 +211,332 @@ impl Pppm {
             kvec,
             quant_saturations: 0,
             pool: Arc::new(ThreadPool::serial()),
+            scratch: PppmScratch::default(),
         }
     }
 
-    /// Share a worker pool; spread, Poisson solve, the three field FFTs
-    /// and the force gather all shard across it.
+    /// Share a worker pool; spread, Poisson solve, all four FFTs and the
+    /// force gather shard across it.
     pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         self.pool = pool;
     }
 
-    /// Energy + forces on the given charged sites.
+    /// Energy + forces on the given charged sites (allocating wrapper
+    /// around [`Self::energy_forces_into`]).
     pub fn energy_forces(&mut self, pos: &[[f64; 3]], q: &[f64]) -> (f64, Vec<[f64; 3]>) {
-        let (energy, forces, sat) = self.energy_forces_inner(pos, q);
+        let mut out = Vec::new();
+        let e = self.energy_forces_into(pos, q, &mut out);
+        (e, out)
+    }
+
+    /// Energy + forces with caller-owned output storage: the steady-state
+    /// entry point.  `out` is resized to `pos.len()`; when the caller
+    /// reuses the buffer across steps (as the engine does) the whole solve
+    /// performs zero heap allocation after the first call.
+    pub fn energy_forces_into(
+        &mut self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        out: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        assert_eq!(pos.len(), q.len());
+        out.resize(pos.len(), [0.0; 3]);
+        // split the scratch off `self` so the solver can borrow &self (the
+        // pool shards read green/kvec/plans) alongside the mutable buffers
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.ensure(pos.len(), &self.fft, self.pool.nthreads());
+        let (energy, sat) = self.solve(pos, q, &mut scratch, out);
+        self.scratch = scratch;
         self.quant_saturations += sat;
-        (energy, forces)
+        energy
     }
 
     /// The actual solve (&self so parallel shards can borrow it); returns
     /// the quantization saturation count separately.
-    fn energy_forces_inner(&self, pos: &[[f64; 3]], q: &[f64]) -> (f64, Vec<[f64; 3]>, u64) {
-        assert_eq!(pos.len(), q.len());
-        let [n1, n2, n3] = self.cfg.grid;
-        let ntot = n1 * n2 * n3;
+    fn solve(
+        &self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        s: &mut PppmScratch,
+        out: &mut [[f64; 3]],
+    ) -> (f64, u64) {
+        let [_n1, n2, n3] = self.cfg.grid;
+        let ntot = self.fft.len();
         let p = self.cfg.order;
         let pool = &self.pool;
-        let nsites = pos.len();
         let mut sat = 0u64;
 
-        // 1a. B-spline stencils (per site, disjoint outputs)
-        let site_shards = even_shards(nsites, pool.nthreads());
-        let stencil_chunks: Vec<Vec<Vec<(usize, f64)>>> = pool.map(site_shards.len(), |k| {
-            site_shards[k].clone().map(|i| self.stencil(&pos[i], p)).collect()
-        });
-        let stencils: Vec<Vec<(usize, f64)>> = stencil_chunks.into_iter().flatten().collect();
+        // 1a. separable per-axis stencils: disjoint per-site writes into
+        // the flat MAX_ORDER-stride index/weight scratch
+        {
+            let si = SyncSlice::new(&mut s.si);
+            let sw = SyncSlice::new(&mut s.sw);
+            let shards = &s.site_shards;
+            pool.run(shards.len(), &|k| {
+                let r = shards[k].clone();
+                // Safety: site shards are pairwise disjoint
+                let sis =
+                    unsafe { si.slice_mut(r.start * 3 * MAX_ORDER..r.end * 3 * MAX_ORDER) };
+                let sws =
+                    unsafe { sw.slice_mut(r.start * 3 * MAX_ORDER..r.end * 3 * MAX_ORDER) };
+                for (ii, i) in r.enumerate() {
+                    let st = self.stencil(&pos[i], p);
+                    for (d, (gi, wi)) in st.iter().enumerate() {
+                        let o = (ii * 3 + d) * MAX_ORDER;
+                        for j in 0..p {
+                            sis[o + j] = gi[j] as u32;
+                            sws[o + j] = wi[j];
+                        }
+                    }
+                }
+            });
+        }
 
         // 1b. charge assignment: per-shard grid accumulators merged in a
         // fixed-order reduction pass (REDUCE_SHARDS is thread-count
         // independent, so the mesh is bit-identical for any pool size)
-        let spread_shards = even_shards(nsites, REDUCE_SHARDS);
-        let partials: Vec<Vec<f64>> = pool.map(spread_shards.len(), |k| {
-            let mut m = vec![0.0f64; ntot];
-            for i in spread_shards[k].clone() {
-                let qi = q[i];
-                for &(g, w) in &stencils[i] {
-                    m[g] += qi * w;
+        {
+            let parts = SyncSlice::new(&mut s.partials);
+            let (si, sw) = (&s.si, &s.sw);
+            let shards = &s.spread_shards;
+            pool.run(shards.len(), &|k| {
+                // Safety: one accumulator grid per fixed spread shard
+                let m = unsafe { parts.slice_mut(k * ntot..(k + 1) * ntot) };
+                for v in m.iter_mut() {
+                    *v = 0.0;
                 }
-            }
-            m
-        });
-        let mut mesh = vec![C64::ZERO; ntot];
-        for part in &partials {
-            for (mg, &v) in mesh.iter_mut().zip(part) {
-                mg.re += v;
-            }
-        }
-
-        // 2. forward FFT
-        sat += self.transform(&mut mesh, true);
-
-        // 3. energy + Poisson solve over fixed grid shards
-        let grid_shards = even_shards(ntot, REDUCE_SHARDS);
-        let ephi: Vec<(f64, Vec<C64>)> = pool.map(grid_shards.len(), |k| {
-            let mut e = 0.0;
-            let mut chunk = Vec::with_capacity(grid_shards[k].len());
-            for g in grid_shards[k].clone() {
-                let gg = self.green[g];
-                e += gg * mesh[g].norm_sq();
-                // dE/dQ(grid) chain: phi_hat = 2 * Ntot * G * Q_hat (the
-                // Ntot compensates our normalised inverse FFT)
-                chunk.push(mesh[g].scale(2.0 * gg * ntot as f64));
-            }
-            (e, chunk)
-        });
-        let mut energy = 0.0;
-        let mut phi = Vec::with_capacity(ntot);
-        for (e, chunk) in ephi {
-            energy += e;
-            phi.extend_from_slice(&chunk);
-        }
-
-        // 4. ik differentiation: three *independent* inverse FFTs run
-        // concurrently on the pool -> field grids
-        let field: Vec<(Vec<f64>, u64)> = pool.map(3, |d| {
-            let mut scratch = vec![C64::ZERO; ntot];
-            for i in 0..n1 {
-                for j in 0..n2 {
-                    for k in 0..n3 {
-                        let g = (i * n2 + j) * n3 + k;
-                        let kd = match d {
-                            0 => self.kvec[0][i],
-                            1 => self.kvec[1][j],
-                            _ => self.kvec[2][k],
-                        };
-                        // -i * k_d * phi_hat
-                        scratch[g] = C64::new(kd * phi[g].im, -kd * phi[g].re);
+                for i in shards[k].clone() {
+                    let o = i * 3 * MAX_ORDER;
+                    let (ix, wx) = (&si[o..o + p], &sw[o..o + p]);
+                    let (iy, wy) = (
+                        &si[o + MAX_ORDER..o + MAX_ORDER + p],
+                        &sw[o + MAX_ORDER..o + MAX_ORDER + p],
+                    );
+                    let (iz, wz) = (
+                        &si[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+                        &sw[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+                    );
+                    // ascending z indices form one contiguous run unless
+                    // the stencil wraps the periodic boundary
+                    let z0 = iz[0] as usize;
+                    let zc = iz[p - 1] as usize == z0 + p - 1;
+                    let qi = q[i];
+                    for (ia, wa) in ix.iter().zip(wx) {
+                        let rowx = *ia as usize * n2;
+                        let wxa = qi * wa;
+                        for (ib, wb) in iy.iter().zip(wy) {
+                            let w = wxa * wb;
+                            let row = (rowx + *ib as usize) * n3;
+                            if zc {
+                                zline_spread(&mut m[row + z0..row + z0 + p], wz, w);
+                            } else {
+                                for (ic, wc) in iz.iter().zip(wz) {
+                                    m[row + *ic as usize] += w * wc;
+                                }
+                            }
+                        }
                     }
                 }
-            }
-            let s = self.transform(&mut scratch, false);
-            (scratch.iter().map(|c| c.re).collect(), s)
-        });
-        for (_, s) in &field {
-            sat += *s;
+            });
         }
 
-        // 5. gather forces: F_i = q_i * sum_g w_i(g) * E_d(g)
-        // (per-site outputs, disjoint and order-independent)
-        let force_chunks: Vec<Vec<[f64; 3]>> = pool.map(site_shards.len(), |k| {
-            site_shards[k]
-                .clone()
-                .map(|i| {
-                    let mut f = [0.0; 3];
-                    for &(g, w) in &stencils[i] {
-                        f[0] += w * field[0].0[g];
-                        f[1] += w * field[1].0[g];
-                        f[2] += w * field[2].0[g];
+        // 1c. merge the fixed-order partials into the complex mesh
+        // (elementwise over grid shards; the inner shard order is fixed,
+        // so the merge is bit-deterministic for any pool size).  Only the
+        // populated accumulators are read: with fewer sites than
+        // REDUCE_SHARDS, even_shards produces fewer spread shards and the
+        // trailing grids were never zeroed this call.
+        {
+            let mesh = SyncSlice::new(&mut s.mesh);
+            let parts = &s.partials;
+            let shards = &s.grid_shards;
+            let nparts = s.spread_shards.len();
+            pool.run(shards.len(), &|k| {
+                let r = shards[k].clone();
+                // Safety: grid shards are pairwise disjoint
+                let ms = unsafe { mesh.slice_mut(r.start..r.end) };
+                for (mg, g) in ms.iter_mut().zip(r.clone()) {
+                    let mut acc = 0.0;
+                    for sh in 0..nparts {
+                        acc += parts[sh * ntot + g];
                     }
-                    [q[i] * f[0], q[i] * f[1], q[i] * f[2]]
-                })
-                .collect()
-        });
-        let forces: Vec<[f64; 3]> = force_chunks.into_iter().flatten().collect();
-        (energy, forces, sat)
+                    *mg = C64::new(acc, 0.0);
+                }
+            });
+        }
+
+        // 2. forward FFT — line-parallel across the pool (matching the
+        // concurrency the inverse field transforms already had)
+        sat += self.transform_with(&mut s.mesh, true, &mut s.fft_scratch);
+
+        // 3. energy + Poisson solve over fixed grid shards (energy
+        // partials reduced in shard order below)
+        {
+            let phi = SyncSlice::new(&mut s.phi);
+            let ep = SyncSlice::new(&mut s.epart);
+            let mesh = &s.mesh;
+            let shards = &s.grid_shards;
+            let green = &self.green;
+            pool.run(shards.len(), &|k| {
+                let r = shards[k].clone();
+                // Safety: grid shards disjoint; one energy slot per shard
+                let ps = unsafe { phi.slice_mut(r.start..r.end) };
+                let mut e = 0.0;
+                for (ph, g) in ps.iter_mut().zip(r.clone()) {
+                    let gg = green[g];
+                    e += gg * mesh[g].norm_sq();
+                    // dE/dQ(grid) chain: phi_hat = 2 * Ntot * G * Q_hat
+                    // (the Ntot compensates our normalised inverse FFT)
+                    *ph = mesh[g].scale(2.0 * gg * ntot as f64);
+                }
+                unsafe { *ep.index_mut(k) = e };
+            });
+        }
+        let energy: f64 = s.epart[..s.grid_shards.len()].iter().sum();
+
+        // 4. ik differentiation: fill the three spectra (elementwise),
+        // then three inverse FFTs, each line-parallel across the pool
+        {
+            let fg = SyncSlice::new(&mut s.fgrid);
+            let phi = &s.phi;
+            let shards = &s.grid_shards;
+            let kvec = &self.kvec;
+            let nshard = shards.len();
+            pool.run(3 * nshard, &|t| {
+                let (d, ki) = (t / nshard, t % nshard);
+                let r = shards[ki].clone();
+                // Safety: (dim, grid-shard) footprints are disjoint
+                let os = unsafe { fg.slice_mut(d * ntot + r.start..d * ntot + r.end) };
+                for (o, g) in os.iter_mut().zip(r.clone()) {
+                    let kd = match d {
+                        0 => kvec[0][g / (n2 * n3)],
+                        1 => kvec[1][(g / n3) % n2],
+                        _ => kvec[2][g % n3],
+                    };
+                    // -i * k_d * phi_hat
+                    *o = C64::new(kd * phi[g].im, -kd * phi[g].re);
+                }
+            });
+        }
+        {
+            let (fgrid, fs) = (&mut s.fgrid, &mut s.fft_scratch);
+            for d in 0..3 {
+                sat += self.transform_with(&mut fgrid[d * ntot..(d + 1) * ntot], false, fs);
+            }
+        }
+        // real parts -> contiguous field grids (elementwise)
+        {
+            let field = SyncSlice::new(&mut s.field);
+            let fgrid = &s.fgrid;
+            let shards = &s.grid_shards;
+            let nshard = shards.len();
+            pool.run(3 * nshard, &|t| {
+                let (d, ki) = (t / nshard, t % nshard);
+                let r = shards[ki].clone();
+                // Safety: (dim, grid-shard) footprints are disjoint
+                let os = unsafe { field.slice_mut(d * ntot + r.start..d * ntot + r.end) };
+                for (o, g) in os.iter_mut().zip(r.clone()) {
+                    *o = fgrid[d * ntot + g].re;
+                }
+            });
+        }
+
+        // 5. gather forces: F_i = q_i * sum_g w_i(g) * E_d(g), separable
+        // in z (per-site outputs, disjoint and order-independent)
+        {
+            let outs = SyncSlice::new(out);
+            let (si, sw) = (&s.si, &s.sw);
+            let field = &s.field;
+            let shards = &s.site_shards;
+            pool.run(shards.len(), &|k| {
+                let r = shards[k].clone();
+                // Safety: site shards are pairwise disjoint
+                let fo = unsafe { outs.slice_mut(r.start..r.end) };
+                let (ex, rest) = field.split_at(ntot);
+                let (ey, ez) = rest.split_at(ntot);
+                for (fi, i) in fo.iter_mut().zip(r.clone()) {
+                    let o = i * 3 * MAX_ORDER;
+                    let (ix, wx) = (&si[o..o + p], &sw[o..o + p]);
+                    let (iy, wy) = (
+                        &si[o + MAX_ORDER..o + MAX_ORDER + p],
+                        &sw[o + MAX_ORDER..o + MAX_ORDER + p],
+                    );
+                    let (iz, wz) = (
+                        &si[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+                        &sw[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+                    );
+                    let z0 = iz[0] as usize;
+                    let zc = iz[p - 1] as usize == z0 + p - 1;
+                    let mut f = [0.0f64; 3];
+                    for (ia, wa) in ix.iter().zip(wx) {
+                        let rowx = *ia as usize * n2;
+                        for (ib, wb) in iy.iter().zip(wy) {
+                            let w = wa * wb;
+                            let row = (rowx + *ib as usize) * n3;
+                            if zc {
+                                let (dx, dy, dz) = zline_dot3(
+                                    &ex[row + z0..row + z0 + p],
+                                    &ey[row + z0..row + z0 + p],
+                                    &ez[row + z0..row + z0 + p],
+                                    wz,
+                                );
+                                f[0] += w * dx;
+                                f[1] += w * dy;
+                                f[2] += w * dz;
+                            } else {
+                                for (ic, wc) in iz.iter().zip(wz) {
+                                    let g = row + *ic as usize;
+                                    f[0] += w * wc * ex[g];
+                                    f[1] += w * wc * ey[g];
+                                    f[2] += w * wc * ez[g];
+                                }
+                            }
+                        }
+                    }
+                    *fi = [q[i] * f[0], q[i] * f[1], q[i] * f[2]];
+                }
+            });
+        }
+
+        (energy, sat)
     }
 
-    /// B-spline stencil of (grid index, weight) pairs for a position.
-    fn stencil(&self, r: &[f64; 3], p: usize) -> Vec<(usize, f64)> {
-        let [n1, n2, n3] = self.cfg.grid;
-        let mut per_dim: [Vec<(usize, f64)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    /// Per-axis B-spline stencil: for each dimension the wrapped grid
+    /// indices in ascending grid order plus the matching weights (only the
+    /// first `order` entries of each fixed-size array are meaningful).
+    /// Fixed-size return so neither this oracle path nor the flat hot-path
+    /// scratch fill allocates.
+    fn stencil(&self, r: &[f64; 3], p: usize) -> [AxisStencil; 3] {
+        let mut out = [([0usize; MAX_ORDER], [0.0f64; MAX_ORDER]); 3];
+        let mut w = [0.0f64; MAX_ORDER];
         for d in 0..3 {
             let n = self.cfg.grid[d];
             let u = r[d].rem_euclid(self.box_len[d]) / self.box_len[d] * n as f64;
             let fl = u.floor();
             let t = u - fl;
-            let w = bspline_weights(t, p);
-            // grid point for w[j] is floor(u) - j  (M_p(t + j))
-            for (j, wj) in w.iter().enumerate() {
-                let g = (fl as i64 - j as i64).rem_euclid(n as i64) as usize;
-                per_dim[d].push((g, *wj));
+            bspline_weights_into(t, p, &mut w);
+            let (gi, wi) = &mut out[d];
+            // grid point for w[j] is floor(u) - j  (M_p(t + j)); stored in
+            // ascending grid order so unwrapped z-lines are contiguous
+            for j in 0..p {
+                let a = p - 1 - j;
+                gi[j] = (fl as i64 - a as i64).rem_euclid(n as i64) as usize;
+                wi[j] = w[a];
             }
         }
-        let mut out = Vec::with_capacity(p * p * p);
-        for &(gi, wi) in &per_dim[0] {
-            for &(gj, wj) in &per_dim[1] {
-                for &(gk, wk) in &per_dim[2] {
-                    out.push(((gi * n2 + gj) * n3 + gk, wi * wj * wk));
-                }
-            }
-        }
-        let _ = n1;
         out
     }
 
-    /// Apply the configured 3-D transform (fwd or inverse-normalised);
-    /// returns the quantization saturation count (&self so concurrent
-    /// shards can each transform their own grid).
-    fn transform(&self, g: &mut [C64], forward: bool) -> u64 {
+    /// Apply the configured 3-D transform (fwd or inverse-normalised)
+    /// through the shared pool + persistent scratch; returns the
+    /// quantization saturation count.
+    fn transform_with(&self, g: &mut [C64], forward: bool, fs: &mut Fft3dScratch) -> u64 {
         match self.cfg.mode {
             MeshMode::Double => {
                 if forward {
-                    self.fft.forward(g);
+                    self.fft.forward_par(g, &self.pool, fs);
                 } else {
-                    self.fft.inverse(g);
+                    self.fft.inverse_par(g, &self.pool, fs);
                 }
                 0
             }
@@ -298,9 +547,9 @@ impl Pppm {
                     *v = C64::new(v.re as f32 as f64, v.im as f32 as f64);
                 }
                 if forward {
-                    self.fft.forward(g);
+                    self.fft.forward_par(g, &self.pool, fs);
                 } else {
-                    self.fft.inverse(g);
+                    self.fft.inverse_par(g, &self.pool, fs);
                 }
                 for v in g.iter_mut() {
                     *v = C64::new(v.re as f32 as f64, v.im as f32 as f64);
@@ -312,6 +561,119 @@ impl Pppm {
                 quant::quantized_fft3d(g, self.cfg.grid, nseg, forward, &spec)
             }
         }
+    }
+}
+
+/// z-line spread kernel for the contiguous (non-wrapping) case:
+/// `seg[c] += w * wz[c]`.  The scalar form is a flat fixed-stride loop the
+/// compiler auto-vectorizes; the `simd` feature dispatches to an explicit
+/// AVX kernel on x86_64 (bit-identical here — no reduction is involved).
+#[inline]
+fn zline_spread(seg: &mut [f64], wz: &[f64], w: f64) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_x86::avx_available() {
+        // Safety: AVX probed at runtime
+        unsafe { simd_x86::axpy(seg, wz, w) };
+        return;
+    }
+    for (sv, zv) in seg.iter_mut().zip(wz) {
+        *sv += w * zv;
+    }
+}
+
+/// Triple dot product over one contiguous z-line:
+/// `(sum wz*ex, sum wz*ey, sum wz*ez)`.
+#[inline]
+fn zline_dot3(ex: &[f64], ey: &[f64], ez: &[f64], wz: &[f64]) -> (f64, f64, f64) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_x86::avx_available() {
+        // Safety: AVX probed at runtime
+        return unsafe { simd_x86::dot3(ex, ey, ez, wz) };
+    }
+    let (mut dx, mut dy, mut dz) = (0.0, 0.0, 0.0);
+    for (c, wc) in wz.iter().enumerate() {
+        dx += wc * ex[c];
+        dy += wc * ey[c];
+        dz += wc * ez[c];
+    }
+    (dx, dy, dz)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd_x86 {
+    //! Explicit AVX f64x4 kernels for the contiguous z-line inner loops.
+    //! Runtime-dispatched (cached CPUID probe); the scalar forms above stay
+    //! the portable reference.  One build uses one kernel set everywhere,
+    //! so thread-count bit-determinism is unaffected — SIMD only regroups
+    //! the per-site gather sums, which are private to each site.
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd,
+    };
+    use std::sync::OnceLock;
+
+    pub fn avx_available() -> bool {
+        static AVX: OnceLock<bool> = OnceLock::new();
+        *AVX.get_or_init(|| std::arch::is_x86_feature_detected!("avx"))
+    }
+
+    /// `seg[c] += w * wz[c]`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX support (see [`avx_available`]).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy(seg: &mut [f64], wz: &[f64], w: f64) {
+        let n = seg.len().min(wz.len());
+        let wv = _mm256_set1_pd(w);
+        let mut c = 0;
+        while c + 4 <= n {
+            let sv = _mm256_loadu_pd(seg.as_ptr().add(c));
+            let zv = _mm256_loadu_pd(wz.as_ptr().add(c));
+            _mm256_storeu_pd(
+                seg.as_mut_ptr().add(c),
+                _mm256_add_pd(sv, _mm256_mul_pd(wv, zv)),
+            );
+            c += 4;
+        }
+        while c < n {
+            seg[c] += w * wz[c];
+            c += 1;
+        }
+    }
+
+    /// `(dot(wz, ex), dot(wz, ey), dot(wz, ez))`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX support (see [`avx_available`]).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot3(ex: &[f64], ey: &[f64], ez: &[f64], wz: &[f64]) -> (f64, f64, f64) {
+        let n = wz.len().min(ex.len()).min(ey.len()).min(ez.len());
+        let mut ax = _mm256_setzero_pd();
+        let mut ay = _mm256_setzero_pd();
+        let mut az = _mm256_setzero_pd();
+        let mut c = 0;
+        while c + 4 <= n {
+            let zv = _mm256_loadu_pd(wz.as_ptr().add(c));
+            ax = _mm256_add_pd(ax, _mm256_mul_pd(zv, _mm256_loadu_pd(ex.as_ptr().add(c))));
+            ay = _mm256_add_pd(ay, _mm256_mul_pd(zv, _mm256_loadu_pd(ey.as_ptr().add(c))));
+            az = _mm256_add_pd(az, _mm256_mul_pd(zv, _mm256_loadu_pd(ez.as_ptr().add(c))));
+            c += 4;
+        }
+        let (mut dx, mut dy, mut dz) = (hsum(ax), hsum(ay), hsum(az));
+        while c < n {
+            dx += wz[c] * ex[c];
+            dy += wz[c] * ey[c];
+            dz += wz[c] * ez[c];
+            c += 1;
+        }
+        (dx, dy, dz)
+    }
+
+    #[target_feature(enable = "avx")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), v);
+        (buf[0] + buf[1]) + (buf[2] + buf[3])
     }
 }
 
@@ -455,5 +817,26 @@ mod tests {
             }
         }
         assert!(worst < 5e-2, "worst force quantization error {worst}");
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_stable_across_calls_and_shapes() {
+        // the persistent scratch must not leak state between calls: a
+        // fresh solver and a warmed-up one agree bit-for-bit, including
+        // after the site count and the mesh shape change in between
+        let (pos, q, box_len) = water_sites(16, 5);
+        let (pos_small, q_small, _) = water_sites(8, 3);
+        let mut fresh = Pppm::new(PppmConfig::new([12, 18, 12], 5, 0.3), box_len);
+        let (e_ref, f_ref) = fresh.energy_forces(&pos, &q);
+        let mut warm = Pppm::new(PppmConfig::new([12, 18, 12], 5, 0.3), box_len);
+        let _ = warm.energy_forces(&pos_small, &q_small); // different nsites
+        let _ = warm.energy_forces(&pos, &q);
+        let (e, f) = warm.energy_forces(&pos, &q);
+        assert_eq!(e_ref.to_bits(), e.to_bits(), "energy drifted with reuse");
+        for (a, b) in f_ref.iter().zip(&f) {
+            for d in 0..3 {
+                assert_eq!(a[d].to_bits(), b[d].to_bits(), "force drifted with reuse");
+            }
+        }
     }
 }

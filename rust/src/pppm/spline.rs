@@ -1,15 +1,24 @@
 //! Cardinal B-splines for PME/PPPM charge assignment.
 
-/// Weights w[j] = M_p(t + j), j = 0..p-1, for fractional offset t in [0,1).
+/// Maximum spline order the fixed-size stencil kernels support.  Stencil
+/// scratch is laid out with this stride so changing the runtime order never
+/// reallocates; the paper uses order 5 (and the tests up to 7).
+pub const MAX_ORDER: usize = 8;
+
+/// Allocation-free core of [`bspline_weights`]: fills `w[..p]` with
+/// w[j] = M_p(t + j) for fractional offset t in [0,1).
 ///
 /// M_p is the order-p cardinal B-spline (support (0, p)); the weights sum
 /// to exactly 1 for any t (partition of unity).  Standard iterative
 /// recurrence: M_2 is the hat function, and
 ///   M_n(x) = x/(n-1) M_{n-1}(x) + (n-x)/(n-1) M_{n-1}(x-1).
-pub fn bspline_weights(t: f64, p: usize) -> Vec<f64> {
+pub fn bspline_weights_into(t: f64, p: usize, w: &mut [f64]) {
     assert!(p >= 2, "spline order must be >= 2");
+    assert!(w.len() >= p, "weight buffer shorter than order");
     // w[j] holds M_n(t + j) as n grows from 2 to p
-    let mut w = vec![0.0; p];
+    for v in w[..p].iter_mut() {
+        *v = 0.0;
+    }
     // M_2(t) = 1 - |t - 1| on (0,2): M_2(t + 0) = ?  For t in [0,1):
     // M_2(t) = t ... careful: M_2(x) = x on [0,1], 2-x on [1,2].
     w[0] = t; // hmm: M_2(t) with t in [0,1) = t
@@ -26,6 +35,12 @@ pub fn bspline_weights(t: f64, p: usize) -> Vec<f64> {
         }
         w[0] = div * t * w[0];
     }
+}
+
+/// Allocating convenience wrapper around [`bspline_weights_into`].
+pub fn bspline_weights(t: f64, p: usize) -> Vec<f64> {
+    let mut w = vec![0.0; p];
+    bspline_weights_into(t, p, &mut w);
     w
 }
 
@@ -79,6 +94,21 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn weights_into_matches_vec_with_oversized_buffer() {
+        // the hot path writes through a MAX_ORDER-stride scratch; the extra
+        // tail must not perturb the first p entries
+        for p in 2..=7usize {
+            let t = 0.37;
+            let v = bspline_weights(t, p);
+            let mut w = [f64::NAN; MAX_ORDER];
+            bspline_weights_into(t, p, &mut w);
+            for j in 0..p {
+                assert_eq!(v[j].to_bits(), w[j].to_bits(), "p={p} j={j}");
+            }
+        }
     }
 
     #[test]

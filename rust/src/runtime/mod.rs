@@ -9,9 +9,14 @@
 //!
 //! The XLA runtime needs the `xla` crate and its native `xla_extension`
 //! library, which the offline image does not ship.  The real implementation
-//! is therefore gated behind the `pjrt` cargo feature; the default build
-//! uses a stub whose `open()` returns an error, so every caller that
-//! already handles a missing artifacts directory degrades the same way.
+//! is therefore gated behind `all(feature = "pjrt", xla_runtime)` — the
+//! cargo feature picks the API surface, and the `xla_runtime` cfg (emitted
+//! by build.rs when DPLR_XLA=1, i.e. in an environment that actually
+//! vendors the xla crate) turns the real backend on.  Every other build —
+//! including `--features pjrt` without the cfg, which CI cargo-checks so
+//! the gate cannot silently rot — uses a stub whose `open()` returns an
+//! error, so every caller that already handles a missing artifacts
+//! directory degrades the same way.
 
 pub mod manifest;
 
@@ -48,7 +53,7 @@ pub struct DwVjpOutput {
     pub f_contrib: Vec<f64>,
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", xla_runtime))]
 mod pjrt_xla {
     use super::{DpOutput, Dtype, DwVjpOutput};
     use super::manifest::{Artifact, Manifest};
@@ -240,10 +245,10 @@ mod pjrt_xla {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", xla_runtime))]
 pub use pjrt_xla::PjrtEngine;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", xla_runtime)))]
 mod pjrt_stub {
     use super::manifest::Manifest;
     use super::{DpOutput, Dtype, DwVjpOutput};
@@ -261,9 +266,9 @@ mod pjrt_stub {
     impl PjrtEngine {
         pub fn open(_dir: &str) -> Result<PjrtEngine> {
             bail!(
-                "PJRT backend unavailable: dplr was built without the `pjrt` \
-                 feature (the xla crate / xla_extension runtime is not \
-                 present in this environment)"
+                "PJRT backend unavailable: dplr was built without the real \
+                 XLA runtime (needs the `pjrt` feature plus DPLR_XLA=1 in an \
+                 environment that vendors the xla crate / xla_extension)"
             )
         }
 
@@ -308,5 +313,5 @@ mod pjrt_stub {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", xla_runtime)))]
 pub use pjrt_stub::PjrtEngine;

@@ -119,6 +119,84 @@ fn pppm_invariant_under_thread_count() {
 }
 
 #[test]
+fn pppm_invariant_on_bluestein_grid_with_scratch_reuse() {
+    // the new zero-allocation path: non-pow2 mesh (Bluestein line plans,
+    // wrapped z-stencils on the coarse 12x18x12 grid) + repeated calls
+    // through the same persistent scratch must stay bit-identical across
+    // thread counts AND across calls
+    let sys = water_box(24, 17);
+    let mut pos = sys.pos.clone();
+    let mut q: Vec<f64> = (0..sys.natoms())
+        .map(|i| if i < sys.nmol { 6.0 } else { 1.0 })
+        .collect();
+    for n in 0..sys.nmol {
+        let mut w = sys.pos[n];
+        w[1] += 0.07;
+        pos.push(w);
+        q.push(-8.0);
+    }
+    let run = |threads: usize| -> (f64, Vec<[f64; 3]>) {
+        let mut p = Pppm::new(PppmConfig::new([12, 18, 12], 5, 0.3), sys.box_len);
+        p.set_pool(Arc::new(ThreadPool::new(threads)));
+        let mut out = Vec::new();
+        let e1 = p.energy_forces_into(&pos, &q, &mut out);
+        let f1 = out.clone();
+        let e2 = p.energy_forces_into(&pos, &q, &mut out);
+        assert_eq!(e1.to_bits(), e2.to_bits(), "scratch reuse changed E");
+        for (a, b) in f1.iter().zip(&out) {
+            for d in 0..3 {
+                assert_eq!(a[d].to_bits(), b[d].to_bits(), "scratch reuse changed F");
+            }
+        }
+        (e2, out)
+    };
+    let (e1, f1) = run(1);
+    for threads in [2usize, 4] {
+        let (en, fnn) = run(threads);
+        assert_eq!(e1.to_bits(), en.to_bits(), "pppm E at threads={threads}");
+        for (i, (a, b)) in f1.iter().zip(&fnn).enumerate() {
+            for d in 0..3 {
+                assert_eq!(a[d].to_bits(), b[d].to_bits(), "pppm F[{i}][{d}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_fft_line_parallel_matches_serial() {
+    // the line-batched forward/inverse transforms must be bit-identical to
+    // the serial plans for any pool size (radix-2 and Bluestein edges)
+    use dplr::fft::{C64, Fft3d, Fft3dScratch};
+    for dims in [[16usize, 16, 16], [12, 18, 12]] {
+        let n = dims[0] * dims[1] * dims[2];
+        let mut rng = Rng::new(7 + n as u64);
+        let base: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut serial_f = base.clone();
+        Fft3d::new(dims).forward(&mut serial_f);
+        let mut serial_i = serial_f.clone();
+        Fft3d::new(dims).inverse(&mut serial_i);
+        for threads in [1usize, 2, 4] {
+            let plan = Fft3d::new(dims);
+            let pool = ThreadPool::new(threads);
+            let mut scratch = Fft3dScratch::default();
+            let mut g = base.clone();
+            plan.forward_par(&mut g, &pool, &mut scratch);
+            for (a, b) in serial_f.iter().zip(&g) {
+                assert_eq!(a.re.to_bits(), b.re.to_bits(), "fwd {dims:?} t={threads}");
+                assert_eq!(a.im.to_bits(), b.im.to_bits(), "fwd {dims:?} t={threads}");
+            }
+            plan.inverse_par(&mut g, &pool, &mut scratch);
+            for (a, b) in serial_i.iter().zip(&g) {
+                assert_eq!(a.re.to_bits(), b.re.to_bits(), "inv {dims:?} t={threads}");
+                assert_eq!(a.im.to_bits(), b.im.to_bits(), "inv {dims:?} t={threads}");
+            }
+        }
+    }
+}
+
+#[test]
 fn build_cells_parallel_matches_exact_on_64_molecules() {
     let sys = water_box(64, 42);
     let p = NlistParams::default();

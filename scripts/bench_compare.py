@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: merge per-bench JSON outputs and compare them
+against the checked-in BENCH_baseline.json.
+
+Usage:
+    bench_compare.py --baseline BENCH_baseline.json --out BENCH_ci.json \
+        [--tol 0.25] BENCH_hotpath.json BENCH_fig8_fft.json ...
+
+Each input is what the rust benches write with `--json PATH`:
+    {"bench": "<name>", "threads": N, "quick": true, "results": {key: secs}}
+
+The baseline has the shape
+    {"tolerance": 0.25, "<bench name>": {key: secs} | null, ...}
+A section that is null (the bootstrap state) is reported informationally
+and never fails — refresh it by running the benches on a reference host
+and copying the measured sections in (see rust/README.md, "Refreshing the
+bench baseline").
+
+Exit status: 1 if any measured key is slower than baseline * (1 + tol),
+0 otherwise.  Keys faster than baseline * (1 - tol) print a hint to
+refresh the baseline but do not fail (the gate is one-sided: it exists to
+catch regressions).  The merged measurements + verdicts are written to
+--out for the CI artifact upload.
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("inputs", nargs="+", help="per-bench JSON files")
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--out", required=True)
+    # default None so the baseline file's "tolerance" field is the fallback
+    ap.add_argument("--tol", type=float, default=None)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    tol = args.tol if args.tol is not None else baseline.get("tolerance", 0.25)
+
+    merged = {}
+    for path in args.inputs:
+        with open(path) as f:
+            doc = json.load(f)
+        merged[doc["bench"]] = doc.get("results", {})
+
+    failures = []
+    faster = []
+    verdicts = {}
+    for bench, results in sorted(merged.items()):
+        base = baseline.get(bench)
+        if base is None:
+            print(f"[bench-compare] {bench}: no baseline yet (bootstrap) — "
+                  f"recorded {len(results)} keys, nothing to gate")
+            verdicts[bench] = {k: {"secs": v, "verdict": "no-baseline"}
+                               for k, v in results.items()}
+            continue
+        verdicts[bench] = {}
+        for key, secs in sorted(results.items()):
+            ref = base.get(key)
+            if ref is None or ref <= 0:
+                verdicts[bench][key] = {"secs": secs, "verdict": "no-baseline"}
+                continue
+            ratio = secs / ref
+            if ratio > 1.0 + tol:
+                verdicts[bench][key] = {"secs": secs, "baseline": ref,
+                                        "ratio": ratio, "verdict": "REGRESSION"}
+                failures.append(f"{bench}/{key}: {secs*1e3:.2f} ms vs baseline "
+                                f"{ref*1e3:.2f} ms ({ratio:.2f}x > {1+tol:.2f}x)")
+            elif ratio < 1.0 - tol:
+                verdicts[bench][key] = {"secs": secs, "baseline": ref,
+                                        "ratio": ratio, "verdict": "faster"}
+                faster.append(f"{bench}/{key}: {ratio:.2f}x of baseline")
+            else:
+                verdicts[bench][key] = {"secs": secs, "baseline": ref,
+                                        "ratio": ratio, "verdict": "ok"}
+
+    out = {"tolerance": tol, "measurements": merged, "comparison": verdicts}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"[bench-compare] wrote {args.out}")
+
+    if faster:
+        print("[bench-compare] faster than baseline (consider refreshing "
+              "BENCH_baseline.json):")
+        for line in faster:
+            print(f"  {line}")
+    if failures:
+        print("[bench-compare] WALL-TIME REGRESSIONS:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print("[bench-compare] no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
