@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use dplr::engine::{Backend, DplrEngine, EngineConfig};
+use dplr::engine::{KspaceConfig, Simulation};
 use dplr::md::water::water_box;
 use dplr::native::NativeModel;
 use dplr::runtime::manifest::artifacts_dir;
@@ -17,24 +17,27 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
     sys.thermalize(300.0, &mut rng);
 
-    // 2. load the DPLR model (DP + DW nets exported by `make artifacts`)
-    let backend = Backend::Native(NativeModel::load(&artifacts_dir())?);
+    // 2. assemble the simulation: the DPLR model (DP + DW nets exported by
+    //    `make artifacts`) as the short-range provider, PPPM sized from the
+    //    box as the k-space solver, NVT at 300 K, 1 fs steps — progress
+    //    reporting rides the observer hook instead of a hand-rolled loop
+    let mut sim = Simulation::builder(sys)
+        .dt_fs(1.0)
+        .thermostat(300.0, 0.5)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+        .short_range(Box::new(NativeModel::load(&artifacts_dir())?))
+        .observe(|step, _, o| {
+            println!(
+                "step {step:>3}: T = {:7.1} K   E_sr = {:9.3} eV   E_Gt = {:8.3} eV",
+                o.temperature, o.e_sr, o.e_gt
+            );
+        })
+        .build()?;
 
-    // 3. engine: PPPM mesh sized from the box, NVT at 300 K, 1 fs steps
-    let cfg = EngineConfig::default_for(sys.box_len, 0.3);
-    let mut eng = DplrEngine::new(sys, cfg, backend);
-
-    // 4. relax the fresh lattice, then run production steps
-    eng.quench(20)?;
-    eng.reheat(300.0, 3);
-    for step in 1..=20 {
-        eng.step()?;
-        let o = eng.last_obs.unwrap();
-        println!(
-            "step {step:>3}: T = {:7.1} K   E_sr = {:9.3} eV   E_Gt = {:8.3} eV",
-            o.temperature, o.e_sr, o.e_gt
-        );
-    }
+    // 3. relax the fresh lattice, then run production steps
+    sim.quench(20)?;
+    sim.reheat(300.0, 3);
+    sim.run(20)?;
     println!("quickstart OK");
     Ok(())
 }

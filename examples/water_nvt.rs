@@ -8,12 +8,13 @@
 //! cargo run --release --example water_nvt -- [steps]
 //! ```
 
-use dplr::engine::{Backend, DplrEngine, EngineConfig, StepTimes};
+use dplr::engine::{KspaceConfig, Simulation, StepRecorder};
 use dplr::md::units::ns_per_day;
 use dplr::md::water::replicated_base_box;
 use dplr::native::NativeModel;
 use dplr::runtime::manifest::artifacts_dir;
 use dplr::util::rng::Rng;
+use std::sync::{Arc, Mutex};
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args()
@@ -30,35 +31,43 @@ fn main() -> anyhow::Result<()> {
         sys.nmol,
         sys.box_len[0]
     );
-    let backend = Backend::Native(NativeModel::load(&artifacts_dir())?);
-    let mut cfg = EngineConfig::default_for(sys.box_len, 0.3);
-    cfg.overlap = true; // PPPM on a dedicated thread (paper section 3.2)
-    let mut eng = DplrEngine::new(sys, cfg, backend);
 
-    eng.quench(30)?;
-    eng.reheat(300.0, 5);
+    // timing + statistics flow through observers: the shared recorder sums
+    // the per-step breakdown, the closure samples T/E and prints progress
+    let rec = StepRecorder::new();
+    let samples: Arc<Mutex<(Vec<f64>, Vec<f64>)>> = Arc::new(Mutex::new((Vec::new(), Vec::new())));
+    let sink = samples.clone();
+    let mut sim = Simulation::builder(sys)
+        .dt_fs(1.0)
+        .thermostat(300.0, 0.5)
+        .overlap(true) // PPPM on a dedicated thread (paper section 3.2)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+        .short_range(Box::new(NativeModel::load(&artifacts_dir())?))
+        .observer(Box::new(rec.clone()))
+        .observe(move |step, _, o| {
+            let mut s = sink.lock().unwrap();
+            s.0.push(o.temperature);
+            s.1.push(o.e_sr + o.e_gt + o.kinetic);
+            if step % 50 == 0 {
+                println!(
+                    "step {step:>5}: T {:7.1} K   E_tot {:11.3} eV   cons {:12.4}",
+                    o.temperature,
+                    o.e_sr + o.e_gt + o.kinetic,
+                    o.conserved
+                );
+            }
+        })
+        .build()?;
 
-    let mut acc = StepTimes::default();
+    sim.quench(30)?;
+    sim.reheat(300.0, 5);
+
     let t0 = std::time::Instant::now();
-    let mut temps = Vec::new();
-    let mut energies = Vec::new();
-    for s in 1..=steps {
-        let t = eng.step()?;
-        acc.add(&t);
-        let o = eng.last_obs.unwrap();
-        temps.push(o.temperature);
-        energies.push(o.e_sr + o.e_gt + o.kinetic);
-        if s % 50 == 0 {
-            println!(
-                "step {s:>5}: T {:7.1} K   E_tot {:11.3} eV   cons {:12.4}",
-                o.temperature,
-                o.e_sr + o.e_gt + o.kinetic,
-                o.conserved
-            );
-        }
-    }
+    sim.run(steps)?;
     let wall = t0.elapsed().as_secs_f64();
     let per_step = wall / steps as f64;
+    let acc = rec.totals();
+    let (temps, energies) = samples.lock().unwrap().clone();
     let half = temps.len() / 2;
     let mean_t: f64 = temps[half..].iter().sum::<f64>() / (temps.len() - half) as f64;
     let mean_e: f64 = energies[half..].iter().sum::<f64>() / (energies.len() - half) as f64;

@@ -28,9 +28,24 @@ fn main() {
     let reps = if quick { 3 } else { 7 };
     let mut results: BTreeMap<String, Json> = BTreeMap::new();
 
+    // DES model rows: deterministic simulated seconds (host-independent
+    // pure arithmetic), always recorded to --json so the bench-regression
+    // baseline can gate them exactly (0% tolerance, see BENCH_baseline.json
+    // "exact" patterns); the full table prints only outside --quick
+    let rows = f8::run(&MachineConfig::default());
     if !quick {
-        let rows = f8::run(&MachineConfig::default());
         f8::print_rows(&rows);
+    }
+    for r in &rows {
+        let k = format!("model_{}n{}", r.nodes, r.grid_per_node);
+        results.insert(format!("{k}_fftmpi_all"), Json::Num(r.fftmpi_all));
+        if let Some(v) = r.heffte_all {
+            results.insert(format!("{k}_heffte_all"), Json::Num(v));
+        }
+        if let Some(v) = r.heffte_master {
+            results.insert(format!("{k}_heffte_master"), Json::Num(v));
+        }
+        results.insert(format!("{k}_utofu_master"), Json::Num(r.utofu_master));
     }
 
     println!("\n=== host 3-D FFT: line-parallel forward/inverse vs --threads ===");

@@ -195,8 +195,15 @@ fn main() {
     }
 
     if let Some(path) = args.str_opt("json") {
+        // --tag NAME suffixes the bench name (e.g. `--tag simd` writes
+        // bench "hotpath_simd"), so feature-variant runs get their own
+        // baseline section instead of colliding with the default build
+        let bench_name = match args.str_opt("tag") {
+            Some(t) => format!("hotpath_{t}"),
+            None => "hotpath".to_string(),
+        };
         let doc = Json::obj(vec![
-            ("bench", Json::Str("hotpath".to_string())),
+            ("bench", Json::Str(bench_name)),
             ("threads", Json::Num(nthreads as f64)),
             ("quick", Json::Bool(quick)),
             ("results", Json::Obj(results)),

@@ -1,0 +1,276 @@
+//! [`SimulationBuilder`]: the one entry point for assembling a DPLR
+//! simulation, replacing the old `EngineConfig::default_for` +
+//! `DplrEngine::new` two-step.  Configuration is validated at `build()`
+//! time (grid/order/alpha sanity, thread count, timestep), so a bad setup
+//! fails with an error instead of an assert deep inside a solver.
+//!
+//! ```no_run
+//! # use dplr::engine::{KspaceConfig, Simulation};
+//! # use dplr::md::water::water_box;
+//! # use dplr::native::NativeModel;
+//! # fn main() -> anyhow::Result<()> {
+//! let mut sim = Simulation::builder(water_box(64, 42))
+//!     .dt_fs(0.5)
+//!     .thermostat(300.0, 0.5)
+//!     .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+//!     .short_range(Box::new(NativeModel::synthetic(7)))
+//!     .overlap(true)
+//!     .build()?;
+//! sim.run(10)?;
+//! # Ok(())
+//! # }
+//! ```
+
+use super::observe::{observer_fn, Observer};
+use super::traits::{KspaceSolver, ShortRangeModel};
+use super::{SimConfig, Simulation, StepObservables, StepTimes};
+use crate::ewald::EwaldRecipSolver;
+use crate::md::integrate::{NoseHoover, VelocityVerlet};
+use crate::md::system::System;
+use crate::md::units::FS;
+use crate::neighbor::{NlistParams, VerletManager};
+use crate::pool::ThreadPool;
+use crate::pppm::{Pppm, PppmConfig};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Declarative k-space solver choice (validated at build time).  For a
+/// hand-constructed solver use [`SimulationBuilder::kspace_solver`].
+pub enum KspaceConfig {
+    /// PPPM with an explicit mesh configuration (any `MeshMode`).
+    Pppm(PppmConfig),
+    /// PPPM with the mesh sized from the box (~1.6 pts/A, even, >= 8) at
+    /// spline order 5 — the old `EngineConfig::default_for` behaviour.
+    PppmAuto { alpha: f64 },
+    /// Exact direct reciprocal-space sum (`--kspace ewald`): the Table-1
+    /// golden reference as a runnable in-engine backend.  `tol` is the
+    /// relative truncation tolerance for the k-vector cutoff.
+    Ewald { alpha: f64, tol: f64 },
+}
+
+enum KspaceChoice {
+    Config(KspaceConfig),
+    Custom(Box<dyn KspaceSolver>),
+}
+
+/// Default worker-pool size: the `DPLR_THREADS` environment variable
+/// (used by CI to run whole suites at 1 and 4 threads without touching
+/// call sites) or 1.  Results are bit-for-bit identical either way.
+pub(crate) fn default_threads() -> usize {
+    std::env::var("DPLR_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
+pub struct SimulationBuilder {
+    sys: System,
+    dt_fs: f64,
+    target_t: f64,
+    thermostat_tau_ps: Option<f64>,
+    kspace: KspaceChoice,
+    short_range: Option<Box<dyn ShortRangeModel>>,
+    overlap: bool,
+    nlist: NlistParams,
+    nlist_max_age: usize,
+    threads: Option<usize>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl SimulationBuilder {
+    pub(crate) fn new(sys: System) -> SimulationBuilder {
+        SimulationBuilder {
+            sys,
+            dt_fs: 1.0,
+            target_t: 300.0,
+            thermostat_tau_ps: Some(0.5),
+            kspace: KspaceChoice::Config(KspaceConfig::PppmAuto { alpha: 0.3 }),
+            short_range: None,
+            overlap: false,
+            nlist: NlistParams::default(),
+            nlist_max_age: 50,
+            threads: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// MD timestep in femtoseconds (default 1.0).
+    pub fn dt_fs(mut self, dt: f64) -> Self {
+        self.dt_fs = dt;
+        self
+    }
+
+    /// Nose-Hoover NVT at `target_t` K with coupling time `tau_ps`
+    /// (default: 300 K, 0.5 ps).
+    pub fn thermostat(mut self, target_t: f64, tau_ps: f64) -> Self {
+        self.target_t = target_t;
+        self.thermostat_tau_ps = Some(tau_ps);
+        self
+    }
+
+    /// NVE: no thermostat.
+    pub fn nve(mut self) -> Self {
+        self.thermostat_tau_ps = None;
+        self
+    }
+
+    /// K-space solver choice (default: `PppmAuto { alpha: 0.3 }`).
+    pub fn kspace(mut self, cfg: KspaceConfig) -> Self {
+        self.kspace = KspaceChoice::Config(cfg);
+        self
+    }
+
+    /// Hand-constructed k-space solver (skips declarative validation; the
+    /// solver is assumed already well-formed).
+    pub fn kspace_solver(mut self, solver: Box<dyn KspaceSolver>) -> Self {
+        self.kspace = KspaceChoice::Custom(solver);
+        self
+    }
+
+    /// The short-range NN model (required).
+    pub fn short_range(mut self, model: Box<dyn ShortRangeModel>) -> Self {
+        self.short_range = Some(model);
+        self
+    }
+
+    /// Overlap the k-space solve with DP on a dedicated thread (paper
+    /// section 3.2; default off).
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// Worker-pool size for the DP/DW/k-space/nlist hot loops (default:
+    /// `DPLR_THREADS` or 1).  Results are bit-identical for any value.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Neighbour-list parameters (cutoffs, skin, padding).
+    pub fn nlist(mut self, p: NlistParams) -> Self {
+        self.nlist = p;
+        self
+    }
+
+    /// Force a Verlet rebuild at least every `steps` steps (default 50).
+    pub fn nlist_max_age(mut self, steps: usize) -> Self {
+        self.nlist_max_age = steps;
+        self
+    }
+
+    /// Attach a per-step observer (any number; called in attach order).
+    pub fn observer(mut self, ob: Box<dyn Observer>) -> Self {
+        self.observers.push(ob);
+        self
+    }
+
+    /// Attach a closure observer (sugar over [`Self::observer`]).
+    pub fn observe<F>(self, f: F) -> Self
+    where
+        F: FnMut(u64, &StepTimes, &StepObservables) + 'static,
+    {
+        self.observer(observer_fn(f))
+    }
+
+    /// Validate the configuration and assemble the [`Simulation`].
+    pub fn build(self) -> Result<Simulation> {
+        if self.sys.natoms() == 0 {
+            bail!("cannot build a simulation over an empty system");
+        }
+        if !(self.dt_fs.is_finite() && self.dt_fs > 0.0) {
+            bail!("dt_fs must be finite and > 0, got {}", self.dt_fs);
+        }
+        if let Some(tau) = self.thermostat_tau_ps {
+            if !(tau.is_finite() && tau > 0.0) {
+                bail!("thermostat tau_ps must be finite and > 0, got {tau}");
+            }
+            if !(self.target_t.is_finite() && self.target_t > 0.0) {
+                bail!(
+                    "thermostat target temperature must be finite and > 0, got {}",
+                    self.target_t
+                );
+            }
+        }
+        let threads = match self.threads {
+            Some(0) => bail!("threads must be >= 1, got 0"),
+            Some(n) => n,
+            None => default_threads(),
+        };
+        let box_len = self.sys.box_len;
+        let pool = Arc::new(ThreadPool::new(threads));
+
+        let (mut kspace, pppm_cfg): (Box<dyn KspaceSolver>, Option<PppmConfig>) = match self.kspace
+        {
+            KspaceChoice::Config(KspaceConfig::Pppm(cfg)) => {
+                cfg.validate()?;
+                (Box::new(Pppm::new(cfg.clone(), box_len)), Some(cfg))
+            }
+            KspaceChoice::Config(KspaceConfig::PppmAuto { alpha }) => {
+                let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
+                cfg.validate()?;
+                (Box::new(Pppm::new(cfg.clone(), box_len)), Some(cfg))
+            }
+            KspaceChoice::Config(KspaceConfig::Ewald { alpha, tol }) => {
+                if !(alpha.is_finite() && alpha > 0.0) {
+                    bail!("ewald alpha must be finite and > 0, got {alpha}");
+                }
+                if !(tol.is_finite() && tol > 0.0 && tol < 1.0) {
+                    bail!("ewald truncation tol must be in (0, 1), got {tol}");
+                }
+                (Box::new(EwaldRecipSolver::new(alpha, box_len, tol)), None)
+            }
+            KspaceChoice::Custom(s) => (s, None),
+        };
+        kspace.set_pool(pool.clone());
+
+        let mut model = match self.short_range {
+            Some(m) => m,
+            None => bail!(
+                "a short-range model is required: pass \
+                 SimulationBuilder::short_range(Box::new(...))"
+            ),
+        };
+        model.set_pool(pool.clone());
+
+        let vv = VelocityVerlet::new(self.dt_fs * FS);
+        let nh = self
+            .thermostat_tau_ps
+            .map(|tau| NoseHoover::new(self.target_t, tau));
+        let natoms = self.sys.natoms();
+        let cfg = SimConfig {
+            dt_fs: self.dt_fs,
+            target_t: self.target_t,
+            thermostat_tau_ps: self.thermostat_tau_ps,
+            overlap: self.overlap,
+            nlist: self.nlist,
+            nlist_max_age: self.nlist_max_age,
+            threads,
+        };
+        Ok(Simulation {
+            verlet: VerletManager::new(cfg.nlist, cfg.nlist_max_age),
+            kspace,
+            pppm_cfg,
+            model,
+            pool,
+            vv,
+            nh,
+            sys: self.sys,
+            cfg,
+            nlist: None,
+            nlist_o: None,
+            forces: vec![[0.0; 3]; natoms],
+            sites: Vec::new(),
+            charges: Vec::new(),
+            site_forces: Vec::new(),
+            f_wc: Vec::new(),
+            fbuf: Vec::new(),
+            observers: self.observers,
+            observing: true,
+            observed_steps: 0,
+            steps_done: 0,
+            last_obs: None,
+        })
+    }
+}

@@ -3,73 +3,38 @@
 //! Per step (paper Fig. 1 + section 3.2):
 //!   1. neighbour lists (Verlet skin, rebuild on drift or every 50 steps);
 //!   2. DW forward -> Wannier displacements Delta_n, W_n = R_O + Delta_n;
-//!   3. PPPM on {ions + WCs} -> E_Gt, forces on sites;
+//!   3. k-space solve on {ions + WCs} -> E_Gt, forces on sites;
 //!   4. DP forward+backward -> E_sr, F_sr      } steps 3 and 4 overlap on
 //!      (concurrently with 3 when overlap=on)  } real threads (section 3.2)
 //!   5. DW VJP with f_wc -> remaining Eq. 6 force terms;
 //!   6. NVT (Nose-Hoover) or NVE velocity-Verlet update.
 //!
-//! The short-range backend is pluggable: [`Backend::Native`] (framework-free
-//! rust, section 3.4.2) or [`Backend::Pjrt`] (XLA artifacts = the
-//! "framework" baseline).  PPPM precision is per [`MeshMode`] (Table 1).
+//! Every hot-path provider is behind a trait ([`KspaceSolver`],
+//! [`ShortRangeModel`] — see [`traits`]): PPPM in any `MeshMode` or the
+//! exact pool-parallel Ewald sum for k-space, the framework-free
+//! [`crate::native::NativeModel`] or the XLA [`PjrtModel`] for the short
+//! range.  A [`Simulation`] is assembled by [`SimulationBuilder`]
+//! (`Simulation::builder(sys)...build()?`), which validates configuration
+//! up front; per-step reporting goes through [`Observer`] hooks instead of
+//! caller-side scaffolding.
+
+mod builder;
+mod observe;
+mod traits;
+
+pub use builder::{KspaceConfig, SimulationBuilder};
+pub use observe::{observer_fn, FnObserver, Observer, RecorderState, StepRecorder};
+pub use traits::{KspaceSolver, PjrtModel, ShortRangeModel};
 
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
 use crate::md::system::System;
 use crate::md::units::{FS, Q_H, Q_O, Q_WC};
-use crate::native::NativeModel;
 use crate::neighbor::{build_cells_par, NlistParams, PaddedNlist, VerletManager};
 use crate::pool::ThreadPool;
 use crate::pppm::{MeshMode, Pppm, PppmConfig};
-use crate::runtime::{Dtype, PjrtEngine};
 use anyhow::Result;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
-
-/// Inference backend for DP/DW.
-pub enum Backend {
-    /// framework-free rust path (paper section 3.4.2)
-    Native(NativeModel),
-    /// XLA/PJRT artifacts (the "framework" baseline)
-    Pjrt(Mutex<PjrtEngine>, Dtype),
-}
-
-impl Backend {
-    fn dp_ef(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32]) -> Result<(f64, Vec<f64>)> {
-        match self {
-            Backend::Native(m) => Ok(m.dp_ef(coords, box_len, nlist)),
-            Backend::Pjrt(e, dt) => {
-                let out = e.lock().unwrap().dp_ef(coords, box_len, nlist, *dt)?;
-                Ok((out.energy, out.forces))
-            }
-        }
-    }
-
-    fn dw_fwd(&self, coords: &[f64], box_len: [f64; 3], nlist_o: &[i32]) -> Result<Vec<f64>> {
-        match self {
-            Backend::Native(m) => Ok(m.dw_fwd(coords, box_len, nlist_o)),
-            Backend::Pjrt(e, dt) => e.lock().unwrap().dw_fwd(coords, box_len, nlist_o, *dt),
-        }
-    }
-
-    fn dw_vjp(
-        &self,
-        coords: &[f64],
-        box_len: [f64; 3],
-        nlist_o: &[i32],
-        f_wc: &[f64],
-    ) -> Result<(Vec<f64>, Vec<f64>)> {
-        match self {
-            Backend::Native(m) => Ok(m.dw_vjp(coords, box_len, nlist_o, f_wc)),
-            Backend::Pjrt(e, dt) => {
-                let out = e
-                    .lock()
-                    .unwrap()
-                    .dw_vjp(coords, box_len, nlist_o, f_wc, *dt)?;
-                Ok((out.delta, out.f_contrib))
-            }
-        }
-    }
-}
 
 /// Per-step wall-time breakdown (the Fig. 9 categories).
 #[derive(Debug, Clone, Copy, Default)]
@@ -106,107 +71,66 @@ pub struct StepObservables {
     pub conserved: f64,
 }
 
-pub struct EngineConfig {
+/// Validated run configuration (produced by [`SimulationBuilder::build`];
+/// the k-space choice lives in the solver itself).
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
     pub dt_fs: f64,
     pub target_t: f64,
     /// None = NVE
     pub thermostat_tau_ps: Option<f64>,
-    pub pppm: PppmConfig,
-    /// overlap PPPM with DP on a dedicated thread (paper section 3.2)
+    /// overlap k-space with DP on a dedicated thread (paper section 3.2)
     pub overlap: bool,
     pub nlist: NlistParams,
     pub nlist_max_age: usize,
-    /// worker-pool size for the per-atom hot loops (DP/DW/PPPM/nlist);
+    /// worker-pool size for the per-atom hot loops (DP/DW/kspace/nlist);
     /// 1 = serial.  Results are bit-for-bit identical for any value.
     pub threads: usize,
 }
 
-impl EngineConfig {
-    pub fn default_for(box_len: [f64; 3], alpha: f64) -> EngineConfig {
-        // ~2 grid points per Angstrom, rounded to even
-        let grid = box_len.map(|l| (((l * 1.6).round() as usize) / 2 * 2).max(8));
-        // DPLR_THREADS lets whole test/bench suites run at a different pool
-        // size without touching call sites (CI exercises 1 and 4; results
-        // are bit-identical either way per the determinism contract)
-        let threads = std::env::var("DPLR_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-            .unwrap_or(1);
-        EngineConfig {
-            dt_fs: 1.0,
-            target_t: 300.0,
-            thermostat_tau_ps: Some(0.5),
-            pppm: PppmConfig::new(grid, 5, alpha),
-            overlap: false,
-            nlist: NlistParams::default(),
-            nlist_max_age: 50,
-            threads,
-        }
-    }
-}
-
-pub struct DplrEngine {
+/// A fully assembled DPLR MD run: system + providers + integrator +
+/// observers.  Build one with [`Simulation::builder`].
+pub struct Simulation {
     pub sys: System,
-    pub cfg: EngineConfig,
-    backend: Backend,
-    pppm: Pppm,
-    /// shared worker pool driving the DP/DW/PPPM/nlist hot loops
-    pool: Arc<ThreadPool>,
-    verlet: VerletManager,
-    nlist: Option<PaddedNlist>,
-    nlist_o: Option<PaddedNlist>,
-    vv: VelocityVerlet,
-    nh: Option<NoseHoover>,
+    pub cfg: SimConfig,
+    pub(crate) model: Box<dyn ShortRangeModel>,
+    pub(crate) kspace: Box<dyn KspaceSolver>,
+    /// mesh configuration when the solver is PPPM (introspection +
+    /// `set_mesh_mode` sweeps)
+    pub(crate) pppm_cfg: Option<PppmConfig>,
+    /// shared worker pool driving the DP/DW/kspace/nlist hot loops
+    pub(crate) pool: Arc<ThreadPool>,
+    pub(crate) verlet: VerletManager,
+    pub(crate) nlist: Option<PaddedNlist>,
+    pub(crate) nlist_o: Option<PaddedNlist>,
+    pub(crate) vv: VelocityVerlet,
+    pub(crate) nh: Option<NoseHoover>,
     /// forces from the previous evaluation (for the second Verlet kick)
-    forces: Vec<[f64; 3]>,
-    /// persistent per-step buffers (ion+WC sites, their charges, the PPPM
-    /// site forces and the DW-VJP seed): reused so the k-space path does
-    /// no per-step heap allocation after the first evaluation
-    sites: Vec<[f64; 3]>,
-    charges: Vec<f64>,
-    site_forces: Vec<[f64; 3]>,
-    f_wc: Vec<f64>,
+    pub(crate) forces: Vec<[f64; 3]>,
+    /// persistent per-step buffers (ion+WC sites, their charges, the
+    /// k-space site forces and the DW-VJP seed): reused so the k-space
+    /// path does no per-step heap allocation after the first evaluation
+    pub(crate) sites: Vec<[f64; 3]>,
+    pub(crate) charges: Vec<f64>,
+    pub(crate) site_forces: Vec<[f64; 3]>,
+    pub(crate) f_wc: Vec<f64>,
     /// spare combined-force buffer: ping-pongs with `forces` through
     /// `step()` so `evaluate_forces` never allocates its output either
-    fbuf: Vec<[f64; 3]>,
+    pub(crate) fbuf: Vec<[f64; 3]>,
+    pub(crate) observers: Vec<Box<dyn Observer>>,
+    /// observer callbacks enabled (suppressed during quench)
+    pub(crate) observing: bool,
+    /// production steps delivered to observers (quench steps excluded) —
+    /// the 1-based `step` argument of `Observer::on_step`
+    pub(crate) observed_steps: u64,
     pub steps_done: u64,
     pub last_obs: Option<StepObservables>,
 }
 
-impl DplrEngine {
-    pub fn new(sys: System, cfg: EngineConfig, mut backend: Backend) -> DplrEngine {
-        let pool = Arc::new(ThreadPool::new(cfg.threads));
-        let mut pppm = Pppm::new(cfg.pppm.clone(), sys.box_len);
-        pppm.set_pool(pool.clone());
-        if let Backend::Native(m) = &mut backend {
-            m.set_pool(pool.clone());
-        }
-        let vv = VelocityVerlet::new(cfg.dt_fs * FS);
-        let nh = cfg
-            .thermostat_tau_ps
-            .map(|tau| NoseHoover::new(cfg.target_t, tau));
-        let natoms = sys.natoms();
-        DplrEngine {
-            verlet: VerletManager::new(cfg.nlist, cfg.nlist_max_age),
-            pppm,
-            pool,
-            vv,
-            nh,
-            sys,
-            cfg,
-            backend,
-            nlist: None,
-            nlist_o: None,
-            forces: vec![[0.0; 3]; natoms],
-            sites: Vec::new(),
-            charges: Vec::new(),
-            site_forces: Vec::new(),
-            f_wc: Vec::new(),
-            fbuf: Vec::new(),
-            steps_done: 0,
-            last_obs: None,
-        }
+impl Simulation {
+    /// Start building a simulation over `sys`.
+    pub fn builder(sys: System) -> SimulationBuilder {
+        SimulationBuilder::new(sys)
     }
 
     fn rebuild_nlist_if_needed(&mut self) {
@@ -248,9 +172,9 @@ impl DplrEngine {
         let nlist: &[i32] = &self.nlist.as_ref().unwrap().data;
         let nlist_o: &[i32] = &self.nlist_o.as_ref().unwrap().data;
 
-        // --- DW forward (always precedes PPPM: it defines the WCs) ---
+        // --- DW forward (always precedes k-space: it defines the WCs) ---
         let t = Instant::now();
-        let delta = self.backend.dw_fwd(&coords, box_len, nlist_o)?;
+        let delta = self.model.dw_fwd(&coords, box_len, nlist_o)?;
         times.dw_fwd += t.elapsed().as_secs_f64();
 
         // site set: ions then WCs (persistent buffers; clear + extend keep
@@ -273,39 +197,41 @@ impl DplrEngine {
             self.charges.push(Q_WC);
         }
 
-        // --- PPPM || DP (the section 3.2 overlap, on real threads) ---
-        // PPPM writes its site forces into the persistent self.site_forces
-        // through the zero-allocation energy_forces_into entry point.
+        // --- k-space || DP (the section 3.2 overlap, on real threads) ---
+        // The solver writes its site forces into the persistent
+        // self.site_forces through the zero-allocation trait entry point.
         let (e_gt, dp_out, t_k, t_dp);
         if self.cfg.overlap {
-            let pppm = &mut self.pppm;
+            let kspace = &mut self.kspace;
             let site_forces = &mut self.site_forces;
-            let backend = &self.backend;
+            let model = &self.model;
             let (sites_ref, charges_ref) = (&self.sites, &self.charges);
             let (coords_ref, nlist_ref) = (&coords, nlist);
             let result = std::thread::scope(|s| {
-                // dedicated long-range thread (the "1 core of rank 3")
+                // dedicated long-range thread (the "1 core of rank 3");
+                // KspaceSolver: Send is what makes this move legal
                 let h_k = s.spawn(move || {
                     let t = Instant::now();
-                    let e = pppm.energy_forces_into(sites_ref, charges_ref, site_forces);
+                    let e = kspace.energy_forces_into(sites_ref, charges_ref, site_forces);
                     (e, t.elapsed().as_secs_f64())
                 });
-                // short-range on the main thread (the other 47 cores)
+                // short-range on the main thread (the other 47 cores);
+                // ShortRangeModel: Sync is what makes the shared ref legal
                 let t = Instant::now();
-                let dp = backend.dp_ef(coords_ref, box_len, nlist_ref);
+                let dp = model.dp_ef(coords_ref, box_len, nlist_ref);
                 let t_dp = t.elapsed().as_secs_f64();
-                let (e, t_k) = h_k.join().expect("pppm thread");
+                let (e, t_k) = h_k.join().expect("kspace thread");
                 (e, dp, t_k, t_dp)
             });
             (e_gt, dp_out, t_k, t_dp) = result;
         } else {
             let t = Instant::now();
             let e = self
-                .pppm
+                .kspace
                 .energy_forces_into(&self.sites, &self.charges, &mut self.site_forces);
             t_k = t.elapsed().as_secs_f64();
             let t = Instant::now();
-            dp_out = self.backend.dp_ef(&coords, box_len, nlist);
+            dp_out = self.model.dp_ef(&coords, box_len, nlist);
             t_dp = t.elapsed().as_secs_f64();
             e_gt = e;
         }
@@ -322,7 +248,7 @@ impl DplrEngine {
                 self.f_wc[3 * n + d] = f_sites[natoms + n][d];
             }
         }
-        let (_, f_contrib) = self.backend.dw_vjp(&coords, box_len, nlist_o, &self.f_wc)?;
+        let (_, f_contrib) = self.model.dw_vjp(&coords, box_len, nlist_o, &self.f_wc)?;
         times.dw_bwd += t.elapsed().as_secs_f64();
 
         // combine into the recycled spare buffer (every entry overwritten)
@@ -336,7 +262,8 @@ impl DplrEngine {
         Ok((forces, e_sr, e_gt))
     }
 
-    /// One full MD step; returns the wall-time breakdown.
+    /// One full MD step; returns the wall-time breakdown (also delivered
+    /// to every attached [`Observer`]).
     pub fn step(&mut self) -> Result<StepTimes> {
         let mut times = StepTimes::default();
         let t_total = Instant::now();
@@ -370,25 +297,63 @@ impl DplrEngine {
 
         let kin = self.sys.kinetic_energy();
         let shift = self.nh.as_ref().map(|n| n.conserved_shift).unwrap_or(0.0);
-        self.last_obs = Some(StepObservables {
+        let obs = StepObservables {
             e_sr,
             e_gt,
             kinetic: kin,
             temperature: self.sys.temperature(),
             conserved: e_sr + e_gt + kin + shift,
-        });
+        };
+        self.last_obs = Some(obs);
         self.steps_done += 1;
         times.total = t_total.elapsed().as_secs_f64();
+        if self.observing {
+            self.observed_steps += 1;
+            for ob in self.observers.iter_mut() {
+                ob.on_step(self.observed_steps, &times, &obs);
+            }
+        }
         Ok(times)
     }
 
-    pub fn pppm_saturations(&self) -> u64 {
-        self.pppm.quant_saturations
+    /// Run `steps` production steps (reporting flows through observers).
+    pub fn run(&mut self, steps: usize) -> Result<()> {
+        for _ in 0..steps {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Forces of the most recent evaluation (one entry per atom).
+    pub fn forces(&self) -> &[[f64; 3]] {
+        &self.forces
+    }
+
+    /// Cumulative quantization saturation events of the k-space solver.
+    pub fn kspace_saturations(&self) -> u64 {
+        self.kspace.saturations()
+    }
+
+    /// Short label of the active k-space solver ("pppm", "ewald", ...).
+    pub fn kspace_name(&self) -> &'static str {
+        self.kspace.name()
+    }
+
+    /// Short label of the active short-range model ("native", "pjrt", ...).
+    pub fn short_range_name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    /// Mesh configuration when the active solver is PPPM.
+    pub fn pppm_config(&self) -> Option<&PppmConfig> {
+        self.pppm_cfg.as_ref()
     }
 
     /// Quenched relaxation: short steps with periodic velocity zeroing.
     /// Removes the packing clashes of freshly built lattice boxes before
     /// production dynamics (the paper starts from equilibrated water).
+    /// Observer callbacks are suppressed: quench is preparation, not
+    /// production.
     pub fn quench(&mut self, steps: usize) -> Result<()> {
         let saved_dt = self.cfg.dt_fs;
         self.cfg.dt_fs = 0.2;
@@ -396,18 +361,25 @@ impl DplrEngine {
         // run the quench without the thermostat: the initial packing
         // transient would wind the Nose-Hoover xi far out of range
         let saved_nh = self.nh.take();
+        let saved_observing = self.observing;
+        self.observing = false;
+        let mut result = Ok(());
         for k in 0..steps {
-            self.step()?;
+            if let Err(e) = self.step() {
+                result = Err(e);
+                break;
+            }
             if k % 5 == 4 {
                 for v in &mut self.sys.vel {
                     *v = [0.0; 3];
                 }
             }
         }
+        self.observing = saved_observing;
         self.cfg.dt_fs = saved_dt;
         self.vv = VelocityVerlet::new(saved_dt * FS);
         self.nh = saved_nh;
-        Ok(())
+        result
     }
 
     /// Redraw Maxwell-Boltzmann velocities at `temp` (use after `quench`,
@@ -430,19 +402,25 @@ impl DplrEngine {
         }
     }
 
-    /// Reconfigure the mesh solver (Table 1 precision sweeps).
+    /// Reconfigure the mesh solver (Table 1 precision sweeps).  Replaces
+    /// the active k-space solver with a fresh PPPM at `grid`/`mode`,
+    /// keeping the spline order of the previous PPPM configuration (5 if
+    /// the previous solver was not PPPM).
     pub fn set_mesh_mode(&mut self, grid: [usize; 3], mode: MeshMode, alpha: f64) {
-        let mut cfg = PppmConfig::new(grid, self.cfg.pppm.order, alpha);
+        let order = self.pppm_cfg.as_ref().map(|c| c.order).unwrap_or(5);
+        let mut cfg = PppmConfig::new(grid, order, alpha);
         cfg.mode = mode;
-        self.pppm = Pppm::new(cfg.clone(), self.sys.box_len);
-        self.pppm.set_pool(self.pool.clone());
-        self.cfg.pppm = cfg;
+        let mut pppm = Pppm::new(cfg.clone(), self.sys.box_len);
+        pppm.set_pool(self.pool.clone());
+        self.kspace = Box::new(pppm);
+        self.pppm_cfg = Some(cfg);
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // engine integration tests live in rust/tests/engine_e2e.rs (they need
-    // the artifacts directory); unit-testable pieces are covered in the
-    // subsystem modules.
+    // engine integration tests live in rust/tests/ (engine_e2e.rs,
+    // kspace_parity.rs, builder_validation.rs, thread_invariance.rs);
+    // unit-testable pieces are covered in the subsystem modules and in
+    // the observe submodule.
 }

@@ -1,0 +1,131 @@
+//! Observer hooks: per-step callbacks on the production run loop.
+//!
+//! Every driver (CLI `run`, experiments, examples) used to carry its own
+//! copy of the same scaffolding — accumulate `StepTimes`, sample
+//! observables every N steps, print progress.  Observers replace that:
+//! attach any number of [`Observer`]s through
+//! [`super::SimulationBuilder::observer`] and the engine calls
+//! `on_step(step, &times, &obs)` after every production step (quench
+//! steps are preparation and are not reported).
+//!
+//! For callbacks whose state the caller needs back after the run, use the
+//! shared-handle [`StepRecorder`] (clone one handle into the builder, keep
+//! the other) or capture an `Arc<Mutex<..>>` in a closure via
+//! [`observer_fn`].
+
+use super::{StepObservables, StepTimes};
+use std::sync::{Arc, Mutex};
+
+/// Per-step callback on the production run loop.
+pub trait Observer {
+    /// `step` is the 1-based count of production steps delivered to
+    /// observers so far — quench steps are suppressed *and not counted*,
+    /// so `step % N == 0` samples every N production steps regardless of
+    /// how long the preparation phase ran.
+    fn on_step(&mut self, step: u64, times: &StepTimes, obs: &StepObservables);
+}
+
+/// Closure adapter (kept as a named struct rather than a blanket
+/// `impl<F: FnMut> Observer for F` so concrete observer types never risk
+/// coherence overlap with the closure impl).
+pub struct FnObserver<F>(pub F);
+
+impl<F: FnMut(u64, &StepTimes, &StepObservables)> Observer for FnObserver<F> {
+    fn on_step(&mut self, step: u64, times: &StepTimes, obs: &StepObservables) {
+        (self.0)(step, times, obs)
+    }
+}
+
+/// Box a closure as an observer: `builder.observer(observer_fn(|s, t, o| ...))`.
+pub fn observer_fn<F>(f: F) -> Box<dyn Observer>
+where
+    F: FnMut(u64, &StepTimes, &StepObservables) + 'static,
+{
+    Box::new(FnObserver(f))
+}
+
+/// Snapshot of a [`StepRecorder`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecorderState {
+    /// summed wall-time breakdown over the recorded steps
+    pub totals: StepTimes,
+    /// number of production steps recorded
+    pub steps: u64,
+    /// observables of the most recent recorded step
+    pub last: Option<StepObservables>,
+}
+
+/// Shared step recorder: clone one handle into the builder as an observer
+/// and keep the other to read the accumulated timings back after the run.
+#[derive(Clone, Default)]
+pub struct StepRecorder(Arc<Mutex<RecorderState>>);
+
+impl StepRecorder {
+    pub fn new() -> StepRecorder {
+        StepRecorder::default()
+    }
+
+    pub fn state(&self) -> RecorderState {
+        *self.0.lock().unwrap()
+    }
+
+    pub fn totals(&self) -> StepTimes {
+        self.state().totals
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.state().steps
+    }
+}
+
+impl Observer for StepRecorder {
+    fn on_step(&mut self, _step: u64, times: &StepTimes, obs: &StepObservables) {
+        let mut st = self.0.lock().unwrap();
+        st.totals.add(times);
+        st.steps += 1;
+        st.last = Some(*obs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_accumulates_and_shares_state() {
+        let rec = StepRecorder::new();
+        let mut handle: Box<dyn Observer> = Box::new(rec.clone());
+        let obs = StepObservables {
+            e_sr: 1.0,
+            e_gt: 2.0,
+            kinetic: 3.0,
+            temperature: 300.0,
+            conserved: 6.0,
+        };
+        let mut t = StepTimes::default();
+        t.total = 0.5;
+        handle.on_step(1, &t, &obs);
+        handle.on_step(2, &t, &obs);
+        assert_eq!(rec.steps(), 2);
+        assert!((rec.totals().total - 1.0).abs() < 1e-12);
+        assert_eq!(rec.state().last.unwrap().e_gt, 2.0);
+    }
+
+    #[test]
+    fn closure_observer_counts_calls() {
+        let n = Arc::new(Mutex::new(0u64));
+        let n2 = n.clone();
+        let mut ob = observer_fn(move |step, _t, _o| {
+            *n2.lock().unwrap() = step;
+        });
+        let obs = StepObservables {
+            e_sr: 0.0,
+            e_gt: 0.0,
+            kinetic: 0.0,
+            temperature: 0.0,
+            conserved: 0.0,
+        };
+        ob.on_step(7, &StepTimes::default(), &obs);
+        assert_eq!(*n.lock().unwrap(), 7);
+    }
+}

@@ -1,0 +1,241 @@
+//! The force-provider traits: every hot-path component of a DPLR step is
+//! behind one of these, so implementations can be swapped, benched and
+//! validated independently (the way LAMMPS's kspace styles and
+//! DeePMD-kit's multi-backend model interface make their solvers
+//! pluggable).
+//!
+//!  * [`KspaceSolver`] — the long-range term E_Gt.  Implemented by
+//!    [`Pppm`] (every `MeshMode`) and by the pool-parallel
+//!    [`EwaldRecipSolver`], which turns the exact direct k-space sum into
+//!    a runnable in-engine backend (`dplr run --kspace ewald`) instead of
+//!    a test-only oracle.  `Send` is part of the contract: the section-3.2
+//!    overlap runs the solver on a dedicated thread.
+//!  * [`ShortRangeModel`] — DP energy/forces plus the DW Wannier
+//!    forward/VJP.  Implemented by [`NativeModel`] (framework-free,
+//!    section 3.4.2) and [`PjrtModel`] (the XLA artifact baseline).
+//!    `Send + Sync` is part of the contract: the overlap thread evaluates
+//!    DP through a shared reference while PPPM runs elsewhere.
+//!
+//! Both traits replace the old closed `Backend` enum whose match-dispatch
+//! sat on the step path; the step loop now only sees trait objects.
+
+use crate::ewald::EwaldRecipSolver;
+use crate::native::NativeModel;
+use crate::pool::ThreadPool;
+use crate::pppm::Pppm;
+use crate::runtime::{Dtype, PjrtEngine};
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// A long-range (reciprocal-space) electrostatics solver.
+///
+/// The engine feeds it the full site set (ions then Wannier centroids)
+/// with their charges and a persistent output buffer; the solver returns
+/// E_Gt and writes per-site forces.  Implementations must be internally
+/// deterministic for any pool size (the engine's bit-for-bit
+/// thread-invariance contract flows through this trait).
+pub trait KspaceSolver: Send {
+    /// Energy + forces on the charged sites.  `forces_out` is resized to
+    /// `sites.len()`; reusing the buffer across steps must not allocate in
+    /// steady state.
+    fn energy_forces_into(
+        &mut self,
+        sites: &[[f64; 3]],
+        charges: &[f64],
+        forces_out: &mut Vec<[f64; 3]>,
+    ) -> f64;
+
+    /// Share the engine's worker pool.
+    fn set_pool(&mut self, pool: Arc<ThreadPool>);
+
+    /// Re-derive box-dependent tables after a cell change.
+    fn rebuild(&mut self, box_len: [f64; 3]);
+
+    /// Cumulative quantization saturation events (mixed-precision
+    /// solvers); 0 for exact solvers.
+    fn saturations(&self) -> u64 {
+        0
+    }
+
+    /// Short label for logs and reports.
+    fn name(&self) -> &'static str;
+}
+
+impl KspaceSolver for Pppm {
+    fn energy_forces_into(
+        &mut self,
+        sites: &[[f64; 3]],
+        charges: &[f64],
+        forces_out: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        Pppm::energy_forces_into(self, sites, charges, forces_out)
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        Pppm::set_pool(self, pool)
+    }
+
+    fn rebuild(&mut self, box_len: [f64; 3]) {
+        Pppm::rebuild(self, box_len)
+    }
+
+    fn saturations(&self) -> u64 {
+        self.quant_saturations
+    }
+
+    fn name(&self) -> &'static str {
+        "pppm"
+    }
+}
+
+impl KspaceSolver for EwaldRecipSolver {
+    fn energy_forces_into(
+        &mut self,
+        sites: &[[f64; 3]],
+        charges: &[f64],
+        forces_out: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        EwaldRecipSolver::energy_forces_into(self, sites, charges, forces_out)
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        EwaldRecipSolver::set_pool(self, pool)
+    }
+
+    fn rebuild(&mut self, box_len: [f64; 3]) {
+        EwaldRecipSolver::rebuild(self, box_len)
+    }
+
+    fn name(&self) -> &'static str {
+        "ewald"
+    }
+}
+
+/// The short-range neural-network model: DP energy/forces and the DW
+/// Wannier-centroid forward/VJP.
+///
+/// `&self` methods + `Send + Sync` make the overlap contract explicit:
+/// the engine evaluates DP through a shared reference on one thread while
+/// the k-space solver runs on another.
+pub trait ShortRangeModel: Send + Sync {
+    /// Short-range energy + flat (natoms*3) forces.
+    fn dp_ef(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32]) -> Result<(f64, Vec<f64>)>;
+
+    /// Wannier displacements Delta_n (flat nmol*3).
+    fn dw_fwd(&self, coords: &[f64], box_len: [f64; 3], nlist_o: &[i32]) -> Result<Vec<f64>>;
+
+    /// DW VJP: (delta, flat natoms*3 force contribution) given WC forces.
+    fn dw_vjp(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist_o: &[i32],
+        f_wc: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)>;
+
+    /// Share the engine's worker pool (no-op for backends that do not
+    /// shard, e.g. the XLA runtime with its own intra-op threading).
+    fn set_pool(&mut self, _pool: Arc<ThreadPool>) {}
+
+    /// Short label for logs and reports.
+    fn name(&self) -> &'static str;
+}
+
+impl ShortRangeModel for NativeModel {
+    fn dp_ef(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32]) -> Result<(f64, Vec<f64>)> {
+        Ok(NativeModel::dp_ef(self, coords, box_len, nlist))
+    }
+
+    fn dw_fwd(&self, coords: &[f64], box_len: [f64; 3], nlist_o: &[i32]) -> Result<Vec<f64>> {
+        Ok(NativeModel::dw_fwd(self, coords, box_len, nlist_o))
+    }
+
+    fn dw_vjp(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist_o: &[i32],
+        f_wc: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        Ok(NativeModel::dw_vjp(self, coords, box_len, nlist_o, f_wc))
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        NativeModel::set_pool(self, pool)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The XLA/PJRT artifact backend (the paper's "framework" baseline) as a
+/// [`ShortRangeModel`].  `PjrtEngine` compiles executables lazily behind
+/// `&mut self`, so the shared-reference trait contract is met with an
+/// internal mutex — exactly the synchronization the old `Backend::Pjrt`
+/// variant carried, now owned by the implementation instead of the engine.
+pub struct PjrtModel {
+    engine: Mutex<PjrtEngine>,
+    dtype: Dtype,
+}
+
+impl PjrtModel {
+    pub fn new(engine: PjrtEngine, dtype: Dtype) -> PjrtModel {
+        PjrtModel {
+            engine: Mutex::new(engine),
+            dtype,
+        }
+    }
+
+    /// Open the artifacts directory (errors like a missing directory when
+    /// the crate was built without the real XLA runtime).
+    pub fn open(dir: &str, dtype: Dtype) -> Result<PjrtModel> {
+        Ok(PjrtModel::new(PjrtEngine::open(dir)?, dtype))
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Access the underlying engine (e.g. the `calls` counter).
+    pub fn engine(&self) -> &Mutex<PjrtEngine> {
+        &self.engine
+    }
+}
+
+impl ShortRangeModel for PjrtModel {
+    fn dp_ef(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32]) -> Result<(f64, Vec<f64>)> {
+        let out = self
+            .engine
+            .lock()
+            .unwrap()
+            .dp_ef(coords, box_len, nlist, self.dtype)?;
+        Ok((out.energy, out.forces))
+    }
+
+    fn dw_fwd(&self, coords: &[f64], box_len: [f64; 3], nlist_o: &[i32]) -> Result<Vec<f64>> {
+        self.engine
+            .lock()
+            .unwrap()
+            .dw_fwd(coords, box_len, nlist_o, self.dtype)
+    }
+
+    fn dw_vjp(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist_o: &[i32],
+        f_wc: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let out = self
+            .engine
+            .lock()
+            .unwrap()
+            .dw_vjp(coords, box_len, nlist_o, f_wc, self.dtype)?;
+        Ok((out.delta, out.f_contrib))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

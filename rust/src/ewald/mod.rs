@@ -6,8 +6,21 @@
 //! energy/forces (used as the accuracy reference for Table 1 and to verify
 //! PPPM), plus a full Ewald (real + recip + self) used for the classic
 //! Madelung-constant sanity test of the electrostatics substrate.
+//!
+//! Two layers live here:
+//!  * [`EwaldRecip`] — the simple serial oracle, unchanged as the stable
+//!    test/Table-1 reference;
+//!  * [`EwaldRecipSolver`] — a pool-parallel adapter with persistent
+//!    scratch that implements the engine's `KspaceSolver` contract, so the
+//!    exact direct sum is a runnable in-engine backend (`--kspace ewald`)
+//!    and not just an offline oracle.  K-vectors are sharded over a
+//!    *fixed* shard count with caller-order reductions, so — like PPPM —
+//!    its results are bit-for-bit identical for any pool size.
 
 use crate::md::units::KE_COULOMB;
+use crate::pool::{even_shards, SyncSlice, ThreadPool};
+use std::ops::Range;
+use std::sync::Arc;
 
 /// Gaussian-screened reciprocal-space sum, truncated at |m_i| <= mmax.
 ///
@@ -92,6 +105,167 @@ impl EwaldRecip {
             }
         }
         (energy, forces)
+    }
+}
+
+/// Fixed shard count for the k-vector reduction: thread-count independent
+/// (the same rationale as `pppm::REDUCE_SHARDS`), so the solver is
+/// bit-for-bit identical for any pool size.
+const KSHARDS: usize = 8;
+
+/// Pool-parallel exact reciprocal-space solver with persistent scratch —
+/// the in-engine `--kspace ewald` backend.
+///
+/// Parallel structure: the k-vector list (precomputed per box) is split
+/// into [`KSHARDS`] fixed contiguous shards.  Each shard accumulates one
+/// private energy partial and one private per-site force grid; the caller
+/// then reduces both in shard order, so results do not depend on the pool
+/// size.  All per-call buffers persist across calls, so the steady state
+/// allocates nothing.
+pub struct EwaldRecipSolver {
+    pub alpha: f64,
+    /// relative truncation tolerance fed to [`EwaldRecip::auto`]
+    pub tol: f64,
+    pool: Arc<ThreadPool>,
+    /// per k-vector: (kx, ky, kz, exp(-k^2/4a^2)/k^2)
+    kvecs: Vec<[f64; 4]>,
+    /// energy prefactor ke * 2 pi / V
+    pref: f64,
+    /// fixed contiguous k-shards (at most KSHARDS)
+    kshards: Vec<Range<usize>>,
+    /// per-shard force partials, flat [shard][site]
+    fpart: Vec<[f64; 3]>,
+    /// per-shard energy partials, reduced in shard order
+    epart: Vec<f64>,
+    /// per-shard per-site (sin, cos) phase scratch
+    phase: Vec<(f64, f64)>,
+}
+
+impl EwaldRecipSolver {
+    pub fn new(alpha: f64, box_len: [f64; 3], tol: f64) -> EwaldRecipSolver {
+        let mut s = EwaldRecipSolver {
+            alpha,
+            tol,
+            pool: Arc::new(ThreadPool::serial()),
+            kvecs: Vec::new(),
+            pref: 0.0,
+            kshards: Vec::new(),
+            fpart: Vec::new(),
+            epart: Vec::new(),
+            phase: Vec::new(),
+        };
+        s.rebuild(box_len);
+        s
+    }
+
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
+    }
+
+    /// Number of k-vectors in the current truncation (diagnostics).
+    pub fn nkvec(&self) -> usize {
+        self.kvecs.len()
+    }
+
+    /// Recompute the k-vector table for a new box.
+    pub fn rebuild(&mut self, box_len: [f64; 3]) {
+        let ew = EwaldRecip::auto(self.alpha, box_len, self.tol);
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let v = box_len[0] * box_len[1] * box_len[2];
+        self.pref = KE_COULOMB * two_pi / v;
+        let a2inv = 1.0 / (4.0 * self.alpha * self.alpha);
+        self.kvecs.clear();
+        for mx in -ew.mmax[0]..=ew.mmax[0] {
+            for my in -ew.mmax[1]..=ew.mmax[1] {
+                for mz in -ew.mmax[2]..=ew.mmax[2] {
+                    if mx == 0 && my == 0 && mz == 0 {
+                        continue;
+                    }
+                    let k = [
+                        two_pi * mx as f64 / box_len[0],
+                        two_pi * my as f64 / box_len[1],
+                        two_pi * mz as f64 / box_len[2],
+                    ];
+                    let k2 = k[0] * k[0] + k[1] * k[1] + k[2] * k[2];
+                    let a = (-k2 * a2inv).exp() / k2;
+                    self.kvecs.push([k[0], k[1], k[2], a]);
+                }
+            }
+        }
+        self.kshards = even_shards(self.kvecs.len(), KSHARDS);
+    }
+
+    /// Energy + forces with caller-owned output storage (the engine's
+    /// steady-state entry point; `out` is resized to `pos.len()`).
+    pub fn energy_forces_into(
+        &mut self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        out: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        assert_eq!(pos.len(), q.len());
+        let n = pos.len();
+        out.resize(n, [0.0; 3]);
+        let nsh = self.kshards.len();
+        if nsh == 0 || n == 0 {
+            for f in out.iter_mut() {
+                *f = [0.0; 3];
+            }
+            return 0.0;
+        }
+        self.fpart.resize(nsh * n, [0.0; 3]);
+        self.phase.resize(nsh * n, (0.0, 0.0));
+        self.epart.resize(nsh, 0.0);
+        {
+            let fpart = SyncSlice::new(&mut self.fpart);
+            let phase = SyncSlice::new(&mut self.phase);
+            let ep = SyncSlice::new(&mut self.epart);
+            let (kvecs, shards, pref) = (&self.kvecs, &self.kshards, self.pref);
+            self.pool.run(nsh, &|s| {
+                // Safety: one force/phase slab + one energy slot per shard
+                let fs = unsafe { fpart.slice_mut(s * n..(s + 1) * n) };
+                let ph = unsafe { phase.slice_mut(s * n..(s + 1) * n) };
+                for f in fs.iter_mut() {
+                    *f = [0.0; 3];
+                }
+                let mut e = 0.0;
+                for kv in &kvecs[shards[s].start..shards[s].end] {
+                    let [kx, ky, kz, a] = *kv;
+                    // S(k) = sum_i q_i e^{i k.r_i}
+                    let (mut sre, mut sim) = (0.0, 0.0);
+                    for (i, (p, qi)) in pos.iter().zip(q).enumerate() {
+                        let th = kx * p[0] + ky * p[1] + kz * p[2];
+                        let (sn, cs) = th.sin_cos();
+                        sre += qi * cs;
+                        sim += qi * sn;
+                        ph[i] = (sn, cs);
+                    }
+                    e += pref * a * (sre * sre + sim * sim);
+                    // F_i = 2 pref A q_i k [sin(th_i) S_re - cos(th_i) S_im]
+                    let fpre = 2.0 * pref * a;
+                    for (i, &(sn, cs)) in ph.iter().enumerate() {
+                        let g = fpre * q[i] * (sn * sre - cs * sim);
+                        fs[i][0] += g * kx;
+                        fs[i][1] += g * ky;
+                        fs[i][2] += g * kz;
+                    }
+                }
+                unsafe { *ep.index_mut(s) = e };
+            });
+        }
+        // fixed-order reductions (shard order, independent of pool size)
+        let energy: f64 = self.epart[..nsh].iter().sum();
+        for (i, f) in out.iter_mut().enumerate() {
+            let mut acc = [0.0; 3];
+            for s in 0..nsh {
+                let p = self.fpart[s * n + i];
+                acc[0] += p[0];
+                acc[1] += p[1];
+                acc[2] += p[2];
+            }
+            *f = acc;
+        }
+        energy
     }
 }
 
@@ -206,6 +380,57 @@ mod tests {
             .collect();
         let (e1, _) = ew.energy_forces(&shifted, &q, box_len);
         assert!((e0 - e1).abs() < 1e-9 * e0.abs().max(1.0));
+    }
+
+    #[test]
+    fn solver_matches_oracle_and_is_thread_invariant() {
+        let box_len = [9.0, 8.0, 10.0];
+        let pos = vec![
+            [1.0, 2.0, 3.0],
+            [4.4, 5.5, 2.2],
+            [7.3, 0.4, 8.8],
+            [2.2, 6.1, 4.9],
+        ];
+        let q = vec![1.0, -2.0, 1.0, 0.5];
+        let alpha = 0.7;
+        let tol = 1e-12;
+        let ew = EwaldRecip::auto(alpha, box_len, tol);
+        let (e0, f0) = ew.energy_forces(&pos, &q, box_len);
+
+        let mut solver = EwaldRecipSolver::new(alpha, box_len, tol);
+        let mut out = Vec::new();
+        let e1 = solver.energy_forces_into(&pos, &q, &mut out);
+        // same k-set, different summation grouping: near-equality only
+        assert!(
+            (e0 - e1).abs() < 1e-9 * e0.abs().max(1.0),
+            "oracle {e0} vs solver {e1}"
+        );
+        for (a, b) in f0.iter().zip(&out) {
+            for d in 0..3 {
+                assert!((a[d] - b[d]).abs() < 1e-9 * a[d].abs().max(1.0));
+            }
+        }
+        // second call through the persistent scratch is bit-identical
+        let e2 = solver.energy_forces_into(&pos, &q, &mut out);
+        assert_eq!(e1.to_bits(), e2.to_bits(), "scratch reuse changed E");
+
+        // fixed k-shards: bit-identical for any pool size
+        for threads in [2usize, 4] {
+            let mut sn = EwaldRecipSolver::new(alpha, box_len, tol);
+            sn.set_pool(std::sync::Arc::new(crate::pool::ThreadPool::new(threads)));
+            let mut on = Vec::new();
+            let en = sn.energy_forces_into(&pos, &q, &mut on);
+            assert_eq!(e1.to_bits(), en.to_bits(), "E at threads={threads}");
+            for (i, (a, b)) in out.iter().zip(&on).enumerate() {
+                for d in 0..3 {
+                    assert_eq!(
+                        a[d].to_bits(),
+                        b[d].to_bits(),
+                        "F[{i}][{d}] at threads={threads}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

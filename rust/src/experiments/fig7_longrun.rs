@@ -3,16 +3,18 @@
 //!
 //! Paper: 50k steps on the 128-water system.  Defaults here are scaled to
 //! one CPU (the trace density, not the physics, is what the figure shows);
-//! `--steps` restores any length.
+//! `--steps` restores any length.  Trace sampling rides the engine's
+//! observer hook instead of a hand-rolled run loop.
 
-use crate::engine::{Backend, DplrEngine, EngineConfig};
+use crate::engine::{KspaceConfig, Simulation};
 use crate::md::water::water_box;
 use crate::native::NativeModel;
-use crate::pppm::MeshMode;
+use crate::pppm::{MeshMode, PppmConfig};
 use crate::runtime::manifest::artifacts_dir;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::Result;
+use std::sync::{Arc, Mutex};
 
 pub struct Config {
     pub nmol: usize,
@@ -32,7 +34,7 @@ impl Default for Config {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Trace {
     pub label: String,
     pub step: Vec<u64>,
@@ -44,32 +46,45 @@ fn run_one(cfg: &Config, label: &str, mode: Option<MeshMode>) -> Result<Trace> {
     let mut sys = water_box(cfg.nmol, 4242);
     let mut rng = Rng::new(17);
     sys.thermalize(300.0, &mut rng);
-    let backend = Backend::Native(NativeModel::load(&artifacts_dir())?);
-    let mut ec = EngineConfig::default_for(sys.box_len, 0.3);
-    ec.overlap = true;
-    let mut eng = DplrEngine::new(sys, ec, backend);
-    if let Some(mode) = mode {
-        eng.set_mesh_mode([8, 12, 8], mode, 0.3);
-    }
+    let alpha = 0.3;
+    let kspace = match mode {
+        None => KspaceConfig::PppmAuto { alpha },
+        Some(mode) => {
+            let mut mesh = PppmConfig::new([8, 12, 8], 5, alpha);
+            mesh.mode = mode;
+            KspaceConfig::Pppm(mesh)
+        }
+    };
+    // trace sampling as an observer: `step` counts production steps only
+    // (quench is suppressed), shared with this caller through an Arc
+    let trace = Arc::new(Mutex::new(Trace {
+        label: label.to_string(),
+        ..Trace::default()
+    }));
+    let sink = trace.clone();
+    let sample_every = cfg.sample_every.max(1) as u64;
+    let mut sim = Simulation::builder(sys)
+        .thermostat(300.0, 0.5)
+        .overlap(true)
+        .kspace(kspace)
+        .short_range(Box::new(NativeModel::load(&artifacts_dir())?))
+        .observe(move |step, _, o| {
+            // 0-based production index, matching the pre-observer traces
+            let s = step - 1;
+            if s % sample_every == 0 {
+                let mut tr = sink.lock().unwrap();
+                tr.step.push(s);
+                tr.energy.push(o.e_sr + o.e_gt + o.kinetic);
+                tr.temperature.push(o.temperature);
+            }
+        })
+        .build()?;
     // longer relaxation than the quick examples: Fig 7 measures
     // equilibrium stability, so shed the lattice-packing energy first
-    eng.quench(120)?;
-    eng.reheat(300.0, 23);
-    let mut tr = Trace {
-        label: label.to_string(),
-        step: Vec::new(),
-        energy: Vec::new(),
-        temperature: Vec::new(),
-    };
-    for s in 0..cfg.steps {
-        eng.step()?;
-        if s % cfg.sample_every == 0 {
-            let o = eng.last_obs.unwrap();
-            tr.step.push(s as u64);
-            tr.energy.push(o.e_sr + o.e_gt + o.kinetic);
-            tr.temperature.push(o.temperature);
-        }
-    }
+    sim.quench(120)?;
+    sim.reheat(300.0, 23);
+    sim.run(cfg.steps)?;
+    let tr = trace.lock().unwrap().clone();
     Ok(tr)
 }
 

@@ -6,19 +6,24 @@
 //! our model *is* the potential, so the reference here is the exact
 //! direct k-space sum + double-precision NN — the same experimental
 //! structure (error of a precision config against the golden answer).
+//!
+//! Both providers flow through the engine traits: the NN path is a
+//! `&dyn ShortRangeModel` (native f64 or the f32 PJRT artifacts) and the
+//! k-space path a `&mut dyn KspaceSolver` (the exact `EwaldRecipSolver`
+//! for the golden row, `Pppm` for every configuration under test) — the
+//! same seams the engine itself dispatches through.
 
-use crate::engine::{Backend, DplrEngine, EngineConfig};
-use crate::ewald::EwaldRecip;
+use crate::engine::{KspaceConfig, KspaceSolver, PjrtModel, ShortRangeModel, Simulation};
+use crate::ewald::EwaldRecipSolver;
 use crate::md::units::{Q_H, Q_O, Q_WC};
 use crate::md::water::water_box;
 use crate::native::NativeModel;
 use crate::pppm::MeshMode;
 use crate::runtime::manifest::artifacts_dir;
-use crate::runtime::{Dtype, PjrtEngine};
+use crate::runtime::Dtype;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 use anyhow::Result;
-use std::sync::Mutex;
 
 #[derive(Debug, Clone)]
 pub struct Row {
@@ -46,31 +51,26 @@ impl Default for Config {
     }
 }
 
-/// Build a mildly-equilibrated 128-water state shared by all rows.
-fn reference_state(cfg: &Config) -> Result<DplrEngine> {
+/// Build a mildly-equilibrated 128-water state shared by all rows: the
+/// 32^3 double-precision Table-1 baseline through the builder API.
+fn reference_state(cfg: &Config) -> Result<Simulation> {
     let mut sys = water_box(cfg.nmol, 2025);
     let mut rng = Rng::new(5);
     sys.thermalize(300.0, &mut rng);
-    let backend = Backend::Native(NativeModel::load(&artifacts_dir())?);
-    let mut eng = DplrEngine::new(sys, EngineConfig::default_for_table1(), backend);
-    eng.quench(cfg.equil)?;
-    eng.rescale_to(300.0);
-    Ok(eng)
-}
-
-impl EngineConfig {
-    /// 32^3 double-precision baseline of Table 1.
-    pub fn default_for_table1() -> EngineConfig {
-        let mut c = EngineConfig::default_for([1.0; 3], 0.3);
-        c.pppm = crate::pppm::PppmConfig::new([32, 32, 32], 5, 0.3);
-        c
-    }
+    let mesh = crate::pppm::PppmConfig::new([32, 32, 32], 5, 0.3);
+    let mut sim = Simulation::builder(sys)
+        .kspace(KspaceConfig::Pppm(mesh))
+        .short_range(Box::new(NativeModel::load(&artifacts_dir())?))
+        .build()?;
+    sim.quench(cfg.equil)?;
+    sim.rescale_to(300.0);
+    Ok(sim)
 }
 
 pub fn run(cfg: &Config) -> Result<Vec<Row>> {
     let dir = artifacts_dir();
-    let eng = reference_state(cfg)?;
-    let sys = eng.sys.clone();
+    let sim = reference_state(cfg)?;
+    let sys = sim.sys.clone();
     let coords = sys.coords_flat();
     let nmol = sys.nmol;
     let natoms = sys.natoms();
@@ -85,18 +85,15 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
 
     // ---- golden reference: native f64 NN + exact direct k-space sum ----
     let native = NativeModel::load(&dir)?;
+    let mut golden_kspace = EwaldRecipSolver::new(alpha, sys.box_len, 1e-14);
     let golden = full_forces(
         &native,
-        None,
+        &mut golden_kspace,
         &coords,
         sys.box_len,
         &nlist,
         &nlist_o,
         nmol,
-        |sites, q| {
-            let ew = EwaldRecip::auto(alpha, sys.box_len, 1e-14);
-            ew.energy_forces(sites, q, sys.box_len)
-        },
     )?;
 
     let mut rows = Vec::new();
@@ -130,11 +127,11 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
         // native f64 NN, leaving only the mesh precision under test
         let pjrt;
         let mut nn_fallback = false;
-        let nn: BackendRef = if f32_nn {
-            match PjrtEngine::open(&dir) {
-                Ok(e) => {
-                    pjrt = Mutex::new(e);
-                    BackendRef::Pjrt(&pjrt)
+        let nn: &dyn ShortRangeModel = if f32_nn {
+            match PjrtModel::open(&dir, Dtype::F32) {
+                Ok(m) => {
+                    pjrt = m;
+                    &pjrt
                 }
                 Err(e) => {
                     eprintln!(
@@ -143,11 +140,11 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
                          native f64 NN — only the mesh precision differs"
                     );
                     nn_fallback = true;
-                    BackendRef::Native(&native)
+                    &native
                 }
             }
         } else {
-            BackendRef::Native(&native)
+            &native
         };
         // carry the substitution in the row label so persisted/printed
         // rows are never mistaken for real f32-NN measurements
@@ -160,14 +157,13 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
         mesh_cfg.mode = mode;
         let mut pppm = crate::pppm::Pppm::new(mesh_cfg, sys.box_len);
         let got = full_forces(
-            &native,
-            Some(&nn),
+            nn,
+            &mut pppm,
             &coords,
             sys.box_len,
             &nlist,
             &nlist_o,
             nmol,
-            |sites, q| pppm.energy_forces(sites, q),
         )?;
         let de = (got.0 - golden.0).abs() / natoms as f64;
         let mut rms = 0.0;
@@ -179,7 +175,7 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
         }
         rms = (rms / got.1.len() as f64).sqrt();
         rows.push(Row {
-            name: name.to_string(),
+            name,
             grid,
             energy_err_per_atom: de,
             force_rms_err: rms,
@@ -189,42 +185,21 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
-enum BackendRef<'a> {
-    Native(&'a NativeModel),
-    Pjrt(&'a Mutex<PjrtEngine>),
-}
-
-/// One full force evaluation with a pluggable k-space solver.
+/// One full force evaluation through the engine's provider traits: any
+/// `ShortRangeModel` for DP/DW, any `KspaceSolver` for E_Gt.
 #[allow(clippy::too_many_arguments)]
 fn full_forces(
-    native_ref: &NativeModel,
-    nn: Option<&BackendRef>,
+    nn: &dyn ShortRangeModel,
+    kspace: &mut dyn KspaceSolver,
     coords: &[f64],
     box_len: [f64; 3],
     nlist: &[i32],
     nlist_o: &[i32],
     nmol: usize,
-    mut kspace: impl FnMut(&[[f64; 3]], &[f64]) -> (f64, Vec<[f64; 3]>),
 ) -> Result<(f64, Vec<f64>)> {
     let natoms = coords.len() / 3;
-    // short-range + DW through the chosen NN path
-    let (e_sr, f_sr, delta) = match nn {
-        None | Some(BackendRef::Native(_)) => {
-            let m: &NativeModel = match nn {
-                Some(BackendRef::Native(m)) => m,
-                _ => native_ref,
-            };
-            let (e, f) = m.dp_ef(coords, box_len, nlist);
-            let d = m.dw_fwd(coords, box_len, nlist_o);
-            (e, f, d)
-        }
-        Some(BackendRef::Pjrt(p)) => {
-            let mut eng = p.lock().unwrap();
-            let out = eng.dp_ef(coords, box_len, nlist, Dtype::F32)?;
-            let d = eng.dw_fwd(coords, box_len, nlist_o, Dtype::F32)?;
-            (out.energy, out.forces, d)
-        }
-    };
+    let (e_sr, f_sr) = nn.dp_ef(coords, box_len, nlist)?;
+    let delta = nn.dw_fwd(coords, box_len, nlist_o)?;
     let mut sites = Vec::with_capacity(natoms + nmol);
     let mut q = Vec::with_capacity(natoms + nmol);
     for i in 0..natoms {
@@ -239,28 +214,15 @@ fn full_forces(
         ]);
         q.push(Q_WC);
     }
-    let (e_gt, f_sites) = kspace(&sites, &q);
+    let mut f_sites = Vec::new();
+    let e_gt = kspace.energy_forces_into(&sites, &q, &mut f_sites);
     let mut f_wc = vec![0.0; nmol * 3];
     for n in 0..nmol {
         for d in 0..3 {
             f_wc[3 * n + d] = f_sites[natoms + n][d];
         }
     }
-    let fc = match nn {
-        None | Some(BackendRef::Native(_)) => {
-            let m: &NativeModel = match nn {
-                Some(BackendRef::Native(m)) => m,
-                _ => native_ref,
-            };
-            m.dw_vjp(coords, box_len, nlist_o, &f_wc).1
-        }
-        Some(BackendRef::Pjrt(p)) => {
-            p.lock()
-                .unwrap()
-                .dw_vjp(coords, box_len, nlist_o, &f_wc, Dtype::F32)?
-                .f_contrib
-        }
-    };
+    let (_, fc) = nn.dw_vjp(coords, box_len, nlist_o, &f_wc)?;
     let mut forces = vec![0.0; natoms * 3];
     for i in 0..natoms {
         for d in 0..3 {

@@ -22,6 +22,10 @@
 // Style lints that fight the index-heavy numeric kernels in this crate
 // (explicit `for i in 0..n` loops over multiple coupled arrays, physics
 // notation single-letter names).  Correctness lints stay on.
+// NOTE: this list is intentionally duplicated in the [lints.clippy]
+// table of Cargo.toml (which also covers tests/benches/examples for
+// `clippy --all-targets`, but is silently ignored by cargo < 1.74);
+// keep the two in sync when changing either.
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::many_single_char_names)]

@@ -12,16 +12,15 @@
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{bail, Result};
-use dplr::engine::{Backend, DplrEngine, EngineConfig};
+use dplr::engine::{observer_fn, KspaceConfig, ShortRangeModel, Simulation, StepRecorder};
 use dplr::experiments::*;
 use dplr::md::units::ns_per_day;
 use dplr::md::water::water_box;
 use dplr::native::NativeModel;
 use dplr::runtime::manifest::artifacts_dir;
-use dplr::runtime::{Dtype, PjrtEngine};
+use dplr::runtime::Dtype;
 use dplr::util::args::Args;
 use dplr::util::rng::Rng;
-use std::sync::Mutex;
 
 fn main() {
     let args = Args::from_env();
@@ -52,8 +51,9 @@ fn print_help() {
          usage: dplr <command> [--flags]\n\n\
          commands:\n\
          \x20 run          real MD (--nmol 64 --steps 100 --backend native|pjrt\n\
-         \x20              --dtype f64|f32 --overlap --dt 1.0 --quench 30\n\
-         \x20              --threads N: worker pool for DP/DW/PPPM/nlist;\n\
+         \x20              --dtype f64|f32 --kspace pppm|ewald --overlap\n\
+         \x20              --dt 1.0 --quench 30\n\
+         \x20              --threads N: worker pool for DP/DW/kspace/nlist;\n\
          \x20              results are bit-for-bit identical for any N)\n\
          \x20 accuracy     Table 1: precision-config errors (--nmol 128)\n\
          \x20 longrun      Fig 7: NVT traces double vs mixed-int2 (--steps 1500)\n\
@@ -66,16 +66,16 @@ fn print_help() {
     );
 }
 
-fn backend_from_args(args: &Args) -> Result<Backend> {
+fn short_range_from_args(args: &Args) -> Result<Box<dyn ShortRangeModel>> {
     let dir = artifacts_dir();
     match args.str_or("backend", "native").as_str() {
         "native" => match NativeModel::load(&dir) {
-            Ok(m) => Ok(Backend::Native(m)),
+            Ok(m) => Ok(Box::new(m)),
             Err(e) => {
                 eprintln!(
                     "note: artifacts not loadable ({e:#}); using synthetic seeded weights"
                 );
-                Ok(Backend::Native(NativeModel::synthetic(20250710)))
+                Ok(Box::new(NativeModel::synthetic(20250710)))
             }
         },
         "pjrt" => {
@@ -84,9 +84,20 @@ fn backend_from_args(args: &Args) -> Result<Backend> {
                 "f32" => Dtype::F32,
                 other => bail!("unknown dtype {other}"),
             };
-            Ok(Backend::Pjrt(Mutex::new(PjrtEngine::open(&dir)?), dt))
+            Ok(Box::new(dplr::engine::PjrtModel::open(&dir, dt)?))
         }
         other => bail!("unknown backend {other}"),
+    }
+}
+
+fn kspace_from_args(args: &Args, alpha: f64) -> Result<KspaceConfig> {
+    match args.str_or("kspace", "pppm").as_str() {
+        "pppm" => Ok(KspaceConfig::PppmAuto { alpha }),
+        "ewald" => Ok(KspaceConfig::Ewald {
+            alpha,
+            tol: args.f64_or("ewald-tol", 1e-10)?,
+        }),
+        other => bail!("unknown kspace solver {other} (expected pppm|ewald)"),
     }
 }
 
@@ -97,49 +108,59 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut sys = water_box(nmol, args.usize_or("seed", 42)? as u64);
     let mut rng = Rng::new(7);
     sys.thermalize(300.0, &mut rng);
-    let mut cfg = EngineConfig::default_for(sys.box_len, 0.3);
-    cfg.overlap = args.bool("overlap");
-    cfg.dt_fs = args.f64_or("dt", 1.0)?;
-    // default comes from EngineConfig::default_for (honours DPLR_THREADS)
-    cfg.threads = args.usize_or("threads", cfg.threads)?.max(1);
-    let threads = cfg.threads;
-    let mut eng = DplrEngine::new(sys, cfg, backend_from_args(args)?);
-    println!(
-        "running {} atoms ({} molecules), {} steps, backend={}, overlap={}, threads={}",
-        eng.sys.natoms(),
-        nmol,
-        steps,
-        args.str_or("backend", "native"),
-        args.bool("overlap"),
-        threads,
-    );
-    eng.quench(quench)?;
-    eng.rescale_to(300.0);
-    let mut acc = dplr::engine::StepTimes::default();
-    let t0 = std::time::Instant::now();
-    for s in 0..steps {
-        let t = eng.step()?;
-        acc.add(&t);
-        if (s + 1) % 20 == 0 {
-            let o = eng.last_obs.unwrap();
+
+    let rec = StepRecorder::new();
+    // progress printer: `step` counts production steps only (quench steps
+    // are not observed), so the printed indices match the run loop
+    let progress = observer_fn(|step, _, o| {
+        if step % 20 == 0 {
             println!(
-                "step {:>5}: T {:>7.1} K   E_sr {:>10.3}  E_gt {:>9.3}  cons {:>12.4}",
-                s + 1,
-                o.temperature,
-                o.e_sr,
-                o.e_gt,
-                o.conserved
+                "step {step:>5}: T {:>7.1} K   E_sr {:>10.3}  E_gt {:>9.3}  cons {:>12.4}",
+                o.temperature, o.e_sr, o.e_gt, o.conserved
             );
         }
+    });
+
+    let mut builder = Simulation::builder(sys)
+        .dt_fs(args.f64_or("dt", 1.0)?)
+        .thermostat(300.0, 0.5)
+        .overlap(args.bool("overlap"))
+        .kspace(kspace_from_args(args, 0.3)?)
+        .short_range(short_range_from_args(args)?)
+        .observer(Box::new(rec.clone()))
+        .observer(progress);
+    if let Some(t) = args.str_opt("threads") {
+        let t: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects an integer, got '{t}'"))?;
+        builder = builder.threads(t);
     }
+    let mut sim = builder.build()?;
+
+    println!(
+        "running {} atoms ({} molecules), {} steps, backend={}, kspace={}, \
+         overlap={}, threads={}",
+        sim.sys.natoms(),
+        nmol,
+        steps,
+        sim.short_range_name(),
+        sim.kspace_name(),
+        sim.cfg.overlap,
+        sim.cfg.threads,
+    );
+    sim.quench(quench)?;
+    sim.rescale_to(300.0);
+    let t0 = std::time::Instant::now();
+    sim.run(steps)?;
     let wall = t0.elapsed().as_secs_f64();
     let per_step = wall / steps as f64;
+    let acc = rec.totals();
     println!(
         "\n{} steps in {:.2} s = {:.2} ms/step = {:.3} ns/day on this host",
         steps,
         wall,
         per_step * 1e3,
-        ns_per_day(per_step, eng.cfg.dt_fs)
+        ns_per_day(per_step, sim.cfg.dt_fs)
     );
     println!(
         "breakdown per step: nlist {:.2} ms  dw_fwd {:.2} ms  kspace {:.2} ms  \

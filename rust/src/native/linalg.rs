@@ -5,6 +5,16 @@
 //! sizes the DPLR nets use (K, N <= 384) this is within ~2-3x of MKL-class
 //! BLAS, and removing the framework dispatch overhead is the point of the
 //! paper's section 3.4.2.
+//!
+//! With `--features simd` the two flat inner loops of the embedding-net
+//! matvecs — the row-axpy of [`matmul_acc`] and the dot product of
+//! [`matmul_bt`] — dispatch to explicit AVX f64x4 kernels on x86_64
+//! (runtime CPUID probe, scalar fallback elsewhere), mirroring
+//! `pppm::simd_x86`.  The axpy is elementwise, so it is bit-identical to
+//! the scalar form; the dot kernel regroups a per-output-element private
+//! sum, which — like the PPPM gather — cannot affect the engine's
+//! thread-count determinism because one build uses one kernel set
+//! everywhere.
 
 /// Row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,6 +60,35 @@ impl Mat {
     }
 }
 
+/// `c[j] += a * b[j]` over one contiguous row (the matmul inner loop).
+#[inline]
+fn row_axpy(c: &mut [f64], a: f64, b: &[f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_x86::avx_available() {
+        // Safety: AVX probed at runtime
+        unsafe { simd_x86::axpy(c, b, a) };
+        return;
+    }
+    for (cj, bj) in c.iter_mut().zip(b) {
+        *cj += a * bj;
+    }
+}
+
+/// Dot product of two contiguous rows (the matmul_bt inner loop).
+#[inline]
+fn row_dot(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_x86::avx_available() {
+        // Safety: AVX probed at runtime
+        return unsafe { simd_x86::dot(a, b) };
+    }
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
 /// C += A @ B  (A: m x k, B: k x n, C: m x n), ikj order.
 pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat) {
     assert_eq!(a.c, b.r);
@@ -63,9 +102,7 @@ pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat) {
         // no zero-skip branch (it defeats vectorization on dense inputs)
         for (k, &aik) in arow.iter().enumerate() {
             let brow = &b.a[k * n..(k + 1) * n];
-            for (cj, bj) in crow.iter_mut().zip(brow) {
-                *cj += aik * bj;
-            }
+            row_axpy(crow, aik, brow);
         }
     }
 }
@@ -84,12 +121,7 @@ pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
     for i in 0..a.r {
         let arow = a.row(i);
         for j in 0..b.r {
-            let brow = b.row(j);
-            let mut s = 0.0;
-            for k in 0..a.c {
-                s += arow[k] * brow[k];
-            }
-            out.a[i * b.r + j] = s;
+            out.a[i * b.r + j] = row_dot(arow, b.row(j));
         }
     }
     out
@@ -110,6 +142,78 @@ pub fn add_bias(x: &mut Mat, b: &[f64]) {
 pub fn tanh_inplace(x: &mut Mat) {
     for v in &mut x.a {
         *v = v.tanh();
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd_x86 {
+    //! Explicit AVX f64x4 kernels for the embedding-net matvec inner
+    //! loops.  Runtime-dispatched (cached CPUID probe); the scalar forms
+    //! above stay the portable reference.  See `pppm::simd_x86` for the
+    //! determinism rationale.
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd,
+    };
+    use std::sync::OnceLock;
+
+    pub fn avx_available() -> bool {
+        static AVX: OnceLock<bool> = OnceLock::new();
+        *AVX.get_or_init(|| std::arch::is_x86_feature_detected!("avx"))
+    }
+
+    /// `c[j] += a * b[j]` (elementwise — bit-identical to the scalar form).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX support (see [`avx_available`]).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy(c: &mut [f64], b: &[f64], a: f64) {
+        let n = c.len().min(b.len());
+        let av = _mm256_set1_pd(a);
+        let mut k = 0;
+        while k + 4 <= n {
+            let cv = _mm256_loadu_pd(c.as_ptr().add(k));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(k));
+            _mm256_storeu_pd(
+                c.as_mut_ptr().add(k),
+                _mm256_add_pd(cv, _mm256_mul_pd(av, bv)),
+            );
+            k += 4;
+        }
+        while k < n {
+            c[k] += a * b[k];
+            k += 1;
+        }
+    }
+
+    /// `sum_k a[k] * b[k]` with 4-lane accumulation.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX support (see [`avx_available`]).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_pd();
+        let mut k = 0;
+        while k + 4 <= n {
+            let av = _mm256_loadu_pd(a.as_ptr().add(k));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(k));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+            k += 4;
+        }
+        let mut s = hsum(acc);
+        while k < n {
+            s += a[k] * b[k];
+            k += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), v);
+        (buf[0] + buf[1]) + (buf[2] + buf[3])
     }
 }
 

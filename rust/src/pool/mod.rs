@@ -18,7 +18,11 @@
 //!    section-3.2 overlap runs PPPM and DP on different threads, both
 //!    sharding through the same pool).  Workers pull chunks from any live
 //!    job; each caller waits only for its own job.
-//!  * **No allocation on the job path** beyond one `Arc<Job>` per scope.
+//!  * **No allocation on the job path.**  Fork-join scopes draw their
+//!    `Arc<Job>` from a per-pool recycling slab: after warm-up (one job
+//!    per concurrently live scope) `run`/`map`'s job setup performs zero
+//!    heap allocation, making the PPPM steady state allocation-free at
+//!    any thread count (asserted by `rust/tests/alloc_free.rs`).
 //!
 //! Shard boundaries are load-balanced between calls by
 //! [`balance::ShardPlan`], a thread-granularity reuse of the paper's
@@ -41,8 +45,13 @@ struct ShardFn(&'static (dyn Fn(usize) + Sync));
 
 /// One fork-join scope: a bag of `nshards` chunks claimed by atomic
 /// increment, with a completion latch the submitting caller waits on.
+///
+/// Jobs are recycled through the pool's slab: `func`/`nshards` are plain
+/// fields written only while the submitter holds exclusive ownership
+/// (`Arc::get_mut`) and published to workers through the queue mutex, so
+/// no interior mutability is needed for reuse.
 struct Job {
-    func: ShardFn,
+    func: Option<ShardFn>,
     nshards: usize,
     next: AtomicUsize,
     done: AtomicUsize,
@@ -51,6 +60,20 @@ struct Job {
     panic: Mutex<Option<Box<dyn Any + Send>>>,
     latch: Mutex<()>,
     cv: Condvar,
+}
+
+impl Job {
+    fn idle() -> Job {
+        Job {
+            func: None,
+            nshards: 0,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            latch: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 struct Shared {
@@ -66,6 +89,9 @@ pub struct ThreadPool {
     shared: Option<Arc<Shared>>,
     handles: Vec<JoinHandle<()>>,
     nthreads: usize,
+    /// recycled fork-join jobs: one entry per concurrently live scope ever
+    /// seen, so steady-state `run` calls allocate nothing
+    slab: Mutex<Vec<Arc<Job>>>,
 }
 
 impl ThreadPool {
@@ -78,6 +104,7 @@ impl ThreadPool {
                 shared: None,
                 handles: Vec::new(),
                 nthreads: 1,
+                slab: Mutex::new(Vec::new()),
             };
         }
         let shared = Arc::new(Shared {
@@ -98,6 +125,9 @@ impl ThreadPool {
             shared: Some(shared),
             handles,
             nthreads,
+            // capacity for a few concurrent scopes (the engine overlap runs
+            // two) so steady-state slab pushes never reallocate
+            slab: Mutex::new(Vec::with_capacity(8)),
         }
     }
 
@@ -129,15 +159,22 @@ impl ThreadPool {
         // Safety: see ShardFn — the job is drained and removed from the
         // queue before this function returns.
         let func = ShardFn(unsafe { erase(f) });
-        let job = Arc::new(Job {
-            func,
-            nshards,
-            next: AtomicUsize::new(0),
-            done: AtomicUsize::new(0),
-            panic: Mutex::new(None),
-            latch: Mutex::new(()),
-            cv: Condvar::new(),
-        });
+        // checkout: reuse a recycled job if one is free (zero-allocation
+        // steady state), else allocate.  Slab entries are exclusively
+        // owned (enforced at recycle time), so get_mut cannot fail.
+        let mut job = {
+            let mut slab = self.slab.lock().unwrap();
+            slab.pop()
+        }
+        .unwrap_or_else(|| Arc::new(Job::idle()));
+        {
+            let j = Arc::get_mut(&mut job).expect("slab job exclusively owned");
+            j.func = Some(func);
+            j.nshards = nshards;
+            j.next.store(0, Ordering::Relaxed);
+            j.done.store(0, Ordering::Relaxed);
+            // publication to workers happens-before through the queue mutex
+        }
         {
             let mut q = shared.queue.lock().unwrap();
             q.push(job.clone());
@@ -156,6 +193,24 @@ impl ThreadPool {
         }
         if let Some(payload) = job.panic.lock().unwrap().take() {
             resume_unwind(payload);
+        }
+        // recycle: a worker may still hold its clone for the few
+        // instructions of its no-op claim-loop tail, so spin briefly for
+        // exclusivity; if it is instead parked mid-window by the scheduler,
+        // give up and drop the job (one allocation next scope) rather than
+        // stall this caller for a scheduling quantum
+        let mut spins = 0u32;
+        loop {
+            if let Some(j) = Arc::get_mut(&mut job) {
+                j.func = None;
+                self.slab.lock().unwrap().push(job);
+                return;
+            }
+            spins += 1;
+            if spins > 4096 {
+                return; // drop: a fresh job is allocated on the next miss
+            }
+            std::hint::spin_loop();
         }
     }
 
@@ -222,12 +277,13 @@ fn worker_loop(sh: Arc<Shared>) {
 
 /// Claim and execute chunks of `job` until none are left.
 fn run_shards(job: &Job) {
+    let func = job.func.expect("job submitted without a shard fn");
     loop {
         let i = job.next.fetch_add(1, Ordering::Relaxed);
         if i >= job.nshards {
             return;
         }
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (job.func.0)(i))) {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (func.0)(i))) {
             let mut slot = job.panic.lock().unwrap();
             if slot.is_none() {
                 *slot = Some(payload);

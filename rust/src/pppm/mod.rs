@@ -87,6 +87,43 @@ impl PppmConfig {
             mode: MeshMode::Double,
         }
     }
+
+    /// Default mesh for a box: ~1.6 grid points per Angstrom, rounded to
+    /// even, at least 8 per dimension (the former engine default).
+    pub fn auto_grid(box_len: [f64; 3]) -> [usize; 3] {
+        box_len.map(|l| (((l * 1.6).round() as usize) / 2 * 2).max(8))
+    }
+
+    /// Build-time sanity validation (the `SimulationBuilder` contract):
+    /// spline order within the supported range, a mesh that can carry the
+    /// stencil, and a positive finite Ewald splitting parameter.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(2..=MAX_ORDER).contains(&self.order) {
+            anyhow::bail!(
+                "pppm spline order must be in 2..={MAX_ORDER}, got {}",
+                self.order
+            );
+        }
+        for (d, &n) in self.grid.iter().enumerate() {
+            if n < self.order {
+                anyhow::bail!(
+                    "pppm grid dim {d} ({n}) smaller than the spline order {}",
+                    self.order
+                );
+            }
+        }
+        if !(self.alpha.is_finite() && self.alpha > 0.0) {
+            anyhow::bail!("pppm alpha must be finite and > 0, got {}", self.alpha);
+        }
+        if let MeshMode::QuantInt32 { nseg } = self.mode {
+            for (d, &s) in nseg.iter().enumerate() {
+                if s == 0 {
+                    anyhow::bail!("pppm quantized mode: nseg[{d}] must be >= 1");
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Persistent hot-path buffers owned by [`Pppm`].  Sized on the first
@@ -218,6 +255,14 @@ impl Pppm {
     /// Share a worker pool; spread, Poisson solve, all four FFTs and the
     /// force gather shard across it.
     pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
+    }
+
+    /// Re-derive the box-dependent tables (Green function, k-vectors, FFT
+    /// plans) for a new cell, keeping the configuration and worker pool.
+    pub fn rebuild(&mut self, box_len: [f64; 3]) {
+        let pool = self.pool.clone();
+        *self = Pppm::new(self.cfg.clone(), box_len);
         self.pool = pool;
     }
 

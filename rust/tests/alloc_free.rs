@@ -1,19 +1,21 @@
 //! Allocation-freeness guard for the PPPM hot path: after warm-up,
 //! `Pppm::energy_forces_into` must perform **zero** heap allocations per
 //! call (the PppmScratch design contract — ISSUE 2 / ROADMAP scratch-reuse
-//! item).  A counting `#[global_allocator]` wraps the system allocator;
-//! the test runs with a serial pool because a parallel pool intentionally
-//! pays one `Arc<Job>` allocation per fork-join scope (see
-//! `src/pool/mod.rs`), which is a property of the pool, not of the kernel
-//! layer under test.
+//! item).  A counting `#[global_allocator]` wraps the system allocator.
+//! Since the pool recycles its fork-join `Arc<Job>`s through a per-pool
+//! slab, the guarantee now holds for *parallel* pools too (the former
+//! one-`Arc<Job>`-per-scope exemption is gone), so the test runs the same
+//! assertion with a serial pool and with a 3-thread pool.
 //!
 //! This file holds exactly one #[test]: the counter is process-global, so
 //! a second test running on another thread would pollute the count.
 
 use dplr::md::water::water_box;
+use dplr::pool::ThreadPool;
 use dplr::pppm::{Pppm, PppmConfig};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 struct CountingAlloc;
 
@@ -53,42 +55,50 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 #[test]
 fn pppm_energy_forces_is_alloc_free_in_steady_state() {
     // pow-2 grid (radix-2 lines) and non-pow2 grid (Bluestein scratch,
-    // wrapped coarse-mesh stencils) both must go allocation-free
-    for grid in [[16usize, 16, 16], [12, 18, 12]] {
-        let sys = water_box(24, 3);
-        let mut pos = sys.pos.clone();
-        let mut q: Vec<f64> = (0..sys.natoms())
-            .map(|i| if i < sys.nmol { 6.0 } else { 1.0 })
-            .collect();
-        for n in 0..sys.nmol {
-            let mut w = sys.pos[n];
-            w[0] += 0.08;
-            pos.push(w);
-            q.push(-8.0);
-        }
-        let mut pppm = Pppm::new(PppmConfig::new(grid, 5, 0.35), sys.box_len);
-        let mut out: Vec<[f64; 3]> = Vec::new();
-        // warm-up: first call sizes scratch + output, second proves reuse
-        let e0 = pppm.energy_forces_into(&pos, &q, &mut out);
-        let _ = pppm.energy_forces_into(&pos, &q, &mut out);
+    // wrapped coarse-mesh stencils) both must go allocation-free; a serial
+    // pool checks the kernel layer, a 3-thread pool additionally checks
+    // the pool's job-slab recycling (no per-scope Arc<Job> allocation)
+    for threads in [1usize, 3] {
+        for grid in [[16usize, 16, 16], [12, 18, 12]] {
+            let sys = water_box(24, 3);
+            let mut pos = sys.pos.clone();
+            let mut q: Vec<f64> = (0..sys.natoms())
+                .map(|i| if i < sys.nmol { 6.0 } else { 1.0 })
+                .collect();
+            for n in 0..sys.nmol {
+                let mut w = sys.pos[n];
+                w[0] += 0.08;
+                pos.push(w);
+                q.push(-8.0);
+            }
+            let mut pppm = Pppm::new(PppmConfig::new(grid, 5, 0.35), sys.box_len);
+            pppm.set_pool(Arc::new(ThreadPool::new(threads)));
+            let mut out: Vec<[f64; 3]> = Vec::new();
+            // warm-up: first call sizes scratch + output (and, with a
+            // parallel pool, fills the job slab + queue capacity), second
+            // proves reuse
+            let e0 = pppm.energy_forces_into(&pos, &q, &mut out);
+            let _ = pppm.energy_forces_into(&pos, &q, &mut out);
 
-        ALLOCS.store(0, Ordering::SeqCst);
-        ENABLED.store(true, Ordering::SeqCst);
-        let mut e1 = 0.0;
-        for _ in 0..3 {
-            e1 = pppm.energy_forces_into(&pos, &q, &mut out);
-        }
-        ENABLED.store(false, Ordering::SeqCst);
-        let n = ALLOCS.load(Ordering::SeqCst);
+            ALLOCS.store(0, Ordering::SeqCst);
+            ENABLED.store(true, Ordering::SeqCst);
+            let mut e1 = 0.0;
+            for _ in 0..3 {
+                e1 = pppm.energy_forces_into(&pos, &q, &mut out);
+            }
+            ENABLED.store(false, Ordering::SeqCst);
+            let n = ALLOCS.load(Ordering::SeqCst);
 
-        assert_eq!(
-            n, 0,
-            "grid {grid:?}: {n} heap allocations in steady-state energy_forces_into"
-        );
-        assert_eq!(
-            e0.to_bits(),
-            e1.to_bits(),
-            "grid {grid:?}: scratch reuse changed the energy"
-        );
+            assert_eq!(
+                n, 0,
+                "grid {grid:?}, {threads} thread(s): {n} heap allocations \
+                 in steady-state energy_forces_into"
+            );
+            assert_eq!(
+                e0.to_bits(),
+                e1.to_bits(),
+                "grid {grid:?}, {threads} thread(s): scratch reuse changed the energy"
+            );
+        }
     }
 }

@@ -1,0 +1,154 @@
+//! `SimulationBuilder` build-time validation: malformed configuration must
+//! error at `build()` (not assert deep inside a solver), and the
+//! `DPLR_THREADS` environment default must keep working through the
+//! builder exactly as it did through `EngineConfig::default_for`.
+//!
+//! Runs from a clean checkout (synthetic seeded weights).
+
+use dplr::engine::{KspaceConfig, Simulation};
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::pppm::PppmConfig;
+use std::sync::Mutex;
+
+/// Serializes the tests in this file that read or write `DPLR_THREADS`
+/// (tests within one binary run on concurrent threads).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn builder() -> dplr::engine::SimulationBuilder {
+    Simulation::builder(water_box(8, 1)).short_range(Box::new(NativeModel::synthetic(3)))
+}
+
+#[test]
+fn valid_default_configuration_builds() {
+    let sim = builder()
+        .threads(1)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+        .build()
+        .expect("default configuration must build");
+    assert_eq!(sim.cfg.threads, 1);
+    assert_eq!(sim.kspace_name(), "pppm");
+    assert_eq!(sim.short_range_name(), "native");
+    // the auto grid heuristic is recorded for introspection
+    let g = sim.pppm_config().expect("pppm config").grid;
+    assert!(g.iter().all(|&n| n >= 8 && n % 2 == 0), "auto grid {g:?}");
+}
+
+#[test]
+fn bad_pppm_grid_is_rejected() {
+    // grid dim smaller than the spline order cannot carry the stencil
+    let cfg = PppmConfig::new([4, 16, 16], 5, 0.3);
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::Pppm(cfg))
+        .build()
+        .expect_err("grid 4 with order 5 must be rejected");
+    assert!(err.to_string().contains("grid"), "unexpected error: {err:#}");
+}
+
+#[test]
+fn bad_pppm_order_is_rejected() {
+    for order in [0usize, 1, 9, 100] {
+        let cfg = PppmConfig::new([16, 16, 16], order, 0.3);
+        let err = builder()
+            .threads(1)
+            .kspace(KspaceConfig::Pppm(cfg))
+            .build()
+            .expect_err("out-of-range spline order must be rejected");
+        assert!(
+            err.to_string().contains("order"),
+            "order {order}: unexpected error: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn bad_alpha_is_rejected() {
+    for alpha in [0.0, -0.3, f64::NAN, f64::INFINITY] {
+        let cfg = PppmConfig::new([16, 16, 16], 5, alpha);
+        let err = builder()
+            .threads(1)
+            .kspace(KspaceConfig::Pppm(cfg))
+            .build()
+            .expect_err("non-positive / non-finite alpha must be rejected");
+        assert!(
+            err.to_string().contains("alpha"),
+            "alpha {alpha}: unexpected error: {err:#}"
+        );
+        let err = builder()
+            .threads(1)
+            .kspace(KspaceConfig::Ewald { alpha, tol: 1e-8 })
+            .build()
+            .expect_err("ewald must reject the same alphas");
+        assert!(err.to_string().contains("alpha"));
+    }
+}
+
+#[test]
+fn bad_ewald_tol_and_timestep_and_threads_are_rejected() {
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::Ewald {
+            alpha: 0.3,
+            tol: 1.5,
+        })
+        .build()
+        .expect_err("tol >= 1 must be rejected");
+    assert!(err.to_string().contains("tol"));
+
+    let err = builder().threads(1).dt_fs(0.0).build().expect_err("dt 0");
+    assert!(err.to_string().contains("dt_fs"));
+    let err = builder()
+        .threads(1)
+        .dt_fs(f64::NAN)
+        .build()
+        .expect_err("dt NaN");
+    assert!(err.to_string().contains("dt_fs"));
+
+    let err = builder().threads(0).build().expect_err("threads 0");
+    assert!(err.to_string().contains("threads"));
+
+    let err = builder()
+        .threads(1)
+        .thermostat(300.0, 0.0)
+        .build()
+        .expect_err("tau 0");
+    assert!(err.to_string().contains("tau"));
+}
+
+#[test]
+fn missing_short_range_model_is_rejected() {
+    let err = Simulation::builder(water_box(8, 1))
+        .threads(1)
+        .build()
+        .expect_err("short-range model is required");
+    assert!(
+        err.to_string().contains("short-range"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn dplr_threads_env_default_is_respected() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let saved = std::env::var("DPLR_THREADS").ok();
+
+    std::env::set_var("DPLR_THREADS", "3");
+    let sim = builder().build().expect("build with env default");
+    assert_eq!(sim.cfg.threads, 3, "DPLR_THREADS=3 must set the pool size");
+
+    // an explicit builder value overrides the environment
+    std::env::set_var("DPLR_THREADS", "2");
+    let sim = builder().threads(4).build().unwrap();
+    assert_eq!(sim.cfg.threads, 4);
+
+    // garbage in the env falls back to 1
+    std::env::set_var("DPLR_THREADS", "zero");
+    let sim = builder().build().unwrap();
+    assert_eq!(sim.cfg.threads, 1);
+
+    match saved {
+        Some(v) => std::env::set_var("DPLR_THREADS", v),
+        None => std::env::remove_var("DPLR_THREADS"),
+    }
+}

@@ -1,31 +1,36 @@
-//! End-to-end engine tests: full DPLR steps on real water, both backends,
-//! overlap on/off, NVE conservation and precision-mode consistency.
+//! End-to-end engine tests: full DPLR steps on real water, both short-range
+//! backends, overlap on/off, NVE conservation and precision-mode
+//! consistency — all assembled through `SimulationBuilder` (the seeds pin
+//! the exact trajectories the pre-builder API produced).
 
-use dplr::engine::{Backend, DplrEngine, EngineConfig};
+use dplr::engine::{KspaceConfig, PjrtModel, ShortRangeModel, Simulation};
 use dplr::md::water::water_box;
 use dplr::native::NativeModel;
 use dplr::pppm::MeshMode;
 use dplr::runtime::manifest::artifacts_dir;
-use dplr::runtime::{Dtype, PjrtEngine};
+use dplr::runtime::Dtype;
 use dplr::util::rng::Rng;
-use std::sync::Mutex;
 
 fn have_artifacts() -> bool {
     std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
 }
 
-fn native_backend() -> Backend {
-    Backend::Native(NativeModel::load(&artifacts_dir()).expect("native model"))
+fn native_model() -> Box<dyn ShortRangeModel> {
+    Box::new(NativeModel::load(&artifacts_dir()).expect("native model"))
 }
 
-fn make_engine(nmol: usize, overlap: bool, backend: Backend) -> DplrEngine {
+fn make_sim(nmol: usize, overlap: bool, model: Box<dyn ShortRangeModel>) -> Simulation {
     let mut sys = water_box(nmol, 42);
     let mut rng = Rng::new(7);
     sys.thermalize(300.0, &mut rng);
-    let alpha = 0.35;
-    let mut cfg = EngineConfig::default_for(sys.box_len, alpha);
-    cfg.overlap = overlap;
-    DplrEngine::new(sys, cfg, backend)
+    Simulation::builder(sys)
+        .dt_fs(1.0)
+        .thermostat(300.0, 0.5)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.35 })
+        .short_range(model)
+        .overlap(overlap)
+        .build()
+        .expect("valid configuration")
 }
 
 #[test]
@@ -34,21 +39,21 @@ fn engine_steps_run_and_observables_are_finite() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let mut eng = make_engine(64, false, native_backend());
-    eng.quench(20).unwrap();
-    eng.rescale_to(300.0);
+    let mut sim = make_sim(64, false, native_model());
+    sim.quench(20).unwrap();
+    sim.rescale_to(300.0);
     for _ in 0..20 {
-        let t = eng.step().expect("step");
+        let t = sim.step().expect("step");
         assert!(t.total > 0.0);
     }
-    let obs = eng.last_obs.unwrap();
+    let obs = sim.last_obs.unwrap();
     assert!(obs.e_sr.is_finite() && obs.e_gt.is_finite());
     assert!(
         obs.temperature > 50.0 && obs.temperature < 1500.0,
         "T = {}",
         obs.temperature
     );
-    assert_eq!(eng.pppm_saturations(), 0);
+    assert_eq!(sim.kspace_saturations(), 0);
 }
 
 #[test]
@@ -57,8 +62,8 @@ fn overlap_gives_same_physics_as_sequential() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let mut a = make_engine(64, false, native_backend());
-    let mut b = make_engine(64, true, native_backend());
+    let mut a = make_sim(64, false, native_model());
+    let mut b = make_sim(64, true, native_model());
     for _ in 0..3 {
         a.step().unwrap();
         b.step().unwrap();
@@ -83,19 +88,22 @@ fn nve_energy_is_conserved_on_full_dplr_stack() {
     let mut sys = water_box(64, 11);
     let mut rng = Rng::new(3);
     sys.thermalize(300.0, &mut rng);
-    let mut cfg = EngineConfig::default_for(sys.box_len, 0.35);
-    cfg.thermostat_tau_ps = None; // NVE
-    cfg.dt_fs = 0.25; // conservative step for the conservation check
-    let mut eng = DplrEngine::new(sys, cfg, native_backend());
+    let mut sim = Simulation::builder(sys)
+        .nve() // no thermostat
+        .dt_fs(0.25) // conservative step for the conservation check
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.35 })
+        .short_range(native_model())
+        .build()
+        .unwrap();
     // relax packing clashes first, then measure conservation
-    eng.quench(30).unwrap();
-    eng.rescale_to(300.0);
-    eng.step().unwrap();
-    let e0 = eng.last_obs.unwrap().conserved;
+    sim.quench(30).unwrap();
+    sim.rescale_to(300.0);
+    sim.step().unwrap();
+    let e0 = sim.last_obs.unwrap().conserved;
     for _ in 0..60 {
-        eng.step().unwrap();
+        sim.step().unwrap();
     }
-    let e1 = eng.last_obs.unwrap().conserved;
+    let e1 = sim.last_obs.unwrap().conserved;
     let drift = (e1 - e0).abs() / e0.abs().max(1.0);
     assert!(drift < 5e-4, "NVE drift {drift} ({e0} -> {e1})");
 }
@@ -106,15 +114,15 @@ fn pjrt_and_native_backends_agree_on_trajectory() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let pjrt = match PjrtEngine::open(&artifacts_dir()) {
-        Ok(e) => e,
+    let pjrt = match PjrtModel::open(&artifacts_dir(), Dtype::F64) {
+        Ok(m) => m,
         Err(e) => {
             eprintln!("skipping: {e:#}");
             return;
         }
     };
-    let mut a = make_engine(64, false, native_backend());
-    let mut b = make_engine(64, false, Backend::Pjrt(Mutex::new(pjrt), Dtype::F64));
+    let mut a = make_sim(64, false, native_model());
+    let mut b = make_sim(64, false, Box::new(pjrt));
     for _ in 0..3 {
         a.step().unwrap();
         b.step().unwrap();
@@ -134,9 +142,9 @@ fn quantized_mesh_tracks_double_over_steps() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let mut a = make_engine(64, false, native_backend());
-    let mut b = make_engine(64, false, native_backend());
-    let grid = a.cfg.pppm.grid;
+    let mut a = make_sim(64, false, native_model());
+    let mut b = make_sim(64, false, native_model());
+    let grid = a.pppm_config().expect("pppm solver").grid;
     b.set_mesh_mode(grid, MeshMode::QuantInt32 { nseg: [2, 3, 2] }, 0.35);
     for _ in 0..5 {
         a.step().unwrap();
@@ -150,5 +158,5 @@ fn quantized_mesh_tracks_double_over_steps() {
         oa.conserved,
         ob.conserved
     );
-    assert_eq!(b.pppm_saturations(), 0);
+    assert_eq!(b.kspace_saturations(), 0);
 }

@@ -7,7 +7,7 @@
 //! Uses synthetic seeded weights (same architecture/init as the python
 //! export) so the suite runs from a clean checkout, no artifacts needed.
 
-use dplr::engine::{Backend, DplrEngine, EngineConfig};
+use dplr::engine::{KspaceConfig, Simulation};
 use dplr::md::water::water_box;
 use dplr::native::NativeModel;
 use dplr::neighbor::{build_cells_par, build_exact, NlistParams};
@@ -213,32 +213,61 @@ fn build_cells_parallel_matches_exact_on_64_molecules() {
     }
 }
 
+/// Build the invariance-test simulation at a given pool size (the trait
+/// layer — `Box<dyn KspaceSolver>` / `Box<dyn ShortRangeModel>` — must
+/// preserve the bit-for-bit contract end to end).
+fn sim_with_threads(threads: usize, kspace: KspaceConfig) -> Simulation {
+    let mut sys = water_box(27, 5);
+    let mut rng = Rng::new(9);
+    sys.thermalize(300.0, &mut rng);
+    Simulation::builder(sys)
+        .dt_fs(0.5) // conservative step: fresh lattice box, no quench
+        .thermostat(300.0, 0.5)
+        .kspace(kspace)
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .threads(threads)
+        .build()
+        .expect("valid configuration")
+}
+
+fn trajectory_bits(sim: &mut Simulation) -> Vec<(u64, u64, u64)> {
+    let mut trace = Vec::new();
+    for _ in 0..5 {
+        sim.step().expect("step");
+        let o = sim.last_obs.unwrap();
+        trace.push((
+            o.e_sr.to_bits(),
+            o.e_gt.to_bits(),
+            o.conserved.to_bits(),
+        ));
+    }
+    trace
+}
+
 #[test]
 fn engine_trajectory_bit_identical_across_thread_counts() {
     // the acceptance check of the `--threads` flag: full MD steps (nlist +
     // DW + PPPM + DP + integrate) agree bit-for-bit at 1 vs 4 threads
-    let run = |threads: usize| -> Vec<(u64, u64, u64)> {
-        let mut sys = water_box(27, 5);
-        let mut rng = Rng::new(9);
-        sys.thermalize(300.0, &mut rng);
-        let mut cfg = EngineConfig::default_for(sys.box_len, 0.35);
-        cfg.dt_fs = 0.5; // conservative step: fresh lattice box, no quench
-        cfg.threads = threads;
-        let backend = Backend::Native(NativeModel::synthetic(7));
-        let mut eng = DplrEngine::new(sys, cfg, backend);
-        let mut trace = Vec::new();
-        for _ in 0..5 {
-            eng.step().expect("step");
-            let o = eng.last_obs.unwrap();
-            trace.push((
-                o.e_sr.to_bits(),
-                o.e_gt.to_bits(),
-                o.conserved.to_bits(),
-            ));
-        }
-        trace
-    };
-    let t1 = run(1);
-    let t4 = run(4);
+    let t1 = trajectory_bits(&mut sim_with_threads(
+        1,
+        KspaceConfig::PppmAuto { alpha: 0.35 },
+    ));
+    let t4 = trajectory_bits(&mut sim_with_threads(
+        4,
+        KspaceConfig::PppmAuto { alpha: 0.35 },
+    ));
     assert_eq!(t1, t4, "trajectories diverged between 1 and 4 threads");
+}
+
+#[test]
+fn ewald_engine_trajectory_bit_identical_across_thread_counts() {
+    // the same contract through the exact-Ewald k-space backend: its fixed
+    // k-shard reduction must make full trajectories pool-size independent
+    let cfg = || KspaceConfig::Ewald {
+        alpha: 0.35,
+        tol: 1e-8,
+    };
+    let t1 = trajectory_bits(&mut sim_with_threads(1, cfg()));
+    let t4 = trajectory_bits(&mut sim_with_threads(4, cfg()));
+    assert_eq!(t1, t4, "ewald trajectories diverged between 1 and 4 threads");
 }

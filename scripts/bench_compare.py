@@ -10,22 +10,41 @@ Each input is what the rust benches write with `--json PATH`:
     {"bench": "<name>", "threads": N, "quick": true, "results": {key: secs}}
 
 The baseline has the shape
-    {"tolerance": 0.25, "<bench name>": {key: secs} | null, ...}
+    {"tolerance": 0.25,
+     "exact": {"<bench name>": ["glob", ...]} | absent,
+     "<bench name>": {key: secs} | null, ...}
 A section that is null (the bootstrap state) is reported informationally
 and never fails — refresh it by running the benches on a reference host
-and copying the measured sections in (see rust/README.md, "Refreshing the
-bench baseline").
+and merging the measured sections in (scripts/refresh_baseline.py, or the
+bench-baseline workflow; see rust/README.md, "Refreshing the bench
+baseline").
 
-Exit status: 1 if any measured key is slower than baseline * (1 + tol),
-0 otherwise.  Keys faster than baseline * (1 - tol) print a hint to
-refresh the baseline but do not fail (the gate is one-sided: it exists to
-catch regressions).  The merged measurements + verdicts are written to
---out for the CI artifact upload.
+Keys matching an "exact" glob pattern for their bench are *deterministic*
+outputs (simulated seconds from the DES model, not wall time) and are
+gated at 0% tolerance: any relative deviation beyond EXACT_EPS (libm
+last-ulp / JSON round-trip noise) fails, in both directions.  A
+deterministic key missing from a non-null baseline section fails too —
+silence must not read as coverage.
+
+Exit status: 1 on any exact mismatch or any wall-time key slower than
+baseline * (1 + tol), 0 otherwise.  Wall-time keys faster than
+baseline * (1 - tol) print a hint to refresh the baseline but do not fail
+(that gate is one-sided: it exists to catch regressions).  The merged
+measurements + verdicts are written to --out for the CI artifact upload.
 """
 
 import argparse
+import fnmatch
 import json
 import sys
+
+# relative epsilon for "0% tolerance" deterministic keys
+EXACT_EPS = 1e-9
+
+
+def is_exact(baseline: dict, bench: str, key: str) -> bool:
+    pats = (baseline.get("exact") or {}).get(bench, [])
+    return any(fnmatch.fnmatch(key, p) for p in pats)
 
 
 def main() -> int:
@@ -61,6 +80,23 @@ def main() -> int:
         verdicts[bench] = {}
         for key, secs in sorted(results.items()):
             ref = base.get(key)
+            if is_exact(baseline, bench, key):
+                if ref is None:
+                    verdicts[bench][key] = {"secs": secs,
+                                            "verdict": "EXACT-MISSING"}
+                    failures.append(
+                        f"{bench}/{key}: deterministic key has no baseline "
+                        f"value — regenerate (scripts/fig8_model_baseline.py)")
+                elif abs(secs - ref) > EXACT_EPS * max(abs(ref), 1e-300):
+                    verdicts[bench][key] = {"secs": secs, "baseline": ref,
+                                            "verdict": "EXACT-MISMATCH"}
+                    failures.append(
+                        f"{bench}/{key}: deterministic output changed: "
+                        f"{secs!r} vs baseline {ref!r}")
+                else:
+                    verdicts[bench][key] = {"secs": secs, "baseline": ref,
+                                            "verdict": "exact-ok"}
+                continue
             if ref is None or ref <= 0:
                 verdicts[bench][key] = {"secs": secs, "verdict": "no-baseline"}
                 continue
@@ -77,6 +113,17 @@ def main() -> int:
             else:
                 verdicts[bench][key] = {"secs": secs, "baseline": ref,
                                         "ratio": ratio, "verdict": "ok"}
+        # the reverse direction: a deterministic baseline key the bench no
+        # longer emits is a silent coverage loss, not a pass
+        for key in sorted(base):
+            if key in results or not is_exact(baseline, bench, key):
+                continue
+            verdicts[bench][key] = {"baseline": base[key],
+                                    "verdict": "EXACT-NOT-MEASURED"}
+            failures.append(
+                f"{bench}/{key}: deterministic baseline key was not emitted "
+                f"by the bench — model/bench changed without a baseline "
+                f"regen (scripts/fig8_model_baseline.py)")
 
     out = {"tolerance": tol, "measurements": merged, "comparison": verdicts}
     with open(args.out, "w") as f:
@@ -89,7 +136,8 @@ def main() -> int:
         for line in faster:
             print(f"  {line}")
     if failures:
-        print("[bench-compare] WALL-TIME REGRESSIONS:", file=sys.stderr)
+        print("[bench-compare] FAILURES (wall-time regressions / exact "
+              "mismatches):", file=sys.stderr)
         for line in failures:
             print(f"  {line}", file=sys.stderr)
         return 1

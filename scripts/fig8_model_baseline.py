@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Generate the deterministic fig8_fft `model_*` baseline rows.
+
+The fig8 DES model rows (`cargo bench --bench fig8_fft -- --json ...`,
+keys `model_<nodes>n<pernode>_<method>`) are *simulated* seconds computed
+by pure arithmetic in `rust/src/distfft/mod.rs` over the constants of
+`MachineConfig::default()` — they are host-independent and fully
+deterministic, so the bench-regression gate holds them at 0% tolerance
+(see the "exact" patterns in BENCH_baseline.json; the comparison allows a
+1e-9 relative epsilon for libm last-ulp and JSON round-trip noise).
+
+This script is a line-for-line port of that arithmetic (identical
+operation order, so IEEE-754 doubles reproduce the Rust values up to libm
+last-ulp differences in log2).  Use it to (re)generate the baseline
+section after changing the DES model:
+
+    python3 scripts/fig8_model_baseline.py            # print the section
+    python3 scripts/fig8_model_baseline.py --check BENCH_baseline.json
+
+Rust reference: fftmpi_time / heffte_time / utofu_time in
+rust/src/distfft/mod.rs, bg_dim_reduction_time in rust/src/tofu/mod.rs,
+alltoall_time in rust/src/mpisim/mod.rs, makespan_fifo in
+rust/src/simnet/mod.rs, constants in rust/src/config/mod.rs.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# MachineConfig::default() (rust/src/config/mod.rs)
+CORES_PER_NODE = 48
+RANKS_PER_NODE = 4
+BG_HOP_LATENCY = 0.25e-6
+BG_PAYLOAD_I32 = 12
+CHAINS_PER_TNI = 12
+TNIS_PER_DIM = 2
+P2P_LATENCY = 1.0e-6
+LINK_BANDWIDTH = 6.8e9
+NODE_FLOPS = 6.0e11
+
+BYTES_PER_VALUE = 16  # complex f64
+
+# paper_topologies() (rust/src/config/mod.rs)
+TOPOLOGIES = [
+    (12, (2, 3, 2)),
+    (96, (4, 6, 4)),
+    (768, (8, 12, 8)),
+    (1500, (12, 15, 12)),
+    (4608, (16, 18, 16)),
+    (8400, (20, 21, 20)),
+]
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def fft1d_flops(n: int) -> float:
+    # rust: 5.0 * n as f64 * (n as f64).log2().max(1.0)
+    return 5.0 * float(n) * max(math.log2(float(n)), 1.0)
+
+
+def fft_compute_time(grid, workers: int) -> float:
+    gx, gy, gz = grid
+    lines = (
+        (gy * gz) * fft1d_flops(gx)
+        + (gx * gz) * fft1d_flops(gy)
+        + (gx * gy) * fft1d_flops(gz)
+    )
+    core_flops = NODE_FLOPS / float(CORES_PER_NODE)
+    return 4.0 * lines / core_flops / float(workers)
+
+
+def alltoall_time(p: int, bytes_per_pair: int) -> float:
+    if p <= 1:
+        return 0.0
+    return float(p - 1) * (P2P_LATENCY + float(bytes_per_pair) / LINK_BANDWIDTH)
+
+
+def fftmpi_time(grid, dims, all_ranks: bool):
+    nodes = dims[0] * dims[1] * dims[2]
+    ranks = nodes * RANKS_PER_NODE if all_ranks else nodes
+    total_points = grid[0] * grid[1] * grid[2]
+    local_bytes = ceil_div(total_points, ranks) * BYTES_PER_VALUE
+    group = int(math.ceil(math.sqrt(float(ranks))))
+    remap = alltoall_time(group, ceil_div(local_bytes, max(group, 1)))
+    comm = remap + 4.0 * 2.0 * remap
+    compute = fft_compute_time(grid, ranks)
+    return compute, comm
+
+
+def heffte_time(grid, dims, all_ranks: bool):
+    nodes = dims[0] * dims[1] * dims[2]
+    ranks = nodes * RANKS_PER_NODE if all_ranks else nodes
+    total_points = grid[0] * grid[1] * grid[2]
+    if total_points // ranks < 4:
+        return None
+    compute, comm = fftmpi_time(grid, dims, all_ranks)
+    overhead_per_exchange = 9.0 * P2P_LATENCY
+    exchanges = 1.0 + 8.0
+    return compute * 1.15, comm * 1.35 + exchanges * overhead_per_exchange
+
+
+def bg_dim_reduction_time(n: int, values_per_node: int) -> float:
+    if n <= 1:
+        return 0.0
+    per_red = float(n + 1) * BG_HOP_LATENCY
+    nred = ceil_div(values_per_node, BG_PAYLOAD_I32)
+    slots = CHAINS_PER_TNI * TNIS_PER_DIM
+    eff_slots = min(slots, n * max(slots // n, 1))
+    jobs = n * nred
+    # makespan_fifo over equal-duration jobs: the busiest slot accumulates
+    # per_red ceil(jobs / active_slots) times (replicate the repeated FP
+    # addition of the rust heap, not a single multiply)
+    active = min(max(eff_slots, 1), jobs)
+    rounds = ceil_div(jobs, active)
+    t = 0.0
+    for _ in range(rounds):
+        t += per_red
+    return t
+
+
+def utofu_time(grid, dims):
+    core_flops = NODE_FLOPS / float(CORES_PER_NODE)
+    g = [ceil_div(grid[d], dims[d]) for d in range(3)]
+    compute = 0.0
+    comm = 0.0
+    for d in range(3):
+        n_d = dims[d]
+        nn = grid[d]
+        lines = float(g[(d + 1) % 3] * g[(d + 2) % 3])
+        matvec_flops = lines * float(nn) * float(g[d]) * 8.0
+        compute += 4.0 * matvec_flops / core_flops
+        values = 2 * g[0] * g[1] * g[2]
+        comm += 4.0 * bg_dim_reduction_time(n_d, values)
+    return compute, comm
+
+
+def model_rows() -> dict:
+    rows = {}
+    iters = 1000.0
+    for per_node in (4, 5, 6):
+        for nodes, dims in TOPOLOGIES:
+            grid = (dims[0] * per_node, dims[1] * per_node, dims[2] * per_node)
+            key = f"model_{nodes}n{per_node}"
+            c, m = fftmpi_time(grid, dims, True)
+            rows[f"{key}_fftmpi_all"] = iters * (c + m)
+            h = heffte_time(grid, dims, True)
+            if h is not None:
+                rows[f"{key}_heffte_all"] = iters * (h[0] + h[1])
+            h = heffte_time(grid, dims, False)
+            if h is not None:
+                rows[f"{key}_heffte_master"] = iters * (h[0] + h[1])
+            c, m = utofu_time(grid, dims)
+            rows[f"{key}_utofu_master"] = iters * (c + m)
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="verify the fig8_fft model_* rows of BASELINE "
+                         "match this script (1e-9 relative)")
+    args = ap.parse_args()
+    rows = model_rows()
+    if args.check:
+        with open(args.check) as f:
+            base = json.load(f)
+        section = base.get("fig8_fft") or {}
+        bad = []
+        for k, v in rows.items():
+            ref = section.get(k)
+            if ref is None:
+                bad.append(f"{k}: missing from baseline")
+            elif abs(ref - v) > 1e-9 * max(abs(v), 1e-300):
+                bad.append(f"{k}: baseline {ref!r} vs model {v!r}")
+        if bad:
+            print("[fig8-model] baseline out of date:", file=sys.stderr)
+            for line in bad:
+                print(f"  {line}", file=sys.stderr)
+            return 1
+        print(f"[fig8-model] {len(rows)} rows match the baseline")
+        return 0
+    print(json.dumps(rows, indent=1, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

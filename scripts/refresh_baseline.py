@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Merge measured bench JSONs into BENCH_baseline.json.
+
+Usage:
+    refresh_baseline.py --baseline BENCH_baseline.json \
+        BENCH_hotpath.json BENCH_fig8_fft.json [...]
+
+Each input is what the rust benches write with `--json PATH`
+({"bench": name, "results": {key: secs}}).  The matching baseline section
+is replaced with the measured results — except keys covered by the
+baseline's "exact" glob patterns, which are deterministic DES-model
+outputs owned by scripts/fig8_model_baseline.py and are left untouched
+(run that script to regenerate them after a model change).
+
+Run this on the reference host class the CI gate uses (wall times are
+machine-dependent): the `bench-baseline` workflow_dispatch job in
+.github/workflows/ci.yml does exactly that and uploads the refreshed file
+as an artifact to commit.
+"""
+
+import argparse
+import fnmatch
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("inputs", nargs="+", help="per-bench JSON files")
+    ap.add_argument("--baseline", required=True)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    exact = baseline.get("exact") or {}
+
+    for path in args.inputs:
+        with open(path) as f:
+            doc = json.load(f)
+        bench = doc["bench"]
+        results = doc.get("results", {})
+        pats = exact.get(bench, [])
+        section = dict(baseline.get(bench) or {})
+        kept = 0
+        for key, secs in results.items():
+            if any(fnmatch.fnmatch(key, p) for p in pats):
+                kept += 1  # deterministic row: owned by its generator
+                continue
+            section[key] = secs
+        baseline[bench] = section
+        print(f"[refresh-baseline] {bench}: merged {len(results) - kept} "
+              f"wall-time keys ({kept} exact keys left to their generator)")
+
+    with open(args.baseline, "w") as f:
+        json.dump(baseline, f, indent=1, sort_keys=False)
+        f.write("\n")
+    print(f"[refresh-baseline] wrote {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
