@@ -5,10 +5,18 @@
 //! the *forward* FFT now scales with the pool like the inverse field
 //! transforms always did.
 //!
+//! A `measured_dist_*` section times the *executed* utofu schedule
+//! (`distpppm::RankFft`: partial DFT matvecs + ring reductions, 1 forward
+//! + 3 inverse transforms per iteration — the poisson_ik shape) next to
+//! the analytic `model_*` rows, for both ring payloads.  The measured
+//! keys are wall time, so they stay un-gated until the `bench-baseline`
+//! job refreshes `BENCH_baseline.json`.
+//!
 //! Flags: `--quick` (CI configuration: fewer reps, skip the model table),
 //! `--json PATH` writes `{"bench": "fig8_fft", "results": {...}}` for the
 //! bench-regression job.
 use dplr::config::MachineConfig;
+use dplr::distpppm::{RankFft, RingPayload};
 use dplr::experiments::fig8_fft as f8;
 use dplr::fft::{C64, Fft3d, Fft3dScratch};
 use dplr::pool::ThreadPool;
@@ -90,6 +98,54 @@ fn main() {
             if threads == 1 && nthreads == 1 {
                 break;
             }
+        }
+    }
+
+    println!("\n=== executed utofu schedule (RankFft, 1 fwd + 3 inv per iter) ===");
+    let dist_configs: &[(usize, [usize; 3])] = if quick {
+        &[(12, [2, 3, 2])]
+    } else {
+        &[(12, [2, 3, 2]), (96, [4, 6, 4])]
+    };
+    for &(nodes, dims) in dist_configs {
+        let grid = [dims[0] * 4, dims[1] * 4, dims[2] * 4];
+        let n = grid[0] * grid[1] * grid[2];
+        let pool = ThreadPool::new(nthreads);
+        // per-iteration simulated seconds of the matching analytic row
+        // (the model_* keys are 1000 iterations)
+        let model_iter = rows
+            .iter()
+            .find(|r| r.nodes == nodes && r.grid_per_node == 4)
+            .map(|r| r.utofu_master / 1000.0);
+        for (tag, payload) in [("f64", RingPayload::F64), ("i32", RingPayload::PackedI32)] {
+            let mut rf = RankFft::new(grid, dims, payload);
+            let mut rng = Rng::new(4242 + n as u64);
+            let base: Vec<C64> = (0..n)
+                .map(|_| C64::new(rng.range(-1.0, 1.0), 0.0))
+                .collect();
+            let mut g = base.clone();
+            // warm the scratch, then time the poisson_ik transform shape
+            rf.execute(&mut g, true, &pool);
+            rf.execute(&mut g, false, &pool);
+            let t = summarize(&time_reps(1, reps, || {
+                rf.execute(&mut g, true, &pool);
+                rf.execute(&mut g, false, &pool);
+                rf.execute(&mut g, false, &pool);
+                rf.execute(&mut g, false, &pool);
+            }))
+            .p50;
+            results.insert(format!("measured_dist_{nodes}n4_{tag}"), Json::Num(t));
+            println!(
+                "{nodes:>4} nodes ({}x{}x{} grid), {tag} ring: {:9.3} ms/iter on this host \
+                 (model: {} simulated)",
+                grid[0],
+                grid[1],
+                grid[2],
+                t * 1e3,
+                model_iter
+                    .map(|m| format!("{:.1} us", m * 1e6))
+                    .unwrap_or_else(|| "n/a".to_string()),
+            );
         }
     }
 

@@ -21,13 +21,17 @@ pub struct MachineConfig {
     pub bg_hop_latency: f64,
     /// BG payload: values per reduction for f64 / u64 / packed-i32
     pub bg_payload_f64: usize,
+    /// values per reduction for u64 payloads
     pub bg_payload_u64: usize,
+    /// values per reduction for packed-i32 payloads
     pub bg_payload_i32: usize,
     /// reduction chains available per TNI (12) and TNIs per dimension (2)
     pub chains_per_tni: usize,
+    /// TofuD network interfaces usable per torus dimension (2)
     pub tnis_per_dim: usize,
     /// point-to-point latency [s] and bandwidth [B/s] per link
     pub p2p_latency: f64,
+    /// link bandwidth [B/s]
     pub link_bandwidth: f64,
     /// extra per-hop latency on the torus [s]
     pub hop_latency: f64,
@@ -56,6 +60,7 @@ impl Default for MachineConfig {
 }
 
 impl MachineConfig {
+    /// Overlay JSON overrides on the defaults (unknown keys ignored).
     pub fn from_json(j: &Json) -> Result<MachineConfig> {
         let mut m = MachineConfig::default();
         let get = |k: &str, d: f64| -> f64 {
@@ -71,6 +76,7 @@ impl MachineConfig {
         Ok(m)
     }
 
+    /// Load overrides from a JSON file, falling back to the defaults.
     pub fn load_or_default(path: &str) -> MachineConfig {
         match Json::parse_file(path) {
             Ok(j) => MachineConfig::from_json(&j).unwrap_or_default(),

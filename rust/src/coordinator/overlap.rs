@@ -26,6 +26,7 @@ pub struct StageTimes {
 /// Resulting step time + how much k-space work was hidden.
 #[derive(Debug, Clone, Copy)]
 pub struct OverlapOutcome {
+    /// Modelled step time [s].
     pub step_time: f64,
     /// 0 = fully hidden (Fig 9 at 96 nodes), 1 = fully exposed
     pub exposed_fraction: f64,

@@ -15,12 +15,24 @@
 //!
 //! `mode` selects whether all ranks participate (4/node) or one master
 //! rank per node (the paper's `/master` configurations).
+//!
+//! The utofu schedule exists in two forms that share one plan description,
+//! [`DistFftSchedule`]: the *analytic* cost model here ([`utofu_time`],
+//! the Fig. 8 rows) and the *executed* numerical schedule in
+//! [`crate::distpppm`] (`RankFft`, the `--kspace dist` engine backend).
+//! Both derive their per-rank bricks, line counts and reduction sizes from
+//! the same schedule object, so the Fig. 8 model rows describe the code
+//! that actually runs.
 
 use crate::config::MachineConfig;
 use crate::mpisim::{allgather_time, alltoall_time};
+use crate::pool::even_shards;
 use crate::tofu::{bg_dim_reduction_time, BgPayload, Torus};
+use std::ops::Range;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which ranks join the FFT communicator (the paper's `/all` vs
+/// `/master` configurations).
 pub enum Participation {
     /// every MPI rank joins the FFT communicator (ranks = 4 x nodes)
     All,
@@ -32,13 +44,82 @@ pub enum Participation {
 /// scale linearly; we report a single iteration.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FftCost {
+    /// Seconds of per-rank compute.
     pub compute: f64,
+    /// Seconds of communication.
     pub comm: f64,
 }
 
 impl FftCost {
+    /// compute + comm.
     pub fn total(&self) -> f64 {
         self.compute + self.comm
+    }
+}
+
+/// Plan description of the rank-decomposed, transpose-free 3-D FFT
+/// schedule (paper section 3.1, Eq. 8): a global mesh brick-decomposed
+/// over a torus of ranks, per-dimension partial DFT matvecs, and one ring
+/// reduction per dimension.  Shared by the analytic DES model
+/// ([`utofu_time`]) and the executed backend
+/// ([`crate::distpppm::RankFft`]), so the Fig. 8 cost rows and the code
+/// that actually runs agree on geometry by construction.
+#[derive(Debug, Clone, Copy)]
+pub struct DistFftSchedule {
+    /// Global mesh dimensions `[nx, ny, nz]`.
+    pub grid: [usize; 3],
+    /// Virtual rank torus the mesh is brick-decomposed over.
+    pub torus: Torus,
+}
+
+impl DistFftSchedule {
+    /// Schedule for `grid` over `torus`.  Each `torus.dims[d]` must be in
+    /// `1..=grid[d]` for the slab-per-rank-coordinate contract of
+    /// [`Self::segments`] to hold (a larger torus dimension would leave
+    /// ranks with empty slabs; the executed path rejects that at
+    /// construction, and the analytic model never queries it).
+    pub fn new(grid: [usize; 3], torus: Torus) -> DistFftSchedule {
+        DistFftSchedule { grid, torus }
+    }
+
+    /// Grid points of the largest rank brick along each dimension — the
+    /// `g[d]` of the analytic model (ceil division, matching the paper's
+    /// uniform-brick accounting).
+    pub fn points_per_rank(&self) -> [usize; 3] {
+        [
+            self.grid[0].div_ceil(self.torus.dims[0]),
+            self.grid[1].div_ceil(self.torus.dims[1]),
+            self.grid[2].div_ceil(self.torus.dims[2]),
+        ]
+    }
+
+    /// 1-D grid lines along dimension `d` passing through one rank's
+    /// brick (product of the two transverse brick edges).
+    pub fn lines_per_rank(&self, d: usize) -> usize {
+        let g = self.points_per_rank();
+        g[(d + 1) % 3] * g[(d + 2) % 3]
+    }
+
+    /// Flops of one rank's partial DFT matvecs for a single 3-D pass
+    /// along dimension `d`: per line, `grid[d]` outputs times the rank's
+    /// local column count, 8 flops per complex multiply-add (Eq. 8).
+    pub fn matvec_flops(&self, d: usize) -> f64 {
+        let g = self.points_per_rank();
+        self.lines_per_rank(d) as f64 * self.grid[d] as f64 * g[d] as f64 * 8.0
+    }
+
+    /// Scalars each rank feeds into one dimension's ring reduction
+    /// (re + im per local grid point).
+    pub fn values_per_rank(&self) -> usize {
+        let g = self.points_per_rank();
+        2 * g[0] * g[1] * g[2]
+    }
+
+    /// Contiguous rank slabs along dimension `d`: slab `s` is the column
+    /// range rank-coordinate `s` owns (near-even split, ragged tail
+    /// allowed — the executed path's partial-DFT segments).
+    pub fn segments(&self, d: usize) -> Vec<Range<usize>> {
+        even_shards(self.grid[d], self.torus.dims[d])
     }
 }
 
@@ -118,33 +199,25 @@ pub fn heffte_time(
 
 /// utofu-FFT (paper section 3.1): per-node partial DFT matvec + BG ring
 /// reductions along each torus dimension; one dedicated core per node.
+/// Geometry comes from the same [`DistFftSchedule`] the executed
+/// `--kspace dist` backend runs, so these model rows describe real code.
 pub fn utofu_time(
     grid: [usize; 3],
     torus: &Torus,
     payload: BgPayload,
     m: &MachineConfig,
 ) -> FftCost {
+    let sched = DistFftSchedule::new(grid, *torus);
     let mut compute = 0.0;
     let mut comm = 0.0;
     let core_flops = m.node_flops / m.cores_per_node as f64;
-    // grid points per node along each dim
-    let g = [
-        grid[0].div_ceil(torus.dims[0]),
-        grid[1].div_ceil(torus.dims[1]),
-        grid[2].div_ceil(torus.dims[2]),
-    ];
     for d in 0..3 {
-        let n_d = torus.dims[d]; // nodes along this dim
-        let nn = grid[d]; // global line length
-        // partial DFT X~ = F_N[:, J] x_J per line: nn outputs x g[d] inputs,
-        // 8 flops per complex multiply-add; lines per node = product of the
-        // other two local dims
-        let lines = (g[(d + 1) % 3] * g[(d + 2) % 3]) as f64;
-        let matvec_flops = lines * nn as f64 * g[d] as f64 * 8.0;
-        compute += 4.0 * matvec_flops / core_flops;
-        // reduction: every node reduces its 2 * local-points values
-        let values = 2 * g[0] * g[1] * g[2];
-        comm += 4.0 * bg_dim_reduction_time(n_d, values, payload, m);
+        // partial DFT X~ = F_N[:, J] x_J per line (Eq. 8), 4 transforms
+        // per poisson_ik iteration
+        compute += 4.0 * sched.matvec_flops(d) / core_flops;
+        // reduction: every node reduces its 2 * local-points values along
+        // the ring of torus.dims[d] nodes
+        comm += 4.0 * bg_dim_reduction_time(torus.dims[d], sched.values_per_rank(), payload, m);
     }
     FftCost { compute, comm }
 }
@@ -245,6 +318,27 @@ mod tests {
         let u64t = utofu_time(g, &t, BgPayload::U64, &m).total();
         let i32t = utofu_time(g, &t, BgPayload::PackedI32, &m).total();
         assert!(i32t < u64t);
+    }
+
+    #[test]
+    fn schedule_segments_cover_grid_and_match_model_bricks() {
+        // the executed path's rank slabs and the analytic model's bricks
+        // come from one schedule: slabs partition every grid edge and the
+        // largest slab equals the model's ceil-division brick
+        let t = Torus::new([4, 6, 4]);
+        let sched = DistFftSchedule::new([18, 24, 17], t);
+        let g = sched.points_per_rank();
+        for d in 0..3 {
+            let segs = sched.segments(d);
+            assert_eq!(segs.len(), t.dims[d], "one slab per rank along dim {d}");
+            assert_eq!(
+                segs.iter().map(|r| r.len()).sum::<usize>(),
+                sched.grid[d],
+                "slabs must partition dim {d}"
+            );
+            let max = segs.iter().map(|r| r.len()).max().unwrap();
+            assert_eq!(max, g[d], "dim {d}: largest slab == model brick");
+        }
     }
 
     #[test]

@@ -1,0 +1,679 @@
+//! Executed rank-decomposed k-space backend — the paper's section-3.1
+//! schedule as a *runnable* solver (`dplr run --kspace dist`), not just the
+//! analytic Fig. 8 cost model.
+//!
+//! The charge mesh is brick-decomposed over a virtual [`Torus`] of ranks
+//! (the geometry of [`DistFftSchedule`], shared with the DES model in
+//! [`crate::distfft`]).  Each 3-D transform then runs the transpose-free
+//! utofu-FFT schedule, one pass per dimension in [`Fft3d`](crate::fft::Fft3d) pass order
+//! (z, y, x):
+//!
+//!  1. every rank computes the partial DFT matvec `X~ = F_N[:, J] x_J`
+//!     (Eq. 8) for its slab `J` of each grid line crossing its brick —
+//!     there is never a pencil/brick transpose;
+//!  2. the per-rank partials are combined by a *ring reduction* along the
+//!     dimension, walked in ring (ascending rank) order.  The payload is
+//!     either exact f64 ([`RingPayload::F64`]) or the paper's
+//!     int32-quantized packed lanes ([`RingPayload::PackedI32`], the
+//!     [`crate::pppm::quant`] arithmetic: per-partial rounding, exact
+//!     integer lane sums, saturation counting);
+//!  3. a dimension held by a single rank needs no reduction at all, so the
+//!     rank transforms its whole lines with the local fast FFT plan —
+//!     bit-identical to [`Fft3d`](crate::fft::Fft3d)'s serial/parallel passes.
+//!
+//! Determinism contracts (asserted by `rust/tests/dist_parity.rs`):
+//!
+//!  * **Degenerate torus.** With `ranks = [1,1,1]` every dimension takes
+//!    the local-FFT path and [`DistPppm`] is *bit-identical* to the serial
+//!    [`Pppm`] solver — spread, Poisson solve and gather are literally the
+//!    same code (shared through [`Pppm`]'s crate-internal transform seam).
+//!  * **Rank-count invariance (float ring).** The exact-f64 ring
+//!    accumulates columns in strict ascending global column order no
+//!    matter how the line is segmented, so any two tori that decompose the
+//!    same *set* of dimensions produce bit-identical results regardless of
+//!    the rank counts (e.g. `[2,2,2]`, `[4,3,2]` and `[2,3,4]` agree
+//!    bit-for-bit) — the float analogue of the integer ring's exactness.
+//!  * **Thread invariance.** Ranks are emulated on the engine's worker
+//!    pool by sharding independent grid lines over a fixed shard count;
+//!    per-line work is self-contained, so results are bit-identical for
+//!    any `--threads N`.
+//!
+//! The quantized ring is *not* rank-count invariant — each rank's partial
+//! is rounded before the exact integer sum, which is precisely the
+//! segmentation-dependent error Table 1's Mixed-int rows measure.
+
+use crate::distfft::DistFftSchedule;
+use crate::fft::{dft_matrix, C64, Fft1d, Fft3dScratch, LINE_SHARDS};
+use crate::pool::{SyncSlice, ThreadPool};
+use crate::pppm::quant::{self, QuantSpec};
+use crate::pppm::{MeshMode, Pppm, PppmConfig};
+use crate::tofu::Torus;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Ring-reduction payload of the executed schedule (paper Fig. 4c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RingPayload {
+    /// Exact f64 accumulation in ring order (bit-invariant to rank count).
+    F64,
+    /// int32-quantized packed lanes: each rank's partial is scaled,
+    /// rounded to i32 and summed exactly two-per-u64 along the ring —
+    /// the paper's BG payload arithmetic via [`crate::pppm::quant`].
+    PackedI32,
+}
+
+/// The executed transpose-free 3-D transform over a virtual rank torus:
+/// per-rank partial 1-D DFT matvecs + a ring reduction per dimension,
+/// with a local-FFT fast path for undivided dimensions.  All buffers are
+/// persistent, so repeated [`RankFft::execute`] calls do not allocate.
+pub struct RankFft {
+    sched: DistFftSchedule,
+    payload: RingPayload,
+    /// per-dim local FFT plans (the fast path when `torus.dims[d] == 1`)
+    line: [Fft1d; 3],
+    /// per-dim forward DFT twiddles from [`dft_matrix`] — symmetric in
+    /// (j, k), so `fmat[d][j * n + k] = e^{-2 pi i jk / n}` reads row j's
+    /// per-column factors; empty for undivided dims
+    fmat: [Vec<C64>; 3],
+    /// per-dim rank slabs (the schedule's partial-DFT column segments)
+    segs: [Vec<Range<usize>>; 3],
+    /// flat per-shard complex scratch: `[x | acc | blu | partials]`
+    cbuf: Vec<C64>,
+    /// per-shard packed-lane accumulators (quantized ring only)
+    qbuf: Vec<u64>,
+    /// per-shard saturation counters, reduced in shard order
+    sat: Vec<u64>,
+    stride: usize,
+    maxn: usize,
+    blu_len: usize,
+}
+
+impl RankFft {
+    /// Plan the executed schedule for `grid` over a `ranks` torus.
+    ///
+    /// # Panics
+    /// If any `ranks[d]` is 0 or exceeds `grid[d]` (a rank would own an
+    /// empty slab; the builder validates this before construction).
+    pub fn new(grid: [usize; 3], ranks: [usize; 3], payload: RingPayload) -> RankFft {
+        for d in 0..3 {
+            assert!(
+                ranks[d] >= 1 && ranks[d] <= grid[d],
+                "ranks[{d}] must be in 1..={}, got {}",
+                grid[d],
+                ranks[d]
+            );
+        }
+        let sched = DistFftSchedule::new(grid, Torus::new(ranks));
+        let line = [
+            Fft1d::new(grid[0]),
+            Fft1d::new(grid[1]),
+            Fft1d::new(grid[2]),
+        ];
+        let mut fmat: [Vec<C64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for d in 0..3 {
+            if ranks[d] > 1 {
+                // the oracle's twiddle table (forward sign); its (j, k)
+                // symmetry makes the k-major layout double as row-j-major
+                fmat[d] = dft_matrix(grid[d], -1.0);
+            }
+        }
+        let segs = [sched.segments(0), sched.segments(1), sched.segments(2)];
+        let maxn = grid.iter().copied().max().unwrap_or(1);
+        let blu_len = line.iter().map(|p| p.scratch_len()).max().unwrap_or(0);
+        let nseg_max = (0..3)
+            .filter(|&d| ranks[d] > 1)
+            .map(|d| ranks[d])
+            .max()
+            .unwrap_or(0);
+        let quantized = payload == RingPayload::PackedI32;
+        let part_len = if quantized { nseg_max * maxn } else { 0 };
+        let stride = 2 * maxn + blu_len + part_len;
+        RankFft {
+            sched,
+            payload,
+            line,
+            fmat,
+            segs,
+            cbuf: vec![C64::ZERO; LINE_SHARDS * stride],
+            qbuf: if quantized {
+                vec![0; LINE_SHARDS * maxn]
+            } else {
+                Vec::new()
+            },
+            sat: vec![0; LINE_SHARDS],
+            stride,
+            maxn,
+            blu_len,
+        }
+    }
+
+    /// The shared plan description (also consumed by the Fig. 8 model).
+    pub fn schedule(&self) -> &DistFftSchedule {
+        &self.sched
+    }
+
+    /// The configured ring payload.
+    pub fn payload(&self) -> RingPayload {
+        self.payload
+    }
+
+    /// Execute one full 3-D transform of the schedule over `pool`-emulated
+    /// ranks: z, then y, then x pass (matching [`Fft3d`](crate::fft::Fft3d)'s order), forward
+    /// or inverse-normalised.  Returns the quantization saturation count
+    /// (0 for the f64 ring).
+    pub fn execute(&mut self, g: &mut [C64], forward: bool, pool: &ThreadPool) -> u64 {
+        let [nx, ny, nz] = self.sched.grid;
+        assert_eq!(g.len(), nx * ny * nz, "grid buffer size mismatch");
+        let mut sat = 0;
+        sat += self.pass(g, 2, forward, pool);
+        sat += self.pass(g, 1, forward, pool);
+        sat += self.pass(g, 0, forward, pool);
+        sat
+    }
+
+    /// One dimension's pass: every grid line along `d` is gathered,
+    /// transformed (ring schedule or local FFT) and scattered back.
+    /// Lines are independent, so they shard over the pool at a fixed
+    /// shard count — bit-identical results for any pool size.
+    fn pass(&mut self, g: &mut [C64], d: usize, forward: bool, pool: &ThreadPool) -> u64 {
+        let [nx, ny, nz] = self.sched.grid;
+        let n = self.sched.grid[d];
+        // line count and element stride of a line along `d`
+        let (nlines, stride_el): (usize, usize) = match d {
+            2 => (nx * ny, 1),
+            1 => (nx * nz, nz),
+            _ => (ny * nz, ny * nz),
+        };
+        let nseg = self.sched.torus.dims[d];
+        let nsh = LINE_SHARDS;
+        let (maxn, blu_len, stride) = (self.maxn, self.blu_len, self.stride);
+        let payload = self.payload;
+        let plan = &self.line[d];
+        let fmat = &self.fmat[d];
+        let segs = &self.segs[d];
+        for v in self.sat.iter_mut() {
+            *v = 0;
+        }
+        let sbuf = SyncSlice::new(&mut self.cbuf);
+        let qview = SyncSlice::new(&mut self.qbuf);
+        let satv = SyncSlice::new(&mut self.sat);
+        let gg = SyncSlice::new(g);
+        pool.run(nsh, &|k| {
+            // Safety: one scratch slot per shard; line footprints are
+            // disjoint across the fixed contiguous line partition
+            let sc = unsafe { sbuf.slice_mut(k * stride..(k + 1) * stride) };
+            let (x, rest) = sc.split_at_mut(maxn);
+            let (acc, rest) = rest.split_at_mut(maxn);
+            let (blu, parts) = rest.split_at_mut(blu_len);
+            let qacc: &mut [u64] = if payload == RingPayload::PackedI32 {
+                // Safety: one packed-lane accumulator row per shard
+                unsafe { qview.slice_mut(k * maxn..(k + 1) * maxn) }
+            } else {
+                &mut []
+            };
+            let mut sat_local = 0u64;
+            for l in k * nlines / nsh..(k + 1) * nlines / nsh {
+                let base = match d {
+                    2 => l * nz,
+                    1 => (l / nz) * ny * nz + l % nz,
+                    _ => l,
+                };
+                // gather the full line (the emulation holds the global
+                // mesh in one buffer; ranks own disjoint slabs of it)
+                for (i, xv) in x[..n].iter_mut().enumerate() {
+                    // Safety: shard k is the sole owner of its lines
+                    *xv = unsafe { *gg.index_mut(base + i * stride_el) };
+                }
+                if nseg == 1 {
+                    // undivided dimension: one rank owns the whole line,
+                    // no ring needed — local fast FFT, bit-identical to
+                    // the Fft3d pass the serial Pppm solver runs
+                    if forward {
+                        plan.forward_with(&mut x[..n], blu);
+                    } else {
+                        plan.inverse_with(&mut x[..n], blu);
+                    }
+                    for (i, xv) in x[..n].iter().enumerate() {
+                        unsafe { *gg.index_mut(base + i * stride_el) = *xv };
+                    }
+                    continue;
+                }
+                match payload {
+                    RingPayload::F64 => {
+                        ring_exact(&x[..n], &mut acc[..n], fmat, segs, forward);
+                    }
+                    RingPayload::PackedI32 => {
+                        sat_local += ring_quantized(
+                            &x[..n],
+                            &mut acc[..n],
+                            &mut parts[..nseg * n],
+                            &mut qacc[..n],
+                            fmat,
+                            segs,
+                            forward,
+                        );
+                    }
+                }
+                for (i, av) in acc[..n].iter().enumerate() {
+                    unsafe { *gg.index_mut(base + i * stride_el) = *av };
+                }
+            }
+            // Safety: one saturation slot per shard
+            unsafe { *satv.index_mut(k) = sat_local };
+        });
+        self.sat.iter().sum()
+    }
+}
+
+/// Exact-f64 ring reduction along one decomposed line: walk the ranks in
+/// ring order and accumulate each rank's partial-DFT columns into the
+/// travelling payload, column by column.  The accumulation order is
+/// strict ascending global column order for *any* segmentation, which is
+/// what makes the float path bit-for-bit invariant to the rank count.
+fn ring_exact(x: &[C64], acc: &mut [C64], fmat: &[C64], segs: &[Range<usize>], forward: bool) {
+    let n = x.len();
+    for a in acc.iter_mut() {
+        *a = C64::ZERO;
+    }
+    for seg in segs {
+        // this rank's matvec contribution, fused into the ring payload
+        for j in seg.clone() {
+            let xj = x[j];
+            let row = &fmat[j * n..(j + 1) * n];
+            if forward {
+                for (a, w) in acc.iter_mut().zip(row) {
+                    *a += xj * *w;
+                }
+            } else {
+                for (a, w) in acc.iter_mut().zip(row) {
+                    *a += xj * w.conj();
+                }
+            }
+        }
+    }
+    if !forward {
+        let s = 1.0 / n as f64;
+        for a in acc.iter_mut() {
+            *a = a.scale(s);
+        }
+    }
+}
+
+/// int32-quantized ring reduction along one decomposed line: each rank
+/// computes its partial DFT in double, the partials are scaled, rounded
+/// to i32, packed two-per-u64 and summed *exactly* in ring order — the
+/// [`crate::pppm::quant`] arithmetic of the paper's Fig. 4c, saturation
+/// counting included.  Returns the saturation count.
+fn ring_quantized(
+    x: &[C64],
+    acc: &mut [C64],
+    parts: &mut [C64],
+    qacc: &mut [u64],
+    fmat: &[C64],
+    segs: &[Range<usize>],
+    forward: bool,
+) -> u64 {
+    let n = x.len();
+    let nseg = segs.len();
+    // per-rank partial DFT matvecs (each node computes in double)
+    for (s, seg) in segs.iter().enumerate() {
+        let p = &mut parts[s * n..(s + 1) * n];
+        for v in p.iter_mut() {
+            *v = C64::ZERO;
+        }
+        for j in seg.clone() {
+            let xj = x[j];
+            let row = &fmat[j * n..(j + 1) * n];
+            if forward {
+                for (a, w) in p.iter_mut().zip(row) {
+                    *a += xj * *w;
+                }
+            } else {
+                for (a, w) in p.iter_mut().zip(row) {
+                    *a += xj * w.conj();
+                }
+            }
+        }
+    }
+    // auto-ranged scale over the ring's partials (quant::Scale::Auto),
+    // then the exact packed-lane integer sum in ring order
+    let spec = QuantSpec::default();
+    let maxabs = parts
+        .iter()
+        .map(|v| v.re.abs().max(v.im.abs()))
+        .fold(0.0f64, f64::max);
+    let scale = spec.resolve(maxabs, nseg);
+    let mut sat = 0u64;
+    let mut overflow = false;
+    for q in qacc.iter_mut() {
+        *q = 0;
+    }
+    for s in 0..nseg {
+        for (k, q) in qacc.iter_mut().enumerate() {
+            let v = parts[s * n + k];
+            let (qr, s1) = quant::quantize(v.re, scale);
+            let (qi, s2) = quant::quantize(v.im, scale);
+            sat += s1 as u64 + s2 as u64;
+            *q = quant::lane_add(*q, quant::pack2(qr, qi), &mut overflow);
+        }
+    }
+    if overflow {
+        sat += 1;
+    }
+    let inv = 1.0 / n as f64;
+    for (a, q) in acc.iter_mut().zip(qacc.iter()) {
+        let (r, i) = quant::unpack2(*q);
+        let mut v = C64::new(
+            quant::dequantize(r as i64, scale),
+            quant::dequantize(i as i64, scale),
+        );
+        if !forward {
+            v = v.scale(inv);
+        }
+        *a = v;
+    }
+    sat
+}
+
+/// The distributed PPPM solver: a [`Pppm`] whose four 3-D transforms run
+/// the executed [`RankFft`] schedule instead of the host FFT.  Spread,
+/// Poisson solve, ik differentiation and gather are *shared* with
+/// [`Pppm`] through the crate-internal transform seam, so the degenerate
+/// `[1, 1, 1]` torus is bit-identical to the serial PPPM backend.
+///
+/// Registered as the engine's third `KspaceSolver`
+/// (`dplr run --kspace dist --ranks X,Y,Z`).
+pub struct DistPppm {
+    inner: Pppm,
+    fft: RankFft,
+    pool: Arc<ThreadPool>,
+}
+
+impl DistPppm {
+    /// Build the solver from a mesh configuration (its `MeshMode` must be
+    /// `Double`: transform precision is owned by the ring `payload`), the
+    /// box, the virtual rank torus and the ring payload.
+    ///
+    /// # Panics
+    /// If `cfg.mode` is not `MeshMode::Double`, or `ranks` is invalid for
+    /// the grid (see [`RankFft::new`]).
+    pub fn new(
+        cfg: PppmConfig,
+        box_len: [f64; 3],
+        ranks: [usize; 3],
+        payload: RingPayload,
+    ) -> DistPppm {
+        assert!(
+            matches!(cfg.mode, MeshMode::Double),
+            "DistPppm owns the transform precision; select RingPayload instead of MeshMode"
+        );
+        let fft = RankFft::new(cfg.grid, ranks, payload);
+        DistPppm {
+            inner: Pppm::new(cfg, box_len),
+            fft,
+            pool: Arc::new(ThreadPool::serial()),
+        }
+    }
+
+    /// The virtual rank torus the mesh is decomposed over.
+    pub fn ranks(&self) -> [usize; 3] {
+        self.fft.schedule().torus.dims
+    }
+
+    /// The configured ring payload.
+    pub fn payload(&self) -> RingPayload {
+        self.fft.payload()
+    }
+
+    /// The mesh configuration (grid / spline order / alpha).
+    pub fn config(&self) -> &PppmConfig {
+        &self.inner.cfg
+    }
+
+    /// Cumulative quantization saturation events (0 for the f64 ring).
+    pub fn saturations(&self) -> u64 {
+        self.inner.quant_saturations
+    }
+
+    /// Share a worker pool: the emulated ranks and the shared
+    /// spread/solve/gather kernels all shard across it.
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool.clone();
+        self.inner.set_pool(pool);
+    }
+
+    /// Re-derive box-dependent tables for a new cell (the rank schedule
+    /// itself only depends on the grid, which is unchanged).
+    pub fn rebuild(&mut self, box_len: [f64; 3]) {
+        self.inner.rebuild(box_len);
+    }
+
+    /// Energy + forces with caller-owned output storage (the engine's
+    /// steady-state entry point; allocation-free after warm-up, like
+    /// [`Pppm::energy_forces_into`]).
+    pub fn energy_forces_into(
+        &mut self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        out: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        let (inner, fft) = (&mut self.inner, &mut self.fft);
+        let pool = self.pool.clone();
+        let mut transform =
+            |g: &mut [C64], fwd: bool, _fs: &mut Fft3dScratch| fft.execute(g, fwd, pool.as_ref());
+        inner.energy_forces_with_transform(pos, q, out, &mut transform)
+    }
+
+    /// Allocating wrapper around [`Self::energy_forces_into`].
+    pub fn energy_forces(&mut self, pos: &[[f64; 3]], q: &[f64]) -> (f64, Vec<[f64; 3]>) {
+        let mut out = Vec::new();
+        let e = self.energy_forces_into(pos, q, &mut out);
+        (e, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Fft3d;
+    use crate::util::rng::Rng;
+
+    fn rand_grid(dims: [usize; 3], seed: u64) -> Vec<C64> {
+        let n = dims[0] * dims[1] * dims[2];
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|_| C64::new(r.range(-1.0, 1.0), r.range(-1.0, 1.0)))
+            .collect()
+    }
+
+    fn bits_eq(a: &[C64], b: &[C64], what: &str) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.re.to_bits(), y.re.to_bits(), "{what}[{i}].re");
+            assert_eq!(x.im.to_bits(), y.im.to_bits(), "{what}[{i}].im");
+        }
+    }
+
+    fn close(a: &[C64], b: &[C64], tol: f64) -> bool {
+        a.iter()
+            .zip(b)
+            .all(|(x, y)| (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol)
+    }
+
+    #[test]
+    fn degenerate_torus_is_bit_identical_to_host_fft() {
+        let pool = ThreadPool::serial();
+        for dims in [[8usize, 8, 8], [8, 12, 8], [10, 15, 10]] {
+            let base = rand_grid(dims, 11 + dims[1] as u64);
+            let mut host = base.clone();
+            Fft3d::new(dims).forward(&mut host);
+            let mut rf = RankFft::new(dims, [1, 1, 1], RingPayload::F64);
+            let mut g = base.clone();
+            rf.execute(&mut g, true, &pool);
+            bits_eq(&host, &g, "fwd");
+            let mut host_i = host.clone();
+            Fft3d::new(dims).inverse(&mut host_i);
+            rf.execute(&mut g, false, &pool);
+            bits_eq(&host_i, &g, "inv");
+        }
+    }
+
+    #[test]
+    fn decomposed_schedule_matches_host_fft_numerically() {
+        let pool = ThreadPool::new(3);
+        for (dims, ranks) in [
+            ([8usize, 12, 8], [2usize, 3, 2]),
+            ([8, 12, 8], [2, 2, 1]),
+            ([10, 15, 10], [5, 3, 2]),
+        ] {
+            let base = rand_grid(dims, 7 + ranks[0] as u64);
+            let mut host = base.clone();
+            Fft3d::new(dims).forward(&mut host);
+            let mut rf = RankFft::new(dims, ranks, RingPayload::F64);
+            let mut g = base.clone();
+            rf.execute(&mut g, true, &pool);
+            assert!(close(&host, &g, 1e-8), "{dims:?} over {ranks:?}");
+            // and the executed schedule round-trips
+            rf.execute(&mut g, false, &pool);
+            assert!(close(&base, &g, 1e-9), "roundtrip {dims:?} over {ranks:?}");
+        }
+    }
+
+    #[test]
+    fn float_ring_is_bit_invariant_to_rank_count() {
+        // the strict column-order accumulation contract: tori decomposing
+        // the same set of dimensions agree bit-for-bit, whatever the
+        // per-dimension rank counts
+        let dims = [8usize, 12, 8];
+        let base = rand_grid(dims, 99);
+        let pool = ThreadPool::serial();
+        let run = |ranks: [usize; 3]| -> Vec<C64> {
+            let mut rf = RankFft::new(dims, ranks, RingPayload::F64);
+            let mut g = base.clone();
+            rf.execute(&mut g, true, &pool);
+            g
+        };
+        let reference = run([2, 2, 2]);
+        for ranks in [[4usize, 3, 2], [2, 3, 4], [8, 2, 8], [3, 6, 5]] {
+            bits_eq(&reference, &run(ranks), "rank-invariance");
+        }
+    }
+
+    #[test]
+    fn executed_schedule_is_thread_invariant() {
+        let dims = [8usize, 12, 8];
+        let base = rand_grid(dims, 41);
+        let run = |threads: usize| -> Vec<C64> {
+            let pool = ThreadPool::new(threads);
+            let mut rf = RankFft::new(dims, [2, 3, 2], RingPayload::F64);
+            let mut g = base.clone();
+            rf.execute(&mut g, true, &pool);
+            rf.execute(&mut g, false, &pool);
+            g
+        };
+        let t1 = run(1);
+        for threads in [2usize, 4] {
+            bits_eq(&t1, &run(threads), "thread-invariance");
+        }
+    }
+
+    #[test]
+    fn quantized_ring_tracks_exact_ring() {
+        let dims = [8usize, 12, 8];
+        let base = rand_grid(dims, 23);
+        let pool = ThreadPool::serial();
+        let mut exact = base.clone();
+        RankFft::new(dims, [2, 3, 2], RingPayload::F64).execute(&mut exact, true, &pool);
+        let mut q = base.clone();
+        let mut rfq = RankFft::new(dims, [2, 3, 2], RingPayload::PackedI32);
+        let sat = rfq.execute(&mut q, true, &pool);
+        assert_eq!(sat, 0, "auto scale must not saturate on [-1,1] data");
+        let worst = exact
+            .iter()
+            .zip(&q)
+            .map(|(a, b)| (a.re - b.re).abs().max((a.im - b.im).abs()))
+            .fold(0.0f64, f64::max);
+        assert!(worst < 1e-3, "worst |err| {worst}");
+    }
+
+    #[test]
+    fn dist_solver_with_degenerate_torus_matches_pppm_bitwise() {
+        let (pos, q, box_len) = dplr_water_sites(16, 5);
+        let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
+        let mut pppm = Pppm::new(cfg.clone(), box_len);
+        let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
+        let mut dist = DistPppm::new(cfg, box_len, [1, 1, 1], RingPayload::F64);
+        let (e, f) = dist.energy_forces(&pos, &q);
+        assert_eq!(e_ref.to_bits(), e.to_bits(), "energy differs");
+        for (a, b) in f_ref.iter().zip(&f) {
+            for d in 0..3 {
+                assert_eq!(a[d].to_bits(), b[d].to_bits(), "force differs");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_solver_decomposed_matches_pppm_within_tolerance() {
+        let (pos, q, box_len) = dplr_water_sites(16, 5);
+        let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
+        let mut pppm = Pppm::new(cfg.clone(), box_len);
+        let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
+        for ranks in [[2usize, 2, 1], [2, 3, 2]] {
+            let mut dist = DistPppm::new(cfg.clone(), box_len, ranks, RingPayload::F64);
+            assert_eq!(dist.ranks(), ranks);
+            let (e, f) = dist.energy_forces(&pos, &q);
+            assert!(
+                (e - e_ref).abs() < 1e-9 * e_ref.abs().max(1.0),
+                "{ranks:?}: E {e} vs {e_ref}"
+            );
+            let mut worst: f64 = 0.0;
+            for (a, b) in f_ref.iter().zip(&f) {
+                for d in 0..3 {
+                    worst = worst.max((a[d] - b[d]).abs());
+                }
+            }
+            assert!(worst < 1e-8, "{ranks:?}: worst force gap {worst}");
+        }
+    }
+
+    #[test]
+    fn dist_solver_quantized_ring_stays_within_table1_tolerance() {
+        let (pos, q, box_len) = dplr_water_sites(16, 5);
+        let cfg = PppmConfig::new([8, 12, 8], 5, 0.3);
+        let mut pppm = Pppm::new(cfg.clone(), box_len);
+        let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
+        let mut dist = DistPppm::new(cfg, box_len, [2, 3, 2], RingPayload::PackedI32);
+        let (e, f) = dist.energy_forces(&pos, &q);
+        assert!(
+            (e - e_ref).abs() < 1e-3 * e_ref.abs().max(1.0),
+            "E {e} vs {e_ref}"
+        );
+        let mut worst: f64 = 0.0;
+        for (a, b) in f_ref.iter().zip(&f) {
+            for d in 0..3 {
+                worst = worst.max((a[d] - b[d]).abs());
+            }
+        }
+        assert!(worst < 5e-2, "worst quantized force gap {worst}");
+    }
+
+    /// A DPLR-style site set: ions + WCs displaced slightly from the O
+    /// (the same construction as the PPPM unit tests).
+    fn dplr_water_sites(nmol: usize, seed: u64) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
+        use crate::md::units::{Q_H, Q_O, Q_WC};
+        use crate::md::water::water_box;
+        let sys = water_box(nmol, seed);
+        let mut pos = sys.pos.clone();
+        let mut q = Vec::new();
+        for i in 0..sys.natoms() {
+            q.push(if i < sys.nmol { Q_O } else { Q_H });
+        }
+        for m in 0..nmol {
+            let mut w = sys.pos[m];
+            w[0] += 0.1;
+            w[1] -= 0.05;
+            pos.push(w);
+            q.push(Q_WC);
+        }
+        (pos, q, sys.box_len)
+    }
+}

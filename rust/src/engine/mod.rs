@@ -10,7 +10,7 @@
 //!   6. NVT (Nose-Hoover) or NVE velocity-Verlet update.
 //!
 //! Every hot-path provider is behind a trait ([`KspaceSolver`],
-//! [`ShortRangeModel`] — see [`traits`]): PPPM in any `MeshMode` or the
+//! [`ShortRangeModel`] — see the `traits` submodule): PPPM in any `MeshMode` or the
 //! exact pool-parallel Ewald sum for k-space, the framework-free
 //! [`crate::native::NativeModel`] or the XLA [`PjrtModel`] for the short
 //! range.  A [`Simulation`] is assembled by [`SimulationBuilder`]
@@ -39,16 +39,24 @@ use std::time::Instant;
 /// Per-step wall-time breakdown (the Fig. 9 categories).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepTimes {
+    /// Neighbour-list build / maintenance.
     pub nlist: f64,
+    /// Deep-Wannier forward.
     pub dw_fwd: f64,
+    /// K-space solve (PPPM / Ewald / dist).
     pub kspace: f64,
+    /// DP forward + backward.
     pub dp_all: f64,
+    /// Deep-Wannier VJP.
     pub dw_bwd: f64,
+    /// Integrator (and thermostat) updates.
     pub integrate: f64,
+    /// Whole-step wall time.
     pub total: f64,
 }
 
 impl StepTimes {
+    /// Accumulate another step's breakdown into this one.
     pub fn add(&mut self, o: &StepTimes) {
         self.nlist += o.nlist;
         self.dw_fwd += o.dw_fwd;
@@ -63,9 +71,13 @@ impl StepTimes {
 /// Thermodynamic observables after a step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepObservables {
+    /// Short-range (DP) energy [eV].
     pub e_sr: f64,
+    /// Long-range (k-space) energy E_Gt [eV].
     pub e_gt: f64,
+    /// Kinetic energy [eV].
     pub kinetic: f64,
+    /// Instantaneous temperature [K].
     pub temperature: f64,
     /// E_total + thermostat work: the conserved quantity under NVT
     pub conserved: f64,
@@ -75,13 +87,17 @@ pub struct StepObservables {
 /// the k-space choice lives in the solver itself).
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
+    /// MD time step [fs].
     pub dt_fs: f64,
+    /// Thermostat target temperature [K].
     pub target_t: f64,
     /// None = NVE
     pub thermostat_tau_ps: Option<f64>,
     /// overlap k-space with DP on a dedicated thread (paper section 3.2)
     pub overlap: bool,
+    /// Neighbour-list cutoffs / skin / padding.
     pub nlist: NlistParams,
+    /// Force a Verlet rebuild at least every this many steps.
     pub nlist_max_age: usize,
     /// worker-pool size for the per-atom hot loops (DP/DW/kspace/nlist);
     /// 1 = serial.  Results are bit-for-bit identical for any value.
@@ -91,7 +107,9 @@ pub struct SimConfig {
 /// A fully assembled DPLR MD run: system + providers + integrator +
 /// observers.  Build one with [`Simulation::builder`].
 pub struct Simulation {
+    /// The simulated system (positions, velocities, box).
     pub sys: System,
+    /// The validated run configuration.
     pub cfg: SimConfig,
     pub(crate) model: Box<dyn ShortRangeModel>,
     pub(crate) kspace: Box<dyn KspaceSolver>,
@@ -123,12 +141,37 @@ pub struct Simulation {
     /// production steps delivered to observers (quench steps excluded) —
     /// the 1-based `step` argument of `Observer::on_step`
     pub(crate) observed_steps: u64,
+    /// Total steps taken (quench included).
     pub steps_done: u64,
+    /// Observables of the most recent step.
     pub last_obs: Option<StepObservables>,
 }
 
 impl Simulation {
-    /// Start building a simulation over `sys`.
+    /// Start building a simulation over `sys` (the README quickstart,
+    /// kept compiling by `cargo test --doc`):
+    ///
+    /// ```no_run
+    /// use dplr::engine::{KspaceConfig, Simulation, StepRecorder};
+    /// use dplr::md::water::water_box;
+    /// use dplr::native::NativeModel;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let rec = StepRecorder::new();
+    /// let mut sim = Simulation::builder(water_box(64, 42))
+    ///     .dt_fs(0.5)
+    ///     .thermostat(300.0, 0.5)
+    ///     .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })   // or Ewald / Dist
+    ///     .short_range(Box::new(NativeModel::synthetic(7)))
+    ///     .overlap(true)
+    ///     .observer(Box::new(rec.clone()))
+    ///     .build()?;                // configuration validated here
+    /// sim.quench(30)?;
+    /// sim.run(200)?;
+    /// println!("kspace took {:.3} s total", rec.totals().kspace);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn builder(sys: System) -> SimulationBuilder {
         SimulationBuilder::new(sys)
     }

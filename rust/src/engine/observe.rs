@@ -61,18 +61,22 @@ pub struct RecorderState {
 pub struct StepRecorder(Arc<Mutex<RecorderState>>);
 
 impl StepRecorder {
+    /// Fresh recorder (equivalent to `default()`).
     pub fn new() -> StepRecorder {
         StepRecorder::default()
     }
 
+    /// Snapshot of the accumulated state.
     pub fn state(&self) -> RecorderState {
         *self.0.lock().unwrap()
     }
 
+    /// Summed wall-time breakdown over the recorded steps.
     pub fn totals(&self) -> StepTimes {
         self.state().totals
     }
 
+    /// Number of production steps recorded.
     pub fn steps(&self) -> u64 {
         self.state().steps
     }

@@ -5,11 +5,14 @@
 //! pluggable).
 //!
 //!  * [`KspaceSolver`] — the long-range term E_Gt.  Implemented by
-//!    [`Pppm`] (every `MeshMode`) and by the pool-parallel
+//!    [`Pppm`] (every `MeshMode`), by the pool-parallel
 //!    [`EwaldRecipSolver`], which turns the exact direct k-space sum into
 //!    a runnable in-engine backend (`dplr run --kspace ewald`) instead of
-//!    a test-only oracle.  `Send` is part of the contract: the section-3.2
-//!    overlap runs the solver on a dedicated thread.
+//!    a test-only oracle, and by [`DistPppm`], which executes the paper's
+//!    rank-decomposed transpose-free FFT schedule over a virtual torus
+//!    (`dplr run --kspace dist --ranks X,Y,Z`).  `Send` is part of the
+//!    contract: the section-3.2 overlap runs the solver on a dedicated
+//!    thread.
 //!  * [`ShortRangeModel`] — DP energy/forces plus the DW Wannier
 //!    forward/VJP.  Implemented by [`NativeModel`] (framework-free,
 //!    section 3.4.2) and [`PjrtModel`] (the XLA artifact baseline).
@@ -19,6 +22,7 @@
 //! Both traits replace the old closed `Backend` enum whose match-dispatch
 //! sat on the step path; the step loop now only sees trait objects.
 
+use crate::distpppm::DistPppm;
 use crate::ewald::EwaldRecipSolver;
 use crate::native::NativeModel;
 use crate::pool::ThreadPool;
@@ -85,6 +89,33 @@ impl KspaceSolver for Pppm {
 
     fn name(&self) -> &'static str {
         "pppm"
+    }
+}
+
+impl KspaceSolver for DistPppm {
+    fn energy_forces_into(
+        &mut self,
+        sites: &[[f64; 3]],
+        charges: &[f64],
+        forces_out: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        DistPppm::energy_forces_into(self, sites, charges, forces_out)
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        DistPppm::set_pool(self, pool)
+    }
+
+    fn rebuild(&mut self, box_len: [f64; 3]) {
+        DistPppm::rebuild(self, box_len)
+    }
+
+    fn saturations(&self) -> u64 {
+        DistPppm::saturations(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "dist"
     }
 }
 
@@ -180,6 +211,7 @@ pub struct PjrtModel {
 }
 
 impl PjrtModel {
+    /// Wrap an already-open engine at the given dtype.
     pub fn new(engine: PjrtEngine, dtype: Dtype) -> PjrtModel {
         PjrtModel {
             engine: Mutex::new(engine),
@@ -193,6 +225,7 @@ impl PjrtModel {
         Ok(PjrtModel::new(PjrtEngine::open(dir)?, dtype))
     }
 
+    /// The dtype artifacts are evaluated at.
     pub fn dtype(&self) -> Dtype {
         self.dtype
     }

@@ -27,11 +27,14 @@ use std::sync::Arc;
 /// E = ke * (2 pi / V) * sum_{k != 0} exp(-k^2/(4 alpha^2)) / k^2 * |S(k)|^2,
 /// k = 2 pi (m_x/L_x, m_y/L_y, m_z/L_z);  forces are the exact gradient.
 pub struct EwaldRecip {
+    /// Ewald splitting parameter [1/A].
     pub alpha: f64,
+    /// Per-dimension k-vector truncation |m_d| <= mmax[d].
     pub mmax: [i32; 3],
 }
 
 impl EwaldRecip {
+    /// Sum with an explicit per-dimension k-truncation.
     pub fn new(alpha: f64, mmax: [i32; 3]) -> Self {
         EwaldRecip { alpha, mmax }
     }
@@ -117,12 +120,13 @@ const KSHARDS: usize = 8;
 /// the in-engine `--kspace ewald` backend.
 ///
 /// Parallel structure: the k-vector list (precomputed per box) is split
-/// into [`KSHARDS`] fixed contiguous shards.  Each shard accumulates one
+/// into `KSHARDS` (8) fixed contiguous shards.  Each shard accumulates one
 /// private energy partial and one private per-site force grid; the caller
 /// then reduces both in shard order, so results do not depend on the pool
 /// size.  All per-call buffers persist across calls, so the steady state
 /// allocates nothing.
 pub struct EwaldRecipSolver {
+    /// Ewald splitting parameter [1/A].
     pub alpha: f64,
     /// relative truncation tolerance fed to [`EwaldRecip::auto`]
     pub tol: f64,
@@ -142,6 +146,7 @@ pub struct EwaldRecipSolver {
 }
 
 impl EwaldRecipSolver {
+    /// Build the solver for a box (k-table derived via [`EwaldRecip::auto`]).
     pub fn new(alpha: f64, box_len: [f64; 3], tol: f64) -> EwaldRecipSolver {
         let mut s = EwaldRecipSolver {
             alpha,
@@ -158,6 +163,7 @@ impl EwaldRecipSolver {
         s
     }
 
+    /// Share a worker pool; the k-shards execute across it.
     pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         self.pool = pool;
     }

@@ -13,22 +13,28 @@ use crate::util::stats::{summarize, time_reps};
 use anyhow::Result;
 
 #[derive(Debug, Clone)]
+/// Host-measured per-atom inference costs feeding the DES cost table.
 pub struct Calibration {
     /// native framework-free path, per atom [s]
     pub native_dp_per_atom: f64,
+    /// native DW forward, per molecule [s]
     pub native_dw_fwd_per_mol: f64,
+    /// native DW VJP, per molecule [s]
     pub native_dw_vjp_per_mol: f64,
     /// XLA/PJRT path (the "framework" baseline), per atom [s]
     pub pjrt_dp_per_atom_f64: f64,
+    /// XLA/PJRT path at f32, per atom [s]
     pub pjrt_dp_per_atom_f32: f64,
     /// ratios feeding the cost table
     pub framework_factor: f64,
+    /// f64/f32 inference speedup ratio
     pub fp32_speedup: f64,
     /// false when the PJRT numbers are the paper-band fallback (the PJRT
     /// path was unavailable), not host measurements
     pub pjrt_measured: bool,
 }
 
+/// Measure host inference costs (`dplr calibrate`), `reps` repetitions.
 pub fn run(reps: usize) -> Result<Calibration> {
     let dir = artifacts_dir();
     let nmol = 188; // the 564-atom headline box
@@ -107,6 +113,7 @@ impl Calibration {
         c
     }
 
+    /// Write the calibration to a JSON file.
     pub fn save(&self, path: &str) -> Result<()> {
         let j = Json::obj(vec![
             ("native_dp_per_atom", Json::Num(self.native_dp_per_atom)),
@@ -122,6 +129,7 @@ impl Calibration {
         Ok(())
     }
 
+    /// Print a human-readable summary.
     pub fn print(&self) {
         println!("\n=== Host calibration (564-atom water box) ===");
         if !self.pjrt_measured {

@@ -8,10 +8,15 @@ use crate::tofu::Torus;
 use crate::util::table::Table;
 
 #[derive(Debug, Clone)]
+/// One weak-scaling data point (Fig. 10).
 pub struct Point {
+    /// Node count.
     pub nodes: usize,
+    /// Total atom count (47/node).
     pub atoms: usize,
+    /// Modelled step time [ms].
     pub step_ms: f64,
+    /// Resulting throughput [ns/day].
     pub ns_day: f64,
 }
 
@@ -43,6 +48,7 @@ fn torus_for(nodes: usize) -> [usize; 3] {
     }
 }
 
+/// Model every weak-scaling configuration of section 4.4.
 pub fn run(cost: &CostTable, machine: &MachineConfig) -> Vec<Point> {
     let flags = all_on();
     weak_scaling_configs()
@@ -61,6 +67,7 @@ pub fn run(cost: &CostTable, machine: &MachineConfig) -> Vec<Point> {
         .collect()
 }
 
+/// Print the Fig. 10 table.
 pub fn print_points(points: &[Point]) {
     println!("\n=== Fig 10: weak scaling, 47 atoms/node, all optimizations ===");
     let mut t = Table::new(&["nodes", "atoms", "ms/step", "ns/day"]);

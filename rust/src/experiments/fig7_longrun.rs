@@ -16,10 +16,15 @@ use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::{Arc, Mutex};
 
+/// Run configuration for the Fig. 7 traces.
 pub struct Config {
+    /// Water molecules in the box.
     pub nmol: usize,
+    /// Production steps per trace.
     pub steps: usize,
+    /// Observable sampling stride.
     pub sample_every: usize,
+    /// Optional JSON output path for the traces.
     pub out_json: Option<String>,
 }
 
@@ -35,10 +40,15 @@ impl Default for Config {
 }
 
 #[derive(Debug, Clone, Default)]
+/// Sampled observables of one NVT run.
 pub struct Trace {
+    /// Precision-configuration label.
     pub label: String,
+    /// Sampled step indices.
     pub step: Vec<u64>,
+    /// Conserved quantity per sample [eV].
     pub energy: Vec<f64>,
+    /// Temperature per sample [K].
     pub temperature: Vec<f64>,
 }
 
@@ -88,6 +98,7 @@ fn run_one(cfg: &Config, label: &str, mode: Option<MeshMode>) -> Result<Trace> {
     Ok(tr)
 }
 
+/// Run the double and mixed-int NVT traces (`dplr longrun`).
 pub fn run(cfg: &Config) -> Result<(Trace, Trace)> {
     let double = run_one(cfg, "double", None)?;
     let quant = run_one(
@@ -113,6 +124,7 @@ pub fn run(cfg: &Config) -> Result<(Trace, Trace)> {
     Ok((double, quant))
 }
 
+/// Print drift/temperature statistics of the two traces.
 pub fn print_summary(a: &Trace, b: &Trace) {
     let stat = |v: &[f64]| {
         let n = v.len().max(1) as f64;

@@ -8,16 +8,23 @@ use crate::tofu::{BgPayload, Torus};
 use crate::util::table::Table;
 
 #[derive(Debug, Clone)]
+/// One Fig. 8 row: a (node count, grid/node) configuration.
 pub struct Row {
+    /// Node count.
     pub nodes: usize,
+    /// Grid points per node per dimension (4/5/6).
     pub grid_per_node: usize,
     /// seconds for 1000 iterations, per method (None = unsupported)
     pub fftmpi_all: f64,
+    /// heFFTe, all ranks (None = unsupported regime).
     pub heffte_all: Option<f64>,
+    /// heFFTe, master ranks only.
     pub heffte_master: Option<f64>,
+    /// utofu-FFT (the paper's contribution).
     pub utofu_master: f64,
 }
 
+/// Model every Fig. 8 configuration.
 pub fn run(machine: &MachineConfig) -> Vec<Row> {
     let mut rows = Vec::new();
     for per_node in [4usize, 5, 6] {
@@ -45,6 +52,7 @@ pub fn run(machine: &MachineConfig) -> Vec<Row> {
     rows
 }
 
+/// Print the Fig. 8 tables (one per grid/node).
 pub fn print_rows(rows: &[Row]) {
     println!("\n=== Fig 8: 1000 x (brick2fft + poisson_ik) [seconds] ===");
     for per_node in [4usize, 5, 6] {

@@ -9,12 +9,17 @@ use crate::tofu::Torus;
 use crate::util::table::Table;
 
 #[derive(Debug, Clone)]
+/// One rung of the Fig. 9 optimization ladder.
 pub struct Stage {
+    /// Stage label ("+FP32", ...).
     pub name: &'static str,
+    /// Modelled per-step time breakdown.
     pub breakdown: Breakdown,
+    /// Cumulative speedup over the unoptimized baseline.
     pub speedup_vs_baseline: f64,
 }
 
+/// Model the full ladder for one topology.
 pub fn run(
     node_dims: [usize; 3],
     replication: [usize; 3],
@@ -38,6 +43,7 @@ pub fn run(
         .collect()
 }
 
+/// Print the ladder table for one node count.
 pub fn print_stages(nodes: usize, stages: &[Stage]) {
     println!("\n=== Fig 9: step-by-step optimization, {nodes} nodes (100 steps) ===");
     let mut t = Table::new(&[

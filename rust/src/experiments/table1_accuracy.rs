@@ -26,16 +26,25 @@ use crate::util::table::Table;
 use anyhow::Result;
 
 #[derive(Debug, Clone)]
+/// One Table-1 row: errors of a precision configuration.
 pub struct Row {
+    /// Configuration label.
     pub name: String,
+    /// Mesh used for the row.
     pub grid: [usize; 3],
+    /// |dE| per atom vs the exact Ewald reference [eV].
     pub energy_err_per_atom: f64,
+    /// Force RMS error [eV/A].
     pub force_rms_err: f64,
+    /// Worst single-component force error [eV/A].
     pub force_max_err: f64,
 }
 
+/// Run configuration for the Table-1 sweep.
 pub struct Config {
+    /// Water molecules in the box.
     pub nmol: usize,
+    /// Ring segments per dimension for the quantized rows.
     pub nseg: [usize; 3],
     /// equilibration steps before the measured single step
     pub equil: usize,
@@ -67,6 +76,7 @@ fn reference_state(cfg: &Config) -> Result<Simulation> {
     Ok(sim)
 }
 
+/// Evaluate every precision configuration on one equilibrated frame.
 pub fn run(cfg: &Config) -> Result<Vec<Row>> {
     let dir = artifacts_dir();
     let sim = reference_state(cfg)?;
@@ -232,6 +242,7 @@ fn full_forces(
     Ok((e_sr + e_gt, forces))
 }
 
+/// Print the Table-1 table.
 pub fn print_rows(rows: &[Row]) {
     let mut t = Table::new(&[
         "Precision",

@@ -20,14 +20,18 @@ pub use plan::{Fft1d, Fft3d, Fft3dScratch, LINE_SHARDS};
 /// `Vec<C64>` with no layout surprises when quantizing / packing.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct C64 {
+    /// Real part.
     pub re: f64,
+    /// Imaginary part.
     pub im: f64,
 }
 
 impl C64 {
+    /// The additive identity.
     pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
 
     #[inline]
+    /// Complex number from real and imaginary parts.
     pub fn new(re: f64, im: f64) -> C64 {
         C64 { re, im }
     }
@@ -40,21 +44,25 @@ impl C64 {
     }
 
     #[inline]
+    /// Complex conjugate.
     pub fn conj(self) -> C64 {
         C64::new(self.re, -self.im)
     }
 
     #[inline]
+    /// Squared magnitude.
     pub fn norm_sq(self) -> f64 {
         self.re * self.re + self.im * self.im
     }
 
     #[inline]
+    /// Magnitude.
     pub fn abs(self) -> f64 {
         self.norm_sq().sqrt()
     }
 
     #[inline]
+    /// Multiply by a real scalar.
     pub fn scale(self, k: f64) -> C64 {
         C64::new(self.re * k, self.im * k)
     }

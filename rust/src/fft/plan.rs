@@ -15,6 +15,7 @@ use crate::pool::{SyncSlice, ThreadPool};
 /// the 1/N factor so `inverse(forward(x)) == x`.
 #[derive(Debug, Clone)]
 pub struct Fft1d {
+    /// Transform length.
     pub n: usize,
     kind: Kind,
 }
@@ -35,6 +36,7 @@ enum Kind {
 }
 
 impl Fft1d {
+    /// Plan a transform of length `n` (radix-2 or Bluestein).
     pub fn new(n: usize) -> Fft1d {
         assert!(n >= 1);
         if n.is_power_of_two() {
@@ -246,6 +248,7 @@ impl Fft3dScratch {
 /// 3-D FFT over a row-major `[nx][ny][nz]` grid.
 #[derive(Debug, Clone)]
 pub struct Fft3d {
+    /// Grid dimensions `[nx, ny, nz]`.
     pub dims: [usize; 3],
     px: Fft1d,
     py: Fft1d,
@@ -253,6 +256,7 @@ pub struct Fft3d {
 }
 
 impl Fft3d {
+    /// Plan a 3-D transform over `[nx][ny][nz]` row-major grids.
     pub fn new(dims: [usize; 3]) -> Fft3d {
         Fft3d {
             dims,
@@ -263,18 +267,22 @@ impl Fft3d {
     }
 
     #[inline]
+    /// Total grid size `nx * ny * nz`.
     pub fn len(&self) -> usize {
         self.dims[0] * self.dims[1] * self.dims[2]
     }
 
+    /// True when any dimension is zero.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// In-place serial forward transform.
     pub fn forward(&self, g: &mut [C64]) {
         self.apply(g, true);
     }
 
+    /// In-place serial inverse transform (1/N included).
     pub fn inverse(&self, g: &mut [C64]) {
         self.apply(g, false);
     }

@@ -51,10 +51,14 @@ fn print_help() {
          usage: dplr <command> [--flags]\n\n\
          commands:\n\
          \x20 run          real MD (--nmol 64 --steps 100 --backend native|pjrt\n\
-         \x20              --dtype f64|f32 --kspace pppm|ewald --overlap\n\
+         \x20              --dtype f64|f32 --kspace pppm|ewald|dist --overlap\n\
          \x20              --dt 1.0 --quench 30\n\
          \x20              --threads N: worker pool for DP/DW/kspace/nlist;\n\
-         \x20              results are bit-for-bit identical for any N)\n\
+         \x20              results are bit-for-bit identical for any N;\n\
+         \x20              --kspace dist: executed rank-decomposed FFT\n\
+         \x20              schedule over a virtual torus (--ranks X,Y,Z,\n\
+         \x20              default 1,1,1 = bit-identical to pppm;\n\
+         \x20              --ring-quant for int32-packed ring payloads)\n\
          \x20 accuracy     Table 1: precision-config errors (--nmol 128)\n\
          \x20 longrun      Fig 7: NVT traces double vs mixed-int2 (--steps 1500)\n\
          \x20 fftbench     Fig 8: distributed-FFT comparison\n\
@@ -90,6 +94,22 @@ fn short_range_from_args(args: &Args) -> Result<Box<dyn ShortRangeModel>> {
     }
 }
 
+/// Parse `--ranks X,Y,Z` (the virtual rank torus of `--kspace dist`).
+fn parse_ranks(s: &str) -> Result<[usize; 3]> {
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != 3 {
+        bail!("--ranks expects X,Y,Z (e.g. 2,2,1), got '{s}'");
+    }
+    let mut out = [0usize; 3];
+    for (d, p) in parts.iter().enumerate() {
+        out[d] = p
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--ranks component '{p}' is not an integer"))?;
+    }
+    Ok(out)
+}
+
 fn kspace_from_args(args: &Args, alpha: f64) -> Result<KspaceConfig> {
     match args.str_or("kspace", "pppm").as_str() {
         "pppm" => Ok(KspaceConfig::PppmAuto { alpha }),
@@ -97,7 +117,12 @@ fn kspace_from_args(args: &Args, alpha: f64) -> Result<KspaceConfig> {
             alpha,
             tol: args.f64_or("ewald-tol", 1e-10)?,
         }),
-        other => bail!("unknown kspace solver {other} (expected pppm|ewald)"),
+        "dist" => Ok(KspaceConfig::Dist {
+            alpha,
+            ranks: parse_ranks(&args.str_or("ranks", "1,1,1"))?,
+            quantized: args.bool("ring-quant"),
+        }),
+        other => bail!("unknown kspace solver {other} (expected pppm|ewald|dist)"),
     }
 }
 

@@ -6,10 +6,12 @@ use super::system::System;
 /// Velocity-Verlet half-kick + drift.  `forces` in eV/A, `dt` in ps.
 /// Call `kick_drift` before the force evaluation and `kick` after.
 pub struct VelocityVerlet {
+    /// Time step [ps].
     pub dt: f64,
 }
 
 impl VelocityVerlet {
+    /// Integrator with time step `dt_ps` [ps].
     pub fn new(dt_ps: f64) -> Self {
         VelocityVerlet { dt: dt_ps }
     }
@@ -45,13 +47,18 @@ impl VelocityVerlet {
 /// force evaluation.  `conserved_shift` accumulates the thermostat work so
 /// that E_total + shift is the conserved quantity (plotted in Fig 7).
 pub struct NoseHoover {
+    /// Target temperature [K].
     pub target_t: f64,
+    /// Coupling time [ps].
     pub tau: f64, // ps
+    /// Thermostat friction variable.
     pub xi: f64,
+    /// Accumulated thermostat work (E_total + shift is conserved).
     pub conserved_shift: f64,
 }
 
 impl NoseHoover {
+    /// Thermostat at `target_t` K with coupling time `tau_ps` [ps].
     pub fn new(target_t: f64, tau_ps: f64) -> Self {
         NoseHoover {
             target_t,

@@ -5,9 +5,11 @@ use crate::util::rng::Rng;
 
 /// Atom type indices (shared with python: O block first, then H pairs).
 pub const TYPE_O: usize = 0;
+/// Hydrogen type index.
 pub const TYPE_H: usize = 1;
 
 #[derive(Debug, Clone)]
+/// Positions/velocities/masses of a water system plus its box.
 pub struct System {
     /// number of water molecules; natoms = 3 * nmol
     pub nmol: usize,
@@ -22,10 +24,12 @@ pub struct System {
 }
 
 impl System {
+    /// Total atom count (3 per molecule).
     pub fn natoms(&self) -> usize {
         3 * self.nmol
     }
 
+    /// Type index of atom `i` (O block first, then H).
     pub fn atom_type(&self, i: usize) -> usize {
         if i < self.nmol {
             TYPE_O
@@ -82,6 +86,7 @@ impl System {
         }
     }
 
+    /// Remove the net linear momentum.
     pub fn zero_momentum(&mut self) {
         let mut p = [0.0; 3];
         let mut mtot = 0.0;

@@ -17,11 +17,14 @@ pub const FS: f64 = 1e-3;
 
 /// Masses (g/mol).
 pub const MASS_O: f64 = 15.9994;
+/// H mass (g/mol).
 pub const MASS_H: f64 = 1.008;
 
 /// DPLR water charges in units of e (O ion, H ion, Wannier centroid).
 pub const Q_O: f64 = 6.0;
+/// H ionic charge [e].
 pub const Q_H: f64 = 1.0;
+/// Wannier-centroid charge [e] (4 doubly-occupied centres merged).
 pub const Q_WC: f64 = -8.0;
 
 /// ns/day for a given seconds-per-step wall time at a 1 fs time step.

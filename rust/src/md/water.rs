@@ -6,6 +6,7 @@ use crate::util::rng::Rng;
 
 /// Geometry constants shared with python/compile/params.py.
 pub const BOND_R0: f64 = 0.9572;
+/// Equilibrium H-O-H angle [rad].
 pub const ANGLE_T0: f64 = 1.8242;
 
 /// Volume per molecule at ~1 g/cc [A^3].

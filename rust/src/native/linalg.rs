@@ -19,12 +19,16 @@
 /// Row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub r: usize,
+    /// Column count.
     pub c: usize,
+    /// Row-major storage, `r * c` values.
     pub a: Vec<f64>,
 }
 
 impl Mat {
+    /// Zero matrix of the given shape.
     pub fn zeros(r: usize, c: usize) -> Mat {
         Mat {
             r,
@@ -33,17 +37,20 @@ impl Mat {
         }
     }
 
+    /// Matrix from row-major data (length must be `r * c`).
     pub fn from_vec(r: usize, c: usize, a: Vec<f64>) -> Mat {
         assert_eq!(a.len(), r * c);
         Mat { r, c, a }
     }
 
     #[inline]
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.a[i * self.c..(i + 1) * self.c]
     }
 
     #[inline]
+    /// Row `i` as a mutable slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.a[i * self.c..(i + 1) * self.c]
     }

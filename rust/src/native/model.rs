@@ -27,13 +27,18 @@ use std::time::Instant;
 
 /// All weights of the DP + DW models (from artifacts/weights.json).
 pub struct Weights {
+    /// DP embedding nets (per centre type).
     pub embed_dp: [Mlp; 2],
+    /// DP fitting nets (per centre type).
     pub fit_dp: [Mlp; 2],
+    /// DW embedding nets (per neighbour type).
     pub embed_dw: [Mlp; 2],
+    /// DW fitting net.
     pub fit_dw: Mlp,
 }
 
 impl Weights {
+    /// Load weights.json from the artifacts build.
     pub fn load(path: &str) -> anyhow::Result<Weights> {
         let j = crate::util::json::Json::parse_file(path)?;
         let arr2 = |key: &str| -> anyhow::Result<[Mlp; 2]> {
@@ -125,8 +130,11 @@ struct DwShard {
     secs: f64,
 }
 
+/// The framework-free DP + DW model (paper section 3.4.2).
 pub struct NativeModel {
+    /// Model hyper-parameters (shared with python).
     pub hyper: Hyper,
+    /// All net weights.
     pub weights: Weights,
     pool: Arc<ThreadPool>,
     plan_dp: Mutex<ShardPlan>,
@@ -135,6 +143,7 @@ pub struct NativeModel {
 }
 
 impl NativeModel {
+    /// Model from explicit hyper-parameters + weights (serial pool).
     pub fn new(hyper: Hyper, weights: Weights) -> Self {
         NativeModel {
             hyper,
@@ -146,6 +155,7 @@ impl NativeModel {
         }
     }
 
+    /// Load manifest + weights from an artifacts directory.
     pub fn load(dir: &str) -> anyhow::Result<NativeModel> {
         let man = crate::runtime::manifest::Manifest::load(&format!("{dir}/manifest.json"))?;
         let weights = Weights::load(&format!("{dir}/weights.json"))?;
@@ -164,6 +174,7 @@ impl NativeModel {
         self.pool = pool;
     }
 
+    /// The worker pool the hot loops shard across.
     pub fn pool(&self) -> &ThreadPool {
         &self.pool
     }

@@ -13,12 +13,16 @@ use anyhow::{anyhow, Result};
 /// hot path (part of the section 3.4.2 framework-free optimization).
 #[derive(Debug, Clone)]
 pub struct Mlp {
+    /// Layer weights, each `(in x out)` row-major.
     pub ws: Vec<Mat>,
+    /// Layer biases.
     pub bs: Vec<Vec<f64>>,
+    /// Cached transposed weights for the backward pass.
     pub wts: Vec<Mat>,
 }
 
 impl Mlp {
+    /// Parse a net from its weights.json entry.
     pub fn from_json(j: &Json) -> Result<Mlp> {
         let wj = j.req("weights")?.as_arr()?;
         let bj = j.req("biases")?.as_arr()?;
@@ -39,10 +43,12 @@ impl Mlp {
         Ok(Mlp { ws, bs, wts })
     }
 
+    /// Input width.
     pub fn din(&self) -> usize {
         self.ws[0].r
     }
 
+    /// Output width.
     pub fn dout(&self) -> usize {
         self.ws.last().unwrap().c
     }
@@ -84,6 +90,7 @@ pub fn seeded_mlp(rng: &mut Rng, hidden: &[usize], din: usize, dout: usize, out_
 pub struct Tape {
     /// tanh outputs per hidden layer (t_i), for the 1 - t^2 factors
     pub ts: Vec<Mat>,
+    /// Final-layer output.
     pub out: Mat,
 }
 

@@ -8,8 +8,11 @@ use crate::pool::{even_shards, ThreadPool};
 /// Neighbour-list hyper-parameters (mirror python/compile/params.py).
 #[derive(Debug, Clone, Copy)]
 pub struct NlistParams {
+    /// Interaction cutoff [A].
     pub r_cut: f64,
+    /// Verlet skin [A] (rebuild when an atom moved more than skin/2).
     pub skin: f64,
+    /// Max O / H neighbours kept per centre.
     pub sel: [usize; 2], // max O / H neighbours kept
 }
 
@@ -24,6 +27,7 @@ impl Default for NlistParams {
 }
 
 impl NlistParams {
+    /// Total padded row width (sel O + sel H).
     pub fn sel_total(&self) -> usize {
         self.sel[0] + self.sel[1]
     }
@@ -34,14 +38,18 @@ impl NlistParams {
 /// in [sel0, sel0+sel1); -1 = empty slot.
 #[derive(Debug, Clone)]
 pub struct PaddedNlist {
+    /// Number of list centres (rows).
     pub ncentres: usize,
+    /// Per-type column capacities the rows were built with.
     pub sel: [usize; 2],
+    /// Flat rows, `ncentres x sel_total`; -1 = empty slot.
     pub data: Vec<i32>, // ncentres x sel_total
     /// true if some shell overflowed `sel` and was truncated
     pub truncated: bool,
 }
 
 impl PaddedNlist {
+    /// The padded row of centre `i`.
     pub fn row(&self, i: usize) -> &[i32] {
         let s = self.sel[0] + self.sel[1];
         &self.data[i * s..(i + 1) * s]
@@ -269,14 +277,18 @@ pub fn build_cells_par(
 /// Verlet-list manager: rebuilds when any atom moved more than skin/2 since
 /// the last build, or after `max_age` steps (paper: every 50).
 pub struct VerletManager {
+    /// The cutoff/skin parameters rebuild decisions use.
     pub params: NlistParams,
     last_pos: Vec<[f64; 3]>,
     age: usize,
+    /// Hard rebuild interval in steps.
     pub max_age: usize,
+    /// Rebuild count (diagnostics).
     pub rebuilds: usize,
 }
 
 impl VerletManager {
+    /// Manager that has never built a list (first query rebuilds).
     pub fn new(params: NlistParams, max_age: usize) -> Self {
         VerletManager {
             params,
@@ -287,6 +299,7 @@ impl VerletManager {
         }
     }
 
+    /// True when drift or age requires a rebuild.
     pub fn needs_rebuild(&mut self, sys: &System) -> bool {
         if self.last_pos.len() != sys.natoms() || self.age >= self.max_age {
             return true;
@@ -304,12 +317,14 @@ impl VerletManager {
         false
     }
 
+    /// Record that lists were rebuilt at the current positions.
     pub fn mark_built(&mut self, sys: &System) {
         self.last_pos = sys.pos.clone();
         self.age = 0;
         self.rebuilds += 1;
     }
 
+    /// Advance the age by one step.
     pub fn tick(&mut self) {
         self.age += 1;
     }

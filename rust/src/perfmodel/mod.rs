@@ -62,11 +62,17 @@ impl Default for CostTable {
 /// Which optimizations are active (the Fig 9 stage ladder).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageFlags {
+    /// Framework-free inference (section 3.4.2).
     pub native_inference: bool,
+    /// Single-precision short-range inference.
     pub fp32: bool,
+    /// Transpose-free hardware-offloaded FFT (section 3.1).
     pub utofu_fft: bool,
+    /// Node-level task division (section 3.4.1).
     pub node_division: bool,
+    /// Ring load balancing (section 3.3).
     pub ring_lb: bool,
+    /// Long/short-range overlap (section 3.2).
     pub overlap: bool,
 }
 
@@ -94,14 +100,20 @@ impl StageFlags {
 /// Per-step time breakdown (the Fig 9 bar categories).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Breakdown {
+    /// K-space solve.
     pub kspace: f64,
+    /// Communication (ghosts + reductions).
     pub comm: f64,
+    /// Deep-Wannier forward.
     pub dw_fwd: f64,
+    /// DP forward/backward + DW VJP.
     pub dp_dw_bwd: f64,
+    /// Integration, neighbour lists, output.
     pub others: f64,
 }
 
 impl Breakdown {
+    /// Sum of all categories.
     pub fn total(&self) -> f64 {
         self.kspace + self.comm + self.dw_fwd + self.dp_dw_bwd + self.others
     }

@@ -58,14 +58,17 @@ impl ShardPlan {
         }
     }
 
+    /// Shard count of the plan.
     pub fn nshards(&self) -> usize {
         self.bounds.len() - 1
     }
 
+    /// Item count the plan partitions.
     pub fn nitems(&self) -> usize {
         *self.bounds.last().unwrap()
     }
 
+    /// Item range of shard `s`.
     pub fn range(&self, s: usize) -> Range<usize> {
         self.bounds[s]..self.bounds[s + 1]
     }

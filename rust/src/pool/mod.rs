@@ -136,6 +136,7 @@ impl ThreadPool {
         ThreadPool::new(1)
     }
 
+    /// Total executor count (workers + the calling thread).
     pub fn nthreads(&self) -> usize {
         self.nthreads
     }
@@ -317,6 +318,7 @@ unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
 unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
 
 impl<'a, T> SyncSlice<'a, T> {
+    /// Wrap a mutable slice for disjoint shard writes.
     pub fn new(slice: &'a mut [T]) -> SyncSlice<'a, T> {
         SyncSlice {
             ptr: slice.as_mut_ptr(),
@@ -325,10 +327,12 @@ impl<'a, T> SyncSlice<'a, T> {
         }
     }
 
+    /// Length of the underlying slice.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the underlying slice is empty.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

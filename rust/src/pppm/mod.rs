@@ -14,13 +14,19 @@
 //! E_Gt is exactly this reciprocal-space sum (verified against
 //! [`crate::ewald::EwaldRecip`]).
 //!
-//! The FFT backend is pluggable: exact ([`crate::fft::Fft3d`]) or the
+//! The FFT backend is pluggable: exact ([`crate::fft::Fft3d`]), the
 //! int32-quantized utofu emulation ([`quant`]) that reproduces the paper's
-//! mixed-precision Table 1 configurations with *real* quantization math.
+//! mixed-precision Table 1 configurations with *real* quantization math,
+//! or — through the crate-internal `Transform` seam — an external 3-D
+//! transform executor.  [`crate::distpppm::DistPppm`] plugs the executed
+//! rank-decomposed, transpose-free schedule of paper section 3.1 into that
+//! seam, so the distributed backend shares this module's spread / Poisson /
+//! gather kernels bit-for-bit and differs only in how the four 3-D
+//! transforms are carried out.
 //!
 //! Hot-path structure (this is the kernel layer the section-3.2 overlap
 //! relies on being lean):
-//!   * every buffer the solve touches lives in a persistent [`PppmScratch`]
+//!   * every buffer the solve touches lives in a persistent `PppmScratch`
 //!     owned by [`Pppm`], so `energy_forces*` performs **no heap
 //!     allocation** in steady state (guarded by `rust/tests/alloc_free.rs`;
 //!     with a parallel pool the only allocation is the pool's one
@@ -50,6 +56,18 @@ use std::sync::Arc;
 /// fixed-size array are meaningful.
 type AxisStencil = ([usize; MAX_ORDER], [f64; MAX_ORDER]);
 
+/// How a solve carries out its four 3-D transforms: the solver's own
+/// configured [`MeshMode`] path, or an external executor — the seam
+/// [`crate::distpppm::DistPppm`] plugs the executed rank schedule into.
+/// Executors receive `(grid, forward, fft_scratch)` and return the
+/// quantization saturation count (0 for exact paths).
+pub(crate) enum Transform<'a> {
+    /// Use `cfg.mode` through the solver's internal dispatch.
+    Own,
+    /// Caller-supplied 3-D transform executor.
+    Ext(&'a mut dyn FnMut(&mut [C64], bool, &mut Fft3dScratch) -> u64),
+}
+
 /// Fixed shard count for the reductions whose grouping affects low-order
 /// bits (charge spread, energy sum).  Keeping it constant — instead of
 /// tying it to the pool size — makes the mesh solve bit-for-bit identical
@@ -71,14 +89,20 @@ pub enum MeshMode {
 }
 
 #[derive(Debug, Clone)]
+/// Mesh configuration: grid, B-spline order, Ewald alpha, precision mode.
 pub struct PppmConfig {
+    /// Mesh points per dimension.
     pub grid: [usize; 3],
+    /// Cardinal B-spline order (the paper uses 5).
     pub order: usize,
+    /// Ewald splitting parameter [1/A].
     pub alpha: f64,
+    /// Transform precision / reduction mode (Table 1 rows).
     pub mode: MeshMode,
 }
 
 impl PppmConfig {
+    /// Double-precision configuration with the given mesh geometry.
     pub fn new(grid: [usize; 3], order: usize, alpha: f64) -> Self {
         PppmConfig {
             grid,
@@ -183,7 +207,9 @@ impl PppmScratch {
     }
 }
 
+/// The PPPM solver: persistent plans, Green table and hot-path scratch.
 pub struct Pppm {
+    /// The mesh configuration the solver was built with.
     pub cfg: PppmConfig,
     box_len: [f64; 3],
     fft: Fft3d,
@@ -200,6 +226,7 @@ pub struct Pppm {
 }
 
 impl Pppm {
+    /// Build the solver for a box: Green function, k-vectors, FFT plans.
     pub fn new(cfg: PppmConfig, box_len: [f64; 3]) -> Pppm {
         assert!(
             (2..=MAX_ORDER).contains(&cfg.order),
@@ -290,20 +317,46 @@ impl Pppm {
         // pool shards read green/kvec/plans) alongside the mutable buffers
         let mut scratch = std::mem::take(&mut self.scratch);
         scratch.ensure(pos.len(), &self.fft, self.pool.nthreads());
-        let (energy, sat) = self.solve(pos, q, &mut scratch, out);
+        let (energy, sat) = self.solve(pos, q, &mut scratch, out, &mut Transform::Own);
+        self.scratch = scratch;
+        self.quant_saturations += sat;
+        energy
+    }
+
+    /// Energy + forces with a caller-supplied 3-D transform executor: the
+    /// crate-internal entry point behind [`crate::distpppm::DistPppm`].
+    /// Everything except the four transforms — stencils, charge spread,
+    /// Poisson solve, ik differentiation, force gather — runs through the
+    /// exact same code as [`Self::energy_forces_into`], so a transform
+    /// that reproduces [`Fft3d`]'s per-line arithmetic yields bit-identical
+    /// results end to end.
+    pub(crate) fn energy_forces_with_transform(
+        &mut self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        out: &mut Vec<[f64; 3]>,
+        transform: &mut dyn FnMut(&mut [C64], bool, &mut Fft3dScratch) -> u64,
+    ) -> f64 {
+        assert_eq!(pos.len(), q.len());
+        out.resize(pos.len(), [0.0; 3]);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.ensure(pos.len(), &self.fft, self.pool.nthreads());
+        let (energy, sat) = self.solve(pos, q, &mut scratch, out, &mut Transform::Ext(transform));
         self.scratch = scratch;
         self.quant_saturations += sat;
         energy
     }
 
     /// The actual solve (&self so parallel shards can borrow it); returns
-    /// the quantization saturation count separately.
+    /// the quantization saturation count separately.  `transform` selects
+    /// who runs the four 3-D transforms (see [`Transform`]).
     fn solve(
         &self,
         pos: &[[f64; 3]],
         q: &[f64],
         s: &mut PppmScratch,
         out: &mut [[f64; 3]],
+        transform: &mut Transform,
     ) -> (f64, u64) {
         let [_n1, n2, n3] = self.cfg.grid;
         let ntot = self.fft.len();
@@ -412,7 +465,10 @@ impl Pppm {
 
         // 2. forward FFT — line-parallel across the pool (matching the
         // concurrency the inverse field transforms already had)
-        sat += self.transform_with(&mut s.mesh, true, &mut s.fft_scratch);
+        sat += match &mut *transform {
+            Transform::Own => self.transform_with(&mut s.mesh, true, &mut s.fft_scratch),
+            Transform::Ext(f) => f(&mut s.mesh[..], true, &mut s.fft_scratch),
+        };
 
         // 3. energy + Poisson solve over fixed grid shards (energy
         // partials reduced in shard order below)
@@ -466,7 +522,11 @@ impl Pppm {
         {
             let (fgrid, fs) = (&mut s.fgrid, &mut s.fft_scratch);
             for d in 0..3 {
-                sat += self.transform_with(&mut fgrid[d * ntot..(d + 1) * ntot], false, fs);
+                let g = &mut fgrid[d * ntot..(d + 1) * ntot];
+                sat += match &mut *transform {
+                    Transform::Own => self.transform_with(g, false, fs),
+                    Transform::Ext(f) => f(g, false, fs),
+                };
             }
         }
         // real parts -> contiguous field grids (elementwise)

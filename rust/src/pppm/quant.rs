@@ -22,12 +22,16 @@ use crate::fft::{dft, C64};
 /// local partial maxima with one extra (cheap) reduction round.
 #[derive(Debug, Clone, Copy)]
 pub enum Scale {
+    /// The paper's fixed scale (1e7).
     Fixed(f64),
+    /// Largest overflow-safe scale derived from the ring's partial maxima.
     Auto,
 }
 
 #[derive(Debug, Clone)]
+/// Quantization policy of a ring reduction.
 pub struct QuantSpec {
+    /// Fixed-point scale policy.
     pub scale: Scale,
 }
 
@@ -38,6 +42,7 @@ impl Default for QuantSpec {
 }
 
 impl QuantSpec {
+    /// The paper's fixed 1e7 scale.
     pub fn paper_fixed() -> Self {
         QuantSpec {
             scale: Scale::Fixed(1e7),
@@ -75,6 +80,7 @@ pub fn quantize(x: f64, scale: f64) -> (i32, bool) {
 }
 
 #[inline]
+/// Map an integer lane sum back to f64.
 pub fn dequantize(v: i64, scale: f64) -> f64 {
     v as f64 / scale
 }
@@ -88,6 +94,7 @@ pub fn pack2(a: i32, b: i32) -> u64 {
 }
 
 #[inline]
+/// Split a packed u64 back into its two i32 lanes.
 pub fn unpack2(v: u64) -> (i32, i32) {
     (((v >> 32) as u32) as i32, (v & 0xFFFF_FFFF) as u32 as i32)
 }

@@ -5,39 +5,68 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
 #[derive(Debug, Clone)]
+/// One AOT-compiled artifact in the manifest.
 pub struct Artifact {
+    /// Unique artifact name (`kind_natoms_dtype`).
     pub name: String,
+    /// HLO text file name relative to the artifacts dir.
     pub file: String,
+    /// Entry point: `dp_ef`, `dw_fwd` or `dw_vjp`.
     pub kind: String,
+    /// Atom count the artifact was lowered for.
     pub natoms: usize,
+    /// Molecule count.
     pub nmol: usize,
+    /// Numeric precision tag.
     pub dtype: String,
+    /// Padded neighbour-row width.
     pub sel_total: usize,
 }
 
 /// Model hyper-parameters (mirrors python/compile/params.py).
 #[derive(Debug, Clone)]
 pub struct Hyper {
+    /// Interaction cutoff [A].
     pub r_cut: f64,
+    /// Smooth switching onset [A].
     pub r_cut_smooth: f64,
+    /// Max O / H neighbours per centre.
     pub sel: [usize; 2],
+    /// Embedding-net hidden widths.
     pub embed_widths: Vec<usize>,
+    /// Embedding output channels (M1).
     pub m1: usize,
+    /// Descriptor columns kept (M2).
     pub m2: usize,
+    /// Fitting-net hidden widths.
     pub fit_widths: Vec<usize>,
+    /// Descriptor dimension (M1 * M2).
     pub desc_dim: usize,
+    /// O ionic charge [e].
     pub q_o: f64,
+    /// H ionic charge [e].
     pub q_h: f64,
+    /// Wannier-centroid charge [e].
     pub q_wc: f64,
+    /// Ewald splitting parameter [1/A].
     pub alpha: f64,
+    /// Prior bond stiffness [eV/A^2].
     pub bond_k: f64,
+    /// Prior equilibrium bond length [A].
     pub bond_r0: f64,
+    /// Prior angle stiffness [eV/rad^2].
     pub angle_k: f64,
+    /// Prior equilibrium angle [rad].
     pub angle_t0: f64,
+    /// Born-Mayer O-O prefactor [eV].
     pub bm_a_oo: f64,
+    /// Born-Mayer O-H prefactor [eV].
     pub bm_a_oh: f64,
+    /// Born-Mayer H-H prefactor [eV].
     pub bm_a_hh: f64,
+    /// Born-Mayer decay length [A].
     pub bm_rho: f64,
+    /// Max |Delta| per WC component [A].
     pub wc_clamp: f64,
 }
 
@@ -72,12 +101,16 @@ impl Hyper {
 }
 
 #[derive(Debug, Clone)]
+/// Parsed manifest.json: hyper-parameters + artifact index.
 pub struct Manifest {
+    /// Model hyper-parameters.
     pub hyper: Hyper,
+    /// All available artifacts.
     pub artifacts: Vec<Artifact>,
 }
 
 impl Manifest {
+    /// Parse manifest.json.
     pub fn load(path: &str) -> Result<Manifest> {
         let j = Json::parse_file(path)?;
         let h = j.req("hyper")?;
@@ -134,6 +167,7 @@ impl Manifest {
         Ok(Manifest { hyper, artifacts })
     }
 
+    /// The artifact matching (kind, natoms, dtype), if any.
     pub fn find(&self, kind: &str, natoms: usize, dtype: &str) -> Option<&Artifact> {
         self.artifacts
             .iter()
@@ -161,18 +195,29 @@ pub fn artifacts_dir() -> String {
 /// Load the golden fixtures produced by python (fixtures.json).
 #[derive(Debug)]
 pub struct Fixture {
+    /// Molecule count.
     pub nmol: usize,
+    /// Box edges [A].
     pub box_len: [f64; 3],
+    /// Flat atom coordinates.
     pub coords: Vec<f64>,
+    /// Full padded neighbour list.
     pub nlist: Vec<i32>,
+    /// O-centred padded neighbour list.
     pub nlist_o: Vec<i32>,
+    /// WC force seed for the VJP case.
     pub f_wc: Vec<f64>,
+    /// Golden short-range energy.
     pub energy: f64,
+    /// Golden flat forces.
     pub forces: Vec<f64>,
+    /// Golden WC displacements.
     pub delta: Vec<f64>,
+    /// Golden DW-VJP force contribution.
     pub f_contrib: Vec<f64>,
 }
 
+/// Parse fixtures.json from an artifacts directory.
 pub fn load_fixtures(dir: &str) -> Result<Vec<Fixture>> {
     let j = Json::parse_file(&format!("{dir}/fixtures.json"))?;
     j.req("cases")?

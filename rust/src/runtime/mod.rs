@@ -23,11 +23,14 @@ pub mod manifest;
 /// Numeric precision of an artifact set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dtype {
+    /// Double precision.
     F64,
+    /// Single precision.
     F32,
 }
 
 impl Dtype {
+    /// Short tag used in artifact names ("f64"/"f32").
     pub fn tag(&self) -> &'static str {
         match self {
             Dtype::F64 => "f64",
@@ -39,6 +42,7 @@ impl Dtype {
 /// Outputs of a dp_ef evaluation.
 #[derive(Debug, Clone)]
 pub struct DpOutput {
+    /// Total short-range energy [eV].
     pub energy: f64,
     /// flat (natoms * 3) forces
     pub forces: Vec<f64>,
@@ -72,6 +76,7 @@ mod pjrt_xla {
     pub struct PjrtEngine {
         client: xla::PjRtClient,
         dir: PathBuf,
+        /// The parsed artifact manifest.
         pub manifest: Manifest,
         loaded: HashMap<String, Loaded>,
         /// cumulative executions (for perf accounting)
@@ -258,12 +263,15 @@ mod pjrt_stub {
     /// errors, so an instance can never exist; callers treat it like a
     /// missing artifacts directory.
     pub struct PjrtEngine {
+        /// The parsed artifact manifest.
         pub manifest: Manifest,
+        /// Cumulative executions (always 0 in the stub).
         pub calls: u64,
         _unconstructible: (),
     }
 
     impl PjrtEngine {
+        /// Always errors: the crate was built without the XLA runtime.
         pub fn open(_dir: &str) -> Result<PjrtEngine> {
             bail!(
                 "PJRT backend unavailable: dplr was built without the real \
@@ -276,10 +284,12 @@ mod pjrt_stub {
             bail!("PJRT backend unavailable (built without the `pjrt` feature)")
         }
 
+        /// Unreachable (no instance can exist); errors for API parity.
         pub fn ensure(&mut self, _kind: &str, _natoms: usize, _dtype: Dtype) -> Result<()> {
             self.unavailable()
         }
 
+        /// Unreachable (no instance can exist); errors for API parity.
         pub fn dp_ef(
             &mut self,
             _coords: &[f64],
@@ -290,6 +300,7 @@ mod pjrt_stub {
             self.unavailable()
         }
 
+        /// Unreachable (no instance can exist); errors for API parity.
         pub fn dw_fwd(
             &mut self,
             _coords: &[f64],
@@ -300,6 +311,7 @@ mod pjrt_stub {
             self.unavailable()
         }
 
+        /// Unreachable (no instance can exist); errors for API parity.
         pub fn dw_vjp(
             &mut self,
             _coords: &[f64],

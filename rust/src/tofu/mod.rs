@@ -13,23 +13,28 @@ use crate::simnet::makespan_fifo;
 /// X x Y x Z sub-tori of Fugaku's 6-D torus, e.g. 20 x 21 x 20).
 #[derive(Debug, Clone, Copy)]
 pub struct Torus {
+    /// Node counts along each torus dimension.
     pub dims: [usize; 3],
 }
 
 impl Torus {
+    /// Torus with the given per-dimension node counts.
     pub fn new(dims: [usize; 3]) -> Torus {
         Torus { dims }
     }
 
+    /// Total node count.
     pub fn nodes(&self) -> usize {
         self.dims[0] * self.dims[1] * self.dims[2]
     }
 
+    /// Coordinates of a node id (row-major layout).
     pub fn coord_of(&self, id: usize) -> [usize; 3] {
         let [_, ny, nz] = self.dims;
         [id / (ny * nz), (id / nz) % ny, id % nz]
     }
 
+    /// Node id of a coordinate triple.
     pub fn id_of(&self, c: [usize; 3]) -> usize {
         (c[0] * self.dims[1] + c[1]) * self.dims[2] + c[2]
     }
@@ -50,12 +55,16 @@ impl Torus {
 /// packed int32 per BG operation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BgPayload {
+    /// 3 doubles per operation.
     F64,
+    /// 6 u64 per operation.
     U64,
+    /// 12 int32 values packed two-per-u64.
     PackedI32,
 }
 
 impl BgPayload {
+    /// Scalar values carried per BG operation for this payload.
     pub fn values(&self, m: &MachineConfig) -> usize {
         match self {
             BgPayload::F64 => m.bg_payload_f64,

@@ -6,13 +6,18 @@
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
+/// Parsed command line: positionals plus `--key value` flags.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Arguments that are not `--flags`, in order.
     pub positional: Vec<String>,
+    /// Flag map; bare `--flag` stores the value `"true"`.
     pub flags: BTreeMap<String, String>,
 }
 
 impl Args {
+    /// Parse an argument iterator (`--key value`, `--key=value`, bare
+    /// `--flag`, positionals).
     pub fn parse(argv: impl Iterator<Item = String>) -> Args {
         let mut out = Args::default();
         let argv: Vec<String> = argv.collect();
@@ -36,18 +41,22 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (program name skipped).
     pub fn from_env() -> Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw flag value, if present.
     pub fn str_opt(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Flag value or `default`, as an owned string.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.str_opt(key).unwrap_or(default).to_string()
     }
 
+    /// Integer flag or `default`; errors on unparsable values.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -57,6 +66,7 @@ impl Args {
         }
     }
 
+    /// Float flag or `default`; errors on unparsable values.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -66,6 +76,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag: present as bare `--flag`, `true`, `1` or `yes`.
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
     }

@@ -13,15 +13,22 @@ use std::fmt::Write as _;
 /// a BTreeMap for deterministic iteration.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (deterministically ordered).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing bytes are an error).
     pub fn parse(text: &str) -> Result<Json> {
         let b = text.as_bytes();
         let mut p = Parser { b, i: 0 };
@@ -34,12 +41,14 @@ impl Json {
         Ok(v)
     }
 
+    /// Read and parse a JSON file, attributing errors to `path`.
     pub fn parse_file(path: &str) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading {path}: {e}"))?;
         Self::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
     }
 
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -52,6 +61,7 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -59,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -67,10 +78,12 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// The value as a (truncated) signed integer.
     pub fn as_i64(&self) -> Result<i64> {
         Ok(self.as_f64()? as i64)
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -78,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -85,6 +99,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -111,18 +126,21 @@ impl Json {
         Ok(out)
     }
 
+    /// Flatten a (possibly nested) numeric array into i32s.
     pub fn as_i32_vec(&self) -> Result<Vec<i32>> {
         Ok(self.as_f64_vec()?.into_iter().map(|x| x as i32).collect())
     }
 
     // ---- writers -----------------------------------------------------
 
+    /// Serialize with newline/indent formatting.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, true);
         s
     }
 
+    /// Serialize without any whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);
@@ -178,10 +196,12 @@ impl Json {
         }
     }
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array from a float slice.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
     }

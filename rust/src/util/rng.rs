@@ -9,6 +9,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed the generator (any value, including 0, is fine).
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion of the seed
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -25,6 +26,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output of xoshiro256**.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1]

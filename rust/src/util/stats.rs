@@ -3,16 +3,25 @@
 use std::time::Instant;
 
 #[derive(Debug, Clone, Default)]
+/// Summary statistics of a sample (used for bench timings).
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (nearest-rank).
     pub p50: f64,
+    /// 95th percentile (nearest-rank).
     pub p95: f64,
 }
 
+/// Summarize a sample (empty input gives a zeroed summary).
 pub fn summarize(xs: &[f64]) -> Summary {
     if xs.is_empty() {
         return Summary::default();

@@ -1,11 +1,13 @@
 //! Plain-text table printer for experiment outputs (paper-style rows).
 
+/// A monospace table: headers + rows, rendered with aligned columns.
 pub struct Table {
     headers: Vec<String>,
     rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Start a table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -13,11 +15,13 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render to an aligned plain-text string.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut w = vec![0usize; ncol];
@@ -57,6 +61,7 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

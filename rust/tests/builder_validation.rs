@@ -117,6 +117,46 @@ fn bad_ewald_tol_and_timestep_and_threads_are_rejected() {
 }
 
 #[test]
+fn bad_dist_ranks_are_rejected() {
+    // a zero rank count is meaningless
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::Dist {
+            alpha: 0.3,
+            ranks: [0, 2, 2],
+            quantized: false,
+        })
+        .build()
+        .expect_err("ranks[0] = 0 must be rejected");
+    assert!(err.to_string().contains("ranks"), "unexpected error: {err:#}");
+
+    // more ranks than mesh points along a dimension = empty bricks
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::Dist {
+            alpha: 0.3,
+            ranks: [1, 1, 4096],
+            quantized: false,
+        })
+        .build()
+        .expect_err("oversubscribed torus dimension must be rejected");
+    assert!(err.to_string().contains("ranks"), "unexpected error: {err:#}");
+
+    // a sane torus builds and reports the dist backend
+    let sim = builder()
+        .threads(1)
+        .kspace(KspaceConfig::Dist {
+            alpha: 0.3,
+            ranks: [2, 2, 1],
+            quantized: false,
+        })
+        .build()
+        .expect("valid dist configuration must build");
+    assert_eq!(sim.kspace_name(), "dist");
+    assert!(sim.pppm_config().is_some(), "dist records its mesh config");
+}
+
+#[test]
 fn missing_short_range_model_is_rejected() {
     let err = Simulation::builder(water_box(8, 1))
         .threads(1)

@@ -1,0 +1,252 @@
+//! Engine-level parity of the executed distributed k-space backend
+//! (`--kspace dist`, `distpppm::DistPppm`) against the serial PPPM solver:
+//!
+//!  * the degenerate `1,1,1` torus must be *bit-identical* to PPPM over
+//!    full MD trajectories — every dimension takes the local-FFT fast path
+//!    and the spread/Poisson/gather kernels are literally shared;
+//!  * non-trivial tori (float ring) must match within the Table-1
+//!    tolerances the kspace_parity suite uses for PPPM-vs-Ewald;
+//!  * the float ring is bit-for-bit invariant to the rank count for a
+//!    fixed set of decomposed dimensions (a property test mirroring
+//!    `thread_invariance`);
+//!  * the int32-quantized ring stays within Table-1 Mixed-int tolerances.
+//!
+//! Runs from a clean checkout (synthetic seeded weights, no artifacts).
+
+use dplr::distpppm::{DistPppm, RingPayload};
+use dplr::engine::{KspaceConfig, Simulation, StepTimes};
+use dplr::md::units::{Q_H, Q_O, Q_WC};
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::pppm::{Pppm, PppmConfig};
+use dplr::util::propcheck::check;
+use dplr::util::rng::Rng;
+
+const NMOL: usize = 8;
+const ALPHA: f64 = 0.35;
+
+fn make_sim(kspace: KspaceConfig) -> Simulation {
+    let mut sys = water_box(NMOL, 77);
+    let mut rng = Rng::new(13);
+    sys.thermalize(300.0, &mut rng);
+    Simulation::builder(sys)
+        .dt_fs(0.5)
+        .thermostat(300.0, 0.5)
+        .kspace(kspace)
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .build()
+        .expect("valid configuration")
+}
+
+fn dist_cfg(ranks: [usize; 3], quantized: bool) -> KspaceConfig {
+    KspaceConfig::Dist {
+        alpha: ALPHA,
+        ranks,
+        quantized,
+    }
+}
+
+fn trajectory_bits(sim: &mut Simulation, steps: usize) -> Vec<(u64, u64, u64)> {
+    let mut trace = Vec::new();
+    for _ in 0..steps {
+        sim.step().expect("step");
+        let o = sim.last_obs.unwrap();
+        trace.push((o.e_sr.to_bits(), o.e_gt.to_bits(), o.conserved.to_bits()));
+    }
+    trace
+}
+
+#[test]
+fn degenerate_torus_trajectory_bit_identical_to_pppm() {
+    // the acceptance check of the seam: `--kspace dist --ranks 1,1,1`
+    // must be indistinguishable from `--kspace pppm`, to the last bit,
+    // over full MD steps (nlist + DW + kspace + DP + integrate)
+    let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
+    let mut b = make_sim(dist_cfg([1, 1, 1], false));
+    assert_eq!(a.kspace_name(), "pppm");
+    assert_eq!(b.kspace_name(), "dist");
+    let ta = trajectory_bits(&mut a, 5);
+    let tb = trajectory_bits(&mut b, 5);
+    assert_eq!(ta, tb, "1,1,1 torus diverged from serial PPPM");
+}
+
+#[test]
+fn decomposed_torus_single_evaluation_parity() {
+    // Table-1 scale tolerances (the same thresholds kspace_parity holds
+    // PPPM-vs-Ewald to); the float ring is far tighter in practice
+    let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
+    for ranks in [[2usize, 2, 1], [2, 3, 2]] {
+        let mut b = make_sim(dist_cfg(ranks, false));
+        let mut ta = StepTimes::default();
+        let mut tb = StepTimes::default();
+        let (fa, _, e_gt_a) = a.evaluate_forces(&mut ta).unwrap();
+        let (fb, _, e_gt_b) = b.evaluate_forces(&mut tb).unwrap();
+        let natoms = (NMOL * 3) as f64;
+        let de = (e_gt_a - e_gt_b).abs() / natoms;
+        assert!(
+            de < 1e-4,
+            "{ranks:?}: E_Gt per-atom gap {de} ({e_gt_a} vs {e_gt_b})"
+        );
+        let mut rms = 0.0;
+        for (x, y) in fa.iter().zip(&fb) {
+            for d in 0..3 {
+                let dd = x[d] - y[d];
+                rms += dd * dd;
+            }
+        }
+        rms = (rms / (3.0 * natoms)).sqrt();
+        assert!(rms < 2e-3, "{ranks:?}: force RMS gap {rms}");
+        assert!(e_gt_b.abs() > 1e-6, "E_Gt suspiciously zero: {e_gt_b}");
+    }
+}
+
+#[test]
+fn decomposed_torus_trajectories_track_pppm() {
+    let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
+    let mut b = make_sim(dist_cfg([2, 2, 1], false));
+    for step in 0..5 {
+        a.step().unwrap();
+        b.step().unwrap();
+        let (oa, ob) = (a.last_obs.unwrap(), b.last_obs.unwrap());
+        let gap = (oa.conserved - ob.conserved).abs() / oa.conserved.abs().max(1.0);
+        assert!(
+            gap < 1e-4,
+            "step {step}: conserved diverged {gap} ({} vs {})",
+            oa.conserved,
+            ob.conserved
+        );
+    }
+}
+
+#[test]
+fn quantized_ring_single_evaluation_within_table1_tolerance() {
+    // the Mixed-int numerics through the engine path: per-rank rounding +
+    // exact integer ring sums (pppm::quant) on a 2x3x2 torus
+    let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
+    let mut b = make_sim(dist_cfg([2, 3, 2], true));
+    let mut ta = StepTimes::default();
+    let mut tb = StepTimes::default();
+    let (fa, _, e_gt_a) = a.evaluate_forces(&mut ta).unwrap();
+    let (fb, _, e_gt_b) = b.evaluate_forces(&mut tb).unwrap();
+    let natoms = (NMOL * 3) as f64;
+    let de = (e_gt_a - e_gt_b).abs() / natoms;
+    assert!(de < 1e-3, "quantized E_Gt per-atom gap {de}");
+    let mut worst: f64 = 0.0;
+    for (x, y) in fa.iter().zip(&fb) {
+        for d in 0..3 {
+            worst = worst.max((x[d] - y[d]).abs());
+        }
+    }
+    assert!(worst < 5e-2, "worst quantized force gap {worst}");
+    assert_eq!(b.kspace_saturations(), 0, "auto scale must not saturate");
+}
+
+#[test]
+fn engine_trajectory_bit_identical_across_rank_counts() {
+    // rank-count invariance through the full engine: two tori that
+    // decompose the same set of dimensions (here: all three) must give
+    // bit-identical trajectories — the distributed analogue of the
+    // `--threads` invariance contract
+    let t222 = trajectory_bits(&mut make_sim(dist_cfg([2, 2, 2], false)), 5);
+    let t432 = trajectory_bits(&mut make_sim(dist_cfg([4, 3, 2], false)), 5);
+    assert_eq!(t222, t432, "trajectories diverged between rank counts");
+}
+
+/// A DPLR-style site set for the solver-level property test.
+fn water_sites(nmol: usize, seed: u64) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
+    let sys = water_box(nmol, seed);
+    let mut pos = sys.pos.clone();
+    let mut q = Vec::new();
+    for i in 0..sys.natoms() {
+        q.push(if i < sys.nmol { Q_O } else { Q_H });
+    }
+    for m in 0..nmol {
+        let mut w = sys.pos[m];
+        w[0] += 0.1;
+        w[1] -= 0.05;
+        pos.push(w);
+        q.push(Q_WC);
+    }
+    (pos, q, sys.box_len)
+}
+
+#[test]
+fn rank_invariance_property_on_random_tori() {
+    // property test mirroring thread_invariance: any torus with all three
+    // dimensions decomposed (>= 2 ranks) produces bit-identical energy and
+    // forces in the float ring, regardless of the per-dimension counts
+    let (pos, q, box_len) = water_sites(16, 5);
+    let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
+    let mut reference = DistPppm::new(cfg.clone(), box_len, [2, 2, 2], RingPayload::F64);
+    let (e_ref, f_ref) = reference.energy_forces(&pos, &q);
+    check(
+        0xD157,
+        12,
+        |r: &mut Rng| {
+            [
+                2 + r.below(5), // x ranks in 2..=6 (grid 12)
+                2 + r.below(7), // y ranks in 2..=8 (grid 18)
+                2 + r.below(5), // z ranks in 2..=6 (grid 12)
+            ]
+        },
+        |&ranks| {
+            let mut solver = DistPppm::new(cfg.clone(), box_len, ranks, RingPayload::F64);
+            let (e, f) = solver.energy_forces(&pos, &q);
+            if e.to_bits() != e_ref.to_bits() {
+                return Err(format!("energy drifted: {e} vs {e_ref} for {ranks:?}"));
+            }
+            for (i, (a, b)) in f_ref.iter().zip(&f).enumerate() {
+                for d in 0..3 {
+                    if a[d].to_bits() != b[d].to_bits() {
+                        return Err(format!("force[{i}][{d}] drifted for {ranks:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dist_solver_is_thread_invariant_end_to_end() {
+    // the emulated ranks shard over the worker pool; results must be
+    // bit-identical for any pool size, like every other hot path
+    use dplr::pool::ThreadPool;
+    use std::sync::Arc;
+    let (pos, q, box_len) = water_sites(16, 5);
+    let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
+    let run = |threads: usize| {
+        let mut solver = DistPppm::new(cfg.clone(), box_len, [2, 3, 2], RingPayload::F64);
+        solver.set_pool(Arc::new(ThreadPool::new(threads)));
+        solver.energy_forces(&pos, &q)
+    };
+    let (e1, f1) = run(1);
+    for threads in [2usize, 4] {
+        let (en, fnn) = run(threads);
+        assert_eq!(e1.to_bits(), en.to_bits(), "E at threads={threads}");
+        for (a, b) in f1.iter().zip(&fnn) {
+            for d in 0..3 {
+                assert_eq!(a[d].to_bits(), b[d].to_bits(), "F at threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn serial_pppm_reference_is_close_to_decomposed_solver() {
+    // sanity anchor for the engine-level tolerances above: at the solver
+    // level the float ring tracks the FFT-based PPPM essentially to
+    // rounding (the two differ only in transform arithmetic grouping)
+    let (pos, q, box_len) = water_sites(16, 5);
+    let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
+    let mut pppm = Pppm::new(cfg.clone(), box_len);
+    let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
+    let mut dist = DistPppm::new(cfg, box_len, [3, 3, 3], RingPayload::F64);
+    let (e, f) = dist.energy_forces(&pos, &q);
+    assert!((e - e_ref).abs() < 1e-9 * e_ref.abs().max(1.0), "{e} vs {e_ref}");
+    for (a, b) in f_ref.iter().zip(&f) {
+        for d in 0..3 {
+            assert!((a[d] - b[d]).abs() < 1e-8);
+        }
+    }
+}

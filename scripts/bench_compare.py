@@ -26,6 +26,13 @@ last-ulp / JSON round-trip noise) fails, in both directions.  A
 deterministic key missing from a non-null baseline section fails too —
 silence must not read as coverage.
 
+All key deltas are collected and reported in ONE pass: wall-time keys
+missing from the baseline (e.g. a freshly added bench section) and
+wall-time baseline keys no longer emitted are printed together in a
+consolidated block (informational — refresh via refresh_baseline.py /
+the bench-baseline job), so a baseline refresh never needs more than a
+single compare run to see everything that changed.
+
 Exit status: 1 on any exact mismatch or any wall-time key slower than
 baseline * (1 + tol), 0 otherwise.  Wall-time keys faster than
 baseline * (1 - tol) print a hint to refresh the baseline but do not fail
@@ -69,6 +76,13 @@ def main() -> int:
     failures = []
     faster = []
     verdicts = {}
+    # consolidated key-delta report: every key the benches emit that the
+    # baseline lacks, and every baseline key the benches no longer emit —
+    # collected across ALL benches and printed in one block, so a baseline
+    # refresh after adding a bench section is a single pass instead of a
+    # fix-one-key-rerun loop
+    missing_in_baseline = []   # emitted, no baseline value (wall-time only)
+    stale_in_baseline = []     # baselined, no longer emitted (wall-time only)
     for bench, results in sorted(merged.items()):
         base = baseline.get(bench)
         if base is None:
@@ -76,6 +90,7 @@ def main() -> int:
                   f"recorded {len(results)} keys, nothing to gate")
             verdicts[bench] = {k: {"secs": v, "verdict": "no-baseline"}
                                for k, v in results.items()}
+            missing_in_baseline.extend(f"{bench}/{k}" for k in sorted(results))
             continue
         verdicts[bench] = {}
         for key, secs in sorted(results.items()):
@@ -99,6 +114,7 @@ def main() -> int:
                 continue
             if ref is None or ref <= 0:
                 verdicts[bench][key] = {"secs": secs, "verdict": "no-baseline"}
+                missing_in_baseline.append(f"{bench}/{key}")
                 continue
             ratio = secs / ref
             if ratio > 1.0 + tol:
@@ -114,22 +130,36 @@ def main() -> int:
                 verdicts[bench][key] = {"secs": secs, "baseline": ref,
                                         "ratio": ratio, "verdict": "ok"}
         # the reverse direction: a deterministic baseline key the bench no
-        # longer emits is a silent coverage loss, not a pass
+        # longer emits is a silent coverage loss, not a pass; a wall-time
+        # key that vanished is reported (informationally) for the refresh
         for key in sorted(base):
-            if key in results or not is_exact(baseline, bench, key):
+            if key in results:
                 continue
-            verdicts[bench][key] = {"baseline": base[key],
-                                    "verdict": "EXACT-NOT-MEASURED"}
-            failures.append(
-                f"{bench}/{key}: deterministic baseline key was not emitted "
-                f"by the bench — model/bench changed without a baseline "
-                f"regen (scripts/fig8_model_baseline.py)")
+            if is_exact(baseline, bench, key):
+                verdicts[bench][key] = {"baseline": base[key],
+                                        "verdict": "EXACT-NOT-MEASURED"}
+                failures.append(
+                    f"{bench}/{key}: deterministic baseline key was not "
+                    f"emitted by the bench — model/bench changed without a "
+                    f"baseline regen (scripts/fig8_model_baseline.py)")
+            else:
+                verdicts[bench][key] = {"baseline": base[key],
+                                        "verdict": "stale-baseline"}
+                stale_in_baseline.append(f"{bench}/{key}")
 
     out = {"tolerance": tol, "measurements": merged, "comparison": verdicts}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
     print(f"[bench-compare] wrote {args.out}")
 
+    if missing_in_baseline or stale_in_baseline:
+        print("[bench-compare] key delta vs baseline (all benches, one "
+              "pass — refresh wall-time sections via the bench-baseline "
+              "job / scripts/refresh_baseline.py):")
+        for key in missing_in_baseline:
+            print(f"  missing in baseline: {key}")
+        for key in stale_in_baseline:
+            print(f"  stale in baseline (no longer emitted): {key}")
     if faster:
         print("[bench-compare] faster than baseline (consider refreshing "
               "BENCH_baseline.json):")
