@@ -6,20 +6,24 @@
 //! transforms always did.
 //!
 //! A `measured_dist_*` section times the *executed* utofu schedule
-//! (`distpppm::RankFft`: partial DFT matvecs + ring reductions, 1 forward
-//! + 3 inverse transforms per iteration — the poisson_ik shape) next to
-//! the analytic `model_*` rows, for both ring payloads.  The measured
-//! keys are wall time, so they stay un-gated until the `bench-baseline`
-//! job refreshes `BENCH_baseline.json`.
+//! (`distpppm::RankFft`, 1 forward + 3 inverse transforms per iteration —
+//! the poisson_ik shape) next to the analytic `model_*` rows, for both
+//! ring payloads and both line strategies: the default rank-local FFT
+//! fast path (`measured_dist_<n>n4_<payload>`) and the paper-faithful
+//! O(n²) partial-DFT matvecs (`..._matvec` suffix).  The measured keys
+//! are wall time, so they stay un-gated until the `bench-baseline` job
+//! refreshes `BENCH_baseline.json` (see docs/PERFORMANCE.md).
 //!
 //! Flags: `--quick` (CI configuration: fewer reps, skip the model table),
 //! `--json PATH` writes `{"bench": "fig8_fft", "results": {...}}` for the
 //! bench-regression job.
 use dplr::config::MachineConfig;
-use dplr::distpppm::{RankFft, RingPayload};
+use dplr::distfft::utofu_fastpath_time;
+use dplr::distpppm::{LinePath, RankFft, RingPayload};
 use dplr::experiments::fig8_fft as f8;
 use dplr::fft::{C64, Fft3d, Fft3dScratch};
 use dplr::pool::ThreadPool;
+use dplr::tofu::{BgPayload, Torus};
 use dplr::util::args::Args;
 use dplr::util::json::Json;
 use dplr::util::rng::Rng;
@@ -40,7 +44,8 @@ fn main() {
     // pure arithmetic), always recorded to --json so the bench-regression
     // baseline can gate them exactly (0% tolerance, see BENCH_baseline.json
     // "exact" patterns); the full table prints only outside --quick
-    let rows = f8::run(&MachineConfig::default());
+    let mcfg = MachineConfig::default();
+    let rows = f8::run(&mcfg);
     if !quick {
         f8::print_rows(&rows);
     }
@@ -117,35 +122,52 @@ fn main() {
             .iter()
             .find(|r| r.nodes == nodes && r.grid_per_node == 4)
             .map(|r| r.utofu_master / 1000.0);
-        for (tag, payload) in [("f64", RingPayload::F64), ("i32", RingPayload::PackedI32)] {
-            let mut rf = RankFft::new(grid, dims, payload);
-            let mut rng = Rng::new(4242 + n as u64);
-            let base: Vec<C64> = (0..n)
-                .map(|_| C64::new(rng.range(-1.0, 1.0), 0.0))
-                .collect();
-            let mut g = base.clone();
-            // warm the scratch, then time the poisson_ik transform shape
-            rf.execute(&mut g, true, &pool);
-            rf.execute(&mut g, false, &pool);
-            let t = summarize(&time_reps(1, reps, || {
+        for (ptag, path) in [("", LinePath::LocalFft), ("_matvec", LinePath::Matvec)] {
+            for (tag, payload) in [("f64", RingPayload::F64), ("i32", RingPayload::PackedI32)] {
+                let mut rf = RankFft::with_line_path(grid, dims, payload, path);
+                let mut rng = Rng::new(4242 + n as u64);
+                let base: Vec<C64> = (0..n)
+                    .map(|_| C64::new(rng.range(-1.0, 1.0), 0.0))
+                    .collect();
+                let mut g = base.clone();
+                // warm the scratch, then time the poisson_ik transform shape
                 rf.execute(&mut g, true, &pool);
                 rf.execute(&mut g, false, &pool);
-                rf.execute(&mut g, false, &pool);
-                rf.execute(&mut g, false, &pool);
-            }))
-            .p50;
-            results.insert(format!("measured_dist_{nodes}n4_{tag}"), Json::Num(t));
-            println!(
-                "{nodes:>4} nodes ({}x{}x{} grid), {tag} ring: {:9.3} ms/iter on this host \
-                 (model: {} simulated)",
-                grid[0],
-                grid[1],
-                grid[2],
-                t * 1e3,
-                model_iter
-                    .map(|m| format!("{:.1} us", m * 1e6))
-                    .unwrap_or_else(|| "n/a".to_string()),
-            );
+                let t = summarize(&time_reps(1, reps, || {
+                    rf.execute(&mut g, true, &pool);
+                    rf.execute(&mut g, false, &pool);
+                    rf.execute(&mut g, false, &pool);
+                    rf.execute(&mut g, false, &pool);
+                }))
+                .p50;
+                results.insert(format!("measured_dist_{nodes}n4_{tag}{ptag}"), Json::Num(t));
+                // fast rows compare against the fast-path analytic twin
+                // (same DistFftSchedule terms, matching ring payload;
+                // halo 4 = the engine's default order-5 stencil reach —
+                // printed, never recorded/gated), matvec rows against
+                // the gated utofu_master model row
+                let (label, model_secs) = if ptag.is_empty() {
+                    let bg = match payload {
+                        RingPayload::F64 => BgPayload::F64,
+                        RingPayload::PackedI32 => BgPayload::PackedI32,
+                    };
+                    let twin = utofu_fastpath_time(grid, &Torus::new(dims), bg, 4, &mcfg);
+                    ("fast", Some(twin.total()))
+                } else {
+                    ("matvec", model_iter)
+                };
+                println!(
+                    "{nodes:>4} nodes ({}x{}x{} grid), {tag} ring, {label:>6}: \
+                     {:9.3} ms/iter on this host (model: {} simulated)",
+                    grid[0],
+                    grid[1],
+                    grid[2],
+                    t * 1e3,
+                    model_secs
+                        .map(|m| format!("{:.1} us", m * 1e6))
+                        .unwrap_or_else(|| "n/a".to_string()),
+                );
+            }
         }
     }
 

@@ -6,47 +6,74 @@
 //! (the geometry of [`DistFftSchedule`], shared with the DES model in
 //! [`crate::distfft`]).  Each 3-D transform then runs the transpose-free
 //! utofu-FFT schedule, one pass per dimension in [`Fft3d`](crate::fft::Fft3d) pass order
-//! (z, y, x):
+//! (z, y, x): every rank contributes its slab of each grid line crossing
+//! its brick, and a *ring reduction* along the dimension (walked in ring,
+//! i.e. ascending-rank, order) combines the contributions — there is
+//! never a pencil/brick transpose.  Two per-rank line strategies exist
+//! ([`LinePath`]):
 //!
-//!  1. every rank computes the partial DFT matvec `X~ = F_N[:, J] x_J`
-//!     (Eq. 8) for its slab `J` of each grid line crossing its brick —
-//!     there is never a pencil/brick transpose;
-//!  2. the per-rank partials are combined by a *ring reduction* along the
-//!     dimension, walked in ring (ascending rank) order.  The payload is
-//!     either exact f64 ([`RingPayload::F64`]) or the paper's
-//!     int32-quantized packed lanes ([`RingPayload::PackedI32`], the
-//!     [`crate::pppm::quant`] arithmetic: per-partial rounding, exact
-//!     integer lane sums, saturation counting);
-//!  3. a dimension held by a single rank needs no reduction at all, so the
-//!     rank transforms its whole lines with the local fast FFT plan —
-//!     bit-identical to [`Fft3d`](crate::fft::Fft3d)'s serial/parallel passes.
+//!  * **`Matvec`** — the paper's Eq. 8 verbatim: the rank computes the
+//!    partial DFT matvec `X~ = F_N[:, J] x_J` for its column slab `J`,
+//!    O(n·|J|) per line (O(n²) summed over the ring), and the ring sums
+//!    the partial spectra.
+//!  * **`LocalFft`** (the default fast path) — the factorized O(n log n)
+//!    form.  For the **quantized ring** each rank computes the identical
+//!    partial spectrum as a zero-padded local FFT of its slab plus an
+//!    offset-twiddle combination ([`SegmentFft`], the DFT shift theorem),
+//!    then the exact packed-lane integer sums run unchanged.  For the
+//!    **exact-f64 ring** the twiddle combination is folded through
+//!    linearity: summing the twiddled zero-padded spectra in exact
+//!    arithmetic *is* the transform of the reassembled line, so the ring
+//!    accumulates its payload in strict ascending column order (each hop
+//!    appends the next rank's slab — a ring allgather of equal traffic)
+//!    and closes with one rank-local full-line FFT.  That closing form is
+//!    what makes the fast f64 ring **bit-invariant to the rank count** —
+//!    indeed bit-identical to the host [`Fft3d`](crate::fft::Fft3d) — where a
+//!    per-segment-FFT summation could not be (each segment's rounding
+//!    would depend on the segmentation).
+//!
+//! The ring payload is either exact f64 ([`RingPayload::F64`]) or the
+//! paper's int32-quantized packed lanes ([`RingPayload::PackedI32`], the
+//! [`crate::pppm::quant`] arithmetic: per-partial rounding, exact integer
+//! lane sums, saturation counting).  A dimension held by a single rank
+//! needs no ring at all: the rank transforms its whole lines with the
+//! local fast FFT plan, bit-identical to [`Fft3d`](crate::fft::Fft3d)'s passes.
+//!
+//! Spread / Poisson / gather are **decomposed per rank** as well: each
+//! virtual rank owns a mesh brick plus an order-wide ghost halo, through
+//! [`Pppm`]'s slab-scoped seam (`MeshDecomp`).  Spread is owner-computes
+//! over ghost *sites* (bit-identical to the global kernels for any
+//! torus); gather reads the rank's slab + halo field window, with ghost
+//! values rounded through the int32 payload when the ring is quantized.
 //!
 //! Determinism contracts (asserted by `rust/tests/dist_parity.rs`):
 //!
 //!  * **Degenerate torus.** With `ranks = [1,1,1]` every dimension takes
-//!    the local-FFT path and [`DistPppm`] is *bit-identical* to the serial
-//!    [`Pppm`] solver — spread, Poisson solve and gather are literally the
-//!    same code (shared through [`Pppm`]'s crate-internal transform seam).
+//!    the local-FFT path, halos are empty, and [`DistPppm`] is
+//!    *bit-identical* to the serial [`Pppm`] solver.
 //!  * **Rank-count invariance (float ring).** The exact-f64 ring
-//!    accumulates columns in strict ascending global column order no
-//!    matter how the line is segmented, so any two tori that decompose the
-//!    same *set* of dimensions produce bit-identical results regardless of
-//!    the rank counts (e.g. `[2,2,2]`, `[4,3,2]` and `[2,3,4]` agree
-//!    bit-for-bit) — the float analogue of the integer ring's exactness.
+//!    accumulates in strict ascending global column order no matter how
+//!    the line is segmented — matvec partials column by column, the fast
+//!    path by slab concatenation — so any two tori produce bit-identical
+//!    results for a fixed [`LinePath`] (with the fast path, *any* torus
+//!    matches `--kspace pppm` bit-for-bit end to end).
+//!  * **Fast-path-vs-matvec parity.** The two line strategies are the
+//!    same linear operator evaluated in different factorizations; they
+//!    agree to machine precision (and exactly in exact arithmetic).
 //!  * **Thread invariance.** Ranks are emulated on the engine's worker
-//!    pool by sharding independent grid lines over a fixed shard count;
-//!    per-line work is self-contained, so results are bit-identical for
-//!    any `--threads N`.
+//!    pool by sharding independent grid lines (and rank bricks) over
+//!    fixed shard counts; per-line/per-brick work is self-contained, so
+//!    results are bit-identical for any `--threads N`.
 //!
 //! The quantized ring is *not* rank-count invariant — each rank's partial
 //! is rounded before the exact integer sum, which is precisely the
 //! segmentation-dependent error Table 1's Mixed-int rows measure.
 
 use crate::distfft::DistFftSchedule;
-use crate::fft::{dft_matrix, C64, Fft1d, Fft3dScratch, LINE_SHARDS};
+use crate::fft::{dft_matrix, C64, Fft1d, Fft3dScratch, LINE_SHARDS, SegmentFft};
 use crate::pool::{SyncSlice, ThreadPool};
 use crate::pppm::quant::{self, QuantSpec};
-use crate::pppm::{MeshMode, Pppm, PppmConfig};
+use crate::pppm::{MeshDecomp, MeshMode, Pppm, PppmConfig};
 use crate::tofu::Torus;
 use std::ops::Range;
 use std::sync::Arc;
@@ -62,19 +89,66 @@ pub enum RingPayload {
     PackedI32,
 }
 
+/// Per-rank strategy for turning a line slab into the ring contribution
+/// (see the [module docs](self) for the full derivation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinePath {
+    /// Partial DFT matvecs `F_N[:, J] x_J` (paper Eq. 8 verbatim) —
+    /// the schedule-faithful emulation, O(n²) per line summed over the
+    /// ring (`--kspace dist --dist-matvec`).
+    Matvec,
+    /// Rank-local FFT fast path, O(n log n) per line: zero-padded local
+    /// FFTs with offset-twiddle combination for quantized rings
+    /// ([`SegmentFft`]), column-order slab concatenation plus one local
+    /// FFT for exact-f64 rings.  The default.
+    LocalFft,
+}
+
 /// The executed transpose-free 3-D transform over a virtual rank torus:
-/// per-rank partial 1-D DFT matvecs + a ring reduction per dimension,
-/// with a local-FFT fast path for undivided dimensions.  All buffers are
-/// persistent, so repeated [`RankFft::execute`] calls do not allocate.
+/// per-rank line contributions (matvec or local-FFT fast path, see
+/// [`LinePath`]) + a ring reduction per dimension, with a local-FFT path
+/// for undivided dimensions.  All buffers are persistent, so repeated
+/// [`RankFft::execute`] calls do not allocate.
+///
+/// # Examples
+///
+/// The default fast-path f64 ring is bit-identical to the host FFT at
+/// *any* torus shape:
+///
+/// ```
+/// use dplr::distpppm::{RankFft, RingPayload};
+/// use dplr::fft::{C64, Fft3d};
+/// use dplr::pool::ThreadPool;
+///
+/// let dims = [8, 12, 8];
+/// let base: Vec<C64> = (0..dims[0] * dims[1] * dims[2])
+///     .map(|i| C64::new((i as f64 * 0.37).sin(), 0.0))
+///     .collect();
+/// let mut host = base.clone();
+/// Fft3d::new(dims).forward(&mut host);
+///
+/// let mut rf = RankFft::new(dims, [2, 3, 2], RingPayload::F64);
+/// let mut g = base.clone();
+/// rf.execute(&mut g, true, &ThreadPool::serial());
+/// for (a, b) in host.iter().zip(&g) {
+///     assert_eq!(a.re.to_bits(), b.re.to_bits());
+///     assert_eq!(a.im.to_bits(), b.im.to_bits());
+/// }
+/// ```
 pub struct RankFft {
     sched: DistFftSchedule,
     payload: RingPayload,
-    /// per-dim local FFT plans (the fast path when `torus.dims[d] == 1`)
+    path: LinePath,
+    /// per-dim local FFT plans: the whole-line path for undivided dims
+    /// and the padded-transform substrate of the fast path
     line: [Fft1d; 3],
     /// per-dim forward DFT twiddles from [`dft_matrix`] — symmetric in
     /// (j, k), so `fmat[d][j * n + k] = e^{-2 pi i jk / n}` reads row j's
-    /// per-column factors; empty for undivided dims
+    /// per-column factors; built only for the matvec path
     fmat: [Vec<C64>; 3],
+    /// per-dim factorized segment plans (fast path, quantized ring only:
+    /// the f64 fast path needs neither — its ring payload is the line)
+    segfft: [Vec<SegmentFft>; 3],
     /// per-dim rank slabs (the schedule's partial-DFT column segments)
     segs: [Vec<Range<usize>>; 3],
     /// flat per-shard complex scratch: `[x | acc | blu | partials]`
@@ -89,12 +163,24 @@ pub struct RankFft {
 }
 
 impl RankFft {
-    /// Plan the executed schedule for `grid` over a `ranks` torus.
+    /// Plan the executed schedule for `grid` over a `ranks` torus with
+    /// the default [`LinePath::LocalFft`] fast path.
     ///
     /// # Panics
     /// If any `ranks[d]` is 0 or exceeds `grid[d]` (a rank would own an
     /// empty slab; the builder validates this before construction).
     pub fn new(grid: [usize; 3], ranks: [usize; 3], payload: RingPayload) -> RankFft {
+        RankFft::with_line_path(grid, ranks, payload, LinePath::LocalFft)
+    }
+
+    /// Plan the executed schedule with an explicit per-rank line
+    /// strategy; see [`RankFft::new`] for the panics.
+    pub fn with_line_path(
+        grid: [usize; 3],
+        ranks: [usize; 3],
+        payload: RingPayload,
+        path: LinePath,
+    ) -> RankFft {
         for d in 0..3 {
             assert!(
                 ranks[d] >= 1 && ranks[d] <= grid[d],
@@ -109,15 +195,27 @@ impl RankFft {
             Fft1d::new(grid[1]),
             Fft1d::new(grid[2]),
         ];
+        let segs = [sched.segments(0), sched.segments(1), sched.segments(2)];
         let mut fmat: [Vec<C64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut segfft: [Vec<SegmentFft>; 3] = [Vec::new(), Vec::new(), Vec::new()];
         for d in 0..3 {
             if ranks[d] > 1 {
-                // the oracle's twiddle table (forward sign); its (j, k)
-                // symmetry makes the k-major layout double as row-j-major
-                fmat[d] = dft_matrix(grid[d], -1.0);
+                match path {
+                    // the oracle's twiddle table (forward sign); its
+                    // (j, k) symmetry makes the k-major layout double as
+                    // row-j-major
+                    LinePath::Matvec => fmat[d] = dft_matrix(grid[d], -1.0),
+                    LinePath::LocalFft => {
+                        if payload == RingPayload::PackedI32 {
+                            segfft[d] = segs[d]
+                                .iter()
+                                .map(|r| SegmentFft::new(grid[d], r.clone()))
+                                .collect();
+                        }
+                    }
+                }
             }
         }
-        let segs = [sched.segments(0), sched.segments(1), sched.segments(2)];
         let maxn = grid.iter().copied().max().unwrap_or(1);
         let blu_len = line.iter().map(|p| p.scratch_len()).max().unwrap_or(0);
         let nseg_max = (0..3)
@@ -131,8 +229,10 @@ impl RankFft {
         RankFft {
             sched,
             payload,
+            path,
             line,
             fmat,
+            segfft,
             segs,
             cbuf: vec![C64::ZERO; LINE_SHARDS * stride],
             qbuf: if quantized {
@@ -155,6 +255,11 @@ impl RankFft {
     /// The configured ring payload.
     pub fn payload(&self) -> RingPayload {
         self.payload
+    }
+
+    /// The configured per-rank line strategy.
+    pub fn line_path(&self) -> LinePath {
+        self.path
     }
 
     /// Execute one full 3-D transform of the schedule over `pool`-emulated
@@ -188,8 +293,10 @@ impl RankFft {
         let nsh = LINE_SHARDS;
         let (maxn, blu_len, stride) = (self.maxn, self.blu_len, self.stride);
         let payload = self.payload;
+        let path = self.path;
         let plan = &self.line[d];
         let fmat = &self.fmat[d];
+        let segfft = &self.segfft[d];
         let segs = &self.segs[d];
         for v in self.sat.iter_mut() {
             *v = 0;
@@ -224,10 +331,18 @@ impl RankFft {
                     // Safety: shard k is the sole owner of its lines
                     *xv = unsafe { *gg.index_mut(base + i * stride_el) };
                 }
-                if nseg == 1 {
-                    // undivided dimension: one rank owns the whole line,
-                    // no ring needed — local fast FFT, bit-identical to
-                    // the Fft3d pass the serial Pppm solver runs
+                if nseg == 1 || (path == LinePath::LocalFft && payload == RingPayload::F64) {
+                    // whole-line local FFT.  An undivided dimension owns
+                    // the line outright; the exact-f64 fast path reaches
+                    // the same state through the ring by accumulating the
+                    // payload in strict column order — each hop appends
+                    // the next rank's slab (a ring allgather of the same
+                    // traffic as the reduction) — and closing with one
+                    // O(n log n) local transform.  Appending exact
+                    // segments involves no floating-point grouping at
+                    // all, so the result is the transform of the
+                    // reassembled line: bit-identical to the host FFT
+                    // and therefore bit-invariant to the rank count.
                     if forward {
                         plan.forward_with(&mut x[..n], blu);
                     } else {
@@ -243,15 +358,25 @@ impl RankFft {
                         ring_exact(&x[..n], &mut acc[..n], fmat, segs, forward);
                     }
                     RingPayload::PackedI32 => {
-                        sat_local += ring_quantized(
-                            &x[..n],
-                            &mut acc[..n],
-                            &mut parts[..nseg * n],
-                            &mut qacc[..n],
-                            fmat,
-                            segs,
-                            forward,
-                        );
+                        let pw = &mut parts[..nseg * n];
+                        match path {
+                            LinePath::Matvec => matvec_partials(&x[..n], pw, fmat, segs, forward),
+                            LinePath::LocalFft => {
+                                // each rank's partial spectrum in its
+                                // factorized O(n log n) form: zero-padded
+                                // local FFT + offset twiddles
+                                for (s, sf) in segfft.iter().enumerate() {
+                                    sf.partial_spectrum(
+                                        plan,
+                                        &x[sf.cols.clone()],
+                                        &mut pw[s * n..(s + 1) * n],
+                                        blu,
+                                        forward,
+                                    );
+                                }
+                            }
+                        }
+                        sat_local += quantize_ring(pw, &mut acc[..n], &mut qacc[..n], forward);
                     }
                 }
                 for (i, av) in acc[..n].iter().enumerate() {
@@ -265,11 +390,12 @@ impl RankFft {
     }
 }
 
-/// Exact-f64 ring reduction along one decomposed line: walk the ranks in
-/// ring order and accumulate each rank's partial-DFT columns into the
-/// travelling payload, column by column.  The accumulation order is
-/// strict ascending global column order for *any* segmentation, which is
-/// what makes the float path bit-for-bit invariant to the rank count.
+/// Exact-f64 ring reduction along one decomposed line (matvec path):
+/// walk the ranks in ring order and accumulate each rank's partial-DFT
+/// columns into the travelling payload, column by column.  The
+/// accumulation order is strict ascending global column order for *any*
+/// segmentation, which is what makes the float path bit-for-bit
+/// invariant to the rank count.
 fn ring_exact(x: &[C64], acc: &mut [C64], fmat: &[C64], segs: &[Range<usize>], forward: bool) {
     let n = x.len();
     for a in acc.iter_mut() {
@@ -299,23 +425,17 @@ fn ring_exact(x: &[C64], acc: &mut [C64], fmat: &[C64], segs: &[Range<usize>], f
     }
 }
 
-/// int32-quantized ring reduction along one decomposed line: each rank
-/// computes its partial DFT in double, the partials are scaled, rounded
-/// to i32, packed two-per-u64 and summed *exactly* in ring order — the
-/// [`crate::pppm::quant`] arithmetic of the paper's Fig. 4c, saturation
-/// counting included.  Returns the saturation count.
-fn ring_quantized(
+/// Per-rank partial DFT matvecs (each node computes in double): the
+/// Eq. 8 evaluation of `parts[s] = F_N[:, J_s] x_{J_s}` for every ring
+/// segment, feeding the quantized reduction.
+fn matvec_partials(
     x: &[C64],
-    acc: &mut [C64],
     parts: &mut [C64],
-    qacc: &mut [u64],
     fmat: &[C64],
     segs: &[Range<usize>],
     forward: bool,
-) -> u64 {
+) {
     let n = x.len();
-    let nseg = segs.len();
-    // per-rank partial DFT matvecs (each node computes in double)
     for (s, seg) in segs.iter().enumerate() {
         let p = &mut parts[s * n..(s + 1) * n];
         for v in p.iter_mut() {
@@ -335,8 +455,17 @@ fn ring_quantized(
             }
         }
     }
-    // auto-ranged scale over the ring's partials (quant::Scale::Auto),
-    // then the exact packed-lane integer sum in ring order
+}
+
+/// int32-quantized ring reduction over precomputed per-rank partial
+/// spectra: the partials are scaled (auto-ranged over the ring, like
+/// [`quant::Scale::Auto`]), rounded to i32, packed two-per-u64 and summed
+/// *exactly* in ring order — the [`crate::pppm::quant`] arithmetic of the
+/// paper's Fig. 4c, saturation counting included.  Returns the
+/// saturation count.
+fn quantize_ring(parts: &[C64], acc: &mut [C64], qacc: &mut [u64], forward: bool) -> u64 {
+    let n = acc.len();
+    let nseg = parts.len() / n;
     let spec = QuantSpec::default();
     let maxabs = parts
         .iter()
@@ -376,23 +505,52 @@ fn ring_quantized(
 }
 
 /// The distributed PPPM solver: a [`Pppm`] whose four 3-D transforms run
-/// the executed [`RankFft`] schedule instead of the host FFT.  Spread,
-/// Poisson solve, ik differentiation and gather are *shared* with
-/// [`Pppm`] through the crate-internal transform seam, so the degenerate
-/// `[1, 1, 1]` torus is bit-identical to the serial PPPM backend.
+/// the executed [`RankFft`] schedule instead of the host FFT, and whose
+/// spread / gather run slab-scoped per rank brick with order-wide ghost
+/// halos (through [`Pppm`]'s crate-internal seam).  The degenerate
+/// `[1, 1, 1]` torus is bit-identical to the serial PPPM backend — and
+/// with the default fast path, *any* f64 torus is.
 ///
 /// Registered as the engine's third `KspaceSolver`
 /// (`dplr run --kspace dist --ranks X,Y,Z`).
+///
+/// # Examples
+///
+/// The `--kspace dist` CLI path through the builder:
+///
+/// ```
+/// use dplr::engine::{KspaceConfig, Simulation};
+/// use dplr::md::water::water_box;
+/// use dplr::native::NativeModel;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let mut sim = Simulation::builder(water_box(8, 42))
+///     .dt_fs(0.5)
+///     .kspace(KspaceConfig::Dist {
+///         alpha: 0.3,
+///         ranks: [2, 2, 1],
+///         quantized: false,
+///         matvec: false, // the rank-local FFT fast path (default CLI)
+///     })
+///     .short_range(Box::new(NativeModel::synthetic(7)))
+///     .build()?;
+/// assert_eq!(sim.kspace_name(), "dist");
+/// sim.step()?;
+/// # Ok(())
+/// # }
+/// ```
 pub struct DistPppm {
     inner: Pppm,
     fft: RankFft,
+    decomp: MeshDecomp,
     pool: Arc<ThreadPool>,
 }
 
 impl DistPppm {
     /// Build the solver from a mesh configuration (its `MeshMode` must be
     /// `Double`: transform precision is owned by the ring `payload`), the
-    /// box, the virtual rank torus and the ring payload.
+    /// box, the virtual rank torus and the ring payload, with the default
+    /// [`LinePath::LocalFft`] fast path.
     ///
     /// # Panics
     /// If `cfg.mode` is not `MeshMode::Double`, or `ranks` is invalid for
@@ -403,14 +561,44 @@ impl DistPppm {
         ranks: [usize; 3],
         payload: RingPayload,
     ) -> DistPppm {
+        DistPppm::with_line_path(cfg, box_len, ranks, payload, LinePath::LocalFft)
+    }
+
+    /// Build the solver with an explicit per-rank line strategy
+    /// (`LinePath::Matvec` is the paper-faithful O(n²) emulation the
+    /// CLI exposes as `--dist-matvec`).
+    ///
+    /// # Panics
+    /// As [`DistPppm::new`].
+    pub fn with_line_path(
+        cfg: PppmConfig,
+        box_len: [f64; 3],
+        ranks: [usize; 3],
+        payload: RingPayload,
+        path: LinePath,
+    ) -> DistPppm {
         assert!(
             matches!(cfg.mode, MeshMode::Double),
             "DistPppm owns the transform precision; select RingPayload instead of MeshMode"
         );
-        let fft = RankFft::new(cfg.grid, ranks, payload);
+        let fft = RankFft::with_line_path(cfg.grid, ranks, payload, path);
+        let slabs = [
+            fft.schedule().segments(0),
+            fft.schedule().segments(1),
+            fft.schedule().segments(2),
+        ];
+        // the spline stencil reaches order - 1 points below its base:
+        // that is the ghost-halo width of the spread/gather decomposition
+        let decomp = MeshDecomp::new(
+            &slabs,
+            cfg.order - 1,
+            cfg.grid,
+            payload == RingPayload::PackedI32,
+        );
         DistPppm {
             inner: Pppm::new(cfg, box_len),
             fft,
+            decomp,
             pool: Arc::new(ThreadPool::serial()),
         }
     }
@@ -425,17 +613,23 @@ impl DistPppm {
         self.fft.payload()
     }
 
+    /// The configured per-rank line strategy.
+    pub fn line_path(&self) -> LinePath {
+        self.fft.line_path()
+    }
+
     /// The mesh configuration (grid / spline order / alpha).
     pub fn config(&self) -> &PppmConfig {
         &self.inner.cfg
     }
 
-    /// Cumulative quantization saturation events (0 for the f64 ring).
+    /// Cumulative quantization saturation events, ring reductions and
+    /// ghost-halo exchanges combined (0 for the f64 ring).
     pub fn saturations(&self) -> u64 {
         self.inner.quant_saturations
     }
 
-    /// Share a worker pool: the emulated ranks and the shared
+    /// Share a worker pool: the emulated ranks and the decomposed
     /// spread/solve/gather kernels all shard across it.
     pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         self.pool = pool.clone();
@@ -457,11 +651,11 @@ impl DistPppm {
         q: &[f64],
         out: &mut Vec<[f64; 3]>,
     ) -> f64 {
-        let (inner, fft) = (&mut self.inner, &mut self.fft);
+        let (inner, fft, decomp) = (&mut self.inner, &mut self.fft, &self.decomp);
         let pool = self.pool.clone();
         let mut transform =
             |g: &mut [C64], fwd: bool, _fs: &mut Fft3dScratch| fft.execute(g, fwd, pool.as_ref());
-        inner.energy_forces_with_transform(pos, q, out, &mut transform)
+        inner.energy_forces_with_transform(pos, q, out, &mut transform, Some(decomp))
     }
 
     /// Allocating wrapper around [`Self::energy_forces_into`].
@@ -502,11 +696,38 @@ mod tests {
     #[test]
     fn degenerate_torus_is_bit_identical_to_host_fft() {
         let pool = ThreadPool::serial();
-        for dims in [[8usize, 8, 8], [8, 12, 8], [10, 15, 10]] {
-            let base = rand_grid(dims, 11 + dims[1] as u64);
+        for path in [LinePath::Matvec, LinePath::LocalFft] {
+            for dims in [[8usize, 8, 8], [8, 12, 8], [10, 15, 10]] {
+                let base = rand_grid(dims, 11 + dims[1] as u64);
+                let mut host = base.clone();
+                Fft3d::new(dims).forward(&mut host);
+                let mut rf = RankFft::with_line_path(dims, [1, 1, 1], RingPayload::F64, path);
+                let mut g = base.clone();
+                rf.execute(&mut g, true, &pool);
+                bits_eq(&host, &g, "fwd");
+                let mut host_i = host.clone();
+                Fft3d::new(dims).inverse(&mut host_i);
+                rf.execute(&mut g, false, &pool);
+                bits_eq(&host_i, &g, "inv");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_decomposed_f64_is_bit_identical_to_host_fft() {
+        // the tentpole contract: with the fast path on, the exact-f64
+        // ring matches the host FFT to the last bit at ANY torus shape
+        let pool = ThreadPool::new(3);
+        for (dims, ranks) in [
+            ([8usize, 12, 8], [2usize, 3, 2]),
+            ([8, 12, 8], [8, 2, 8]),
+            ([10, 15, 10], [5, 3, 2]),
+        ] {
+            let base = rand_grid(dims, 301 + ranks[0] as u64);
             let mut host = base.clone();
             Fft3d::new(dims).forward(&mut host);
-            let mut rf = RankFft::new(dims, [1, 1, 1], RingPayload::F64);
+            let mut rf = RankFft::new(dims, ranks, RingPayload::F64);
+            assert_eq!(rf.line_path(), LinePath::LocalFft, "fast path is the default");
             let mut g = base.clone();
             rf.execute(&mut g, true, &pool);
             bits_eq(&host, &g, "fwd");
@@ -518,7 +739,7 @@ mod tests {
     }
 
     #[test]
-    fn decomposed_schedule_matches_host_fft_numerically() {
+    fn matvec_schedule_matches_host_fft_numerically() {
         let pool = ThreadPool::new(3);
         for (dims, ranks) in [
             ([8usize, 12, 8], [2usize, 3, 2]),
@@ -528,7 +749,7 @@ mod tests {
             let base = rand_grid(dims, 7 + ranks[0] as u64);
             let mut host = base.clone();
             Fft3d::new(dims).forward(&mut host);
-            let mut rf = RankFft::new(dims, ranks, RingPayload::F64);
+            let mut rf = RankFft::with_line_path(dims, ranks, RingPayload::F64, LinePath::Matvec);
             let mut g = base.clone();
             rf.execute(&mut g, true, &pool);
             assert!(close(&host, &g, 1e-8), "{dims:?} over {ranks:?}");
@@ -539,22 +760,43 @@ mod tests {
     }
 
     #[test]
+    fn fast_path_matches_matvec_at_machine_precision() {
+        // the two line strategies factorize one linear operator; their
+        // f64 results agree to machine precision (but not bitwise)
+        let pool = ThreadPool::serial();
+        for (dims, ranks) in [([8usize, 12, 8], [2usize, 3, 2]), ([10, 15, 10], [2, 5, 2])] {
+            let base = rand_grid(dims, 77 + dims[1] as u64);
+            let run = |path: LinePath| -> Vec<C64> {
+                let mut rf = RankFft::with_line_path(dims, ranks, RingPayload::F64, path);
+                let mut g = base.clone();
+                rf.execute(&mut g, true, &pool);
+                g
+            };
+            let fast = run(LinePath::LocalFft);
+            let mv = run(LinePath::Matvec);
+            assert!(close(&fast, &mv, 1e-9), "{dims:?} over {ranks:?}");
+        }
+    }
+
+    #[test]
     fn float_ring_is_bit_invariant_to_rank_count() {
         // the strict column-order accumulation contract: tori decomposing
         // the same set of dimensions agree bit-for-bit, whatever the
-        // per-dimension rank counts
+        // per-dimension rank counts — on both line strategies
         let dims = [8usize, 12, 8];
         let base = rand_grid(dims, 99);
         let pool = ThreadPool::serial();
-        let run = |ranks: [usize; 3]| -> Vec<C64> {
-            let mut rf = RankFft::new(dims, ranks, RingPayload::F64);
-            let mut g = base.clone();
-            rf.execute(&mut g, true, &pool);
-            g
-        };
-        let reference = run([2, 2, 2]);
-        for ranks in [[4usize, 3, 2], [2, 3, 4], [8, 2, 8], [3, 6, 5]] {
-            bits_eq(&reference, &run(ranks), "rank-invariance");
+        for path in [LinePath::Matvec, LinePath::LocalFft] {
+            let run = |ranks: [usize; 3]| -> Vec<C64> {
+                let mut rf = RankFft::with_line_path(dims, ranks, RingPayload::F64, path);
+                let mut g = base.clone();
+                rf.execute(&mut g, true, &pool);
+                g
+            };
+            let reference = run([2, 2, 2]);
+            for ranks in [[4usize, 3, 2], [2, 3, 4], [8, 2, 8], [3, 6, 5]] {
+                bits_eq(&reference, &run(ranks), "rank-invariance");
+            }
         }
     }
 
@@ -562,17 +804,19 @@ mod tests {
     fn executed_schedule_is_thread_invariant() {
         let dims = [8usize, 12, 8];
         let base = rand_grid(dims, 41);
-        let run = |threads: usize| -> Vec<C64> {
-            let pool = ThreadPool::new(threads);
-            let mut rf = RankFft::new(dims, [2, 3, 2], RingPayload::F64);
-            let mut g = base.clone();
-            rf.execute(&mut g, true, &pool);
-            rf.execute(&mut g, false, &pool);
-            g
-        };
-        let t1 = run(1);
-        for threads in [2usize, 4] {
-            bits_eq(&t1, &run(threads), "thread-invariance");
+        for path in [LinePath::Matvec, LinePath::LocalFft] {
+            let run = |threads: usize| -> Vec<C64> {
+                let pool = ThreadPool::new(threads);
+                let mut rf = RankFft::with_line_path(dims, [2, 3, 2], RingPayload::F64, path);
+                let mut g = base.clone();
+                rf.execute(&mut g, true, &pool);
+                rf.execute(&mut g, false, &pool);
+                g
+            };
+            let t1 = run(1);
+            for threads in [2usize, 4] {
+                bits_eq(&t1, &run(threads), "thread-invariance");
+            }
         }
     }
 
@@ -583,16 +827,36 @@ mod tests {
         let pool = ThreadPool::serial();
         let mut exact = base.clone();
         RankFft::new(dims, [2, 3, 2], RingPayload::F64).execute(&mut exact, true, &pool);
-        let mut q = base.clone();
-        let mut rfq = RankFft::new(dims, [2, 3, 2], RingPayload::PackedI32);
-        let sat = rfq.execute(&mut q, true, &pool);
-        assert_eq!(sat, 0, "auto scale must not saturate on [-1,1] data");
-        let worst = exact
-            .iter()
-            .zip(&q)
-            .map(|(a, b)| (a.re - b.re).abs().max((a.im - b.im).abs()))
-            .fold(0.0f64, f64::max);
-        assert!(worst < 1e-3, "worst |err| {worst}");
+        for path in [LinePath::Matvec, LinePath::LocalFft] {
+            let mut q = base.clone();
+            let mut rfq = RankFft::with_line_path(dims, [2, 3, 2], RingPayload::PackedI32, path);
+            let sat = rfq.execute(&mut q, true, &pool);
+            assert_eq!(sat, 0, "auto scale must not saturate on [-1,1] data");
+            let worst = exact
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| (a.re - b.re).abs().max((a.im - b.im).abs()))
+                .fold(0.0f64, f64::max);
+            assert!(worst < 1e-3, "{path:?}: worst |err| {worst}");
+        }
+    }
+
+    #[test]
+    fn quantized_fast_path_tracks_quantized_matvec_closely() {
+        // same rounding policy over partials that differ only at machine
+        // precision: the two quantized paths stay within a few quanta
+        let dims = [8usize, 12, 8];
+        let base = rand_grid(dims, 57);
+        let pool = ThreadPool::serial();
+        let run = |path: LinePath| -> Vec<C64> {
+            let mut rf = RankFft::with_line_path(dims, [2, 3, 2], RingPayload::PackedI32, path);
+            let mut g = base.clone();
+            rf.execute(&mut g, true, &pool);
+            g
+        };
+        let fast = run(LinePath::LocalFft);
+        let mv = run(LinePath::Matvec);
+        assert!(close(&fast, &mv, 1e-4));
     }
 
     #[test]
@@ -601,25 +865,55 @@ mod tests {
         let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
         let mut pppm = Pppm::new(cfg.clone(), box_len);
         let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
-        let mut dist = DistPppm::new(cfg, box_len, [1, 1, 1], RingPayload::F64);
-        let (e, f) = dist.energy_forces(&pos, &q);
-        assert_eq!(e_ref.to_bits(), e.to_bits(), "energy differs");
-        for (a, b) in f_ref.iter().zip(&f) {
-            for d in 0..3 {
-                assert_eq!(a[d].to_bits(), b[d].to_bits(), "force differs");
+        for path in [LinePath::Matvec, LinePath::LocalFft] {
+            let mut dist =
+                DistPppm::with_line_path(cfg.clone(), box_len, [1, 1, 1], RingPayload::F64, path);
+            let (e, f) = dist.energy_forces(&pos, &q);
+            assert_eq!(e_ref.to_bits(), e.to_bits(), "energy differs");
+            for (a, b) in f_ref.iter().zip(&f) {
+                for d in 0..3 {
+                    assert_eq!(a[d].to_bits(), b[d].to_bits(), "force differs");
+                }
             }
         }
     }
 
     #[test]
-    fn dist_solver_decomposed_matches_pppm_within_tolerance() {
+    fn dist_solver_fast_path_decomposed_is_bitwise_pppm() {
+        // fast path + f64 halos: transforms, slab spread and slab gather
+        // are all bit-transparent, so ANY torus equals serial PPPM
+        let (pos, q, box_len) = dplr_water_sites(16, 5);
+        let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
+        let mut pppm = Pppm::new(cfg.clone(), box_len);
+        let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
+        for ranks in [[2usize, 2, 1], [2, 3, 2], [4, 6, 4]] {
+            let mut dist = DistPppm::new(cfg.clone(), box_len, ranks, RingPayload::F64);
+            assert_eq!(dist.ranks(), ranks);
+            let (e, f) = dist.energy_forces(&pos, &q);
+            assert_eq!(e_ref.to_bits(), e.to_bits(), "{ranks:?}: energy differs");
+            for (a, b) in f_ref.iter().zip(&f) {
+                for d in 0..3 {
+                    assert_eq!(a[d].to_bits(), b[d].to_bits(), "{ranks:?}: force differs");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dist_solver_matvec_decomposed_matches_pppm_within_tolerance() {
         let (pos, q, box_len) = dplr_water_sites(16, 5);
         let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
         let mut pppm = Pppm::new(cfg.clone(), box_len);
         let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
         for ranks in [[2usize, 2, 1], [2, 3, 2]] {
-            let mut dist = DistPppm::new(cfg.clone(), box_len, ranks, RingPayload::F64);
-            assert_eq!(dist.ranks(), ranks);
+            let mut dist = DistPppm::with_line_path(
+                cfg.clone(),
+                box_len,
+                ranks,
+                RingPayload::F64,
+                LinePath::Matvec,
+            );
+            assert_eq!(dist.line_path(), LinePath::Matvec);
             let (e, f) = dist.energy_forces(&pos, &q);
             assert!(
                 (e - e_ref).abs() < 1e-9 * e_ref.abs().max(1.0),
@@ -641,19 +935,27 @@ mod tests {
         let cfg = PppmConfig::new([8, 12, 8], 5, 0.3);
         let mut pppm = Pppm::new(cfg.clone(), box_len);
         let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
-        let mut dist = DistPppm::new(cfg, box_len, [2, 3, 2], RingPayload::PackedI32);
-        let (e, f) = dist.energy_forces(&pos, &q);
-        assert!(
-            (e - e_ref).abs() < 1e-3 * e_ref.abs().max(1.0),
-            "E {e} vs {e_ref}"
-        );
-        let mut worst: f64 = 0.0;
-        for (a, b) in f_ref.iter().zip(&f) {
-            for d in 0..3 {
-                worst = worst.max((a[d] - b[d]).abs());
+        for path in [LinePath::Matvec, LinePath::LocalFft] {
+            let mut dist = DistPppm::with_line_path(
+                cfg.clone(),
+                box_len,
+                [2, 3, 2],
+                RingPayload::PackedI32,
+                path,
+            );
+            let (e, f) = dist.energy_forces(&pos, &q);
+            assert!(
+                (e - e_ref).abs() < 1e-3 * e_ref.abs().max(1.0),
+                "{path:?}: E {e} vs {e_ref}"
+            );
+            let mut worst: f64 = 0.0;
+            for (a, b) in f_ref.iter().zip(&f) {
+                for d in 0..3 {
+                    worst = worst.max((a[d] - b[d]).abs());
+                }
             }
+            assert!(worst < 5e-2, "{path:?}: worst quantized force gap {worst}");
         }
-        assert!(worst < 5e-2, "worst quantized force gap {worst}");
     }
 
     /// A DPLR-style site set: ions + WCs displaced slightly from the O

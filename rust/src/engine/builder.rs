@@ -24,7 +24,7 @@
 use super::observe::{observer_fn, Observer};
 use super::traits::{KspaceSolver, ShortRangeModel};
 use super::{SimConfig, Simulation, StepObservables, StepTimes};
-use crate::distpppm::{DistPppm, RingPayload};
+use crate::distpppm::{DistPppm, LinePath, RingPayload};
 use crate::ewald::EwaldRecipSolver;
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
 use crate::md::system::System;
@@ -50,9 +50,12 @@ pub enum KspaceConfig {
     /// The executed rank-decomposed k-space backend
     /// (`--kspace dist --ranks X,Y,Z`): PPPM with the auto-sized mesh of
     /// `PppmAuto`, whose four 3-D transforms run the paper's section-3.1
-    /// transpose-free schedule over a virtual `ranks` torus
+    /// transpose-free schedule over a virtual `ranks` torus, and whose
+    /// spread/gather are decomposed per rank brick with ghost halos
     /// ([`crate::distpppm::DistPppm`]).  `quantized` selects the
-    /// int32-packed ring payload instead of exact f64.
+    /// int32-packed ring payload instead of exact f64; `matvec` selects
+    /// the paper-faithful O(n²) partial-DFT matvecs instead of the
+    /// rank-local FFT fast path.
     Dist {
         /// Ewald splitting parameter (as in `PppmAuto`).
         alpha: f64,
@@ -62,6 +65,10 @@ pub enum KspaceConfig {
         /// `true` = int32-quantized packed ring payload (Table-1 Mixed-int
         /// numerics); `false` = exact f64 rings.
         quantized: bool,
+        /// `true` = per-rank partial-DFT matvecs (Eq. 8 verbatim,
+        /// `--dist-matvec`); `false` = the rank-local FFT fast path
+        /// ([`crate::distpppm::LinePath::LocalFft`], the default).
+        matvec: bool,
     },
 }
 
@@ -235,6 +242,7 @@ impl SimulationBuilder {
                 alpha,
                 ranks,
                 quantized,
+                matvec,
             }) => {
                 let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
                 cfg.validate()?;
@@ -255,8 +263,19 @@ impl SimulationBuilder {
                 } else {
                     RingPayload::F64
                 };
+                let path = if matvec {
+                    LinePath::Matvec
+                } else {
+                    LinePath::LocalFft
+                };
                 (
-                    Box::new(DistPppm::new(cfg.clone(), box_len, ranks, payload)),
+                    Box::new(DistPppm::with_line_path(
+                        cfg.clone(),
+                        box_len,
+                        ranks,
+                        payload,
+                        path,
+                    )),
                     Some(cfg),
                 )
             }

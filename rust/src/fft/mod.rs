@@ -8,13 +8,18 @@
 //!  * naive O(n^2) DFT as the test oracle and as the *matrix-vector DFT*
 //!    path that utofu-FFT (paper section 3.1) computes per node before the
 //!    hardware ring reduction;
+//!  * zero-padded segment/twiddle plans ([`segment::SegmentFft`]): the
+//!    factorized O(n log n) form of the per-rank partial DFT, the
+//!    rank-local fast path of the executed distributed schedule;
 //!  * 3-D transforms over row-major `[nx][ny][nz]` grids.
 
 pub mod dft;
 pub mod plan;
+pub mod segment;
 
 pub use dft::{dft_matrix, dft_naive};
 pub use plan::{Fft1d, Fft3d, Fft3dScratch, LINE_SHARDS};
+pub use segment::SegmentFft;
 
 /// Minimal complex double — kept as a bare struct so grids are just
 /// `Vec<C64>` with no layout surprises when quantizing / packing.

@@ -1,0 +1,182 @@
+//! Zero-padded segment FFT plans — the rank-local fast path of the
+//! executed utofu-FFT schedule.
+//!
+//! The transpose-free schedule's per-rank compute is the partial DFT
+//! `X~ = F_N[:, J] x_J` (paper Eq. 8) for the rank's contiguous column
+//! segment `J = [a, a+m)`.  Evaluating it as a matvec costs O(n·m) per
+//! line (O(n²) summed over the ring); the DFT shift theorem factors it
+//! into a *local FFT* instead:
+//!
+//! ```text
+//! (F_N[:, J] x_J)[k] = e^{-2πi·a·k/N} · FFT_N([x_a .. x_{a+m-1}, 0 … 0])[k]
+//! ```
+//!
+//! i.e. zero-pad the segment to the full line length, transform it with
+//! the rank's local O(N log N) plan ([`Fft1d`]), and combine with one
+//! offset twiddle per output — O(n log n) per line at any segment size.
+//! [`SegmentFft`] precomputes the twiddles; the padded transform reuses a
+//! caller-provided plan and scratch so the hot path stays allocation-free.
+//!
+//! By linearity, summing the factorized partials over a full segmentation
+//! reproduces the line transform exactly (in exact arithmetic); in f64
+//! the partials agree with the matvec path to machine precision, which is
+//! the fast-path-vs-matvec parity contract `rust/tests/dist_parity.rs`
+//! checks end to end.
+
+use super::plan::Fft1d;
+use super::C64;
+use std::ops::Range;
+
+/// Plan for one rank's factorized partial DFT: the zero-padded local FFT
+/// of a contiguous column segment plus the offset-twiddle combination
+/// (see the [module docs](self) for the identity).  Used by the executed
+/// distributed schedule ([`crate::distpppm::RankFft`]) as the O(n log n)
+/// replacement for the per-rank partial DFT matvec.
+#[derive(Debug, Clone)]
+pub struct SegmentFft {
+    /// The global column range `J` this rank owns within the line.
+    pub cols: Range<usize>,
+    /// Forward-sign offset twiddles `e^{-2πi·a·k/n}`, one per output `k`
+    /// (the inverse kernel uses their conjugates).
+    twiddle: Vec<C64>,
+}
+
+impl SegmentFft {
+    /// Plan the factorized partial DFT of segment `cols` within lines of
+    /// length `n`.
+    ///
+    /// # Panics
+    /// If `cols` is not contained in `0..n`.
+    pub fn new(n: usize, cols: Range<usize>) -> SegmentFft {
+        assert!(
+            cols.start <= cols.end && cols.end <= n,
+            "segment {cols:?} out of range for line length {n}"
+        );
+        let a = cols.start;
+        let w = -2.0 * std::f64::consts::PI / n as f64;
+        // reduce a*k mod n before the trig, like dft_matrix, for accuracy
+        let twiddle = (0..n).map(|k| C64::cis(w * ((a * k) % n) as f64)).collect();
+        SegmentFft { cols, twiddle }
+    }
+
+    /// Compute the partial spectrum `F_N[:, J] x_seg` (forward sign) or
+    /// its unnormalised inverse-kernel analogue (`forward = false`; the
+    /// 1/N factor is applied by the ring's closing combination, matching
+    /// the matvec path).  `x_seg` is the rank's column segment, `out` a
+    /// full line-length output buffer, `plan` the local length-n FFT plan
+    /// and `blu` its Bluestein scratch (`>= plan.scratch_len()`).
+    pub fn partial_spectrum(
+        &self,
+        plan: &Fft1d,
+        x_seg: &[C64],
+        out: &mut [C64],
+        blu: &mut [C64],
+        forward: bool,
+    ) {
+        let n = plan.n;
+        assert_eq!(x_seg.len(), self.cols.len(), "segment length mismatch");
+        assert_eq!(out.len(), n, "output length must equal the line length");
+        out[..x_seg.len()].copy_from_slice(x_seg);
+        for v in out[x_seg.len()..].iter_mut() {
+            *v = C64::ZERO;
+        }
+        if forward {
+            plan.forward_with(out, blu);
+            for (o, t) in out.iter_mut().zip(&self.twiddle) {
+                *o = *o * *t;
+            }
+        } else {
+            plan.inverse_unscaled_with(out, blu);
+            for (o, t) in out.iter_mut().zip(&self.twiddle) {
+                *o = *o * t.conj();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft;
+    use crate::pool::even_shards;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<C64> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| C64::new(r.normal(), r.normal())).collect()
+    }
+
+    fn close(a: &[C64], b: &[C64], tol: f64) -> bool {
+        a.iter()
+            .zip(b)
+            .all(|(x, y)| (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol)
+    }
+
+    #[test]
+    fn factorized_partial_matches_matvec_oracle() {
+        // the shift-theorem identity against the O(n·m) oracle, forward
+        // and inverse kernels, radix-2 and Bluestein lengths
+        for n in [8usize, 12, 15] {
+            let x = rand_vec(n, 31 + n as u64);
+            let plan = Fft1d::new(n);
+            let mut blu = vec![C64::ZERO; plan.scratch_len()];
+            let mut out = vec![C64::ZERO; n];
+            for cols in even_shards(n, 3) {
+                let seg = SegmentFft::new(n, cols.clone());
+                for (forward, sign) in [(true, -1.0), (false, 1.0)] {
+                    let oracle = dft::partial_dft(&x[cols.clone()], cols.clone(), n, sign);
+                    seg.partial_spectrum(&plan, &x[cols.clone()], &mut out, &mut blu, forward);
+                    assert!(close(&out, &oracle, 1e-10), "n={n} cols={cols:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partials_sum_to_full_transform() {
+        // linearity: summing the factorized partials over a segmentation
+        // reproduces the full line transform at machine precision
+        for (n, nseg) in [(12usize, 3usize), (16, 4), (15, 2)] {
+            let x = rand_vec(n, 7 * n as u64 + nseg as u64);
+            let plan = Fft1d::new(n);
+            let mut full = x.clone();
+            plan.forward(&mut full);
+            let mut blu = vec![C64::ZERO; plan.scratch_len()];
+            let mut out = vec![C64::ZERO; n];
+            let mut acc = vec![C64::ZERO; n];
+            for cols in even_shards(n, nseg) {
+                let seg = SegmentFft::new(n, cols.clone());
+                seg.partial_spectrum(&plan, &x[cols.clone()], &mut out, &mut blu, true);
+                for (a, o) in acc.iter_mut().zip(&out) {
+                    *a += *o;
+                }
+            }
+            assert!(close(&acc, &full, 1e-9), "n={n} nseg={nseg}");
+        }
+    }
+
+    #[test]
+    fn inverse_partials_round_trip() {
+        let n = 12;
+        let x = rand_vec(n, 99);
+        let plan = Fft1d::new(n);
+        let mut fwd = x.clone();
+        plan.forward(&mut fwd);
+        let mut blu = vec![C64::ZERO; plan.scratch_len()];
+        let mut out = vec![C64::ZERO; n];
+        let mut acc = vec![C64::ZERO; n];
+        for cols in even_shards(n, 4) {
+            let seg = SegmentFft::new(n, cols.clone());
+            seg.partial_spectrum(&plan, &fwd[cols.clone()], &mut out, &mut blu, false);
+            for (a, o) in acc.iter_mut().zip(&out) {
+                *a += *o;
+            }
+        }
+        // the ring's closing combination applies the 1/N normalisation
+        let s = 1.0 / n as f64;
+        for a in acc.iter_mut() {
+            *a = a.scale(s);
+        }
+        assert!(close(&acc, &x, 1e-9));
+    }
+}

@@ -25,6 +25,9 @@
 //! `docs/ARCHITECTURE.md` (repo root) maps paper sections to modules,
 //! traces one MD step through the trait layer, and tabulates which paper
 //! claims are reproduced numerically vs. analytically.
+//! `docs/PERFORMANCE.md` is the performance companion: the bench
+//! harness and its recorded keys, the bench-regression gate's verdict
+//! semantics, and the baseline-refresh workflow.
 
 // Style lints that fight the index-heavy numeric kernels in this crate
 // (explicit `for i in 0..n` loops over multiple coupled arrays, physics

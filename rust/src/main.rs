@@ -58,7 +58,9 @@ fn print_help() {
          \x20              --kspace dist: executed rank-decomposed FFT\n\
          \x20              schedule over a virtual torus (--ranks X,Y,Z,\n\
          \x20              default 1,1,1 = bit-identical to pppm;\n\
-         \x20              --ring-quant for int32-packed ring payloads)\n\
+         \x20              --ring-quant for int32-packed ring payloads;\n\
+         \x20              --dist-matvec for the O(n^2) Eq.-8 partial-DFT\n\
+         \x20              matvecs instead of the rank-local FFT fast path)\n\
          \x20 accuracy     Table 1: precision-config errors (--nmol 128)\n\
          \x20 longrun      Fig 7: NVT traces double vs mixed-int2 (--steps 1500)\n\
          \x20 fftbench     Fig 8: distributed-FFT comparison\n\
@@ -121,6 +123,7 @@ fn kspace_from_args(args: &Args, alpha: f64) -> Result<KspaceConfig> {
             alpha,
             ranks: parse_ranks(&args.str_or("ranks", "1,1,1"))?,
             quantized: args.bool("ring-quant"),
+            matvec: args.bool("dist-matvec"),
         }),
         other => bail!("unknown kspace solver {other} (expected pppm|ewald|dist)"),
     }

@@ -26,7 +26,11 @@
 //!
 //! Shard boundaries are load-balanced between calls by
 //! [`balance::ShardPlan`], a thread-granularity reuse of the paper's
-//! Algorithm 1 ring pass (see `coordinator/ringlb.rs`).
+//! Algorithm 1 ring pass (see `coordinator/ringlb.rs`).  For decomposed
+//! mesh work the module also provides ghost-halo shard plans
+//! ([`halo_windows`] / [`WrapWindow`]): periodic slab-plus-halo read
+//! windows the decomposed PPPM spread/gather derives its per-rank mesh
+//! footprints from.
 
 pub mod balance;
 
@@ -361,6 +365,57 @@ impl<'a, T> SyncSlice<'a, T> {
     }
 }
 
+/// A periodic (wrapped) index window: `len` consecutive indices starting
+/// at `start` on a ring of `n` indices.  The building block of ghost-halo
+/// shard plans: a rank's *read window* is its slab widened by the halo,
+/// wrapped across the periodic boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WrapWindow {
+    /// First index of the window, already wrapped into `0..n`.
+    pub start: usize,
+    /// Window length (`<= n`).
+    pub len: usize,
+    /// Ring size.
+    pub n: usize,
+}
+
+impl WrapWindow {
+    /// True when wrapped index `i` (in `0..n`) lies inside the window.
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.n, "index {} outside ring 0..{}", i, self.n);
+        (i + self.n - self.start) % self.n < self.len
+    }
+
+    /// Iterate the window's wrapped indices in window order (slab halo
+    /// first, then the slab itself, for a low-side halo window).
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len).map(move |o| (self.start + o) % self.n)
+    }
+}
+
+/// Ghost-halo shard plan for a contiguous slab partition of `0..n`:
+/// window `s` covers `slabs[s]` widened by `halo` points on the *low*
+/// side (an order-p B-spline stencil based inside the slab reaches at
+/// most `p - 1` points below its base), wrapped periodically and capped
+/// at the ring size — a slab that already spans the whole ring needs no
+/// ghosts.  Used by the decomposed PPPM spread/gather to derive each
+/// rank's mesh read window from its slab.
+pub fn halo_windows(slabs: &[Range<usize>], halo: usize, n: usize) -> Vec<WrapWindow> {
+    slabs
+        .iter()
+        .map(|r| {
+            assert!(r.end <= n, "slab {r:?} outside ring 0..{n}");
+            let h = halo.min(n - r.len());
+            WrapWindow {
+                start: (r.start + n - h) % n,
+                len: r.len() + h,
+                n,
+            }
+        })
+        .collect()
+}
+
 /// Split `0..nitems` into at most `max_shards` contiguous, near-even
 /// ranges (never more ranges than items; at least one range when
 /// `nitems > 0`).
@@ -461,6 +516,42 @@ mod tests {
         }
         for (i, v) in data.iter().enumerate() {
             assert_eq!(*v, 7 * i as u64);
+        }
+    }
+
+    #[test]
+    fn halo_windows_cover_slab_plus_low_ghosts() {
+        for (n, nslabs, halo) in [(12usize, 3usize, 4usize), (18, 4, 7), (10, 5, 2)] {
+            let slabs = even_shards(n, nslabs);
+            let wins = halo_windows(&slabs, halo, n);
+            assert_eq!(wins.len(), slabs.len());
+            for (r, w) in slabs.iter().zip(&wins) {
+                // the slab itself is always covered
+                for i in r.clone() {
+                    assert!(w.contains(i), "slab index {i} missing from {w:?}");
+                }
+                // the low-side ghost region is covered up to the cap
+                let h = halo.min(n - r.len());
+                for o in 1..=h {
+                    let g = (r.start + n - o) % n;
+                    assert!(w.contains(g), "ghost {g} missing from {w:?}");
+                }
+                // nothing beyond slab + capped halo is covered
+                assert_eq!(w.iter().count(), r.len() + h);
+                let members: Vec<usize> = w.iter().collect();
+                for i in 0..n {
+                    assert_eq!(w.contains(i), members.contains(&i), "{w:?} index {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_window_spanning_the_whole_ring_has_no_ghosts() {
+        let wins = halo_windows(&[0..6], 4, 6);
+        assert_eq!(wins[0].len, 6);
+        for i in 0..6 {
+            assert!(wins[0].contains(i));
         }
     }
 

@@ -22,7 +22,17 @@
 //! rank-decomposed, transpose-free schedule of paper section 3.1 into that
 //! seam, so the distributed backend shares this module's spread / Poisson /
 //! gather kernels bit-for-bit and differs only in how the four 3-D
-//! transforms are carried out.
+//! transforms are carried out.  The seam also has a slab-scoped side
+//! (`MeshDecomp`): with a rank-brick decomposition attached, spread and
+//! gather run per rank brick with order-wide ghost halos (owner-computes
+//! with ghost sites on the way in, slab + halo field windows on the way
+//! out) — bit-identical to the global kernels for exact f64 halos, with
+//! ghost values rounded through the int32 payload for quantized rings.
+//! The Poisson / ik stage is diagonal in k-space, so its existing fixed
+//! contiguous grid shards *are* the slab decomposition (each shard is a
+//! slab of the flattened spectrum); it needs no separate decomposed
+//! variant, and keeping the fixed shard count preserves the energy
+//! reduction's bit-determinism contract.
 //!
 //! Hot-path structure (this is the kernel layer the section-3.2 overlap
 //! relies on being lean):
@@ -45,7 +55,7 @@ pub mod spline;
 
 use crate::fft::{C64, Fft3d, Fft3dScratch};
 use crate::md::units::KE_COULOMB;
-use crate::pool::{even_shards, SyncSlice, ThreadPool};
+use crate::pool::{even_shards, halo_windows, SyncSlice, ThreadPool, WrapWindow};
 use quant::QuantSpec;
 use spline::{bspline_fourier_sq, bspline_weights_into, MAX_ORDER};
 use std::ops::Range;
@@ -66,6 +76,202 @@ pub(crate) enum Transform<'a> {
     Own,
     /// Caller-supplied 3-D transform executor.
     Ext(&'a mut dyn FnMut(&mut [C64], bool, &mut Fft3dScratch) -> u64),
+}
+
+/// Crate-internal description of a rank-brick mesh decomposition: the
+/// slab-scoped side of the transform seam.  Built by
+/// [`crate::distpppm::DistPppm`] from its rank schedule's per-dimension
+/// slabs; when passed to the solve, charge spread and force gather run
+/// *per rank brick* with an order-wide ghost halo instead of over the
+/// global mesh:
+///
+///  * **Spread** is owner-computes with a ghost-*site* halo: each rank
+///    accumulates exactly the mesh points of its own brick, pulling from
+///    every site whose stencil reaches the brick (sites up to `order - 1`
+///    points outside it — the ghost atoms a real decomposition would
+///    exchange).  Contributions keep the global fixed spread-shard
+///    grouping and ascending site order, so the assembled mesh is
+///    **bit-identical** to the global spread for any torus
+///    (`rust/tests/dist_parity.rs` propchecks this over random tori and
+///    orders).
+///  * **Gather** is owner-computes with a ghost-*mesh* halo: each rank
+///    gathers the sites whose stencil base lies in its brick, reading
+///    field values from its slab + low-side halo window.  Exact f64
+///    halos are bit-transparent; `quantized` halos round every ghost
+///    value through the int32 payload ([`quant`]) with a per-brick
+///    auto-ranged scale, modelling the paper's quantized neighbour
+///    exchange (saturations are counted like the ring's).
+pub(crate) struct MeshDecomp {
+    /// Per-rank brick: one contiguous slab range per dimension (the
+    /// cartesian product of the per-dimension segments; brick `(i, j, k)`
+    /// has id `(i * rdims[1] + j) * rdims[2] + k`).
+    pub bricks: Vec<[Range<usize>; 3]>,
+    /// Matching slab + ghost-halo read windows (see
+    /// [`crate::pool::halo_windows`]), one triple per brick.
+    pub windows: Vec<[WrapWindow; 3]>,
+    /// Rank counts per dimension (`slabs[d].len()`).
+    pub rdims: [usize; 3],
+    /// Per-dimension grid-index → slab-coordinate lookup (the O(1)
+    /// site→brick classifier behind the per-solve bins).
+    pub slab_of: [Vec<u32>; 3],
+    /// Quantize ghost field values during the gather halo exchange
+    /// (int32 ring payloads); `false` = exact f64 ghost copies.
+    pub quantized: bool,
+}
+
+impl MeshDecomp {
+    /// Build the brick/window tables from per-dimension slab partitions
+    /// (`slabs[d]` must partition `0..grid[d]`) and a halo width of
+    /// `halo` points (the spline stencil reach, `order - 1`).
+    pub(crate) fn new(
+        slabs: &[Vec<Range<usize>>; 3],
+        halo: usize,
+        grid: [usize; 3],
+        quantized: bool,
+    ) -> MeshDecomp {
+        let wins = [
+            halo_windows(&slabs[0], halo, grid[0]),
+            halo_windows(&slabs[1], halo, grid[1]),
+            halo_windows(&slabs[2], halo, grid[2]),
+        ];
+        let mut slab_of: [Vec<u32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for d in 0..3 {
+            slab_of[d] = vec![0u32; grid[d]];
+            for (c, r) in slabs[d].iter().enumerate() {
+                for i in r.clone() {
+                    slab_of[d][i] = c as u32;
+                }
+            }
+        }
+        let mut bricks = Vec::new();
+        let mut windows = Vec::new();
+        for (i, rx) in slabs[0].iter().enumerate() {
+            for (j, ry) in slabs[1].iter().enumerate() {
+                for (k, rz) in slabs[2].iter().enumerate() {
+                    bricks.push([rx.clone(), ry.clone(), rz.clone()]);
+                    windows.push([wins[0][i], wins[1][j], wins[2][k]]);
+                }
+            }
+        }
+        MeshDecomp {
+            bricks,
+            windows,
+            rdims: [slabs[0].len(), slabs[1].len(), slabs[2].len()],
+            slab_of,
+            quantized,
+        }
+    }
+}
+
+/// Per-solve site→brick bins for the decomposed kernels: `owner` groups
+/// each site under the single brick holding its stencil base (the gather
+/// relation); `touch` groups each site under *every* brick its stencil
+/// footprint reaches (the spread's ghost-site relation — the cartesian
+/// product of per-dimension slab hits).  Both are filled by one
+/// ascending O(nsites) scan, so every bin lists its sites in ascending
+/// order — the accumulation-order contract of the slab kernels' bit
+/// parity is untouched — and the per-brick shards then iterate only
+/// their own sites instead of rescanning the whole site list per brick.
+#[derive(Default)]
+struct DecompBins {
+    /// site ids grouped by owning brick, ascending within each bin
+    owner: Vec<u32>,
+    /// per-brick `owner` slice starts, length nbricks + 1
+    owner_off: Vec<usize>,
+    /// site ids grouped by touched brick, ascending within each bin
+    touch: Vec<u32>,
+    /// per-brick `touch` slice starts, length nbricks + 1
+    touch_off: Vec<usize>,
+    /// counting-sort fill cursors (reused across solves)
+    cur: Vec<usize>,
+}
+
+impl DecompBins {
+    fn build(&mut self, dc: &MeshDecomp, si: &[u32], nsites: usize, p: usize) {
+        let nb = dc.bricks.len();
+        self.owner_off.clear();
+        self.owner_off.resize(nb + 1, 0);
+        self.touch_off.clear();
+        self.touch_off.resize(nb + 1, 0);
+        // pass 1: per-brick counts into off[b + 1], then prefix sums
+        for i in 0..nsites {
+            let o = i * 3 * MAX_ORDER;
+            self.owner_off[owner_brick(dc, si, o, p) + 1] += 1;
+            for_each_touched(dc, si, o, p, |b| self.touch_off[b + 1] += 1);
+        }
+        for b in 0..nb {
+            self.owner_off[b + 1] += self.owner_off[b];
+            self.touch_off[b + 1] += self.touch_off[b];
+        }
+        self.owner.clear();
+        self.owner.resize(self.owner_off[nb], 0);
+        self.touch.clear();
+        self.touch.resize(self.touch_off[nb], 0);
+        // pass 2: counting-sort fill; scanning sites in ascending order
+        // makes every bin ascending
+        self.cur.clear();
+        self.cur.extend_from_slice(&self.owner_off[..nb]);
+        for i in 0..nsites {
+            let o = i * 3 * MAX_ORDER;
+            let b = owner_brick(dc, si, o, p);
+            self.owner[self.cur[b]] = i as u32;
+            self.cur[b] += 1;
+        }
+        self.cur.clear();
+        self.cur.extend_from_slice(&self.touch_off[..nb]);
+        for i in 0..nsites {
+            let o = i * 3 * MAX_ORDER;
+            for_each_touched(dc, si, o, p, |b| {
+                self.touch[self.cur[b]] = i as u32;
+                self.cur[b] += 1;
+            });
+        }
+    }
+
+    /// The ascending site ids brick `r` owns (gather).
+    fn owned(&self, r: usize) -> &[u32] {
+        &self.owner[self.owner_off[r]..self.owner_off[r + 1]]
+    }
+
+    /// The ascending site ids whose stencils reach brick `r` (spread).
+    fn touching(&self, r: usize) -> &[u32] {
+        &self.touch[self.touch_off[r]..self.touch_off[r + 1]]
+    }
+}
+
+/// The brick owning a site: per dimension, the slab holding the stencil
+/// base (the last, highest wrapped index of the per-axis stencil).
+#[inline]
+fn owner_brick(dc: &MeshDecomp, si: &[u32], o: usize, p: usize) -> usize {
+    let cx = dc.slab_of[0][si[o + p - 1] as usize] as usize;
+    let cy = dc.slab_of[1][si[o + MAX_ORDER + p - 1] as usize] as usize;
+    let cz = dc.slab_of[2][si[o + 2 * MAX_ORDER + p - 1] as usize] as usize;
+    (cx * dc.rdims[1] + cy) * dc.rdims[2] + cz
+}
+
+/// Visit every brick id a site's stencil footprint reaches: the
+/// cartesian product of the (deduplicated) per-dimension slab
+/// coordinates its `p` wrapped indices land in.
+fn for_each_touched(dc: &MeshDecomp, si: &[u32], o: usize, p: usize, mut f: impl FnMut(usize)) {
+    let mut hits = [[0u32; MAX_ORDER]; 3];
+    let mut nh = [0usize; 3];
+    for d in 0..3 {
+        for j in 0..p {
+            let c = dc.slab_of[d][si[o + d * MAX_ORDER + j] as usize];
+            if !hits[d][..nh[d]].contains(&c) {
+                hits[d][nh[d]] = c;
+                nh[d] += 1;
+            }
+        }
+    }
+    for a in 0..nh[0] {
+        for b in 0..nh[1] {
+            for c in 0..nh[2] {
+                f((hits[0][a] as usize * dc.rdims[1] + hits[1][b] as usize) * dc.rdims[2]
+                    + hits[2][c] as usize);
+            }
+        }
+    }
 }
 
 /// Fixed shard count for the reductions whose grouping affects low-order
@@ -173,6 +379,11 @@ struct PppmScratch {
     field: Vec<f64>,
     /// per-shard energy partials, reduced in shard order by the caller
     epart: Vec<f64>,
+    /// per-brick ghost-quantization saturation slots (decomposed gather
+    /// only), reduced in brick order
+    halo_sat: Vec<u64>,
+    /// per-solve site→brick bins (decomposed spread/gather only)
+    bins: DecompBins,
     /// cached shard plans (recomputed only when sizes / pool change)
     site_shards: Vec<Range<usize>>,
     spread_shards: Vec<Range<usize>>,
@@ -317,31 +528,43 @@ impl Pppm {
         // pool shards read green/kvec/plans) alongside the mutable buffers
         let mut scratch = std::mem::take(&mut self.scratch);
         scratch.ensure(pos.len(), &self.fft, self.pool.nthreads());
-        let (energy, sat) = self.solve(pos, q, &mut scratch, out, &mut Transform::Own);
+        let (energy, sat) = self.solve(pos, q, &mut scratch, out, &mut Transform::Own, None);
         self.scratch = scratch;
         self.quant_saturations += sat;
         energy
     }
 
-    /// Energy + forces with a caller-supplied 3-D transform executor: the
-    /// crate-internal entry point behind [`crate::distpppm::DistPppm`].
-    /// Everything except the four transforms — stencils, charge spread,
-    /// Poisson solve, ik differentiation, force gather — runs through the
-    /// exact same code as [`Self::energy_forces_into`], so a transform
-    /// that reproduces [`Fft3d`]'s per-line arithmetic yields bit-identical
-    /// results end to end.
+    /// Energy + forces with a caller-supplied 3-D transform executor and
+    /// an optional mesh decomposition: the crate-internal entry point
+    /// behind [`crate::distpppm::DistPppm`].  Everything except the four
+    /// transforms — stencils, charge spread, Poisson solve, ik
+    /// differentiation, force gather — runs through the exact same code
+    /// as [`Self::energy_forces_into`], so a transform that reproduces
+    /// [`Fft3d`]'s per-line arithmetic yields bit-identical results end
+    /// to end.  With `decomp` set, spread and gather run slab-scoped per
+    /// rank brick with ghost halos (see [`MeshDecomp`]); the f64-halo
+    /// decomposition is bit-identical to the global kernels by
+    /// construction.
     pub(crate) fn energy_forces_with_transform(
         &mut self,
         pos: &[[f64; 3]],
         q: &[f64],
         out: &mut Vec<[f64; 3]>,
         transform: &mut dyn FnMut(&mut [C64], bool, &mut Fft3dScratch) -> u64,
+        decomp: Option<&MeshDecomp>,
     ) -> f64 {
         assert_eq!(pos.len(), q.len());
         out.resize(pos.len(), [0.0; 3]);
         let mut scratch = std::mem::take(&mut self.scratch);
         scratch.ensure(pos.len(), &self.fft, self.pool.nthreads());
-        let (energy, sat) = self.solve(pos, q, &mut scratch, out, &mut Transform::Ext(transform));
+        let (energy, sat) = self.solve(
+            pos,
+            q,
+            &mut scratch,
+            out,
+            &mut Transform::Ext(transform),
+            decomp,
+        );
         self.scratch = scratch;
         self.quant_saturations += sat;
         energy
@@ -349,7 +572,9 @@ impl Pppm {
 
     /// The actual solve (&self so parallel shards can borrow it); returns
     /// the quantization saturation count separately.  `transform` selects
-    /// who runs the four 3-D transforms (see [`Transform`]).
+    /// who runs the four 3-D transforms (see [`Transform`]); `decomp`
+    /// switches spread/gather to the slab-scoped per-rank-brick kernels
+    /// (see [`MeshDecomp`]).
     fn solve(
         &self,
         pos: &[[f64; 3]],
@@ -357,6 +582,7 @@ impl Pppm {
         s: &mut PppmScratch,
         out: &mut [[f64; 3]],
         transform: &mut Transform,
+        decomp: Option<&MeshDecomp>,
     ) -> (f64, u64) {
         let [_n1, n2, n3] = self.cfg.grid;
         let ntot = self.fft.len();
@@ -390,10 +616,110 @@ impl Pppm {
             });
         }
 
+        // 1a'. decomposed solves: one ascending O(nsites) pass bins the
+        // sites by owning brick (gather) and by touched brick (spread's
+        // ghost-site relation), so the per-brick shards below iterate
+        // only their own sites instead of rescanning the whole list per
+        // brick.  Ascending fill keeps the bit-parity accumulation order.
+        if let Some(dc) = decomp {
+            s.bins.build(dc, &s.si, pos.len(), p);
+        }
+
         // 1b. charge assignment: per-shard grid accumulators merged in a
         // fixed-order reduction pass (REDUCE_SHARDS is thread-count
-        // independent, so the mesh is bit-identical for any pool size)
-        {
+        // independent, so the mesh is bit-identical for any pool size).
+        // Decomposed meshes run the slab-scoped owner-computes variant:
+        // each rank brick accumulates exactly its own mesh points from
+        // every site whose stencil reaches the brick (the ghost-site
+        // halo), keeping the same shard grouping and ascending site
+        // order per point — so the assembled mesh is bit-identical to
+        // the global spread for any torus.
+        if let Some(dc) = decomp {
+            let parts = SyncSlice::new(&mut s.partials);
+            let (si, sw) = (&s.si, &s.sw);
+            let shards = &s.spread_shards;
+            let bins = &s.bins;
+            let nparts = shards.len();
+            let bricks = &dc.bricks;
+            pool.run(bricks.len() * nparts, &|t| {
+                let (r, k) = (t / nparts, t % nparts);
+                let [bx, by, bz] = &bricks[r];
+                // zero this brick's region of accumulator k
+                for ia in bx.clone() {
+                    for ib in by.clone() {
+                        let row = k * ntot + (ia * n2 + ib) * n3;
+                        // Safety: (brick, spread-shard) footprints are
+                        // pairwise disjoint — bricks partition the grid
+                        // and each shard owns its accumulator
+                        let seg = unsafe { parts.slice_mut(row + bz.start..row + bz.end) };
+                        for v in seg.iter_mut() {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                // the ghost-site halo relation, pre-binned: this brick's
+                // touching sites restricted to shard k's contiguous site
+                // range (bins are ascending, so the slice bounds are two
+                // binary searches and the iteration order matches the
+                // global kernel's ascending site order)
+                let bin = bins.touching(r);
+                let lo = bin.partition_point(|&i| (i as usize) < shards[k].start);
+                let hi = bin.partition_point(|&i| (i as usize) < shards[k].end);
+                for &iu in &bin[lo..hi] {
+                    let i = iu as usize;
+                    let o = i * 3 * MAX_ORDER;
+                    let (ix, wx) = (&si[o..o + p], &sw[o..o + p]);
+                    let (iy, wy) = (
+                        &si[o + MAX_ORDER..o + MAX_ORDER + p],
+                        &sw[o + MAX_ORDER..o + MAX_ORDER + p],
+                    );
+                    let (iz, wz) = (
+                        &si[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+                        &sw[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+                    );
+                    let z0 = iz[0] as usize;
+                    let zc = iz[p - 1] as usize == z0 + p - 1;
+                    let qi = q[i];
+                    for (ia, wa) in ix.iter().zip(wx) {
+                        let ia = *ia as usize;
+                        if !bx.contains(&ia) {
+                            continue;
+                        }
+                        let rowx = ia * n2;
+                        let wxa = qi * wa;
+                        for (ib, wb) in iy.iter().zip(wy) {
+                            let ib = *ib as usize;
+                            if !by.contains(&ib) {
+                                continue;
+                            }
+                            let w = wxa * wb;
+                            let row = k * ntot + (rowx + ib) * n3;
+                            if zc {
+                                // intersect the contiguous z-run with the
+                                // brick's z slab (per-element arithmetic
+                                // identical to the global kernel)
+                                let lo = z0.max(bz.start);
+                                let hi = (z0 + p).min(bz.end);
+                                if lo < hi {
+                                    // Safety: inside this (brick, shard)
+                                    let seg = unsafe { parts.slice_mut(row + lo..row + hi) };
+                                    zline_spread(seg, &wz[lo - z0..hi - z0], w);
+                                }
+                            } else {
+                                for (ic, wc) in iz.iter().zip(wz) {
+                                    let ic = *ic as usize;
+                                    if !bz.contains(&ic) {
+                                        continue;
+                                    }
+                                    // Safety: inside this (brick, shard)
+                                    unsafe { *parts.index_mut(row + ic) += w * wc };
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        } else {
             let parts = SyncSlice::new(&mut s.partials);
             let (si, sw) = (&s.si, &s.sw);
             let shards = &s.spread_shards;
@@ -547,8 +873,107 @@ impl Pppm {
         }
 
         // 5. gather forces: F_i = q_i * sum_g w_i(g) * E_d(g), separable
-        // in z (per-site outputs, disjoint and order-independent)
-        {
+        // in z (per-site outputs, disjoint and order-independent).  With
+        // a decomposition, each rank brick gathers the sites whose
+        // stencil base it owns, reading field values from its slab +
+        // ghost-halo window: f64 halos are exact copies (bit-identical
+        // to the global gather), quantized halos round every ghost value
+        // through the int32 payload with a per-brick auto scale.
+        if let Some(dc) = decomp {
+            let nb = dc.bricks.len();
+            if s.halo_sat.len() < nb {
+                s.halo_sat.resize(nb, 0);
+            }
+            let outs = SyncSlice::new(out);
+            let satv = SyncSlice::new(&mut s.halo_sat);
+            let (si, sw) = (&s.si, &s.sw);
+            let field = &s.field;
+            let bins = &s.bins;
+            pool.run(nb, &|r| {
+                let brick = &dc.bricks[r];
+                let win = &dc.windows[r];
+                let (ex, rest) = field.split_at(ntot);
+                let (ey, ez) = rest.split_at(ntot);
+                let mut sat_local = 0u64;
+                // ghost scales: auto-ranged per component over this
+                // rank's ghost window — the same policy as the ring's
+                // partial maxima (one cheap neighbour round in a real
+                // implementation)
+                let mut scales = [0.0f64; 3];
+                if dc.quantized {
+                    let spec = QuantSpec::default();
+                    let mut maxabs = [0.0f64; 3];
+                    let mut scan = |ia: usize, ib: usize, ic: usize| {
+                        let g = (ia * n2 + ib) * n3 + ic;
+                        maxabs[0] = maxabs[0].max(ex[g].abs());
+                        maxabs[1] = maxabs[1].max(ey[g].abs());
+                        maxabs[2] = maxabs[2].max(ez[g].abs());
+                    };
+                    // the ghost shell (window minus brick), covered
+                    // disjointly as ghost-x × win-y × win-z, then
+                    // brick-x × ghost-y × win-z, then brick-x × brick-y
+                    // × ghost-z; halo_windows puts the low-side ghosts
+                    // first in window order, so each dimension's ghost
+                    // run is the window's leading len - brick_len indices
+                    let gx = win[0].len - brick[0].len();
+                    let gy = win[1].len - brick[1].len();
+                    let gz = win[2].len - brick[2].len();
+                    for ia in win[0].iter().take(gx) {
+                        for ib in win[1].iter() {
+                            for ic in win[2].iter() {
+                                scan(ia, ib, ic);
+                            }
+                        }
+                    }
+                    for ia in brick[0].clone() {
+                        for ib in win[1].iter().take(gy) {
+                            for ic in win[2].iter() {
+                                scan(ia, ib, ic);
+                            }
+                        }
+                    }
+                    for ia in brick[0].clone() {
+                        for ib in brick[1].clone() {
+                            for ic in win[2].iter().take(gz) {
+                                scan(ia, ib, ic);
+                            }
+                        }
+                    }
+                    for (sc, ma) in scales.iter_mut().zip(&maxabs) {
+                        *sc = spec.resolve(*ma, 1);
+                    }
+                }
+                // owner-computes, pre-binned: the sites whose stencil
+                // base this brick holds, in ascending site order
+                for &iu in bins.owned(r) {
+                    let i = iu as usize;
+                    let o = i * 3 * MAX_ORDER;
+                    let f = if dc.quantized && !stencil_inside(si, o, p, brick) {
+                        gather_site_ghost(
+                            si,
+                            sw,
+                            o,
+                            p,
+                            n2,
+                            n3,
+                            ex,
+                            ey,
+                            ez,
+                            brick,
+                            &scales,
+                            &mut sat_local,
+                        )
+                    } else {
+                        gather_site(si, sw, o, p, n2, n3, ex, ey, ez)
+                    };
+                    // Safety: each site has exactly one owning brick
+                    unsafe { *outs.index_mut(i) = [q[i] * f[0], q[i] * f[1], q[i] * f[2]] };
+                }
+                // Safety: one saturation slot per brick
+                unsafe { *satv.index_mut(r) = sat_local };
+            });
+            sat += s.halo_sat[..nb].iter().sum::<u64>();
+        } else {
             let outs = SyncSlice::new(out);
             let (si, sw) = (&s.si, &s.sw);
             let field = &s.field;
@@ -561,43 +986,7 @@ impl Pppm {
                 let (ey, ez) = rest.split_at(ntot);
                 for (fi, i) in fo.iter_mut().zip(r.clone()) {
                     let o = i * 3 * MAX_ORDER;
-                    let (ix, wx) = (&si[o..o + p], &sw[o..o + p]);
-                    let (iy, wy) = (
-                        &si[o + MAX_ORDER..o + MAX_ORDER + p],
-                        &sw[o + MAX_ORDER..o + MAX_ORDER + p],
-                    );
-                    let (iz, wz) = (
-                        &si[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
-                        &sw[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
-                    );
-                    let z0 = iz[0] as usize;
-                    let zc = iz[p - 1] as usize == z0 + p - 1;
-                    let mut f = [0.0f64; 3];
-                    for (ia, wa) in ix.iter().zip(wx) {
-                        let rowx = *ia as usize * n2;
-                        for (ib, wb) in iy.iter().zip(wy) {
-                            let w = wa * wb;
-                            let row = (rowx + *ib as usize) * n3;
-                            if zc {
-                                let (dx, dy, dz) = zline_dot3(
-                                    &ex[row + z0..row + z0 + p],
-                                    &ey[row + z0..row + z0 + p],
-                                    &ez[row + z0..row + z0 + p],
-                                    wz,
-                                );
-                                f[0] += w * dx;
-                                f[1] += w * dy;
-                                f[2] += w * dz;
-                            } else {
-                                for (ic, wc) in iz.iter().zip(wz) {
-                                    let g = row + *ic as usize;
-                                    f[0] += w * wc * ex[g];
-                                    f[1] += w * wc * ey[g];
-                                    f[2] += w * wc * ez[g];
-                                }
-                            }
-                        }
-                    }
+                    let f = gather_site(si, sw, o, p, n2, n3, ex, ey, ez);
                     *fi = [q[i] * f[0], q[i] * f[1], q[i] * f[2]];
                 }
             });
@@ -667,6 +1056,143 @@ impl Pppm {
             }
         }
     }
+}
+
+/// True when a site's full 3-D stencil footprint lies inside the brick
+/// (no ghost reads needed for its gather).
+#[inline]
+fn stencil_inside(si: &[u32], o: usize, p: usize, brick: &[Range<usize>; 3]) -> bool {
+    (0..3).all(|d| {
+        si[o + d * MAX_ORDER..o + d * MAX_ORDER + p]
+            .iter()
+            .all(|&i| brick[d].contains(&(i as usize)))
+    })
+}
+
+/// One site's field gather, `F_i / q_i = sum_g w_i(g) * E(g)`, separable
+/// in z with the contiguous-line fast path.  Shared verbatim by the
+/// global gather and the interior of the decomposed per-brick gather —
+/// which is what makes the slab gather bit-identical to the global one
+/// when the halo payload is exact f64.
+#[inline]
+fn gather_site(
+    si: &[u32],
+    sw: &[f64],
+    o: usize,
+    p: usize,
+    n2: usize,
+    n3: usize,
+    ex: &[f64],
+    ey: &[f64],
+    ez: &[f64],
+) -> [f64; 3] {
+    let (ix, wx) = (&si[o..o + p], &sw[o..o + p]);
+    let (iy, wy) = (
+        &si[o + MAX_ORDER..o + MAX_ORDER + p],
+        &sw[o + MAX_ORDER..o + MAX_ORDER + p],
+    );
+    let (iz, wz) = (
+        &si[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+        &sw[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+    );
+    let z0 = iz[0] as usize;
+    let zc = iz[p - 1] as usize == z0 + p - 1;
+    let mut f = [0.0f64; 3];
+    for (ia, wa) in ix.iter().zip(wx) {
+        let rowx = *ia as usize * n2;
+        for (ib, wb) in iy.iter().zip(wy) {
+            let w = wa * wb;
+            let row = (rowx + *ib as usize) * n3;
+            if zc {
+                let (dx, dy, dz) = zline_dot3(
+                    &ex[row + z0..row + z0 + p],
+                    &ey[row + z0..row + z0 + p],
+                    &ez[row + z0..row + z0 + p],
+                    wz,
+                );
+                f[0] += w * dx;
+                f[1] += w * dy;
+                f[2] += w * dz;
+            } else {
+                for (ic, wc) in iz.iter().zip(wz) {
+                    let g = row + *ic as usize;
+                    f[0] += w * wc * ex[g];
+                    f[1] += w * wc * ey[g];
+                    f[2] += w * wc * ez[g];
+                }
+            }
+        }
+    }
+    f
+}
+
+/// Round one ghost field value through the int32 halo payload (quantize
+/// then dequantize), counting saturations like the ring reduction does.
+#[inline]
+fn ghost_roundtrip(v: f64, scale: f64, sat: &mut u64) -> f64 {
+    let (qv, saturated) = quant::quantize(v, scale);
+    *sat += saturated as u64;
+    quant::dequantize(qv as i64, scale)
+}
+
+/// One site's field gather when its stencil crosses the owning brick's
+/// boundary under a *quantized* halo: interior points read the exact
+/// field, ghost points read values rounded through the int32 payload at
+/// the brick's per-component scale.  (Per-site arithmetic stays private,
+/// so thread-count determinism is unaffected.)
+#[inline]
+fn gather_site_ghost(
+    si: &[u32],
+    sw: &[f64],
+    o: usize,
+    p: usize,
+    n2: usize,
+    n3: usize,
+    ex: &[f64],
+    ey: &[f64],
+    ez: &[f64],
+    brick: &[Range<usize>; 3],
+    scales: &[f64; 3],
+    sat: &mut u64,
+) -> [f64; 3] {
+    let (ix, wx) = (&si[o..o + p], &sw[o..o + p]);
+    let (iy, wy) = (
+        &si[o + MAX_ORDER..o + MAX_ORDER + p],
+        &sw[o + MAX_ORDER..o + MAX_ORDER + p],
+    );
+    let (iz, wz) = (
+        &si[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+        &sw[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+    );
+    let mut f = [0.0f64; 3];
+    for (ia, wa) in ix.iter().zip(wx) {
+        let ia = *ia as usize;
+        let in_x = brick[0].contains(&ia);
+        let rowx = ia * n2;
+        for (ib, wb) in iy.iter().zip(wy) {
+            let ib = *ib as usize;
+            let in_xy = in_x && brick[1].contains(&ib);
+            let w = wa * wb;
+            let row = (rowx + ib) * n3;
+            for (ic, wc) in iz.iter().zip(wz) {
+                let ic = *ic as usize;
+                let g = row + ic;
+                let (vx, vy, vz) = if in_xy && brick[2].contains(&ic) {
+                    (ex[g], ey[g], ez[g])
+                } else {
+                    (
+                        ghost_roundtrip(ex[g], scales[0], sat),
+                        ghost_roundtrip(ey[g], scales[1], sat),
+                        ghost_roundtrip(ez[g], scales[2], sat),
+                    )
+                };
+                f[0] += w * wc * vx;
+                f[1] += w * wc * vy;
+                f[2] += w * wc * vz;
+            }
+        }
+    }
+    f
 }
 
 /// z-line spread kernel for the contiguous (non-wrapping) case:

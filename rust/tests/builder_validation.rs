@@ -125,6 +125,7 @@ fn bad_dist_ranks_are_rejected() {
             alpha: 0.3,
             ranks: [0, 2, 2],
             quantized: false,
+            matvec: false,
         })
         .build()
         .expect_err("ranks[0] = 0 must be rejected");
@@ -137,6 +138,7 @@ fn bad_dist_ranks_are_rejected() {
             alpha: 0.3,
             ranks: [1, 1, 4096],
             quantized: false,
+            matvec: false,
         })
         .build()
         .expect_err("oversubscribed torus dimension must be rejected");
@@ -149,6 +151,7 @@ fn bad_dist_ranks_are_rejected() {
             alpha: 0.3,
             ranks: [2, 2, 1],
             quantized: false,
+            matvec: true,
         })
         .build()
         .expect("valid dist configuration must build");

@@ -2,18 +2,27 @@
 //! (`--kspace dist`, `distpppm::DistPppm`) against the serial PPPM solver:
 //!
 //!  * the degenerate `1,1,1` torus must be *bit-identical* to PPPM over
-//!    full MD trajectories — every dimension takes the local-FFT fast path
-//!    and the spread/Poisson/gather kernels are literally shared;
-//!  * non-trivial tori (float ring) must match within the Table-1
-//!    tolerances the kspace_parity suite uses for PPPM-vs-Ewald;
-//!  * the float ring is bit-for-bit invariant to the rank count for a
-//!    fixed set of decomposed dimensions (a property test mirroring
-//!    `thread_invariance`);
-//!  * the int32-quantized ring stays within Table-1 Mixed-int tolerances.
+//!    full MD trajectories on both line strategies — every dimension
+//!    takes the local-FFT path, halos are empty, and the
+//!    spread/Poisson/gather kernels are literally shared;
+//!  * with the default rank-local FFT **fast path** and exact f64 rings,
+//!    *any* torus is bit-identical to PPPM end to end: the f64 ring
+//!    closes with the transform of the column-order-reassembled line,
+//!    and the slab spread/gather with f64 ghost halos is bit-transparent
+//!    (propchecked over random tori AND spline orders — the ghost-halo
+//!    parity contract);
+//!  * the paper-faithful **matvec** path (`--dist-matvec`) matches PPPM
+//!    within the Table-1 tolerances the kspace_parity suite uses, and
+//!    its f64 ring is bit-for-bit invariant to the rank count for a
+//!    fixed set of decomposed dimensions;
+//!  * the int32-quantized ring (+ quantized ghost halos) stays within
+//!    Table-1 Mixed-int tolerances;
+//!  * `DPLR_TEST_RANKS=X,Y,Z` re-runs the engine-level checks at an
+//!    extra torus shape (the CI matrix passes a non-uniform `4,3,2`).
 //!
 //! Runs from a clean checkout (synthetic seeded weights, no artifacts).
 
-use dplr::distpppm::{DistPppm, RingPayload};
+use dplr::distpppm::{DistPppm, LinePath, RingPayload};
 use dplr::engine::{KspaceConfig, Simulation, StepTimes};
 use dplr::md::units::{Q_H, Q_O, Q_WC};
 use dplr::md::water::water_box;
@@ -38,11 +47,12 @@ fn make_sim(kspace: KspaceConfig) -> Simulation {
         .expect("valid configuration")
 }
 
-fn dist_cfg(ranks: [usize; 3], quantized: bool) -> KspaceConfig {
+fn dist_cfg(ranks: [usize; 3], quantized: bool, matvec: bool) -> KspaceConfig {
     KspaceConfig::Dist {
         alpha: ALPHA,
         ranks,
         quantized,
+        matvec,
     }
 }
 
@@ -56,27 +66,79 @@ fn trajectory_bits(sim: &mut Simulation, steps: usize) -> Vec<(u64, u64, u64)> {
     trace
 }
 
+/// The extra torus shape the CI matrix exercises (`DPLR_TEST_RANKS`),
+/// with a non-trivial default for local runs.
+fn env_ranks() -> [usize; 3] {
+    let s = std::env::var("DPLR_TEST_RANKS").unwrap_or_else(|_| "2,3,2".to_string());
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse().expect("DPLR_TEST_RANKS expects X,Y,Z"))
+        .collect();
+    assert_eq!(parts.len(), 3, "DPLR_TEST_RANKS expects X,Y,Z, got '{s}'");
+    [parts[0], parts[1], parts[2]]
+}
+
 #[test]
 fn degenerate_torus_trajectory_bit_identical_to_pppm() {
     // the acceptance check of the seam: `--kspace dist --ranks 1,1,1`
     // must be indistinguishable from `--kspace pppm`, to the last bit,
-    // over full MD steps (nlist + DW + kspace + DP + integrate)
+    // over full MD steps (nlist + DW + kspace + DP + integrate), on both
+    // line strategies
     let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
-    let mut b = make_sim(dist_cfg([1, 1, 1], false));
     assert_eq!(a.kspace_name(), "pppm");
-    assert_eq!(b.kspace_name(), "dist");
     let ta = trajectory_bits(&mut a, 5);
-    let tb = trajectory_bits(&mut b, 5);
-    assert_eq!(ta, tb, "1,1,1 torus diverged from serial PPPM");
+    for matvec in [false, true] {
+        let mut b = make_sim(dist_cfg([1, 1, 1], false, matvec));
+        assert_eq!(b.kspace_name(), "dist");
+        let tb = trajectory_bits(&mut b, 5);
+        assert_eq!(ta, tb, "1,1,1 torus (matvec={matvec}) diverged from PPPM");
+    }
 }
 
 #[test]
-fn decomposed_torus_single_evaluation_parity() {
+fn fast_path_trajectory_bit_identical_to_pppm_at_any_torus() {
+    // the tentpole contract end to end: fast path + f64 rings + f64
+    // ghost halos make every stage bit-transparent, so a decomposed
+    // torus reproduces serial PPPM trajectories to the last bit
+    let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
+    let ta = trajectory_bits(&mut a, 5);
+    for ranks in [[2usize, 2, 1], [2, 3, 2]] {
+        let mut b = make_sim(dist_cfg(ranks, false, false));
+        let tb = trajectory_bits(&mut b, 5);
+        assert_eq!(ta, tb, "{ranks:?} fast path diverged from serial PPPM");
+    }
+}
+
+#[test]
+fn extra_rank_shape_from_env_matches_pppm() {
+    // the CI matrix runs this suite once more with DPLR_TEST_RANKS=4,3,2
+    // (a non-uniform torus); locally it defaults to 2,3,2
+    let ranks = env_ranks();
+    let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
+    let ta = trajectory_bits(&mut a, 3);
+    // fast path: bit-identical
+    let mut b = make_sim(dist_cfg(ranks, false, false));
+    let tb = trajectory_bits(&mut b, 3);
+    assert_eq!(ta, tb, "{ranks:?} fast path diverged from serial PPPM");
+    // matvec path: Table-1 scale tolerances (trajectories drift apart at
+    // rounding level, so only the conserved quantity is comparable)
+    let mut c = make_sim(dist_cfg(ranks, false, true));
+    for (step, (_, _, ca)) in ta.iter().enumerate() {
+        c.step().unwrap();
+        let o = c.last_obs.unwrap();
+        let (cons_a, cons_c) = (f64::from_bits(*ca), o.conserved);
+        let gap = (cons_a - cons_c).abs() / cons_a.abs().max(1.0);
+        assert!(gap < 1e-4, "{ranks:?} step {step}: conserved gap {gap}");
+    }
+}
+
+#[test]
+fn matvec_decomposed_torus_single_evaluation_parity() {
     // Table-1 scale tolerances (the same thresholds kspace_parity holds
-    // PPPM-vs-Ewald to); the float ring is far tighter in practice
+    // PPPM-vs-Ewald to); the float matvec ring is far tighter in practice
     let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
     for ranks in [[2usize, 2, 1], [2, 3, 2]] {
-        let mut b = make_sim(dist_cfg(ranks, false));
+        let mut b = make_sim(dist_cfg(ranks, false, true));
         let mut ta = StepTimes::default();
         let mut tb = StepTimes::default();
         let (fa, _, e_gt_a) = a.evaluate_forces(&mut ta).unwrap();
@@ -101,9 +163,9 @@ fn decomposed_torus_single_evaluation_parity() {
 }
 
 #[test]
-fn decomposed_torus_trajectories_track_pppm() {
+fn matvec_decomposed_trajectories_track_pppm() {
     let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
-    let mut b = make_sim(dist_cfg([2, 2, 1], false));
+    let mut b = make_sim(dist_cfg([2, 2, 1], false, true));
     for step in 0..5 {
         a.step().unwrap();
         b.step().unwrap();
@@ -121,38 +183,42 @@ fn decomposed_torus_trajectories_track_pppm() {
 #[test]
 fn quantized_ring_single_evaluation_within_table1_tolerance() {
     // the Mixed-int numerics through the engine path: per-rank rounding +
-    // exact integer ring sums (pppm::quant) on a 2x3x2 torus
+    // exact integer ring sums (pppm::quant) on a 2x3x2 torus, with the
+    // ghost-halo field exchange quantized too — on both line strategies
     let mut a = make_sim(KspaceConfig::PppmAuto { alpha: ALPHA });
-    let mut b = make_sim(dist_cfg([2, 3, 2], true));
-    let mut ta = StepTimes::default();
-    let mut tb = StepTimes::default();
-    let (fa, _, e_gt_a) = a.evaluate_forces(&mut ta).unwrap();
-    let (fb, _, e_gt_b) = b.evaluate_forces(&mut tb).unwrap();
-    let natoms = (NMOL * 3) as f64;
-    let de = (e_gt_a - e_gt_b).abs() / natoms;
-    assert!(de < 1e-3, "quantized E_Gt per-atom gap {de}");
-    let mut worst: f64 = 0.0;
-    for (x, y) in fa.iter().zip(&fb) {
-        for d in 0..3 {
-            worst = worst.max((x[d] - y[d]).abs());
+    for matvec in [false, true] {
+        let mut b = make_sim(dist_cfg([2, 3, 2], true, matvec));
+        let mut ta = StepTimes::default();
+        let mut tb = StepTimes::default();
+        let (fa, _, e_gt_a) = a.evaluate_forces(&mut ta).unwrap();
+        let (fb, _, e_gt_b) = b.evaluate_forces(&mut tb).unwrap();
+        let natoms = (NMOL * 3) as f64;
+        let de = (e_gt_a - e_gt_b).abs() / natoms;
+        assert!(de < 1e-3, "matvec={matvec}: quantized E_Gt per-atom gap {de}");
+        let mut worst: f64 = 0.0;
+        for (x, y) in fa.iter().zip(&fb) {
+            for d in 0..3 {
+                worst = worst.max((x[d] - y[d]).abs());
+            }
         }
+        assert!(worst < 5e-2, "matvec={matvec}: worst quantized gap {worst}");
+        assert_eq!(b.kspace_saturations(), 0, "auto scale must not saturate");
     }
-    assert!(worst < 5e-2, "worst quantized force gap {worst}");
-    assert_eq!(b.kspace_saturations(), 0, "auto scale must not saturate");
 }
 
 #[test]
-fn engine_trajectory_bit_identical_across_rank_counts() {
-    // rank-count invariance through the full engine: two tori that
-    // decompose the same set of dimensions (here: all three) must give
-    // bit-identical trajectories — the distributed analogue of the
-    // `--threads` invariance contract
-    let t222 = trajectory_bits(&mut make_sim(dist_cfg([2, 2, 2], false)), 5);
-    let t432 = trajectory_bits(&mut make_sim(dist_cfg([4, 3, 2], false)), 5);
+fn matvec_engine_trajectory_bit_identical_across_rank_counts() {
+    // rank-count invariance through the full engine on the faithful
+    // matvec path: two tori that decompose the same set of dimensions
+    // (here: all three) must give bit-identical trajectories — the
+    // distributed analogue of the `--threads` invariance contract.  (On
+    // the fast path the property is subsumed: every torus equals PPPM.)
+    let t222 = trajectory_bits(&mut make_sim(dist_cfg([2, 2, 2], false, true)), 5);
+    let t432 = trajectory_bits(&mut make_sim(dist_cfg([4, 3, 2], false, true)), 5);
     assert_eq!(t222, t432, "trajectories diverged between rank counts");
 }
 
-/// A DPLR-style site set for the solver-level property test.
+/// A DPLR-style site set for the solver-level property tests.
 fn water_sites(nmol: usize, seed: u64) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
     let sys = water_box(nmol, seed);
     let mut pos = sys.pos.clone();
@@ -171,13 +237,19 @@ fn water_sites(nmol: usize, seed: u64) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
 }
 
 #[test]
-fn rank_invariance_property_on_random_tori() {
+fn matvec_rank_invariance_property_on_random_tori() {
     // property test mirroring thread_invariance: any torus with all three
     // dimensions decomposed (>= 2 ranks) produces bit-identical energy and
-    // forces in the float ring, regardless of the per-dimension counts
+    // forces in the float matvec ring, regardless of per-dimension counts
     let (pos, q, box_len) = water_sites(16, 5);
     let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
-    let mut reference = DistPppm::new(cfg.clone(), box_len, [2, 2, 2], RingPayload::F64);
+    let mut reference = DistPppm::with_line_path(
+        cfg.clone(),
+        box_len,
+        [2, 2, 2],
+        RingPayload::F64,
+        LinePath::Matvec,
+    );
     let (e_ref, f_ref) = reference.energy_forces(&pos, &q);
     check(
         0xD157,
@@ -190,7 +262,13 @@ fn rank_invariance_property_on_random_tori() {
             ]
         },
         |&ranks| {
-            let mut solver = DistPppm::new(cfg.clone(), box_len, ranks, RingPayload::F64);
+            let mut solver = DistPppm::with_line_path(
+                cfg.clone(),
+                box_len,
+                ranks,
+                RingPayload::F64,
+                LinePath::Matvec,
+            );
             let (e, f) = solver.energy_forces(&pos, &q);
             if e.to_bits() != e_ref.to_bits() {
                 return Err(format!("energy drifted: {e} vs {e_ref} for {ranks:?}"));
@@ -208,42 +286,100 @@ fn rank_invariance_property_on_random_tori() {
 }
 
 #[test]
+fn halo_spread_gather_bit_parity_on_random_tori_and_orders() {
+    // the ghost-halo parity contract: slab-scoped spread/gather (owner-
+    // computes bricks + order-wide f64 halos) must equal the global
+    // spread/gather BIT-FOR-BIT — with the fast-path f64 ring the whole
+    // decomposed solve must therefore equal serial PPPM exactly, over
+    // random tori AND random spline orders
+    let (pos, q, box_len) = water_sites(16, 5);
+    check(
+        0x4A10,
+        10,
+        |r: &mut Rng| {
+            (
+                [
+                    1 + r.below(6), // x ranks in 1..=6 (grid 12)
+                    1 + r.below(8), // y ranks in 1..=8 (grid 18)
+                    1 + r.below(6), // z ranks in 1..=6 (grid 12)
+                ],
+                3 + r.below(5), // spline order in 3..=7
+            )
+        },
+        |&(ranks, order)| {
+            let cfg = PppmConfig::new([12, 18, 12], order, 0.3);
+            let mut global = Pppm::new(cfg.clone(), box_len);
+            let (e_ref, f_ref) = global.energy_forces(&pos, &q);
+            let mut dist = DistPppm::new(cfg, box_len, ranks, RingPayload::F64);
+            let (e, f) = dist.energy_forces(&pos, &q);
+            if e.to_bits() != e_ref.to_bits() {
+                return Err(format!(
+                    "energy drifted: {e} vs {e_ref} for {ranks:?} order {order}"
+                ));
+            }
+            for (i, (a, b)) in f_ref.iter().zip(&f).enumerate() {
+                for d in 0..3 {
+                    if a[d].to_bits() != b[d].to_bits() {
+                        return Err(format!(
+                            "force[{i}][{d}] drifted for {ranks:?} order {order}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn dist_solver_is_thread_invariant_end_to_end() {
-    // the emulated ranks shard over the worker pool; results must be
-    // bit-identical for any pool size, like every other hot path
+    // the emulated ranks and rank bricks shard over the worker pool;
+    // results must be bit-identical for any pool size, on both paths
     use dplr::pool::ThreadPool;
     use std::sync::Arc;
     let (pos, q, box_len) = water_sites(16, 5);
     let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
-    let run = |threads: usize| {
-        let mut solver = DistPppm::new(cfg.clone(), box_len, [2, 3, 2], RingPayload::F64);
-        solver.set_pool(Arc::new(ThreadPool::new(threads)));
-        solver.energy_forces(&pos, &q)
-    };
-    let (e1, f1) = run(1);
-    for threads in [2usize, 4] {
-        let (en, fnn) = run(threads);
-        assert_eq!(e1.to_bits(), en.to_bits(), "E at threads={threads}");
-        for (a, b) in f1.iter().zip(&fnn) {
-            for d in 0..3 {
-                assert_eq!(a[d].to_bits(), b[d].to_bits(), "F at threads={threads}");
+    for path in [LinePath::Matvec, LinePath::LocalFft] {
+        let run = |threads: usize| {
+            let mut solver =
+                DistPppm::with_line_path(cfg.clone(), box_len, [2, 3, 2], RingPayload::F64, path);
+            solver.set_pool(Arc::new(ThreadPool::new(threads)));
+            solver.energy_forces(&pos, &q)
+        };
+        let (e1, f1) = run(1);
+        for threads in [2usize, 4] {
+            let (en, fnn) = run(threads);
+            assert_eq!(e1.to_bits(), en.to_bits(), "E at threads={threads}");
+            for (a, b) in f1.iter().zip(&fnn) {
+                for d in 0..3 {
+                    assert_eq!(a[d].to_bits(), b[d].to_bits(), "F at threads={threads}");
+                }
             }
         }
     }
 }
 
 #[test]
-fn serial_pppm_reference_is_close_to_decomposed_solver() {
+fn serial_pppm_reference_is_close_to_matvec_decomposed_solver() {
     // sanity anchor for the engine-level tolerances above: at the solver
-    // level the float ring tracks the FFT-based PPPM essentially to
-    // rounding (the two differ only in transform arithmetic grouping)
+    // level the float matvec ring tracks the FFT-based PPPM essentially
+    // to rounding (the two differ only in transform arithmetic grouping)
     let (pos, q, box_len) = water_sites(16, 5);
     let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
     let mut pppm = Pppm::new(cfg.clone(), box_len);
     let (e_ref, f_ref) = pppm.energy_forces(&pos, &q);
-    let mut dist = DistPppm::new(cfg, box_len, [3, 3, 3], RingPayload::F64);
+    let mut dist = DistPppm::with_line_path(
+        cfg,
+        box_len,
+        [3, 3, 3],
+        RingPayload::F64,
+        LinePath::Matvec,
+    );
     let (e, f) = dist.energy_forces(&pos, &q);
-    assert!((e - e_ref).abs() < 1e-9 * e_ref.abs().max(1.0), "{e} vs {e_ref}");
+    assert!(
+        (e - e_ref).abs() < 1e-9 * e_ref.abs().max(1.0),
+        "{e} vs {e_ref}"
+    );
     for (a, b) in f_ref.iter().zip(&f) {
         for d in 0..3 {
             assert!((a[d] - b[d]).abs() < 1e-8);

@@ -153,9 +153,13 @@ def main() -> int:
     print(f"[bench-compare] wrote {args.out}")
 
     if missing_in_baseline or stale_in_baseline:
+        refresh_cmd = ("python3 scripts/refresh_baseline.py --baseline "
+                       f"{args.baseline} {' '.join(args.inputs)}")
         print("[bench-compare] key delta vs baseline (all benches, one "
-              "pass — refresh wall-time sections via the bench-baseline "
-              "job / scripts/refresh_baseline.py):")
+              "pass).  Refresh the wall-time sections by running the "
+              "bench-baseline workflow_dispatch job on the reference "
+              "runner, or locally with exactly:")
+        print(f"  {refresh_cmd}")
         for key in missing_in_baseline:
             print(f"  missing in baseline: {key}")
         for key in stale_in_baseline:
