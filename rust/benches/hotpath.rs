@@ -10,7 +10,9 @@
 //! (compared against BENCH_baseline.json by scripts/bench_compare.py).
 //! Runs with artifacts when present, otherwise with synthetic seeded
 //! weights (same architecture).
-use dplr::md::water::water_box;
+use dplr::engine::{KspaceConfig, ReplicaSet, Simulation};
+use dplr::md::units::ns_per_day;
+use dplr::md::water::{replica_boxes, water_box};
 use dplr::native::NativeModel;
 use dplr::neighbor::{build_cells_par, build_exact, NlistParams};
 use dplr::pool::ThreadPool;
@@ -193,6 +195,70 @@ fn main() {
             break;
         }
     }
+
+    // ---- replica ensemble: one batched ReplicaSet step vs N sequential
+    // single-replica Simulation steps (same systems, same seeds: the
+    // batched path streams the model weights once per step instead of
+    // once per replica).  Fixed at 1 worker thread so the key measures
+    // batching, not the pool (the scaling section above covers threads).
+    let rep_nmol = if quick { 16 } else { 32 };
+    let dt_fs = 0.5;
+    println!("\n=== replica ensemble: batched set vs sequential runs ({rep_nmol}-molecule boxes) ===");
+    let mut t_batched_32 = 0.0;
+    for nrep in [1usize, 8, 32] {
+        let mut set = ReplicaSet::builder(replica_boxes(rep_nmol, nrep, 11))
+            .dt_fs(dt_fs)
+            .thermostat(300.0, 0.5)
+            .seed(5)
+            .threads(1)
+            .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+            .short_range(Box::new(NativeModel::synthetic(20250710)))
+            .build()
+            .expect("replica set");
+        let t = summarize(&time_reps(1, reps, || {
+            set.step().expect("replica step");
+        }))
+        .p50;
+        record(&format!("replica_batched_n{nrep}"), t);
+        if nrep == 32 {
+            t_batched_32 = t;
+        }
+        println!(
+            "replica set, n={nrep:>2}: {:8.2} ms/step   {:8.3} ns/day aggregate",
+            t * 1e3,
+            nrep as f64 * ns_per_day(t, dt_fs)
+        );
+    }
+    // sequential baseline: same 32 trajectories, one Simulation each
+    // (replica r seeded 5 + r, exactly what ReplicaSetBuilder::seed(5) does)
+    let mut sims: Vec<Simulation> = replica_boxes(rep_nmol, 32, 11)
+        .into_iter()
+        .enumerate()
+        .map(|(r, sys)| {
+            Simulation::builder(sys)
+                .dt_fs(dt_fs)
+                .thermostat(300.0, 0.5)
+                .seed(5 + r as u64)
+                .threads(1)
+                .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+                .short_range(Box::new(NativeModel::synthetic(20250710)))
+                .build()
+                .expect("sequential sim")
+        })
+        .collect();
+    let t_seq = summarize(&time_reps(1, reps, || {
+        for sim in sims.iter_mut() {
+            sim.step().expect("sequential step");
+        }
+    }))
+    .p50;
+    record("replica_seq_n32", t_seq);
+    println!(
+        "32 x 1 sequential : {:8.2} ms/step   {:8.3} ns/day aggregate   batched speedup {:.2}x",
+        t_seq * 1e3,
+        32.0 * ns_per_day(t_seq, dt_fs),
+        t_seq / t_batched_32
+    );
 
     if let Some(path) = args.str_opt("json") {
         // --tag NAME suffixes the bench name (e.g. `--tag simd` writes

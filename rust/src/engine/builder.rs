@@ -21,9 +21,9 @@
 //! # }
 //! ```
 
-use super::observe::{observer_fn, Observer};
+use super::observe::{observer_fn, Observer, StepContext};
 use super::traits::{KspaceSolver, ShortRangeModel};
-use super::{SimConfig, Simulation, StepObservables, StepTimes};
+use super::{SimConfig, Simulation};
 use crate::distpppm::{DistPppm, LinePath, RingPayload};
 use crate::ewald::EwaldRecipSolver;
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
@@ -88,6 +88,80 @@ pub(crate) fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Construct and validate a k-space solver from the declarative
+/// [`KspaceConfig`] (shared between [`SimulationBuilder`] and
+/// [`super::ReplicaSetBuilder`], so both reject the same bad meshes with
+/// the same errors).
+pub(crate) fn build_kspace(
+    cfg: KspaceConfig,
+    box_len: [f64; 3],
+) -> Result<(Box<dyn KspaceSolver>, Option<PppmConfig>)> {
+    Ok(match cfg {
+        KspaceConfig::Pppm(cfg) => {
+            cfg.validate()?;
+            (
+                Box::new(Pppm::new(cfg.clone(), box_len)) as Box<dyn KspaceSolver>,
+                Some(cfg),
+            )
+        }
+        KspaceConfig::PppmAuto { alpha } => {
+            let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
+            cfg.validate()?;
+            (Box::new(Pppm::new(cfg.clone(), box_len)), Some(cfg))
+        }
+        KspaceConfig::Dist {
+            alpha,
+            ranks,
+            quantized,
+            matvec,
+        } => {
+            let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
+            cfg.validate()?;
+            for (d, &r) in ranks.iter().enumerate() {
+                if r == 0 {
+                    bail!("dist kspace: ranks[{d}] must be >= 1");
+                }
+                if r > cfg.grid[d] {
+                    bail!(
+                        "dist kspace: ranks[{d}] ({r}) exceeds mesh dimension {} — \
+                         a rank would own an empty brick",
+                        cfg.grid[d]
+                    );
+                }
+            }
+            let payload = if quantized {
+                RingPayload::PackedI32
+            } else {
+                RingPayload::F64
+            };
+            let path = if matvec {
+                LinePath::Matvec
+            } else {
+                LinePath::LocalFft
+            };
+            (
+                Box::new(DistPppm::with_line_path(
+                    cfg.clone(),
+                    box_len,
+                    ranks,
+                    payload,
+                    path,
+                )),
+                Some(cfg),
+            )
+        }
+        KspaceConfig::Ewald { alpha, tol } => {
+            if !(alpha.is_finite() && alpha > 0.0) {
+                bail!("ewald alpha must be finite and > 0, got {alpha}");
+            }
+            if !(tol.is_finite() && tol > 0.0 && tol < 1.0) {
+                bail!("ewald truncation tol must be in (0, 1), got {tol}");
+            }
+            (Box::new(EwaldRecipSolver::new(alpha, box_len, tol)), None)
+        }
+    })
+}
+
 /// Fluent builder for [`Simulation`]; see the module docs for a usage
 /// example.  Obtain one via [`Simulation::builder`].
 pub struct SimulationBuilder {
@@ -102,6 +176,7 @@ pub struct SimulationBuilder {
     nlist_max_age: usize,
     threads: Option<usize>,
     observers: Vec<Box<dyn Observer>>,
+    seed: Option<u64>,
 }
 
 impl SimulationBuilder {
@@ -118,6 +193,7 @@ impl SimulationBuilder {
             nlist_max_age: 50,
             threads: None,
             observers: Vec::new(),
+            seed: None,
         }
     }
 
@@ -138,6 +214,23 @@ impl SimulationBuilder {
     /// NVE: no thermostat.
     pub fn nve(mut self) -> Self {
         self.thermostat_tau_ps = None;
+        self
+    }
+
+    /// Target temperature [K] without touching the thermostat coupling
+    /// time (keeps the default tau, or NVE if [`Self::nve`] was called).
+    /// Also the temperature [`Self::seed`] thermalizes at.
+    pub fn temperature(mut self, target_t: f64) -> Self {
+        self.target_t = target_t;
+        self
+    }
+
+    /// Draw Maxwell-Boltzmann velocities at the target temperature from
+    /// this seed at `build()` time (replaces the manual
+    /// `sys.thermalize(t, &mut Rng::new(seed))` preamble; identical
+    /// velocities for identical seed + temperature).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
         self
     }
 
@@ -195,7 +288,7 @@ impl SimulationBuilder {
     /// Attach a closure observer (sugar over [`Self::observer`]).
     pub fn observe<F>(self, f: F) -> Self
     where
-        F: FnMut(u64, &StepTimes, &StepObservables) + 'static,
+        F: FnMut(&StepContext) + 'static,
     {
         self.observer(observer_fn(f))
     }
@@ -219,6 +312,13 @@ impl SimulationBuilder {
                 );
             }
         }
+        if self.seed.is_some() && !(self.target_t.is_finite() && self.target_t > 0.0) {
+            bail!(
+                "seed(..) thermalizes at the target temperature, \
+                 which must be finite and > 0, got {}",
+                self.target_t
+            );
+        }
         let threads = match self.threads {
             Some(0) => bail!("threads must be >= 1, got 0"),
             Some(n) => n,
@@ -227,67 +327,8 @@ impl SimulationBuilder {
         let box_len = self.sys.box_len;
         let pool = Arc::new(ThreadPool::new(threads));
 
-        let (mut kspace, pppm_cfg): (Box<dyn KspaceSolver>, Option<PppmConfig>) = match self.kspace
-        {
-            KspaceChoice::Config(KspaceConfig::Pppm(cfg)) => {
-                cfg.validate()?;
-                (Box::new(Pppm::new(cfg.clone(), box_len)), Some(cfg))
-            }
-            KspaceChoice::Config(KspaceConfig::PppmAuto { alpha }) => {
-                let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
-                cfg.validate()?;
-                (Box::new(Pppm::new(cfg.clone(), box_len)), Some(cfg))
-            }
-            KspaceChoice::Config(KspaceConfig::Dist {
-                alpha,
-                ranks,
-                quantized,
-                matvec,
-            }) => {
-                let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
-                cfg.validate()?;
-                for (d, &r) in ranks.iter().enumerate() {
-                    if r == 0 {
-                        bail!("dist kspace: ranks[{d}] must be >= 1");
-                    }
-                    if r > cfg.grid[d] {
-                        bail!(
-                            "dist kspace: ranks[{d}] ({r}) exceeds mesh dimension {} — \
-                             a rank would own an empty brick",
-                            cfg.grid[d]
-                        );
-                    }
-                }
-                let payload = if quantized {
-                    RingPayload::PackedI32
-                } else {
-                    RingPayload::F64
-                };
-                let path = if matvec {
-                    LinePath::Matvec
-                } else {
-                    LinePath::LocalFft
-                };
-                (
-                    Box::new(DistPppm::with_line_path(
-                        cfg.clone(),
-                        box_len,
-                        ranks,
-                        payload,
-                        path,
-                    )),
-                    Some(cfg),
-                )
-            }
-            KspaceChoice::Config(KspaceConfig::Ewald { alpha, tol }) => {
-                if !(alpha.is_finite() && alpha > 0.0) {
-                    bail!("ewald alpha must be finite and > 0, got {alpha}");
-                }
-                if !(tol.is_finite() && tol > 0.0 && tol < 1.0) {
-                    bail!("ewald truncation tol must be in (0, 1), got {tol}");
-                }
-                (Box::new(EwaldRecipSolver::new(alpha, box_len, tol)), None)
-            }
+        let (mut kspace, pppm_cfg) = match self.kspace {
+            KspaceChoice::Config(cfg) => build_kspace(cfg, box_len)?,
             KspaceChoice::Custom(s) => (s, None),
         };
         kspace.set_pool(pool.clone());
@@ -305,7 +346,11 @@ impl SimulationBuilder {
         let nh = self
             .thermostat_tau_ps
             .map(|tau| NoseHoover::new(self.target_t, tau));
-        let natoms = self.sys.natoms();
+        let mut sys = self.sys;
+        if let Some(seed) = self.seed {
+            sys.thermalize(self.target_t, &mut crate::util::rng::Rng::new(seed));
+        }
+        let natoms = sys.natoms();
         let cfg = SimConfig {
             dt_fs: self.dt_fs,
             target_t: self.target_t,
@@ -323,7 +368,7 @@ impl SimulationBuilder {
             pool,
             vv,
             nh,
-            sys: self.sys,
+            sys,
             cfg,
             nlist: None,
             nlist_o: None,

@@ -15,15 +15,23 @@
 //! [`crate::native::NativeModel`] or the XLA [`PjrtModel`] for the short
 //! range.  A [`Simulation`] is assembled by [`SimulationBuilder`]
 //! (`Simulation::builder(sys)...build()?`), which validates configuration
-//! up front; per-step reporting goes through [`Observer`] hooks instead of
-//! caller-side scaffolding.
+//! up front; per-step reporting goes through [`Observer`] hooks (one
+//! [`StepContext`] per step) instead of caller-side scaffolding.
+//!
+//! For ensemble throughput — N independent trajectories served from one
+//! model — see [`ReplicaSet`] (`ReplicaSet::builder(systems)...build()?`),
+//! which batches the DP/DW evaluations of all replicas into single model
+//! calls while keeping every trajectory bit-identical to a standalone
+//! [`Simulation`] run.
 
 mod builder;
 mod observe;
+mod replica;
 mod traits;
 
 pub use builder::{KspaceConfig, SimulationBuilder};
-pub use observe::{observer_fn, FnObserver, Observer, RecorderState, StepRecorder};
+pub use observe::{observer_fn, FnObserver, Observer, RecorderState, StepContext, StepRecorder};
+pub use replica::{ReplicaSet, ReplicaSetBuilder};
 pub use traits::{KspaceSolver, PjrtModel, ShortRangeModel};
 
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
@@ -352,8 +360,14 @@ impl Simulation {
         times.total = t_total.elapsed().as_secs_f64();
         if self.observing {
             self.observed_steps += 1;
+            let ctx = StepContext {
+                step: self.observed_steps,
+                replica_id: 0,
+                times: &times,
+                obs: &obs,
+            };
             for ob in self.observers.iter_mut() {
-                ob.on_step(self.observed_steps, &times, &obs);
+                ob.on_step(&ctx);
             }
         }
         Ok(times)

@@ -5,8 +5,13 @@
 //! observables every N steps, print progress.  Observers replace that:
 //! attach any number of [`Observer`]s through
 //! [`super::SimulationBuilder::observer`] and the engine calls
-//! `on_step(step, &times, &obs)` after every production step (quench
-//! steps are preparation and are not reported).
+//! `on_step(&ctx)` after every production step (quench steps are
+//! preparation and are not reported).  The [`StepContext`] argument
+//! carries everything a callback can react to — the production step
+//! count, the replica index (always 0 under a single [`super::Simulation`],
+//! the replica id under a [`super::ReplicaSet`]), the wall-time breakdown
+//! and the thermodynamic observables — so one observer implementation
+//! serves both runners unchanged.
 //!
 //! For callbacks whose state the caller needs back after the run, use the
 //! shared-handle [`StepRecorder`] (clone one handle into the builder, keep
@@ -16,13 +21,40 @@
 use super::{StepObservables, StepTimes};
 use std::sync::{Arc, Mutex};
 
+/// Everything an [`Observer`] sees about one production step.
+///
+/// Replaces the old positional `on_step(step, &times, &obs)` arguments so
+/// the same observer runs under both [`super::Simulation`] and
+/// [`super::ReplicaSet`] (which adds the replica axis), and so future
+/// fields extend the struct instead of breaking every implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct StepContext<'a> {
+    /// 1-based count of production steps delivered to observers so far —
+    /// quench steps are suppressed *and not counted*, so `step % N == 0`
+    /// samples every N production steps regardless of how long the
+    /// preparation phase ran.
+    pub step: u64,
+    /// Which replica this callback reports on: always 0 under a
+    /// single-replica [`super::Simulation`]; the replica index under a
+    /// [`super::ReplicaSet`] (one `on_step` per replica per step).
+    pub replica_id: usize,
+    /// Wall-time breakdown of the step.  Under a `ReplicaSet` this is the
+    /// replica's *attributed share*: per-replica stages (k-space, nlist)
+    /// are measured individually, batched stages (DW/DP over the stacked
+    /// replica rows) are split evenly, so summing over all replicas of a
+    /// step recovers the whole-set wall time.
+    pub times: &'a StepTimes,
+    /// Thermodynamic observables (energies, temperature, conserved
+    /// quantity) of this replica after the step.
+    pub obs: &'a StepObservables,
+}
+
 /// Per-step callback on the production run loop.
 pub trait Observer {
-    /// `step` is the 1-based count of production steps delivered to
-    /// observers so far — quench steps are suppressed *and not counted*,
-    /// so `step % N == 0` samples every N production steps regardless of
-    /// how long the preparation phase ran.
-    fn on_step(&mut self, step: u64, times: &StepTimes, obs: &StepObservables);
+    /// Called once per production step — and, under a
+    /// [`super::ReplicaSet`], once per replica per step, with
+    /// [`StepContext::replica_id`] identifying the trajectory.
+    fn on_step(&mut self, ctx: &StepContext);
 }
 
 /// Closure adapter (kept as a named struct rather than a blanket
@@ -30,16 +62,16 @@ pub trait Observer {
 /// coherence overlap with the closure impl).
 pub struct FnObserver<F>(pub F);
 
-impl<F: FnMut(u64, &StepTimes, &StepObservables)> Observer for FnObserver<F> {
-    fn on_step(&mut self, step: u64, times: &StepTimes, obs: &StepObservables) {
-        (self.0)(step, times, obs)
+impl<F: FnMut(&StepContext)> Observer for FnObserver<F> {
+    fn on_step(&mut self, ctx: &StepContext) {
+        (self.0)(ctx)
     }
 }
 
-/// Box a closure as an observer: `builder.observer(observer_fn(|s, t, o| ...))`.
+/// Box a closure as an observer: `builder.observer(observer_fn(|ctx| ...))`.
 pub fn observer_fn<F>(f: F) -> Box<dyn Observer>
 where
-    F: FnMut(u64, &StepTimes, &StepObservables) + 'static,
+    F: FnMut(&StepContext) + 'static,
 {
     Box::new(FnObserver(f))
 }
@@ -55,10 +87,30 @@ pub struct RecorderState {
     pub last: Option<StepObservables>,
 }
 
+impl RecorderState {
+    fn record(&mut self, ctx: &StepContext) {
+        self.totals.add(ctx.times);
+        self.steps += 1;
+        self.last = Some(*ctx.obs);
+    }
+}
+
+#[derive(Default)]
+struct RecorderInner {
+    agg: RecorderState,
+    per_replica: Vec<RecorderState>,
+}
+
 /// Shared step recorder: clone one handle into the builder as an observer
 /// and keep the other to read the accumulated timings back after the run.
+///
+/// When shared with a [`super::ReplicaSet`], [`Self::totals`] /
+/// [`Self::state`] / [`Self::steps`] aggregate across *all* replicas (one
+/// `on_step` per replica per step), which is the right number for
+/// whole-ensemble throughput but ambiguous per trajectory — use
+/// [`Self::per_replica`] for the per-trajectory breakdown.
 #[derive(Clone, Default)]
-pub struct StepRecorder(Arc<Mutex<RecorderState>>);
+pub struct StepRecorder(Arc<Mutex<RecorderInner>>);
 
 impl StepRecorder {
     /// Fresh recorder (equivalent to `default()`).
@@ -66,34 +118,60 @@ impl StepRecorder {
         StepRecorder::default()
     }
 
-    /// Snapshot of the accumulated state.
+    /// Snapshot of the accumulated state, aggregated over every `on_step`
+    /// call (i.e. over all replicas when shared with a `ReplicaSet`).
     pub fn state(&self) -> RecorderState {
-        *self.0.lock().unwrap()
+        self.0.lock().unwrap().agg
     }
 
-    /// Summed wall-time breakdown over the recorded steps.
+    /// Summed wall-time breakdown over the recorded steps.  Aggregates
+    /// across replicas when the recorder is shared with a `ReplicaSet`;
+    /// see [`Self::per_replica`] to disambiguate.
     pub fn totals(&self) -> StepTimes {
         self.state().totals
     }
 
-    /// Number of production steps recorded.
+    /// Number of `on_step` calls recorded (production steps × replicas).
     pub fn steps(&self) -> u64 {
         self.state().steps
+    }
+
+    /// Per-replica snapshots, indexed by [`StepContext::replica_id`].
+    /// Under a single `Simulation` this is one entry (replica 0); an
+    /// empty vec means nothing was recorded yet.
+    pub fn per_replica(&self) -> Vec<RecorderState> {
+        self.0.lock().unwrap().per_replica.clone()
     }
 }
 
 impl Observer for StepRecorder {
-    fn on_step(&mut self, _step: u64, times: &StepTimes, obs: &StepObservables) {
+    fn on_step(&mut self, ctx: &StepContext) {
         let mut st = self.0.lock().unwrap();
-        st.totals.add(times);
-        st.steps += 1;
-        st.last = Some(*obs);
+        st.agg.record(ctx);
+        if st.per_replica.len() <= ctx.replica_id {
+            st.per_replica.resize(ctx.replica_id + 1, RecorderState::default());
+        }
+        st.per_replica[ctx.replica_id].record(ctx);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn ctx<'a>(
+        step: u64,
+        replica_id: usize,
+        times: &'a StepTimes,
+        obs: &'a StepObservables,
+    ) -> StepContext<'a> {
+        StepContext {
+            step,
+            replica_id,
+            times,
+            obs,
+        }
+    }
 
     #[test]
     fn recorder_accumulates_and_shares_state() {
@@ -108,19 +186,49 @@ mod tests {
         };
         let mut t = StepTimes::default();
         t.total = 0.5;
-        handle.on_step(1, &t, &obs);
-        handle.on_step(2, &t, &obs);
+        handle.on_step(&ctx(1, 0, &t, &obs));
+        handle.on_step(&ctx(2, 0, &t, &obs));
         assert_eq!(rec.steps(), 2);
         assert!((rec.totals().total - 1.0).abs() < 1e-12);
         assert_eq!(rec.state().last.unwrap().e_gt, 2.0);
     }
 
     #[test]
+    fn recorder_splits_replicas_while_totals_aggregate() {
+        let rec = StepRecorder::new();
+        let mut handle: Box<dyn Observer> = Box::new(rec.clone());
+        let mut oa = StepObservables {
+            e_sr: 1.0,
+            e_gt: 0.0,
+            kinetic: 0.0,
+            temperature: 0.0,
+            conserved: 1.0,
+        };
+        let mut t = StepTimes::default();
+        t.total = 0.25;
+        // one production step of a 3-replica set: three on_step calls
+        for r in 0..3usize {
+            oa.e_sr = r as f64;
+            handle.on_step(&ctx(1, r, &t, &oa));
+        }
+        // aggregate view: 3 calls, summed times
+        assert_eq!(rec.steps(), 3);
+        assert!((rec.totals().total - 0.75).abs() < 1e-12);
+        // per-replica view: one step each, own observables
+        let per = rec.per_replica();
+        assert_eq!(per.len(), 3);
+        for (r, st) in per.iter().enumerate() {
+            assert_eq!(st.steps, 1);
+            assert_eq!(st.last.unwrap().e_sr, r as f64);
+        }
+    }
+
+    #[test]
     fn closure_observer_counts_calls() {
         let n = Arc::new(Mutex::new(0u64));
         let n2 = n.clone();
-        let mut ob = observer_fn(move |step, _t, _o| {
-            *n2.lock().unwrap() = step;
+        let mut ob = observer_fn(move |c: &StepContext| {
+            *n2.lock().unwrap() = c.step;
         });
         let obs = StepObservables {
             e_sr: 0.0,
@@ -129,7 +237,7 @@ mod tests {
             temperature: 0.0,
             conserved: 0.0,
         };
-        ob.on_step(7, &StepTimes::default(), &obs);
+        ob.on_step(&ctx(7, 0, &StepTimes::default(), &obs));
         assert_eq!(*n.lock().unwrap(), 7);
     }
 }

@@ -1,0 +1,975 @@
+//! [`ReplicaSet`]: N independent trajectories through one shared model.
+//!
+//! Ensemble workloads (replica sampling, per-replica temperatures, seed
+//! sweeps) step many small systems whose per-step model cost is dominated
+//! by streaming the same weights over and over.  A `ReplicaSet` runs N
+//! replicas of one topology (same molecule count and box, different
+//! positions/velocities) and batches the DP/DW evaluations of *all*
+//! replicas into single model calls, so every weight matrix is read once
+//! per step instead of once per replica, and the batched GEMMs run over
+//! `N x natoms` rows (see `docs/ARCHITECTURE.md`, "Replica batching").
+//!
+//! # The supersystem layout
+//!
+//! The batched buffers concatenate replicas as one pseudo-system that is
+//! still globally type-sorted — all O atoms (replica-major), then all H
+//! atoms (replica-major):
+//!
+//! ```text
+//! [ O(rep 0) | O(rep 1) | .. | O(rep N-1) | H(rep 0) | .. | H(rep N-1) ]
+//! ```
+//!
+//! so every `nmol = natoms / 3` typing assumption inside the model holds
+//! unchanged on the concatenated inputs.  [`batched_atom`] /
+//! [`single_atom`] are the two index maps; neighbour rows are remapped
+//! through [`batched_atom`] at Verlet-rebuild time, never per step.
+//!
+//! # The replica-invariance contract
+//!
+//! Per-replica trajectories are **bit-identical** to running each replica
+//! alone in a single-replica [`super::Simulation`], at any thread count
+//! and any replica order (`rust/tests/replica_invariance.rs`).  This
+//! extends the engine's thread-invariance contract with a replica axis:
+//! every batched stage is row-wise independent and every per-replica
+//! reduction runs in the replica's own ascending centre order.
+//!
+//! # K-space
+//!
+//! The replicas share **one** k-space solver instance, called once per
+//! replica per step: per-replica solves reuse the same FFT scratch /
+//! spread-gather pool allocations ([`crate::pppm::Pppm`] keeps its
+//! buffers across calls), so N replicas cost N solves but one solver's
+//! memory.  The [`KspaceSolver`] determinism contract (same sites in,
+//! same bits out, regardless of call history) is what keeps interleaved
+//! per-replica solves bit-identical to dedicated per-replica solvers.
+
+use super::builder::{build_kspace, default_threads, KspaceConfig};
+use super::observe::{observer_fn, Observer, StepContext};
+use super::traits::{KspaceSolver, ShortRangeModel};
+use super::{SimConfig, StepObservables, StepTimes};
+use crate::md::integrate::{NoseHoover, VelocityVerlet};
+use crate::md::system::System;
+use crate::md::units::{FS, Q_H, Q_O, Q_WC};
+use crate::neighbor::{build_cells_par, NlistParams, PaddedNlist, VerletManager};
+use crate::pool::ThreadPool;
+use crate::pppm::PppmConfig;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Map a replica-local atom index to its slot in the type-sorted
+/// supersystem (all O blocks replica-major, then all H blocks).
+pub(crate) fn batched_atom(r: usize, i: usize, nmol: usize, nrep: usize) -> usize {
+    if i < nmol {
+        r * nmol + i
+    } else {
+        nrep * nmol + 2 * r * nmol + (i - nmol)
+    }
+}
+
+/// Inverse of [`batched_atom`]: recover the replica-local atom index from
+/// a supersystem slot (the owning replica is `g / nmol` in the O block,
+/// `(g - nrep * nmol) / (2 * nmol)` in the H block).
+pub(crate) fn single_atom(g: usize, nmol: usize, nrep: usize) -> usize {
+    if g < nrep * nmol {
+        g % nmol
+    } else {
+        nmol + (g - nrep * nmol) % (2 * nmol)
+    }
+}
+
+/// Per-replica state: the trajectory itself plus the per-replica halves
+/// of the step pipeline (neighbour lists, k-space site set, thermostat).
+struct Replica {
+    sys: System,
+    verlet: VerletManager,
+    nlist: Option<PaddedNlist>,
+    nlist_o: Option<PaddedNlist>,
+    nh: Option<NoseHoover>,
+    /// forces of the previous evaluation (for the second Verlet kick)
+    forces: Vec<[f64; 3]>,
+    /// spare combined-force buffer (ping-pongs with `forces`)
+    fbuf: Vec<[f64; 3]>,
+    /// persistent k-space buffers, exactly as in `Simulation`
+    sites: Vec<[f64; 3]>,
+    charges: Vec<f64>,
+    site_forces: Vec<[f64; 3]>,
+    e_sr: f64,
+    e_gt: f64,
+    last_obs: Option<StepObservables>,
+    /// attributed wall-time share of the current step (drained into the
+    /// observer callbacks, reset every step)
+    times: StepTimes,
+}
+
+/// N independent trajectories stepped through one shared
+/// [`ShortRangeModel`] with replica-batched DP/DW evaluations; build one
+/// with [`ReplicaSet::builder`].  See the module docs for the layout and
+/// the bit-identity contract.
+pub struct ReplicaSet {
+    /// The validated run configuration (shared by all replicas; the
+    /// per-replica thermostat targets live in the replicas).
+    pub cfg: SimConfig,
+    replicas: Vec<Replica>,
+    model: Box<dyn ShortRangeModel>,
+    kspace: Box<dyn KspaceSolver>,
+    pppm_cfg: Option<PppmConfig>,
+    pool: Arc<ThreadPool>,
+    vv: VelocityVerlet,
+    /// model calls run on the replica-concatenated buffers (false when
+    /// the model has no batched path, or `batched(false)` forced the
+    /// per-replica fallback loops)
+    batched: bool,
+    /// replica-concatenated coordinate / neighbour / VJP-seed buffers
+    bcoords: Vec<f64>,
+    bnlist: Vec<i32>,
+    bnlist_o: Vec<i32>,
+    bf_wc: Vec<f64>,
+    observers: Vec<Box<dyn Observer>>,
+    observing: bool,
+    observed_steps: u64,
+    /// Total steps taken (quench included).
+    pub steps_done: u64,
+}
+
+impl ReplicaSet {
+    /// Start building a replica set over `systems` (one entry per
+    /// replica; all must share the topology of `systems[0]`):
+    ///
+    /// ```no_run
+    /// use dplr::engine::{KspaceConfig, ReplicaSet, StepRecorder};
+    /// use dplr::md::water::replica_boxes;
+    /// use dplr::native::NativeModel;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let rec = StepRecorder::new();
+    /// let mut set = ReplicaSet::builder(replica_boxes(64, 4, 42))
+    ///     .dt_fs(0.5)
+    ///     .thermostat(300.0, 0.5)
+    ///     .temperatures(vec![280.0, 300.0, 320.0, 340.0])
+    ///     .seed(11)
+    ///     .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+    ///     .short_range(Box::new(NativeModel::synthetic(7)))
+    ///     .observer(Box::new(rec.clone()))
+    ///     .build()?;
+    /// set.run(200)?;
+    /// for (r, st) in rec.per_replica().iter().enumerate() {
+    ///     println!("replica {r}: {} steps recorded", st.steps);
+    /// }
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn builder(systems: Vec<System>) -> ReplicaSetBuilder {
+        ReplicaSetBuilder::new(systems)
+    }
+
+    /// Number of replicas in the set.
+    pub fn nreplicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The simulated system of replica `r`.
+    pub fn replica_sys(&self, r: usize) -> &System {
+        &self.replicas[r].sys
+    }
+
+    /// Observables of replica `r` after the most recent step.
+    pub fn last_obs(&self, r: usize) -> Option<StepObservables> {
+        self.replicas[r].last_obs
+    }
+
+    /// Forces of replica `r` from the most recent evaluation.
+    pub fn forces(&self, r: usize) -> &[[f64; 3]] {
+        &self.replicas[r].forces
+    }
+
+    /// Short label of the shared k-space solver ("pppm", "ewald", ...).
+    pub fn kspace_name(&self) -> &'static str {
+        self.kspace.name()
+    }
+
+    /// Short label of the shared short-range model ("native", "pjrt", ...).
+    pub fn short_range_name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    /// Cumulative quantization saturation events of the shared solver.
+    pub fn kspace_saturations(&self) -> u64 {
+        self.kspace.saturations()
+    }
+
+    /// Mesh configuration when the shared solver is PPPM.
+    pub fn pppm_config(&self) -> Option<&PppmConfig> {
+        self.pppm_cfg.as_ref()
+    }
+
+    /// Whether model calls run on the replica-concatenated buffers (false
+    /// = per-replica fallback loops; same bits either way).
+    pub fn batched(&self) -> bool {
+        self.batched
+    }
+
+    /// Per-replica Verlet maintenance.  A rebuilt replica re-derives its
+    /// own padded lists (identical to its single-run lists) and, on the
+    /// batched path, remaps just its rows of the concatenated lists
+    /// through [`batched_atom`] — the other replicas' rows are untouched.
+    fn maintain_nlists(&mut self, times: &mut StepTimes) {
+        let nrep = self.replicas.len();
+        let nmol = self.replicas[0].sys.nmol;
+        let natoms = self.replicas[0].sys.natoms();
+        let s = self.cfg.nlist.sel_total();
+        for (r, rep) in self.replicas.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            if rep.nlist.is_none() || rep.verlet.needs_rebuild(&rep.sys) {
+                let centres: Vec<usize> = (0..natoms).collect();
+                rep.nlist = Some(build_cells_par(&rep.sys, &centres, &self.cfg.nlist, &self.pool));
+                let o_centres: Vec<usize> = (0..nmol).collect();
+                rep.nlist_o = Some(build_cells_par(
+                    &rep.sys,
+                    &o_centres,
+                    &self.cfg.nlist,
+                    &self.pool,
+                ));
+                rep.verlet.mark_built(&rep.sys);
+                if self.batched {
+                    let src = &rep.nlist.as_ref().unwrap().data;
+                    for i in 0..natoms {
+                        let g = batched_atom(r, i, nmol, nrep);
+                        let drow = &mut self.bnlist[g * s..(g + 1) * s];
+                        for (dv, &sv) in drow.iter_mut().zip(&src[i * s..(i + 1) * s]) {
+                            *dv = if sv < 0 {
+                                -1
+                            } else {
+                                batched_atom(r, sv as usize, nmol, nrep) as i32
+                            };
+                        }
+                    }
+                    let src_o = &rep.nlist_o.as_ref().unwrap().data;
+                    for m in 0..nmol {
+                        let g = r * nmol + m;
+                        let drow = &mut self.bnlist_o[g * s..(g + 1) * s];
+                        for (dv, &sv) in drow.iter_mut().zip(&src_o[m * s..(m + 1) * s]) {
+                            *dv = if sv < 0 {
+                                -1
+                            } else {
+                                batched_atom(r, sv as usize, nmol, nrep) as i32
+                            };
+                        }
+                    }
+                }
+            }
+            rep.verlet.tick();
+            let dt_n = t0.elapsed().as_secs_f64();
+            rep.times.nlist += dt_n;
+            times.nlist += dt_n;
+        }
+    }
+
+    /// Per-replica DP fallback (non-batched models, or `batched(false)`):
+    /// one `dp_ef` call per replica, forces scattered into the batched
+    /// layout so the downstream combine is identical on both paths.
+    fn dp_fallback(&self, rcoords: &[Vec<f64>], box_len: [f64; 3]) -> Result<(Vec<f64>, Vec<f64>)> {
+        let nrep = self.replicas.len();
+        let nmol = self.replicas[0].sys.nmol;
+        let natoms = self.replicas[0].sys.natoms();
+        let mut energies = Vec::with_capacity(nrep);
+        let mut f_all = vec![0.0; 3 * nrep * natoms];
+        for (r, rep) in self.replicas.iter().enumerate() {
+            let nl: &[i32] = &rep.nlist.as_ref().unwrap().data;
+            let (e, f) = self.model.dp_ef(&rcoords[r], box_len, nl)?;
+            energies.push(e);
+            for i in 0..natoms {
+                let g = batched_atom(r, i, nmol, nrep);
+                for d in 0..3 {
+                    f_all[3 * g + d] = f[3 * i + d];
+                }
+            }
+        }
+        Ok((energies, f_all))
+    }
+
+    /// Evaluate all forces of all replicas at the current positions,
+    /// leaving per-replica forces/energies in the replicas and the
+    /// wall-time breakdown in `times` (per-replica shares in each
+    /// replica's scratch `times`).
+    fn evaluate_forces_all(&mut self, times: &mut StepTimes) -> Result<()> {
+        let nrep = self.replicas.len();
+        let nmol = self.replicas[0].sys.nmol;
+        let natoms = self.replicas[0].sys.natoms();
+        let box_len = self.replicas[0].sys.box_len;
+        let share = 1.0 / nrep as f64;
+
+        self.maintain_nlists(times);
+
+        // gather the replica-concatenated coordinates (batched path)
+        if self.batched {
+            self.bcoords.resize(3 * nrep * natoms, 0.0);
+            for (r, rep) in self.replicas.iter().enumerate() {
+                let pos = &rep.sys.pos;
+                for (m, p) in pos.iter().take(nmol).enumerate() {
+                    let g = r * nmol + m;
+                    self.bcoords[3 * g..3 * g + 3].copy_from_slice(p);
+                }
+                let hbase = nrep * nmol + 2 * r * nmol;
+                for (h, p) in pos.iter().skip(nmol).enumerate() {
+                    let g = hbase + h;
+                    self.bcoords[3 * g..3 * g + 3].copy_from_slice(p);
+                }
+            }
+        }
+        // per-replica flat coordinates (fallback path only)
+        let rcoords: Vec<Vec<f64>> = if self.batched {
+            Vec::new()
+        } else {
+            self.replicas
+                .iter()
+                .map(|rep| rep.sys.coords_flat())
+                .collect()
+        };
+
+        // --- DW forward: one batched pass (or N fallback passes) ---
+        let t = Instant::now();
+        let delta_all: Vec<f64> = if self.batched {
+            self.model.dw_fwd(&self.bcoords, box_len, &self.bnlist_o)?
+        } else {
+            let mut all = vec![0.0; 3 * nrep * nmol];
+            for (r, rep) in self.replicas.iter().enumerate() {
+                let nlo: &[i32] = &rep.nlist_o.as_ref().unwrap().data;
+                let d = self.model.dw_fwd(&rcoords[r], box_len, nlo)?;
+                all[3 * r * nmol..3 * (r + 1) * nmol].copy_from_slice(&d);
+            }
+            all
+        };
+        let t_dw = t.elapsed().as_secs_f64();
+        times.dw_fwd += t_dw;
+        for rep in self.replicas.iter_mut() {
+            rep.times.dw_fwd += t_dw * share;
+        }
+
+        // per-replica site sets: ions then WCs, exactly as `Simulation`
+        for (r, rep) in self.replicas.iter_mut().enumerate() {
+            rep.sites.clear();
+            rep.charges.clear();
+            rep.sites.reserve(natoms + nmol);
+            rep.charges.reserve(natoms + nmol);
+            for i in 0..natoms {
+                rep.sites.push(rep.sys.pos[i]);
+                rep.charges.push(if i < nmol { Q_O } else { Q_H });
+            }
+            for m in 0..nmol {
+                let g = 3 * (r * nmol + m);
+                rep.sites.push([
+                    rep.sys.pos[m][0] + delta_all[g],
+                    rep.sys.pos[m][1] + delta_all[g + 1],
+                    rep.sys.pos[m][2] + delta_all[g + 2],
+                ]);
+                rep.charges.push(Q_WC);
+            }
+        }
+
+        // --- k-space (one shared solver, one call per replica) || DP ---
+        // The overlap thread needs exclusive access to the per-replica
+        // site buffers, so it only coexists with the *batched* DP call;
+        // the fallback loops walk the replicas and run sequentially.
+        let overlap = self.cfg.overlap && self.batched;
+        let bc: &[f64] = &self.bcoords;
+        let bl: &[i32] = &self.bnlist;
+        let kres: Vec<(f64, f64)>;
+        let dp_res: Result<(Vec<f64>, Vec<f64>)>;
+        let t_dp;
+        if overlap {
+            let kspace = &mut self.kspace;
+            let model = &self.model;
+            let kwork: Vec<(&[[f64; 3]], &[f64], &mut Vec<[f64; 3]>)> = self
+                .replicas
+                .iter_mut()
+                .map(|rep| {
+                    let Replica {
+                        sites,
+                        charges,
+                        site_forces,
+                        ..
+                    } = rep;
+                    (sites.as_slice(), charges.as_slice(), site_forces)
+                })
+                .collect();
+            let (kr, dp, tdp) = std::thread::scope(|scope| {
+                // dedicated long-range thread, as in `Simulation::step`
+                let h_k = scope.spawn(move || {
+                    let mut out = Vec::with_capacity(kwork.len());
+                    for (sites, charges, forces_out) in kwork {
+                        let t = Instant::now();
+                        let e = kspace.energy_forces_into(sites, charges, forces_out);
+                        out.push((e, t.elapsed().as_secs_f64()));
+                    }
+                    out
+                });
+                let t = Instant::now();
+                let dp = model.dp_ef_replicas(bc, box_len, bl, nrep);
+                let tdp = t.elapsed().as_secs_f64();
+                (h_k.join().expect("kspace thread"), dp, tdp)
+            });
+            kres = kr;
+            dp_res = dp;
+            t_dp = tdp;
+        } else {
+            let mut kr = Vec::with_capacity(nrep);
+            for rep in self.replicas.iter_mut() {
+                let t = Instant::now();
+                let e = self
+                    .kspace
+                    .energy_forces_into(&rep.sites, &rep.charges, &mut rep.site_forces);
+                kr.push((e, t.elapsed().as_secs_f64()));
+            }
+            kres = kr;
+            let t = Instant::now();
+            dp_res = if self.batched {
+                self.model.dp_ef_replicas(bc, box_len, bl, nrep)
+            } else {
+                self.dp_fallback(&rcoords, box_len)
+            };
+            t_dp = t.elapsed().as_secs_f64();
+        }
+        times.dp_all += t_dp;
+        let (e_sr_all, f_sr) = dp_res?;
+        for (rep, ((e_gt, t_k), &e_sr)) in self
+            .replicas
+            .iter_mut()
+            .zip(kres.iter().zip(e_sr_all.iter()))
+        {
+            rep.e_gt = *e_gt;
+            rep.e_sr = e_sr;
+            rep.times.kspace += *t_k;
+            times.kspace += *t_k;
+            rep.times.dp_all += t_dp * share;
+        }
+
+        // --- DW backward: batched VJP seeded with every replica's WC
+        // forces, chained into atomic forces (Eq. 6) ---
+        let t = Instant::now();
+        self.bf_wc.resize(3 * nrep * nmol, 0.0);
+        for (r, rep) in self.replicas.iter().enumerate() {
+            for m in 0..nmol {
+                for d in 0..3 {
+                    self.bf_wc[3 * (r * nmol + m) + d] = rep.site_forces[natoms + m][d];
+                }
+            }
+        }
+        let fc: Vec<f64> = if self.batched {
+            self.model
+                .dw_vjp(&self.bcoords, box_len, &self.bnlist_o, &self.bf_wc)?
+                .1
+        } else {
+            let mut all = vec![0.0; 3 * nrep * natoms];
+            for (r, rep) in self.replicas.iter().enumerate() {
+                let nlo: &[i32] = &rep.nlist_o.as_ref().unwrap().data;
+                let fw = &self.bf_wc[3 * r * nmol..3 * (r + 1) * nmol];
+                let (_, f) = self.model.dw_vjp(&rcoords[r], box_len, nlo, fw)?;
+                for i in 0..natoms {
+                    let g = batched_atom(r, i, nmol, nrep);
+                    for d in 0..3 {
+                        all[3 * g + d] = f[3 * i + d];
+                    }
+                }
+            }
+            all
+        };
+        let t_bwd = t.elapsed().as_secs_f64();
+        times.dw_bwd += t_bwd;
+
+        // combine into each replica's recycled spare buffer
+        for (r, rep) in self.replicas.iter_mut().enumerate() {
+            rep.times.dw_bwd += t_bwd * share;
+            let mut forces = std::mem::take(&mut rep.fbuf);
+            forces.resize(natoms, [0.0; 3]);
+            for (i, fi) in forces.iter_mut().enumerate() {
+                let g = batched_atom(r, i, nmol, nrep);
+                for d in 0..3 {
+                    fi[d] = f_sr[3 * g + d] + rep.site_forces[i][d] + fc[3 * g + d];
+                }
+            }
+            rep.fbuf = std::mem::replace(&mut rep.forces, forces);
+        }
+        Ok(())
+    }
+
+    /// One full MD step of every replica; returns the whole-set wall-time
+    /// breakdown.  Observers get one callback per replica (with that
+    /// replica's attributed share of the breakdown).
+    pub fn step(&mut self) -> Result<StepTimes> {
+        let mut times = StepTimes::default();
+        let t_total = Instant::now();
+        let dt = self.cfg.dt_fs * FS;
+
+        if self.steps_done == 0 {
+            // prime forces for the first half-kick
+            self.evaluate_forces_all(&mut times)?;
+        }
+
+        let t = Instant::now();
+        for rep in self.replicas.iter_mut() {
+            if let Some(nh) = &mut rep.nh {
+                nh.half_step(&mut rep.sys, dt);
+            }
+            self.vv.kick_drift(&mut rep.sys, &rep.forces);
+        }
+        times.integrate += t.elapsed().as_secs_f64();
+
+        self.evaluate_forces_all(&mut times)?;
+
+        let t = Instant::now();
+        for rep in self.replicas.iter_mut() {
+            self.vv.kick(&mut rep.sys, &rep.forces);
+            if let Some(nh) = &mut rep.nh {
+                nh.half_step(&mut rep.sys, dt);
+            }
+        }
+        times.integrate += t.elapsed().as_secs_f64();
+
+        for rep in self.replicas.iter_mut() {
+            let kin = rep.sys.kinetic_energy();
+            let shift = rep.nh.as_ref().map(|n| n.conserved_shift).unwrap_or(0.0);
+            rep.last_obs = Some(StepObservables {
+                e_sr: rep.e_sr,
+                e_gt: rep.e_gt,
+                kinetic: kin,
+                temperature: rep.sys.temperature(),
+                conserved: rep.e_sr + rep.e_gt + kin + shift,
+            });
+        }
+        self.steps_done += 1;
+        times.total = t_total.elapsed().as_secs_f64();
+
+        if self.observing {
+            self.observed_steps += 1;
+            let share = 1.0 / self.replicas.len() as f64;
+            // take the observer list so the callbacks can borrow replica
+            // state without aliasing `self`
+            let mut observers = std::mem::take(&mut self.observers);
+            for (r, rep) in self.replicas.iter_mut().enumerate() {
+                rep.times.integrate += times.integrate * share;
+                rep.times.total += times.total * share;
+                let tr = std::mem::take(&mut rep.times);
+                let obs = rep.last_obs.unwrap();
+                let ctx = StepContext {
+                    step: self.observed_steps,
+                    replica_id: r,
+                    times: &tr,
+                    obs: &obs,
+                };
+                for ob in observers.iter_mut() {
+                    ob.on_step(&ctx);
+                }
+            }
+            self.observers = observers;
+        } else {
+            for rep in self.replicas.iter_mut() {
+                rep.times = StepTimes::default();
+            }
+        }
+        Ok(times)
+    }
+
+    /// Run `steps` production steps (reporting flows through observers).
+    pub fn run(&mut self, steps: usize) -> Result<()> {
+        for _ in 0..steps {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Quenched relaxation of every replica (same schedule as
+    /// [`super::Simulation::quench`]: dt = 0.2 fs, no thermostat,
+    /// observers suppressed, velocities zeroed every 5th step).
+    pub fn quench(&mut self, steps: usize) -> Result<()> {
+        let saved_dt = self.cfg.dt_fs;
+        self.cfg.dt_fs = 0.2;
+        self.vv = VelocityVerlet::new(self.cfg.dt_fs * FS);
+        let mut saved_nh: Vec<Option<NoseHoover>> = Vec::with_capacity(self.replicas.len());
+        for rep in self.replicas.iter_mut() {
+            saved_nh.push(rep.nh.take());
+        }
+        let saved_observing = self.observing;
+        self.observing = false;
+        let mut result = Ok(());
+        for k in 0..steps {
+            if let Err(e) = self.step() {
+                result = Err(e);
+                break;
+            }
+            if k % 5 == 4 {
+                for rep in self.replicas.iter_mut() {
+                    for v in &mut rep.sys.vel {
+                        *v = [0.0; 3];
+                    }
+                }
+            }
+        }
+        self.observing = saved_observing;
+        self.cfg.dt_fs = saved_dt;
+        self.vv = VelocityVerlet::new(saved_dt * FS);
+        for (rep, nh) in self.replicas.iter_mut().zip(saved_nh) {
+            rep.nh = nh;
+        }
+        result
+    }
+
+    /// Redraw Maxwell-Boltzmann velocities at `temp` for every replica,
+    /// replica `r` from seed `base_seed + r` (use after [`Self::quench`]).
+    pub fn reheat(&mut self, temp: f64, base_seed: u64) {
+        for (r, rep) in self.replicas.iter_mut().enumerate() {
+            let mut rng = crate::util::rng::Rng::new(base_seed + r as u64);
+            rep.sys.thermalize(temp, &mut rng);
+        }
+    }
+
+    /// Hard velocity rescale of every replica to `temp`.
+    pub fn rescale_to(&mut self, temp: f64) {
+        for rep in self.replicas.iter_mut() {
+            let t = rep.sys.temperature();
+            if t > 1e-6 {
+                let k = (temp / t).sqrt();
+                for v in &mut rep.sys.vel {
+                    for d in 0..3 {
+                        v[d] *= k;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fluent builder for [`ReplicaSet`], mirroring [`super::SimulationBuilder`]
+/// with the replica-axis knobs added ([`Self::temperatures`],
+/// [`Self::batched`]).  Obtain one via [`ReplicaSet::builder`]; see that
+/// method for a usage example.
+pub struct ReplicaSetBuilder {
+    systems: Vec<System>,
+    dt_fs: f64,
+    target_t: f64,
+    thermostat_tau_ps: Option<f64>,
+    temperatures: Option<Vec<f64>>,
+    kspace: KspaceConfig,
+    short_range: Option<Box<dyn ShortRangeModel>>,
+    overlap: bool,
+    nlist: NlistParams,
+    nlist_max_age: usize,
+    threads: Option<usize>,
+    observers: Vec<Box<dyn Observer>>,
+    seed: Option<u64>,
+    batched: bool,
+}
+
+impl ReplicaSetBuilder {
+    pub(crate) fn new(systems: Vec<System>) -> ReplicaSetBuilder {
+        ReplicaSetBuilder {
+            systems,
+            dt_fs: 1.0,
+            target_t: 300.0,
+            thermostat_tau_ps: Some(0.5),
+            temperatures: None,
+            kspace: KspaceConfig::PppmAuto { alpha: 0.3 },
+            short_range: None,
+            overlap: false,
+            nlist: NlistParams::default(),
+            nlist_max_age: 50,
+            threads: None,
+            observers: Vec::new(),
+            seed: None,
+            batched: true,
+        }
+    }
+
+    /// MD timestep in femtoseconds (default 1.0).
+    pub fn dt_fs(mut self, dt: f64) -> Self {
+        self.dt_fs = dt;
+        self
+    }
+
+    /// Nose-Hoover NVT at `target_t` K with coupling time `tau_ps` for
+    /// every replica (default: 300 K, 0.5 ps); override per replica with
+    /// [`Self::temperatures`].
+    pub fn thermostat(mut self, target_t: f64, tau_ps: f64) -> Self {
+        self.target_t = target_t;
+        self.thermostat_tau_ps = Some(tau_ps);
+        self
+    }
+
+    /// NVE: no thermostat (incompatible with [`Self::temperatures`]).
+    pub fn nve(mut self) -> Self {
+        self.thermostat_tau_ps = None;
+        self
+    }
+
+    /// Shared target temperature [K] without touching the thermostat
+    /// coupling time; also the temperature [`Self::seed`] thermalizes at.
+    pub fn temperature(mut self, target_t: f64) -> Self {
+        self.target_t = target_t;
+        self
+    }
+
+    /// Per-replica thermostat target temperatures (one entry per replica,
+    /// e.g. a replica-exchange ladder).  Requires a thermostat; replica
+    /// `r` is thermostatted — and, with [`Self::seed`], thermalized — at
+    /// `temps[r]` instead of the shared target.
+    pub fn temperatures(mut self, temps: Vec<f64>) -> Self {
+        self.temperatures = Some(temps);
+        self
+    }
+
+    /// Draw Maxwell-Boltzmann velocities for replica `r` from seed
+    /// `seed + r` at its target temperature at `build()` time, so the
+    /// replicas decorrelate even when built from identical systems.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// K-space solver choice, shared by all replicas (default:
+    /// `PppmAuto { alpha: 0.3 }`).
+    pub fn kspace(mut self, cfg: KspaceConfig) -> Self {
+        self.kspace = cfg;
+        self
+    }
+
+    /// The shared short-range NN model (required).
+    pub fn short_range(mut self, model: Box<dyn ShortRangeModel>) -> Self {
+        self.short_range = Some(model);
+        self
+    }
+
+    /// Overlap the per-replica k-space solves with the batched DP call on
+    /// a dedicated thread (paper section 3.2; default off; only effective
+    /// on the batched path).
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// Worker-pool size for the hot loops (default: `DPLR_THREADS` or 1).
+    /// Results are bit-identical for any value.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Neighbour-list parameters (cutoffs, skin, padding).
+    pub fn nlist(mut self, p: NlistParams) -> Self {
+        self.nlist = p;
+        self
+    }
+
+    /// Force a Verlet rebuild at least every `steps` steps (default 50).
+    pub fn nlist_max_age(mut self, steps: usize) -> Self {
+        self.nlist_max_age = steps;
+        self
+    }
+
+    /// Attach a per-step observer (called once per replica per step).
+    pub fn observer(mut self, ob: Box<dyn Observer>) -> Self {
+        self.observers.push(ob);
+        self
+    }
+
+    /// Attach a closure observer (sugar over [`Self::observer`]).
+    pub fn observe<F>(self, f: F) -> Self
+    where
+        F: FnMut(&StepContext) + 'static,
+    {
+        self.observer(observer_fn(f))
+    }
+
+    /// Replica-batched model calls (default true).  `batched(false)`
+    /// forces the per-replica fallback loops even for models with a
+    /// batched path — same bits, used by tests to pin the equivalence.
+    pub fn batched(mut self, on: bool) -> Self {
+        self.batched = on;
+        self
+    }
+
+    /// Validate the configuration and assemble the [`ReplicaSet`].
+    pub fn build(self) -> Result<ReplicaSet> {
+        let n = self.systems.len();
+        if n == 0 {
+            bail!("cannot build a replica set over 0 replicas");
+        }
+        if self.systems[0].natoms() == 0 {
+            bail!("cannot build a replica set over empty systems");
+        }
+        let nmol = self.systems[0].nmol;
+        let box_len = self.systems[0].box_len;
+        for (r, sys) in self.systems.iter().enumerate() {
+            if sys.nmol != nmol || sys.box_len != box_len {
+                bail!(
+                    "replica {r} topology mismatch: every replica must share \
+                     replica 0's molecule count ({nmol}) and box, got nmol {} \
+                     box {:?} vs {:?}",
+                    sys.nmol,
+                    sys.box_len,
+                    box_len
+                );
+            }
+        }
+        if !(self.dt_fs.is_finite() && self.dt_fs > 0.0) {
+            bail!("dt_fs must be finite and > 0, got {}", self.dt_fs);
+        }
+        if let Some(tau) = self.thermostat_tau_ps {
+            if !(tau.is_finite() && tau > 0.0) {
+                bail!("thermostat tau_ps must be finite and > 0, got {tau}");
+            }
+            if !(self.target_t.is_finite() && self.target_t > 0.0) {
+                bail!(
+                    "thermostat target temperature must be finite and > 0, got {}",
+                    self.target_t
+                );
+            }
+        }
+        if let Some(temps) = &self.temperatures {
+            if self.thermostat_tau_ps.is_none() {
+                bail!(
+                    "per-replica temperatures require a thermostat: \
+                     temperatures(..) is incompatible with nve()"
+                );
+            }
+            if temps.len() != n {
+                bail!(
+                    "temperatures(..) needs one entry per replica: \
+                     got {} for {n} replicas",
+                    temps.len()
+                );
+            }
+            for (r, &t) in temps.iter().enumerate() {
+                if !(t.is_finite() && t > 0.0) {
+                    bail!("temperatures[{r}] must be finite and > 0, got {t}");
+                }
+            }
+        }
+        if self.seed.is_some()
+            && self.temperatures.is_none()
+            && !(self.target_t.is_finite() && self.target_t > 0.0)
+        {
+            bail!(
+                "seed(..) thermalizes at the target temperature, \
+                 which must be finite and > 0, got {}",
+                self.target_t
+            );
+        }
+        let threads = match self.threads {
+            Some(0) => bail!("threads must be >= 1, got 0"),
+            Some(t) => t,
+            None => default_threads(),
+        };
+        let pool = Arc::new(ThreadPool::new(threads));
+
+        let (mut kspace, pppm_cfg) = build_kspace(self.kspace, box_len)?;
+        kspace.set_pool(pool.clone());
+
+        let mut model = match self.short_range {
+            Some(m) => m,
+            None => bail!(
+                "a short-range model is required: pass \
+                 ReplicaSetBuilder::short_range(Box::new(...))"
+            ),
+        };
+        model.set_pool(pool.clone());
+        let batched = self.batched && model.supports_replica_batch();
+
+        let cfg = SimConfig {
+            dt_fs: self.dt_fs,
+            target_t: self.target_t,
+            thermostat_tau_ps: self.thermostat_tau_ps,
+            overlap: self.overlap,
+            nlist: self.nlist,
+            nlist_max_age: self.nlist_max_age,
+            threads,
+        };
+        let natoms = self.systems[0].natoms();
+        let s = cfg.nlist.sel_total();
+        let mut replicas = Vec::with_capacity(n);
+        for (r, mut sys) in self.systems.into_iter().enumerate() {
+            let t_r = self
+                .temperatures
+                .as_ref()
+                .map(|t| t[r])
+                .unwrap_or(self.target_t);
+            if let Some(seed) = self.seed {
+                sys.thermalize(t_r, &mut crate::util::rng::Rng::new(seed + r as u64));
+            }
+            replicas.push(Replica {
+                sys,
+                verlet: VerletManager::new(cfg.nlist, cfg.nlist_max_age),
+                nlist: None,
+                nlist_o: None,
+                nh: self.thermostat_tau_ps.map(|tau| NoseHoover::new(t_r, tau)),
+                forces: vec![[0.0; 3]; natoms],
+                fbuf: Vec::new(),
+                sites: Vec::new(),
+                charges: Vec::new(),
+                site_forces: Vec::new(),
+                e_sr: 0.0,
+                e_gt: 0.0,
+                last_obs: None,
+                times: StepTimes::default(),
+            });
+        }
+        Ok(ReplicaSet {
+            cfg,
+            replicas,
+            model,
+            kspace,
+            pppm_cfg,
+            pool,
+            vv: VelocityVerlet::new(cfg.dt_fs * FS),
+            batched,
+            bcoords: Vec::new(),
+            bnlist: if batched {
+                vec![-1; n * natoms * s]
+            } else {
+                Vec::new()
+            },
+            bnlist_o: if batched {
+                vec![-1; n * nmol * s]
+            } else {
+                Vec::new()
+            },
+            bf_wc: Vec::new(),
+            observers: self.observers,
+            observing: true,
+            observed_steps: 0,
+            steps_done: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atom_remap_round_trips_and_stays_type_sorted() {
+        let (nmol, nrep) = (5usize, 3usize);
+        let natoms = 3 * nmol;
+        let mut seen = vec![false; nrep * natoms];
+        for r in 0..nrep {
+            for i in 0..natoms {
+                let g = batched_atom(r, i, nmol, nrep);
+                assert!(!seen[g], "slot {g} claimed twice");
+                seen[g] = true;
+                // the supersystem stays globally type-sorted: O atoms fill
+                // the first nrep*nmol slots, H atoms the rest
+                assert_eq!(g < nrep * nmol, i < nmol);
+                assert_eq!(single_atom(g, nmol, nrep), i);
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "remap must be a bijection");
+    }
+
+    #[test]
+    fn single_replica_remap_is_identity() {
+        let nmol = 4;
+        for i in 0..3 * nmol {
+            assert_eq!(batched_atom(0, i, nmol, 1), i);
+            assert_eq!(single_atom(i, nmol, 1), i);
+        }
+    }
+}

@@ -164,6 +164,68 @@ pub trait ShortRangeModel: Send + Sync {
         f_wc: &[f64],
     ) -> Result<(Vec<f64>, Vec<f64>)>;
 
+    /// True when [`Self::dp_ef_replicas`] is a genuinely batched
+    /// implementation (one model pass over the stacked replica rows).
+    /// The default is `false`: the fallback `dp_ef_replicas` works for
+    /// every model but streams the weights once per replica, so
+    /// [`super::ReplicaSet`] only concatenates its buffers when this
+    /// returns `true`.
+    fn supports_replica_batch(&self) -> bool {
+        false
+    }
+
+    /// DP energies + forces for `nrep` replicas stacked into one
+    /// type-sorted supersystem (see [`super::ReplicaSet`] for the
+    /// layout): per-replica energies, forces flat over the batched atom
+    /// index.  Per-replica results must be bit-identical to `nrep`
+    /// separate [`Self::dp_ef`] calls on the de-concatenated inputs.
+    ///
+    /// The default implementation de-concatenates and evaluates one
+    /// replica at a time — correct for every model (it *is* `nrep`
+    /// `dp_ef` calls), batched in name only.
+    fn dp_ef_replicas(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nrep: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        use super::replica::{batched_atom, single_atom};
+        let natoms_total = coords.len() / 3;
+        let natoms = natoms_total / nrep.max(1);
+        let nmol = natoms / 3;
+        let s = nlist.len() / natoms_total.max(1);
+        let mut energies = Vec::with_capacity(nrep);
+        let mut f_all = vec![0.0; 3 * natoms_total];
+        let mut rc = vec![0.0; 3 * natoms];
+        let mut rl = vec![-1i32; natoms * s];
+        for r in 0..nrep {
+            for i in 0..natoms {
+                let g = batched_atom(r, i, nmol, nrep);
+                rc[3 * i..3 * i + 3].copy_from_slice(&coords[3 * g..3 * g + 3]);
+                for (dv, &sv) in rl[i * s..(i + 1) * s]
+                    .iter_mut()
+                    .zip(&nlist[g * s..(g + 1) * s])
+                {
+                    *dv = if sv < 0 {
+                        -1
+                    } else {
+                        single_atom(sv as usize, nmol, nrep) as i32
+                    };
+                }
+            }
+            let (e, f) = self.dp_ef(&rc, box_len, &rl)?;
+            energies.push(e);
+            for i in 0..natoms {
+                let g = batched_atom(r, i, nmol, nrep);
+                for d in 0..3 {
+                    f_all[3 * g + d] = f[3 * i + d];
+                }
+            }
+        }
+        Ok((energies, f_all))
+    }
+
     /// Share the engine's worker pool (no-op for backends that do not
     /// shard, e.g. the XLA runtime with its own intra-op threading).
     fn set_pool(&mut self, _pool: Arc<ThreadPool>) {}
@@ -189,6 +251,20 @@ impl ShortRangeModel for NativeModel {
         f_wc: &[f64],
     ) -> Result<(Vec<f64>, Vec<f64>)> {
         Ok(NativeModel::dw_vjp(self, coords, box_len, nlist_o, f_wc))
+    }
+
+    fn supports_replica_batch(&self) -> bool {
+        true
+    }
+
+    fn dp_ef_replicas(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nrep: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        Ok(NativeModel::dp_ef_multi(self, coords, box_len, nlist, nrep))
     }
 
     fn set_pool(&mut self, pool: Arc<ThreadPool>) {

@@ -6,7 +6,7 @@
 //! `--steps` restores any length.  Trace sampling rides the engine's
 //! observer hook instead of a hand-rolled run loop.
 
-use crate::engine::{KspaceConfig, Simulation};
+use crate::engine::{KspaceConfig, Simulation, StepContext};
 use crate::md::water::water_box;
 use crate::native::NativeModel;
 use crate::pppm::{MeshMode, PppmConfig};
@@ -78,10 +78,11 @@ fn run_one(cfg: &Config, label: &str, mode: Option<MeshMode>) -> Result<Trace> {
         .overlap(true)
         .kspace(kspace)
         .short_range(Box::new(NativeModel::load(&artifacts_dir())?))
-        .observe(move |step, _, o| {
+        .observe(move |ctx: &StepContext| {
             // 0-based production index, matching the pre-observer traces
-            let s = step - 1;
+            let s = ctx.step - 1;
             if s % sample_every == 0 {
+                let o = ctx.obs;
                 let mut tr = sink.lock().unwrap();
                 tr.step.push(s);
                 tr.energy.push(o.e_sr + o.e_gt + o.kinetic);

@@ -12,10 +12,12 @@
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{bail, Result};
-use dplr::engine::{observer_fn, KspaceConfig, ShortRangeModel, Simulation, StepRecorder};
+use dplr::engine::{
+    observer_fn, KspaceConfig, ReplicaSet, ShortRangeModel, Simulation, StepContext, StepRecorder,
+};
 use dplr::experiments::*;
 use dplr::md::units::ns_per_day;
-use dplr::md::water::water_box;
+use dplr::md::water::{replica_boxes, water_box};
 use dplr::native::NativeModel;
 use dplr::runtime::manifest::artifacts_dir;
 use dplr::runtime::Dtype;
@@ -27,6 +29,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let r = match cmd {
         "run" => cmd_run(&args),
+        "replicas" => cmd_replicas(&args),
         "accuracy" => cmd_accuracy(&args),
         "longrun" => cmd_longrun(&args),
         "fftbench" => cmd_fftbench(&args),
@@ -61,6 +64,12 @@ fn print_help() {
          \x20              --ring-quant for int32-packed ring payloads;\n\
          \x20              --dist-matvec for the O(n^2) Eq.-8 partial-DFT\n\
          \x20              matvecs instead of the rank-local FFT fast path)\n\
+         \x20 replicas     batched replica ensemble: N trajectories through\n\
+         \x20              one model (--n 8 --nmol 64 --steps 100 --quench 30\n\
+         \x20              --kspace pppm|ewald|dist --threads N --overlap\n\
+         \x20              --no-batch: per-replica fallback loops;\n\
+         \x20              --json PATH: aggregate ns/day + per-replica\n\
+         \x20              energy-drift stats as JSON)\n\
          \x20 accuracy     Table 1: precision-config errors (--nmol 128)\n\
          \x20 longrun      Fig 7: NVT traces double vs mixed-int2 (--steps 1500)\n\
          \x20 fftbench     Fig 8: distributed-FFT comparison\n\
@@ -140,11 +149,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let rec = StepRecorder::new();
     // progress printer: `step` counts production steps only (quench steps
     // are not observed), so the printed indices match the run loop
-    let progress = observer_fn(|step, _, o| {
-        if step % 20 == 0 {
+    let progress = observer_fn(|ctx: &StepContext| {
+        if ctx.step % 20 == 0 {
+            let o = ctx.obs;
             println!(
-                "step {step:>5}: T {:>7.1} K   E_sr {:>10.3}  E_gt {:>9.3}  cons {:>12.4}",
-                o.temperature, o.e_sr, o.e_gt, o.conserved
+                "step {:>5}: T {:>7.1} K   E_sr {:>10.3}  E_gt {:>9.3}  cons {:>12.4}",
+                ctx.step, o.temperature, o.e_sr, o.e_gt, o.conserved
             );
         }
     });
@@ -200,6 +210,128 @@ fn cmd_run(args: &Args) -> Result<()> {
         1e3 * acc.dw_bwd / steps as f64,
         1e3 * acc.integrate / steps as f64,
     );
+    Ok(())
+}
+
+fn cmd_replicas(args: &Args) -> Result<()> {
+    use dplr::util::json::Json;
+    use dplr::util::stats::summarize;
+    use std::sync::{Arc, Mutex};
+
+    let n = args.usize_or("n", 8)?;
+    let nmol = args.usize_or("nmol", 64)?;
+    let steps = args.usize_or("steps", 100)?;
+    let quench = args.usize_or("quench", 30)?;
+    let systems = replica_boxes(nmol, n, args.usize_or("seed", 42)? as u64);
+
+    // per-replica conserved-energy traces for the drift report
+    let traces: Arc<Mutex<Vec<Vec<f64>>>> = Arc::new(Mutex::new(vec![Vec::new(); n]));
+    let tr = traces.clone();
+    let rec = StepRecorder::new();
+    let mut builder = ReplicaSet::builder(systems)
+        .dt_fs(args.f64_or("dt", 1.0)?)
+        .thermostat(300.0, 0.5)
+        .seed(7)
+        .overlap(args.bool("overlap"))
+        .batched(!args.bool("no-batch"))
+        .kspace(kspace_from_args(args, 0.3)?)
+        .short_range(short_range_from_args(args)?)
+        .observer(Box::new(rec.clone()))
+        .observe(move |ctx: &StepContext| {
+            tr.lock().unwrap()[ctx.replica_id].push(ctx.obs.conserved);
+        });
+    if let Some(t) = args.str_opt("threads") {
+        let t: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects an integer, got '{t}'"))?;
+        builder = builder.threads(t);
+    }
+    let mut set = builder.build()?;
+
+    println!(
+        "replica ensemble: {} x {} atoms ({} molecules), {} steps, backend={}, \
+         kspace={}, batched={}, overlap={}, threads={}",
+        n,
+        set.replica_sys(0).natoms(),
+        nmol,
+        steps,
+        set.short_range_name(),
+        set.kspace_name(),
+        set.batched(),
+        set.cfg.overlap,
+        set.cfg.threads,
+    );
+    set.quench(quench)?;
+    set.rescale_to(300.0);
+    let t0 = std::time::Instant::now();
+    set.run(steps)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let per_step = wall / steps as f64;
+    // the set advances N trajectories per wall-clock step
+    let aggregate = n as f64 * ns_per_day(per_step, set.cfg.dt_fs);
+    println!(
+        "\n{} steps x {} replicas in {:.2} s = {:.2} ms/step = {:.3} ns/day aggregate",
+        steps,
+        n,
+        wall,
+        per_step * 1e3,
+        aggregate
+    );
+
+    // per-replica drift: mean/sd of the conserved quantity over the second
+    // half of the trace, drift = (second-half mean - first-half mean)/step
+    // (the Fig.-7 stability readout, per replica)
+    let traces = traces.lock().unwrap();
+    let mut rows = Vec::with_capacity(n);
+    for (r, trace) in traces.iter().enumerate() {
+        let half = trace.len() / 2;
+        let (mean, sd, drift) = if half > 0 {
+            let (a, b) = trace.split_at(half);
+            let (sa, sb) = (summarize(a), summarize(b));
+            (sb.mean, sb.std, (sb.mean - sa.mean) / half as f64)
+        } else {
+            (trace.last().copied().unwrap_or(0.0), 0.0, 0.0)
+        };
+        let temp = set.last_obs(r).map(|o| o.temperature).unwrap_or(0.0);
+        println!(
+            "replica {r:>3}: T {temp:>7.1} K   cons {mean:>12.4} +- {sd:.2e}   \
+             drift {drift:.3e} eV/step"
+        );
+        rows.push(Json::obj(vec![
+            ("id", Json::Num(r as f64)),
+            ("temperature", Json::Num(temp)),
+            ("conserved_mean", Json::Num(mean)),
+            ("conserved_sd", Json::Num(sd)),
+            ("drift_ev_per_step", Json::Num(drift)),
+        ]));
+    }
+    println!(
+        "recorded {} observer callbacks ({} per replica)",
+        rec.steps(),
+        rec.per_replica().first().map(|s| s.steps).unwrap_or(0)
+    );
+
+    if let Some(path) = args.str_opt("json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("replicas".to_string())),
+            ("n", Json::Num(n as f64)),
+            ("nmol", Json::Num(nmol as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("batched", Json::Bool(set.batched())),
+            ("threads", Json::Num(set.cfg.threads as f64)),
+            ("ms_per_step", Json::Num(per_step * 1e3)),
+            ("aggregate_ns_per_day", Json::Num(aggregate)),
+            ("replicas", Json::Arr(rows)),
+        ]);
+        let text = doc.to_string_pretty();
+        if path == "true" {
+            // bare `--json`: print to stdout
+            println!("{text}");
+        } else {
+            std::fs::write(path, text)?;
+            println!("wrote {path}");
+        }
+    }
     Ok(())
 }
 

@@ -64,6 +64,14 @@ pub fn water_box_with_edge(nmol: usize, box_len: [f64; 3], seed: u64) -> System 
     sys
 }
 
+/// `n` independent water boxes of the same topology (identical `nmol` and
+/// edge, different jitter/orientation streams: replica `r` uses seed
+/// `seed + r`) — the input shape [`crate::engine::ReplicaSet::builder`]
+/// expects.
+pub fn replica_boxes(nmol: usize, n: usize, seed: u64) -> Vec<System> {
+    (0..n).map(|r| water_box(nmol, seed + r as u64)).collect()
+}
+
 fn orient_molecule(o: [f64; 3], rng: &mut Rng) -> ([f64; 3], [f64; 3]) {
     let axis = rng.unit3();
     // orthonormal frame around axis

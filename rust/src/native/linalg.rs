@@ -6,15 +6,22 @@
 //! BLAS, and removing the framework dispatch overhead is the point of the
 //! paper's section 3.4.2.
 //!
-//! With `--features simd` the two flat inner loops of the embedding-net
-//! matvecs — the row-axpy of [`matmul_acc`] and the dot product of
-//! [`matmul_bt`] — dispatch to explicit AVX f64x4 kernels on x86_64
-//! (runtime CPUID probe, scalar fallback elsewhere), mirroring
-//! `pppm::simd_x86`.  The axpy is elementwise, so it is bit-identical to
-//! the scalar form; the dot kernel regroups a per-output-element private
-//! sum, which — like the PPPM gather — cannot affect the engine's
-//! thread-count determinism because one build uses one kernel set
-//! everywhere.
+//! [`matmul_acc`] additionally register-blocks four A/C rows per pass
+//! over B, so weight matrices stream once per four samples.  When the
+//! replica engine stacks the rows of N replicas into one GEMM
+//! (`engine::ReplicaSet`), this block is the lane over the replica axis;
+//! per-row accumulation order is unchanged, so blocking is
+//! bit-transparent (pinned by `blocked_rows_match_single_row_bitwise`).
+//!
+//! With `--features simd` the flat inner loops of the embedding-net
+//! matvecs — the row-axpy of [`matmul_acc`] (single and 4-row blocked
+//! forms) and the dot product of [`matmul_bt`] — dispatch to explicit AVX
+//! f64x4 kernels on x86_64 (runtime CPUID probe, scalar fallback
+//! elsewhere), mirroring `pppm::simd_x86`.  The axpys are elementwise, so
+//! they are bit-identical to the scalar forms; the dot kernel regroups a
+//! per-output-element private sum, which — like the PPPM gather — cannot
+//! affect the engine's thread-count determinism because one build uses
+//! one kernel set everywhere.
 
 /// Row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,6 +88,33 @@ fn row_axpy(c: &mut [f64], a: f64, b: &[f64]) {
     }
 }
 
+/// Four simultaneous row-axpys sharing one streamed B row (the 4-row
+/// blocked [`matmul_acc`] inner loop).  Per-row arithmetic is identical
+/// to [`row_axpy`] — same k order, same elementwise ops — so blocking is
+/// bit-transparent.
+#[inline]
+fn row_axpy4(
+    c0: &mut [f64],
+    c1: &mut [f64],
+    c2: &mut [f64],
+    c3: &mut [f64],
+    a: [f64; 4],
+    b: &[f64],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_x86::avx_available() {
+        // Safety: AVX probed at runtime
+        unsafe { simd_x86::axpy4(c0, c1, c2, c3, b, a) };
+        return;
+    }
+    for j in 0..b.len() {
+        c0[j] += a[0] * b[j];
+        c1[j] += a[1] * b[j];
+        c2[j] += a[2] * b[j];
+        c3[j] += a[3] * b[j];
+    }
+}
+
 /// Dot product of two contiguous rows (the matmul_bt inner loop).
 #[inline]
 fn row_dot(a: &[f64], b: &[f64]) -> f64 {
@@ -96,21 +130,50 @@ fn row_dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// C += A @ B  (A: m x k, B: k x n, C: m x n), ikj order.
+/// C += A @ B  (A: m x k, B: k x n, C: m x n), ikj order with 4-row
+/// register blocking.
 pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat) {
     assert_eq!(a.c, b.r);
     assert_eq!(c.r, a.r);
     assert_eq!(c.c, b.c);
     let n = b.c;
-    for i in 0..a.r {
+    let kdim = a.c;
+    // 4-row blocking: one streaming pass over B updates four C rows, so
+    // weight rows (B) are read once per 4 samples instead of once per
+    // sample.  Under the replica engine the stacked rows of one GEMM come
+    // from different replicas — this block is the SIMD lane over the
+    // replica axis.  Each output row still accumulates in the same k
+    // order with the same elementwise ops as the single-row path below,
+    // so blocking never changes bits.
+    let mut i = 0;
+    while i + 4 <= a.r {
+        let block = &mut c.a[i * n..(i + 4) * n];
+        let (r0, rest) = block.split_at_mut(n);
+        let (r1, rest) = rest.split_at_mut(n);
+        let (r2, r3) = rest.split_at_mut(n);
+        for k in 0..kdim {
+            let brow = &b.a[k * n..(k + 1) * n];
+            let coef = [
+                a.a[i * kdim + k],
+                a.a[(i + 1) * kdim + k],
+                a.a[(i + 2) * kdim + k],
+                a.a[(i + 3) * kdim + k],
+            ];
+            row_axpy4(r0, r1, r2, r3, coef, brow);
+        }
+        i += 4;
+    }
+    // tail rows (< 4): dense ikj, contiguous inner loop over C/B rows
+    // autovectorizes; no zero-skip branch (it defeats vectorization on
+    // dense inputs)
+    while i < a.r {
         let arow = a.row(i);
         let crow = &mut c.a[i * n..(i + 1) * n];
-        // dense ikj: contiguous inner loop over C/B rows autovectorizes;
-        // no zero-skip branch (it defeats vectorization on dense inputs)
         for (k, &aik) in arow.iter().enumerate() {
             let brow = &b.a[k * n..(k + 1) * n];
             row_axpy(crow, aik, brow);
         }
+        i += 1;
     }
 }
 
@@ -193,6 +256,65 @@ mod simd_x86 {
         }
     }
 
+    /// Four `c[j] += a_r * b[j]` rows sharing one streamed B-row load (the
+    /// 4-row blocked matmul, i.e. the replica-axis lane).  Elementwise —
+    /// bit-identical to four scalar [`axpy`] calls.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX support (see [`avx_available`]).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy4(
+        c0: &mut [f64],
+        c1: &mut [f64],
+        c2: &mut [f64],
+        c3: &mut [f64],
+        b: &[f64],
+        a: [f64; 4],
+    ) {
+        let n = b
+            .len()
+            .min(c0.len())
+            .min(c1.len())
+            .min(c2.len())
+            .min(c3.len());
+        let a0 = _mm256_set1_pd(a[0]);
+        let a1 = _mm256_set1_pd(a[1]);
+        let a2 = _mm256_set1_pd(a[2]);
+        let a3 = _mm256_set1_pd(a[3]);
+        let mut k = 0;
+        while k + 4 <= n {
+            let bv = _mm256_loadu_pd(b.as_ptr().add(k));
+            let c0v = _mm256_loadu_pd(c0.as_ptr().add(k));
+            _mm256_storeu_pd(
+                c0.as_mut_ptr().add(k),
+                _mm256_add_pd(c0v, _mm256_mul_pd(a0, bv)),
+            );
+            let c1v = _mm256_loadu_pd(c1.as_ptr().add(k));
+            _mm256_storeu_pd(
+                c1.as_mut_ptr().add(k),
+                _mm256_add_pd(c1v, _mm256_mul_pd(a1, bv)),
+            );
+            let c2v = _mm256_loadu_pd(c2.as_ptr().add(k));
+            _mm256_storeu_pd(
+                c2.as_mut_ptr().add(k),
+                _mm256_add_pd(c2v, _mm256_mul_pd(a2, bv)),
+            );
+            let c3v = _mm256_loadu_pd(c3.as_ptr().add(k));
+            _mm256_storeu_pd(
+                c3.as_mut_ptr().add(k),
+                _mm256_add_pd(c3v, _mm256_mul_pd(a3, bv)),
+            );
+            k += 4;
+        }
+        while k < n {
+            c0[k] += a[0] * b[k];
+            c1[k] += a[1] * b[k];
+            c2[k] += a[2] * b[k];
+            c3[k] += a[3] * b[k];
+            k += 1;
+        }
+    }
+
     /// `sum_k a[k] * b[k]` with 4-lane accumulation.
     ///
     /// # Safety
@@ -268,6 +390,31 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn blocked_rows_match_single_row_bitwise() {
+        // the 4-row blocked path (the replica-axis lane) must be
+        // bit-identical to row-at-a-time accumulation, not just close:
+        // replica invariance rests on it
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(1usize, 5usize, 7usize), (4, 8, 3), (6, 13, 17), (9, 48, 24)] {
+            let a = rand_mat(m, k, &mut rng);
+            let b = rand_mat(k, n, &mut rng);
+            let c1 = matmul(&a, &b);
+            // row-at-a-time reference: one-row matrices always take the
+            // unblocked tail path
+            let mut c2 = Mat::zeros(m, n);
+            for i in 0..m {
+                let ar = Mat::from_vec(1, k, a.row(i).to_vec());
+                let mut row = Mat::zeros(1, n);
+                matmul_acc(&mut row, &ar, &b);
+                c2.row_mut(i).copy_from_slice(row.row(0));
+            }
+            for (x, y) in c1.a.iter().zip(&c2.a) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m}x{k}x{n})");
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,20 @@
 
 use super::linalg::Mat;
 use super::net::{backward, forward, seeded_mlp, Mlp, Tape};
+
+/// Replica owning centre `c` of a replica-concatenated system with `nmol`
+/// molecules total across `nrep` replicas.  Layout contract (shared with
+/// `engine::replica`): all O blocks first, replica by replica, then all H
+/// blocks, so the system stays globally type-sorted and every
+/// `nmol = natoms / 3` assumption in this module holds unchanged.
+fn replica_of(c: usize, nmol: usize, nrep: usize) -> usize {
+    let per = nmol / nrep.max(1);
+    if c < nmol {
+        c / per
+    } else {
+        (c - nmol) / (2 * per)
+    }
+}
 use crate::pool::balance::ShardPlan;
 use crate::pool::ThreadPool;
 use crate::runtime::manifest::Hyper;
@@ -511,8 +525,30 @@ impl NativeModel {
         nlist: &[i32],
         nmol: usize,
     ) -> (f64, Vec<f64>) {
+        let (e, forces) = self.dp_nn_ef_multi(coords, box_len, nlist, nmol, 1);
+        (e[0], forces)
+    }
+
+    /// [`Self::dp_nn_ef`] over a replica-concatenated system: `nrep`
+    /// replicas of `nmol / nrep` molecules each, laid out type-sorted (all
+    /// O blocks replica by replica, then all H blocks; see
+    /// [`crate::engine::ReplicaSet`]).  The whole batch runs through one
+    /// sharded pipeline — one embedding/fitting GEMM chain per shard over
+    /// atoms x replicas rows, weights streamed once — and only the energy
+    /// reduction is replica-bucketed, in the same ascending-centre order a
+    /// single-replica call uses, so per-replica results are bit-identical
+    /// to `nrep` separate calls.
+    pub fn dp_nn_ef_multi(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nmol: usize,
+        nrep: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
         let natoms = coords.len() / 3;
         let s = nlist.len() / natoms;
+        debug_assert!(nrep >= 1 && nmol % nrep == 0);
         let shards = {
             let mut plan = self.plan_dp.lock().unwrap();
             plan.ensure(natoms, self.pool.nthreads());
@@ -527,15 +563,16 @@ impl NativeModel {
             plan.record(&times);
             plan.rebalance();
         }
-        // deterministic reduction: energies in ascending centre order, the
-        // force scatter in global pair order — independent of sharding
-        let mut energy = 0.0;
+        // deterministic reduction: energies in ascending centre order
+        // (bucketed by owning replica), the force scatter in global pair
+        // order — independent of sharding
+        let mut energies = vec![0.0; nrep];
         let mut dd_all = vec![[0.0f64; 3]; natoms * s];
         for (k, out) in outs.iter().enumerate() {
-            for &ec in &out.e {
-                energy += ec;
-            }
             let lo = shards[k].start;
+            for (off, &ec) in out.e.iter().enumerate() {
+                energies[replica_of(lo + off, nmol, nrep)] += ec;
+            }
             dd_all[lo * s..lo * s + out.dd.len()].copy_from_slice(&out.dd);
         }
         // scatter dE/dd into forces: d = c_j - c_i => F_i += dd, F_j -= dd
@@ -554,7 +591,7 @@ impl NativeModel {
                 }
             }
         }
-        (energy, forces)
+        (energies, forces)
     }
 
     // ---- physical prior ---------------------------------------------------
@@ -624,10 +661,28 @@ impl NativeModel {
         nlist: &[i32],
         nmol: usize,
     ) -> (f64, Vec<f64>) {
+        let (e, forces) = self.prior_ef_multi(coords, box_len, nlist, nmol, 1);
+        (e[0], forces)
+    }
+
+    /// [`Self::prior_ef`] over a replica-concatenated system (same layout
+    /// contract as [`Self::dp_nn_ef_multi`]): one shared pair scan, with
+    /// per-molecule and per-pair energies bucketed by owning replica in
+    /// the single-replica accumulation order.
+    pub fn prior_ef_multi(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nmol: usize,
+        nrep: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
         let natoms = coords.len() / 3;
         let s = nlist.len() / natoms;
+        debug_assert!(nrep >= 1 && nmol % nrep == 0);
+        let per = nmol / nrep.max(1);
         let h = &self.hyper;
-        let mut energy = 0.0;
+        let mut energies = vec![0.0; nrep];
         let mut forces = vec![0.0; natoms * 3];
         let mi = |mut x: f64, l: f64| {
             x -= l * (x / l).round();
@@ -647,7 +702,8 @@ impl NativeModel {
             }
             let r1 = (d1[0] * d1[0] + d1[1] * d1[1] + d1[2] * d1[2]).sqrt();
             let r2 = (d2[0] * d2[0] + d2[1] * d2[1] + d2[2] * d2[2]).sqrt();
-            energy += h.bond_k * ((r1 - h.bond_r0).powi(2) + (r2 - h.bond_r0).powi(2));
+            let em = &mut energies[m / per];
+            *em += h.bond_k * ((r1 - h.bond_r0).powi(2) + (r2 - h.bond_r0).powi(2));
             // dE/dr * unit vector; force on H = -dE/dd, on O = +dE/dd
             for (d, r, hi) in [(d1, r1, h1), (d2, r2, h2)] {
                 let c = 2.0 * h.bond_k * (r - h.bond_r0) / r;
@@ -660,7 +716,7 @@ impl NativeModel {
             let dot = d1[0] * d2[0] + d1[1] * d2[1] + d1[2] * d2[2];
             let cosv = (dot / (r1 * r2)).clamp(-1.0 + 1e-9, 1.0 - 1e-9);
             let ang = cosv.acos();
-            energy += h.angle_k * (ang - h.angle_t0).powi(2);
+            *em += h.angle_k * (ang - h.angle_t0).powi(2);
             let dang = 2.0 * h.angle_k * (ang - h.angle_t0);
             let dcos = -dang / (1.0 - cosv * cosv).sqrt();
             for t in 0..3 {
@@ -699,7 +755,7 @@ impl NativeModel {
                     }
                     let j = j as usize;
                     let idx = r * s + k;
-                    energy += out.e[idx];
+                    energies[replica_of(i, nmol, nrep)] += out.e[idx];
                     for t in 0..3 {
                         forces[3 * i + t] += out.g[idx][t];
                         forces[3 * j + t] -= out.g[idx][t];
@@ -707,17 +763,35 @@ impl NativeModel {
                 }
             }
         }
-        (energy, forces)
+        (energies, forces)
     }
 
     /// Full short-range model: NN + prior (same contract as runtime dp_ef).
     pub fn dp_ef(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32]) -> (f64, Vec<f64>) {
+        let (e, forces) = self.dp_ef_multi(coords, box_len, nlist, 1);
+        (e[0], forces)
+    }
+
+    /// Full short-range model over a replica-concatenated system: one
+    /// batched NN pass + one batched prior pass, per-replica energies and
+    /// the batched force vector.  Per-replica results are bit-identical to
+    /// `nrep` single-replica [`Self::dp_ef`] calls on the de-concatenated
+    /// inputs (the replica-invariance contract; see
+    /// [`crate::engine::ReplicaSet`] for the layout).
+    pub fn dp_ef_multi(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist: &[i32],
+        nrep: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
         let natoms = coords.len() / 3;
         let nmol = natoms / 3;
-        let (e1, f1) = self.dp_nn_ef(coords, box_len, nlist, nmol);
-        let (e2, f2) = self.prior_ef(coords, box_len, nlist, nmol);
+        let (e1, f1) = self.dp_nn_ef_multi(coords, box_len, nlist, nmol, nrep);
+        let (e2, f2) = self.prior_ef_multi(coords, box_len, nlist, nmol, nrep);
+        let energies = e1.iter().zip(&e2).map(|(a, b)| a + b).collect();
         let forces = f1.iter().zip(&f2).map(|(a, b)| a + b).collect();
-        (e1 + e2, forces)
+        (energies, forces)
     }
 
     // ---- DW model ---------------------------------------------------------

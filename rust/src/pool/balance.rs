@@ -51,6 +51,12 @@ impl ShardPlan {
 
     /// Re-initialise (even split) if the item count or shard count changed;
     /// otherwise keep the balanced boundaries from previous calls.
+    ///
+    /// The size check is what lets one model serve a
+    /// [`crate::engine::ReplicaSet`]: the batched buffers hold
+    /// `nreplicas x natoms` rows every step, so the plan sees a constant
+    /// item count and its learned boundaries survive — replica batching
+    /// changes the row count once at build time, not per call.
     pub fn ensure(&mut self, nitems: usize, nshards: usize) {
         let want = nshards.max(1).min(nitems.max(1));
         if self.nitems() != nitems || self.nshards() != want {

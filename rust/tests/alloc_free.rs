@@ -101,4 +101,55 @@ fn pppm_energy_forces_is_alloc_free_in_steady_state() {
             );
         }
     }
+
+    // replica sharing: a ReplicaSet reuses ONE solver across all replicas,
+    // so a single Pppm cycled over distinct site sets (same counts,
+    // different positions) must also stay alloc-free and bit-stable —
+    // switching replicas must not trigger scratch resizing
+    let replicas: Vec<(Vec<[f64; 3]>, Vec<f64>)> = (0..3u64)
+        .map(|r| {
+            let sys = water_box(24, 10 + r);
+            let mut pos = sys.pos.clone();
+            let mut q: Vec<f64> = (0..sys.natoms())
+                .map(|i| if i < sys.nmol { 6.0 } else { 1.0 })
+                .collect();
+            for n in 0..sys.nmol {
+                let mut w = sys.pos[n];
+                w[0] += 0.08;
+                pos.push(w);
+                q.push(-8.0);
+            }
+            (pos, q)
+        })
+        .collect();
+    let box_len = water_box(24, 10).box_len;
+    let mut pppm = Pppm::new(PppmConfig::new([12, 18, 12], 5, 0.35), box_len);
+    pppm.set_pool(Arc::new(ThreadPool::new(3)));
+    let mut out: Vec<[f64; 3]> = Vec::new();
+    let warm: Vec<f64> = replicas
+        .iter()
+        .map(|(pos, q)| pppm.energy_forces_into(pos, q, &mut out))
+        .collect();
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    ENABLED.store(true, Ordering::SeqCst);
+    let mut again = [0.0; 3];
+    for _ in 0..2 {
+        for (r, (pos, q)) in replicas.iter().enumerate() {
+            again[r] = pppm.energy_forces_into(pos, q, &mut out);
+        }
+    }
+    ENABLED.store(false, Ordering::SeqCst);
+    let n = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        n, 0,
+        "{n} heap allocations while interleaving 3 replicas through one solver"
+    );
+    for (r, (w, a)) in warm.iter().zip(again.iter()).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            a.to_bits(),
+            "replica {r}: interleaved solver reuse changed the energy"
+        );
+    }
 }

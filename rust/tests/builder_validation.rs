@@ -1,12 +1,13 @@
-//! `SimulationBuilder` build-time validation: malformed configuration must
-//! error at `build()` (not assert deep inside a solver), and the
-//! `DPLR_THREADS` environment default must keep working through the
-//! builder exactly as it did through `EngineConfig::default_for`.
+//! `SimulationBuilder` / `ReplicaSetBuilder` build-time validation:
+//! malformed configuration must error at `build()` (not assert deep
+//! inside a solver), and the `DPLR_THREADS` environment default must keep
+//! working through the builder exactly as it did through
+//! `EngineConfig::default_for`.
 //!
 //! Runs from a clean checkout (synthetic seeded weights).
 
-use dplr::engine::{KspaceConfig, Simulation};
-use dplr::md::water::water_box;
+use dplr::engine::{KspaceConfig, ReplicaSet, Simulation};
+use dplr::md::water::{replica_boxes, water_box};
 use dplr::native::NativeModel;
 use dplr::pppm::PppmConfig;
 use std::sync::Mutex;
@@ -167,6 +168,141 @@ fn missing_short_range_model_is_rejected() {
         .expect_err("short-range model is required");
     assert!(
         err.to_string().contains("short-range"),
+        "unexpected error: {err:#}"
+    );
+}
+
+// ---- ReplicaSetBuilder: the same validate-at-build contract ----
+
+fn replica_builder(n: usize) -> dplr::engine::ReplicaSetBuilder {
+    ReplicaSet::builder(replica_boxes(8, n, 1))
+        .threads(1)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+        .short_range(Box::new(NativeModel::synthetic(3)))
+}
+
+#[test]
+fn valid_replica_set_builds() {
+    let set = replica_builder(2)
+        .temperatures(vec![280.0, 320.0])
+        .seed(9)
+        .build()
+        .expect("valid 2-replica configuration must build");
+    assert_eq!(set.nreplicas(), 2);
+    assert_eq!(set.kspace_name(), "pppm");
+    assert_eq!(set.short_range_name(), "native");
+    assert!(set.batched(), "NativeModel opts into the batched path");
+    assert_eq!(set.cfg.threads, 1);
+}
+
+#[test]
+fn zero_replicas_are_rejected() {
+    let err = replica_builder(0).build().expect_err("0 replicas");
+    assert!(
+        err.to_string().contains("replica"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn mismatched_replica_topology_is_rejected() {
+    // different molecule counts
+    let systems = vec![water_box(8, 1), water_box(12, 2)];
+    let err = ReplicaSet::builder(systems)
+        .threads(1)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+        .short_range(Box::new(NativeModel::synthetic(3)))
+        .build()
+        .expect_err("nmol 8 vs 12 must be rejected");
+    assert!(
+        err.to_string().contains("topology"),
+        "unexpected error: {err:#}"
+    );
+
+    // same molecule count, different box edges
+    let mut b = water_box(8, 2);
+    b.box_len[0] *= 2.0;
+    let err = ReplicaSet::builder(vec![water_box(8, 1), b])
+        .threads(1)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+        .short_range(Box::new(NativeModel::synthetic(3)))
+        .build()
+        .expect_err("mismatched box must be rejected");
+    assert!(
+        err.to_string().contains("topology"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn bad_replica_temperatures_are_rejected() {
+    // a temperature ladder needs a thermostat to mean anything
+    let err = replica_builder(2)
+        .nve()
+        .temperatures(vec![280.0, 320.0])
+        .build()
+        .expect_err("temperatures under nve");
+    assert!(
+        err.to_string().contains("thermostat"),
+        "unexpected error: {err:#}"
+    );
+
+    // one entry per replica
+    let err = replica_builder(2)
+        .temperatures(vec![280.0])
+        .build()
+        .expect_err("1 temperature for 2 replicas");
+    assert!(
+        err.to_string().contains("temperatures"),
+        "unexpected error: {err:#}"
+    );
+
+    // finite and positive, like every other physical input
+    for t in [0.0, -250.0, f64::NAN] {
+        let err = replica_builder(2)
+            .temperatures(vec![300.0, t])
+            .build()
+            .expect_err("non-physical temperature");
+        assert!(
+            err.to_string().contains("temperatures[1]"),
+            "temperature {t}: unexpected error: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn replica_builder_rejects_what_simulation_builder_rejects() {
+    let err = replica_builder(2).dt_fs(0.0).build().expect_err("dt 0");
+    assert!(err.to_string().contains("dt_fs"));
+
+    let err = replica_builder(2)
+        .thermostat(300.0, 0.0)
+        .build()
+        .expect_err("tau 0");
+    assert!(err.to_string().contains("tau"));
+
+    let err = replica_builder(2).threads(0).build().expect_err("threads 0");
+    assert!(err.to_string().contains("threads"));
+
+    let err = ReplicaSet::builder(replica_boxes(8, 2, 1))
+        .threads(1)
+        .build()
+        .expect_err("short-range model is required");
+    assert!(
+        err.to_string().contains("short"),
+        "unexpected error: {err:#}"
+    );
+
+    // seed(..) thermalizes at the target temperature, so it needs a
+    // physical target even when the run itself is NVE
+    let err = replica_builder(2)
+        .nve()
+        .temperature(-1.0)
+        .seed(7)
+        .build()
+        .expect_err("seed with a non-physical target");
+    assert!(
+        err.to_string().contains("seed"),
         "unexpected error: {err:#}"
     );
 }

@@ -1,0 +1,275 @@
+//! Replica invariance: the batched [`ReplicaSet`] must reproduce, bit for
+//! bit, the trajectories of running each replica alone in a
+//! single-replica [`Simulation`] — at any thread count, any replica
+//! order, and on both the batched and the per-replica fallback model
+//! paths.  This extends the engine's thread-invariance contract with a
+//! replica axis: stacking replicas into one model call only partitions
+//! the computation, it must never reorder a single replica's arithmetic.
+//!
+//! Uses synthetic seeded weights so the suite runs from a clean checkout.
+
+use anyhow::Result;
+use dplr::engine::{KspaceConfig, ReplicaSet, ShortRangeModel, Simulation};
+use dplr::md::system::System;
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::neighbor::{build_exact, NlistParams};
+use dplr::util::rng::Rng;
+
+const NMOL: usize = 16;
+const STEPS: usize = 4;
+
+/// Pre-thermalized replica system `r` (shared verbatim by the set and the
+/// single-run reference, so the comparison starts from identical bits).
+fn make_sys(r: usize) -> System {
+    let mut sys = water_box(NMOL, 100 + r as u64);
+    let mut rng = Rng::new(50 + r as u64);
+    sys.thermalize(300.0, &mut rng);
+    sys
+}
+
+/// Per-step (e_sr, e_gt, conserved) bit patterns.
+type Trace = Vec<(u64, u64, u64)>;
+
+fn single_traj(sys: System, threads: usize, temp: f64) -> Trace {
+    let mut sim = Simulation::builder(sys)
+        .dt_fs(0.5)
+        .thermostat(temp, 0.5)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.35 })
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .threads(threads)
+        .build()
+        .expect("valid single-replica configuration");
+    let mut trace = Vec::new();
+    for _ in 0..STEPS {
+        sim.step().expect("step");
+        let o = sim.last_obs.unwrap();
+        trace.push((o.e_sr.to_bits(), o.e_gt.to_bits(), o.conserved.to_bits()));
+    }
+    trace
+}
+
+/// Step a set whose replica `k` carries `make_sys(order[k])`; returns one
+/// trace per replica slot.
+fn set_traj_with(
+    order: &[usize],
+    threads: usize,
+    batched: bool,
+    temps: Option<Vec<f64>>,
+) -> Vec<Trace> {
+    let systems: Vec<System> = order.iter().map(|&r| make_sys(r)).collect();
+    let mut b = ReplicaSet::builder(systems)
+        .dt_fs(0.5)
+        .thermostat(300.0, 0.5)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.35 })
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .threads(threads)
+        .batched(batched);
+    if let Some(t) = temps {
+        b = b.temperatures(t);
+    }
+    let mut set = b.build().expect("valid replica-set configuration");
+    assert_eq!(set.batched(), batched, "NativeModel supports batching");
+    let mut traces = vec![Vec::new(); order.len()];
+    for _ in 0..STEPS {
+        set.step().expect("replica step");
+        for (k, trace) in traces.iter_mut().enumerate() {
+            let o = set.last_obs(k).unwrap();
+            trace.push((o.e_sr.to_bits(), o.e_gt.to_bits(), o.conserved.to_bits()));
+        }
+    }
+    traces
+}
+
+#[test]
+fn replica_set_bit_identical_to_single_runs() {
+    // the headline contract: N replicas through one batched model == N
+    // standalone simulations, bitwise
+    let singles: Vec<Trace> = (0..3).map(|r| single_traj(make_sys(r), 1, 300.0)).collect();
+    let set = set_traj_with(&[0, 1, 2], 1, true, None);
+    assert_eq!(set, singles, "batched replica set diverged from single runs");
+}
+
+#[test]
+fn forced_fallback_matches_batched_path() {
+    // batched(false) routes through the per-replica fallback loops — same
+    // bits as the concatenated path
+    let batched = set_traj_with(&[0, 1, 2], 1, true, None);
+    let fallback = set_traj_with(&[0, 1, 2], 1, false, None);
+    assert_eq!(batched, fallback, "fallback loops diverged from batched path");
+}
+
+#[test]
+fn replica_trajectories_invariant_under_thread_count() {
+    // DPLR_THREADS-style matrix, locally: pool size must not change bits
+    let t1 = set_traj_with(&[0, 1, 2], 1, true, None);
+    let t4 = set_traj_with(&[0, 1, 2], 4, true, None);
+    assert_eq!(t1, t4, "replica trajectories diverged between 1 and 4 threads");
+}
+
+#[test]
+fn replica_trajectories_invariant_under_replica_order() {
+    // a system's trajectory must not depend on which slot carries it
+    let fwd = set_traj_with(&[0, 1, 2], 2, true, None);
+    let perm = set_traj_with(&[2, 0, 1], 2, true, None);
+    assert_eq!(fwd[0], perm[1], "system 0 diverged when moved to slot 1");
+    assert_eq!(fwd[1], perm[2], "system 1 diverged when moved to slot 2");
+    assert_eq!(fwd[2], perm[0], "system 2 diverged when moved to slot 0");
+}
+
+#[test]
+fn per_replica_temperatures_match_dedicated_single_runs() {
+    // a temperature ladder: replica r thermostatted at temps[r] must match
+    // a standalone simulation thermostatted at temps[r]
+    let temps = vec![250.0, 300.0, 350.0];
+    let set = set_traj_with(&[0, 1, 2], 1, true, Some(temps.clone()));
+    for (r, &t) in temps.iter().enumerate() {
+        let single = single_traj(make_sys(r), 1, t);
+        assert_eq!(set[r], single, "replica {r} at {t} K diverged");
+    }
+}
+
+#[test]
+fn builder_seed_matches_per_replica_single_seeds() {
+    // ReplicaSetBuilder::seed(s) draws replica r's velocities from seed
+    // s + r — exactly what SimulationBuilder::seed(s + r) draws
+    let systems: Vec<System> = (0..2).map(|r| water_box(NMOL, 100 + r as u64)).collect();
+    let mut set = ReplicaSet::builder(systems)
+        .dt_fs(0.5)
+        .thermostat(300.0, 0.5)
+        .seed(11)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.35 })
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .threads(1)
+        .build()
+        .expect("valid replica-set configuration");
+    let mut traces: Vec<Trace> = vec![Vec::new(); 2];
+    for _ in 0..STEPS {
+        set.step().expect("replica step");
+        for (k, trace) in traces.iter_mut().enumerate() {
+            let o = set.last_obs(k).unwrap();
+            trace.push((o.e_sr.to_bits(), o.e_gt.to_bits(), o.conserved.to_bits()));
+        }
+    }
+    for r in 0..2usize {
+        let single = single_traj_seeded(water_box(NMOL, 100 + r as u64), 11 + r as u64);
+        assert_eq!(traces[r], single, "seeded replica {r} diverged");
+    }
+}
+
+fn single_traj_seeded(sys: System, seed: u64) -> Trace {
+    let mut sim = Simulation::builder(sys)
+        .dt_fs(0.5)
+        .thermostat(300.0, 0.5)
+        .seed(seed)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.35 })
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .threads(1)
+        .build()
+        .expect("valid single-replica configuration");
+    let mut trace = Vec::new();
+    for _ in 0..STEPS {
+        sim.step().expect("step");
+        let o = sim.last_obs.unwrap();
+        trace.push((o.e_sr.to_bits(), o.e_gt.to_bits(), o.conserved.to_bits()));
+    }
+    trace
+}
+
+// ---- model-level contract: the three DP batch paths agree bitwise ----
+
+/// The supersystem layout (kept in sync with `engine/replica.rs`): all O
+/// blocks replica-major, then all H blocks.
+fn batched_atom(r: usize, i: usize, nmol: usize, nrep: usize) -> usize {
+    if i < nmol {
+        r * nmol + i
+    } else {
+        nrep * nmol + 2 * r * nmol + (i - nmol)
+    }
+}
+
+/// A model with NO batched override: `dp_ef_replicas` resolves to the
+/// trait's default de-concatenating implementation.
+struct Unbatched(NativeModel);
+
+impl ShortRangeModel for Unbatched {
+    fn dp_ef(&self, coords: &[f64], box_len: [f64; 3], nlist: &[i32]) -> Result<(f64, Vec<f64>)> {
+        Ok(self.0.dp_ef(coords, box_len, nlist))
+    }
+
+    fn dw_fwd(&self, coords: &[f64], box_len: [f64; 3], nlist_o: &[i32]) -> Result<Vec<f64>> {
+        Ok(self.0.dw_fwd(coords, box_len, nlist_o))
+    }
+
+    fn dw_vjp(
+        &self,
+        coords: &[f64],
+        box_len: [f64; 3],
+        nlist_o: &[i32],
+        f_wc: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        Ok(self.0.dw_vjp(coords, box_len, nlist_o, f_wc))
+    }
+
+    fn name(&self) -> &'static str {
+        "unbatched"
+    }
+}
+
+#[test]
+fn dp_batch_paths_agree_with_per_replica_calls() {
+    // three ways to evaluate 2 stacked replicas — NativeModel::dp_ef_multi
+    // (the batched GEMMs), the trait-default dp_ef_replicas (de-concatenate
+    // + per-replica dp_ef), and direct per-replica dp_ef calls — must all
+    // produce the same bits
+    let nrep = 2usize;
+    let systems: Vec<System> = (0..nrep).map(make_sys).collect();
+    let p = NlistParams::default();
+    let (nmol, natoms, s) = (NMOL, 3 * NMOL, p.sel_total());
+    let box_len = systems[0].box_len;
+
+    let mut bc = vec![0.0; 3 * nrep * natoms];
+    let mut bl = vec![-1i32; nrep * natoms * s];
+    let mut singles = Vec::new();
+    let model = NativeModel::synthetic(7);
+    for (r, sys) in systems.iter().enumerate() {
+        let centres: Vec<usize> = (0..natoms).collect();
+        let nl = build_exact(sys, &centres, &p).data;
+        let coords = sys.coords_flat();
+        for i in 0..natoms {
+            let g = batched_atom(r, i, nmol, nrep);
+            bc[3 * g..3 * g + 3].copy_from_slice(&coords[3 * i..3 * i + 3]);
+            for (c, &v) in nl[i * s..(i + 1) * s].iter().enumerate() {
+                if v >= 0 {
+                    bl[g * s + c] = batched_atom(r, v as usize, nmol, nrep) as i32;
+                }
+            }
+        }
+        singles.push(model.dp_ef(&coords, box_len, &nl));
+    }
+
+    let (eb, fb) = model.dp_ef_multi(&bc, box_len, &bl, nrep);
+    let un = Unbatched(NativeModel::synthetic(7));
+    let (ed, fd) = un.dp_ef_replicas(&bc, box_len, &bl, nrep).unwrap();
+    assert!(!un.supports_replica_batch(), "default must stay opt-in");
+
+    for (r, (e_ref, f_ref)) in singles.iter().enumerate() {
+        assert_eq!(eb[r].to_bits(), e_ref.to_bits(), "dp_ef_multi E, replica {r}");
+        assert_eq!(ed[r].to_bits(), e_ref.to_bits(), "default E, replica {r}");
+        for i in 0..natoms {
+            let g = batched_atom(r, i, nmol, nrep);
+            for d in 0..3 {
+                assert_eq!(
+                    fb[3 * g + d].to_bits(),
+                    f_ref[3 * i + d].to_bits(),
+                    "dp_ef_multi F, replica {r} atom {i} dim {d}"
+                );
+                assert_eq!(
+                    fd[3 * g + d].to_bits(),
+                    f_ref[3 * i + d].to_bits(),
+                    "default F, replica {r} atom {i} dim {d}"
+                );
+            }
+        }
+    }
+}
