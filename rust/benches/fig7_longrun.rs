@@ -10,4 +10,9 @@ fn main() {
         Ok((a, b)) => f7::print_summary(&a, &b),
         Err(e) => eprintln!("fig7 bench skipped: {e:#} (run `make artifacts`)"),
     }
+    // --mts section: strided double-precision traces at k = 2, 4
+    match f7::run_mts(&cfg) {
+        Ok(traces) => f7::print_mts_summary(&traces),
+        Err(e) => eprintln!("fig7 mts section skipped: {e:#} (run `make artifacts`)"),
+    }
 }

@@ -15,6 +15,7 @@ use dplr::md::units::ns_per_day;
 use dplr::md::water::{replica_boxes, water_box};
 use dplr::native::NativeModel;
 use dplr::neighbor::{build_cells_par, build_exact, NlistParams};
+use dplr::perfmodel::{mts_model_speedup, CostTable};
 use dplr::pool::ThreadPool;
 use dplr::pppm::{Pppm, PppmConfig};
 use dplr::runtime::manifest::artifacts_dir;
@@ -259,6 +260,55 @@ fn main() {
         32.0 * ns_per_day(t_seq, dt_fs),
         t_seq / t_batched_32
     );
+
+    // ---- k-space MTS: full engine steps at stride k ----
+    // a deliberately k-space-bound box (dense mesh for the atom count) so
+    // the stride shows up in wall-clock; each rep times one full stride
+    // period (k steps) and divides by k, so solve and held steps average
+    // out instead of aliasing the per-step p50
+    let mts_nmol = if quick { 16 } else { 32 };
+    let mts_grid = if quick { [32, 32, 32] } else { [48, 48, 48] };
+    println!(
+        "\n=== k-space MTS: engine step at stride k ({mts_nmol}-molecule box, \
+         {}x{}x{} mesh, 1 thread) ===",
+        mts_grid[0], mts_grid[1], mts_grid[2]
+    );
+    let mut t_mts_1 = 0.0;
+    for k in [1usize, 2, 4] {
+        let mut sim = Simulation::builder(water_box(mts_nmol, 31))
+            .dt_fs(0.5)
+            .thermostat(300.0, 0.5)
+            .threads(1)
+            .mts(k)
+            .kspace(KspaceConfig::Pppm(PppmConfig::new(mts_grid, 5, 0.3)))
+            .short_range(Box::new(NativeModel::synthetic(20250710)))
+            .build()
+            .expect("mts sim");
+        let t = summarize(&time_reps(1, reps, || {
+            for _ in 0..k {
+                sim.step().expect("mts step");
+            }
+        }))
+        .p50
+            / k as f64;
+        record(&format!("mts_k{k}"), t);
+        if k == 1 {
+            t_mts_1 = t;
+        }
+        println!(
+            "mts k={k}           : {:8.2} ms/step   speedup {:.2}x",
+            t * 1e3,
+            t_mts_1 / t
+        );
+    }
+    // model-predicted ceiling on the paper's headline configuration:
+    // pure arithmetic over CostTable::default(), pinned exactly by
+    // scripts/mts_model_baseline.py in the bench-regression gate
+    for k in [2usize, 4] {
+        let s = mts_model_speedup(k, &CostTable::default());
+        record(&format!("model_mts_speedup_k{k}"), s);
+        println!("model mts ceiling k={k}: {s:.4}x (headline 12-node config)");
+    }
 
     if let Some(path) = args.str_opt("json") {
         // --tag NAME suffixes the bench name (e.g. `--tag simd` writes

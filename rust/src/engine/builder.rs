@@ -21,6 +21,7 @@
 //! # }
 //! ```
 
+use super::mts::{HeldKspace, MtsClock, MtsConfig, MtsExtrap};
 use super::observe::{observer_fn, Observer, StepContext};
 use super::traits::{KspaceSolver, ShortRangeModel};
 use super::{SimConfig, Simulation};
@@ -37,6 +38,7 @@ use std::sync::Arc;
 
 /// Declarative k-space solver choice (validated at build time).  For a
 /// hand-constructed solver use [`SimulationBuilder::kspace_solver`].
+#[derive(Clone, Debug)]
 pub enum KspaceConfig {
     /// PPPM with an explicit mesh configuration (any `MeshMode`).
     Pppm(PppmConfig),
@@ -175,6 +177,7 @@ pub struct SimulationBuilder {
     nlist: NlistParams,
     nlist_max_age: usize,
     threads: Option<usize>,
+    mts: MtsConfig,
     observers: Vec<Box<dyn Observer>>,
     seed: Option<u64>,
 }
@@ -192,6 +195,7 @@ impl SimulationBuilder {
             nlist: NlistParams::default(),
             nlist_max_age: 50,
             threads: None,
+            mts: MtsConfig::default(),
             observers: Vec::new(),
             seed: None,
         }
@@ -267,6 +271,23 @@ impl SimulationBuilder {
         self
     }
 
+    /// Multiple time-stepping for the k-space solve (`--mts k`): run the
+    /// solver every `k`-th force evaluation and carry the held reciprocal
+    /// forces/energy in between (see [`Self::mts_extrap`]).  `1` (the
+    /// default) solves every step and is bit-identical to the unstrided
+    /// path on every backend; `0` is rejected at `build()`.
+    pub fn mts(mut self, k: usize) -> Self {
+        self.mts.k = k;
+        self
+    }
+
+    /// Between-solve carry strategy for [`Self::mts`] (default
+    /// [`MtsExtrap::Hold`]).
+    pub fn mts_extrap(mut self, extrap: MtsExtrap) -> Self {
+        self.mts.extrap = extrap;
+        self
+    }
+
     /// Neighbour-list parameters (cutoffs, skin, padding).
     pub fn nlist(mut self, p: NlistParams) -> Self {
         self.nlist = p;
@@ -324,6 +345,9 @@ impl SimulationBuilder {
             Some(n) => n,
             None => default_threads(),
         };
+        if self.mts.k == 0 {
+            bail!("mts stride must be >= 1 (1 = solve k-space every step), got 0");
+        }
         let box_len = self.sys.box_len;
         let pool = Arc::new(ThreadPool::new(threads));
 
@@ -359,6 +383,7 @@ impl SimulationBuilder {
             nlist: self.nlist,
             nlist_max_age: self.nlist_max_age,
             threads,
+            mts: self.mts,
         };
         Ok(Simulation {
             verlet: VerletManager::new(cfg.nlist, cfg.nlist_max_age),
@@ -378,6 +403,8 @@ impl SimulationBuilder {
             site_forces: Vec::new(),
             f_wc: Vec::new(),
             fbuf: Vec::new(),
+            mts_clock: MtsClock::new(self.mts.k),
+            mts_held: HeldKspace::default(),
             observers: self.observers,
             observing: true,
             observed_steps: 0,

@@ -23,16 +23,26 @@
 //! which batches the DP/DW evaluations of all replicas into single model
 //! calls while keeping every trajectory bit-identical to a standalone
 //! [`Simulation`] run.
+//!
+//! The k-space solve can additionally run on a RESPA-style stride
+//! (`--mts k`, the `mts` submodule): steps 2–3 above execute only every
+//! `k`-th evaluation, with the held reciprocal forces/energy carried (or
+//! linearly extrapolated) in between — see [`MtsConfig`] /
+//! [`SimulationBuilder::mts`].
 
 mod builder;
+mod mts;
 mod observe;
 mod replica;
 mod traits;
 
 pub use builder::{KspaceConfig, SimulationBuilder};
+pub use mts::{MtsConfig, MtsExtrap};
 pub use observe::{observer_fn, FnObserver, Observer, RecorderState, StepContext, StepRecorder};
 pub use replica::{ReplicaSet, ReplicaSetBuilder};
 pub use traits::{KspaceSolver, PjrtModel, ShortRangeModel};
+
+use mts::{HeldKspace, MtsClock, MtsPhase};
 
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
 use crate::md::system::System;
@@ -110,6 +120,9 @@ pub struct SimConfig {
     /// worker-pool size for the per-atom hot loops (DP/DW/kspace/nlist);
     /// 1 = serial.  Results are bit-for-bit identical for any value.
     pub threads: usize,
+    /// k-space multiple-time-stepping schedule (`k = 1` = solve every
+    /// step, bit-identical to the unstrided path).
+    pub mts: MtsConfig,
 }
 
 /// A fully assembled DPLR MD run: system + providers + integrator +
@@ -143,6 +156,11 @@ pub struct Simulation {
     /// spare combined-force buffer: ping-pongs with `forces` through
     /// `step()` so `evaluate_forces` never allocates its output either
     pub(crate) fbuf: Vec<[f64; 3]>,
+    /// `--mts k` stride clock: decides per evaluation whether the k-space
+    /// term is solved or held/extrapolated
+    pub(crate) mts_clock: MtsClock,
+    /// held reciprocal site forces/energy of the last two solves
+    pub(crate) mts_held: HeldKspace,
     pub(crate) observers: Vec<Box<dyn Observer>>,
     /// observer callbacks enabled (suppressed during quench)
     pub(crate) observing: bool,
@@ -223,68 +241,96 @@ impl Simulation {
         let nlist: &[i32] = &self.nlist.as_ref().unwrap().data;
         let nlist_o: &[i32] = &self.nlist_o.as_ref().unwrap().data;
 
-        // --- DW forward (always precedes k-space: it defines the WCs) ---
-        let t = Instant::now();
-        let delta = self.model.dw_fwd(&coords, box_len, nlist_o)?;
-        times.dw_fwd += t.elapsed().as_secs_f64();
+        // --- MTS stride clock: does this evaluation solve k-space, or
+        // carry the held solve? (`engine::mts`; at --mts 1 every
+        // evaluation solves and the path below is unchanged) ---
+        let phase = self.mts_clock.begin_eval();
 
-        // site set: ions then WCs (persistent buffers; clear + extend keep
-        // capacity, so steady-state steps allocate nothing here)
-        self.sites.clear();
-        self.charges.clear();
-        self.sites.reserve(natoms + nmol);
-        self.charges.reserve(natoms + nmol);
-        for i in 0..natoms {
-            self.sites
-                .push([coords[3 * i], coords[3 * i + 1], coords[3 * i + 2]]);
-            self.charges.push(if i < nmol { Q_O } else { Q_H });
-        }
-        for n in 0..nmol {
-            self.sites.push([
-                coords[3 * n] + delta[3 * n],
-                coords[3 * n + 1] + delta[3 * n + 1],
-                coords[3 * n + 2] + delta[3 * n + 2],
-            ]);
-            self.charges.push(Q_WC);
-        }
-
-        // --- k-space || DP (the section 3.2 overlap, on real threads) ---
-        // The solver writes its site forces into the persistent
-        // self.site_forces through the zero-allocation trait entry point.
         let (e_gt, dp_out, t_k, t_dp);
-        if self.cfg.overlap {
-            let kspace = &mut self.kspace;
-            let site_forces = &mut self.site_forces;
-            let model = &self.model;
-            let (sites_ref, charges_ref) = (&self.sites, &self.charges);
-            let (coords_ref, nlist_ref) = (&coords, nlist);
-            let result = std::thread::scope(|s| {
-                // dedicated long-range thread (the "1 core of rank 3");
-                // KspaceSolver: Send is what makes this move legal
-                let h_k = s.spawn(move || {
-                    let t = Instant::now();
-                    let e = kspace.energy_forces_into(sites_ref, charges_ref, site_forces);
-                    (e, t.elapsed().as_secs_f64())
-                });
-                // short-range on the main thread (the other 47 cores);
-                // ShortRangeModel: Sync is what makes the shared ref legal
+        match phase {
+            MtsPhase::Solve { gap } => {
+                // --- DW forward (always precedes k-space: it defines the WCs) ---
                 let t = Instant::now();
-                let dp = model.dp_ef(coords_ref, box_len, nlist_ref);
-                let t_dp = t.elapsed().as_secs_f64();
-                let (e, t_k) = h_k.join().expect("kspace thread");
-                (e, dp, t_k, t_dp)
-            });
-            (e_gt, dp_out, t_k, t_dp) = result;
-        } else {
-            let t = Instant::now();
-            let e = self
-                .kspace
-                .energy_forces_into(&self.sites, &self.charges, &mut self.site_forces);
-            t_k = t.elapsed().as_secs_f64();
-            let t = Instant::now();
-            dp_out = self.model.dp_ef(&coords, box_len, nlist);
-            t_dp = t.elapsed().as_secs_f64();
-            e_gt = e;
+                let delta = self.model.dw_fwd(&coords, box_len, nlist_o)?;
+                times.dw_fwd += t.elapsed().as_secs_f64();
+
+                // site set: ions then WCs (persistent buffers; clear + extend keep
+                // capacity, so steady-state steps allocate nothing here)
+                self.sites.clear();
+                self.charges.clear();
+                self.sites.reserve(natoms + nmol);
+                self.charges.reserve(natoms + nmol);
+                for i in 0..natoms {
+                    self.sites
+                        .push([coords[3 * i], coords[3 * i + 1], coords[3 * i + 2]]);
+                    self.charges.push(if i < nmol { Q_O } else { Q_H });
+                }
+                for n in 0..nmol {
+                    self.sites.push([
+                        coords[3 * n] + delta[3 * n],
+                        coords[3 * n + 1] + delta[3 * n + 1],
+                        coords[3 * n + 2] + delta[3 * n + 2],
+                    ]);
+                    self.charges.push(Q_WC);
+                }
+
+                // --- k-space || DP (the section 3.2 overlap, on real threads) ---
+                // The solver writes its site forces into the persistent
+                // self.site_forces through the zero-allocation trait entry point.
+                if self.cfg.overlap {
+                    let kspace = &mut self.kspace;
+                    let site_forces = &mut self.site_forces;
+                    let model = &self.model;
+                    let (sites_ref, charges_ref) = (&self.sites, &self.charges);
+                    let (coords_ref, nlist_ref) = (&coords, nlist);
+                    let result = std::thread::scope(|s| {
+                        // dedicated long-range thread (the "1 core of rank 3");
+                        // KspaceSolver: Send is what makes this move legal
+                        let h_k = s.spawn(move || {
+                            let t = Instant::now();
+                            let e = kspace.energy_forces_into(sites_ref, charges_ref, site_forces);
+                            (e, t.elapsed().as_secs_f64())
+                        });
+                        // short-range on the main thread (the other 47 cores);
+                        // ShortRangeModel: Sync is what makes the shared ref legal
+                        let t = Instant::now();
+                        let dp = model.dp_ef(coords_ref, box_len, nlist_ref);
+                        let t_dp = t.elapsed().as_secs_f64();
+                        let (e, t_k) = h_k.join().expect("kspace thread");
+                        (e, dp, t_k, t_dp)
+                    });
+                    (e_gt, dp_out, t_k, t_dp) = result;
+                } else {
+                    let t = Instant::now();
+                    let e = self.kspace.energy_forces_into(
+                        &self.sites,
+                        &self.charges,
+                        &mut self.site_forces,
+                    );
+                    t_k = t.elapsed().as_secs_f64();
+                    let t = Instant::now();
+                    dp_out = self.model.dp_ef(&coords, box_len, nlist);
+                    t_dp = t.elapsed().as_secs_f64();
+                    e_gt = e;
+                }
+                // retain the solve for the held evaluations of this stride
+                // window (at --mts 1 this only refreshes the buffers)
+                self.mts_held.store(e_gt, &self.site_forces, gap);
+            }
+            MtsPhase::Interp { m } => {
+                // no solve due this evaluation: skip the DW forward, the
+                // site build and the solver — and under --overlap the
+                // dedicated long-range thread entirely, which is the
+                // wall-clock win — and carry the held solve instead
+                let t = Instant::now();
+                e_gt = self
+                    .mts_held
+                    .fill(self.cfg.mts.extrap, m, &mut self.site_forces);
+                t_k = t.elapsed().as_secs_f64();
+                let t = Instant::now();
+                dp_out = self.model.dp_ef(&coords, box_len, nlist);
+                t_dp = t.elapsed().as_secs_f64();
+            }
         }
         times.kspace += t_k;
         times.dp_all += t_dp;
@@ -420,6 +466,11 @@ impl Simulation {
         let saved_nh = self.nh.take();
         let saved_observing = self.observing;
         self.observing = false;
+        // MTS: a quench step is preparation, not a stride window — solve
+        // k-space on every quench evaluation, and restart clock + held
+        // state on exit so production resumes from a fresh solve instead
+        // of holding (or extrapolating) across the quench discontinuity
+        self.mts_clock.set_force_solve(true);
         let mut result = Ok(());
         for k in 0..steps {
             if let Err(e) = self.step() {
@@ -432,6 +483,9 @@ impl Simulation {
                 }
             }
         }
+        self.mts_clock.set_force_solve(false);
+        self.mts_clock.restart();
+        self.mts_held.restart();
         self.observing = saved_observing;
         self.cfg.dt_fs = saved_dt;
         self.vv = VelocityVerlet::new(saved_dt * FS);
@@ -471,6 +525,9 @@ impl Simulation {
         pppm.set_pool(self.pool.clone());
         self.kspace = Box::new(pppm);
         self.pppm_cfg = Some(cfg);
+        // held MTS state came from the replaced solver: solve afresh
+        self.mts_clock.restart();
+        self.mts_held.restart();
     }
 }
 

@@ -1,0 +1,307 @@
+//! RESPA-style multiple time-stepping for the k-space solve (`--mts k`,
+//! ROADMAP open item 3).
+//!
+//! The reciprocal-space term is the smoothest force component of a DPLR
+//! step, so it can be evaluated on a stride: run the [`super::KspaceSolver`]
+//! only every `k`-th force evaluation and carry the held site
+//! forces/energy across the `k - 1` intermediate evaluations, either
+//! unchanged ([`MtsExtrap::Hold`]) or linearly extrapolated from the last
+//! two solves ([`MtsExtrap::Linear`]).  On the skipped evaluations the
+//! engine also skips the DW forward pass (its only k-space-side consumer
+//! is the solver's site set) and — under `--overlap` — the dedicated
+//! long-range thread entirely, which is where the wall-clock win comes
+//! from.
+//!
+//! Two pieces implement the schedule:
+//!
+//!  * [`MtsClock`] — the stride clock.  One per [`super::Simulation`];
+//!    one *shared* per [`super::ReplicaSet`] (all replicas solve on the
+//!    same steps, so a batch stays bit-identical to N single runs).  It
+//!    ticks once per force evaluation and says whether this evaluation
+//!    solves or interpolates.
+//!  * [`HeldKspace`] — per-trajectory held state: the site-force/energy
+//!    buffers of the last two solves.  They are plain engine-owned
+//!    buffers, so they survive thermostat and Verlet updates between
+//!    solves, and they keep their capacity across solves (no steady-state
+//!    allocation).
+//!
+//! Contract: `--mts 1` (the default) solves on every evaluation through
+//! the unchanged solver path and is **bit-identical** to the unstrided
+//! engine on every backend (`rust/tests/mts_invariance.rs`); `k > 1` is
+//! validated by the conserved-quantity drift harness
+//! ([`crate::experiments::mts_drift`], the CI `mts-drift` gate) and the
+//! Table-1 stride-error rows
+//! ([`crate::experiments::table1_accuracy::mts_stride_rows`]).
+//!
+//! Quench interaction: [`super::Simulation::quench`] forces a solve on
+//! every quench evaluation (a quench step is preparation, not a stride
+//! window) and restarts both clock and held state on exit, so production
+//! always resumes from a fresh solve instead of holding — or worse,
+//! extrapolating — across the quench discontinuity.
+
+use anyhow::{bail, Result};
+
+/// How the held reciprocal-space forces/energy are carried across the
+/// `k - 1` intermediate evaluations of an `--mts k` stride.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtsExtrap {
+    /// Reuse the most recent solve unchanged (zeroth order).
+    Hold,
+    /// First-order extrapolation from the last two solves:
+    /// `f(m) = f_curr + (m / span) * (f_curr - f_prev)` at `m`
+    /// evaluations past the latest solve.  Falls back to [`Self::Hold`]
+    /// until two solves are retained.
+    Linear,
+}
+
+impl MtsExtrap {
+    /// Parse the CLI spelling of `--mts-extrap` (`hold` | `linear`).
+    pub fn parse(s: &str) -> Result<MtsExtrap> {
+        match s {
+            "hold" => Ok(MtsExtrap::Hold),
+            "linear" => Ok(MtsExtrap::Linear),
+            other => bail!(
+                "unknown mts extrapolation '{other}' \
+                 (expected hold|linear)"
+            ),
+        }
+    }
+
+    /// The CLI spelling (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MtsExtrap::Hold => "hold",
+            MtsExtrap::Linear => "linear",
+        }
+    }
+}
+
+/// Validated multiple-time-stepping configuration
+/// ([`super::SimulationBuilder::mts`] / [`super::SimulationBuilder::mts_extrap`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MtsConfig {
+    /// K-space solve stride: solve every `k`-th force evaluation.
+    /// `1` (the default) solves every step — bit-identical to the
+    /// unstrided path on every backend.
+    pub k: usize,
+    /// Between-solve carry strategy (default [`MtsExtrap::Hold`]).
+    pub extrap: MtsExtrap,
+}
+
+impl Default for MtsConfig {
+    fn default() -> Self {
+        MtsConfig {
+            k: 1,
+            extrap: MtsExtrap::Hold,
+        }
+    }
+}
+
+/// What the current force evaluation does with the k-space term.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum MtsPhase {
+    /// Run the solver.  `gap` = evaluations since the previous solve
+    /// (0 on the first solve after construction or a restart) — the
+    /// linear-extrapolation span recorded with the solve.
+    Solve {
+        /// Evaluations since the previous solve.
+        gap: u64,
+    },
+    /// Skip the solver; hold/extrapolate instead.  `m` = evaluations
+    /// since the latest solve (`1..k`).
+    Interp {
+        /// Evaluations since the latest solve.
+        m: u64,
+    },
+}
+
+/// The stride clock: ticks once per force evaluation and decides solve
+/// vs interpolate.  One per [`super::Simulation`]; one shared across a
+/// [`super::ReplicaSet`] batch.
+#[derive(Debug, Clone)]
+pub(crate) struct MtsClock {
+    k: u64,
+    /// quench mode: solve on every evaluation regardless of phase
+    force_solve: bool,
+    /// evaluations since the most recent solve (0 = no solve yet, so
+    /// the next evaluation solves)
+    since_solve: u64,
+}
+
+impl MtsClock {
+    pub(crate) fn new(k: usize) -> MtsClock {
+        MtsClock {
+            k: k.max(1) as u64,
+            force_solve: false,
+            since_solve: 0,
+        }
+    }
+
+    /// Advance the clock by one evaluation and return its phase.
+    pub(crate) fn begin_eval(&mut self) -> MtsPhase {
+        if self.force_solve || self.since_solve == 0 || self.since_solve >= self.k {
+            let gap = self.since_solve;
+            self.since_solve = 1;
+            MtsPhase::Solve { gap }
+        } else {
+            let m = self.since_solve;
+            self.since_solve += 1;
+            MtsPhase::Interp { m }
+        }
+    }
+
+    /// Quench mode: while set, every evaluation solves (the stride is
+    /// suspended, not advanced past held state).
+    pub(crate) fn set_force_solve(&mut self, on: bool) {
+        self.force_solve = on;
+    }
+
+    /// Reset the phase so the next evaluation solves (quench exit).
+    pub(crate) fn restart(&mut self) {
+        self.since_solve = 0;
+    }
+}
+
+/// Per-trajectory held reciprocal-space state: the site forces/energy of
+/// the last two solves.  Engine-owned buffers, so they survive
+/// thermostat/Verlet updates between solves and keep their capacity
+/// across solves (no steady-state allocation).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct HeldKspace {
+    f_prev: Vec<[f64; 3]>,
+    f_curr: Vec<[f64; 3]>,
+    e_prev: f64,
+    e_curr: f64,
+    /// evaluations between the two retained solves (the linear span)
+    span: f64,
+    /// solves retained since construction / the last restart
+    solves: u64,
+}
+
+impl HeldKspace {
+    /// Record a fresh solve (`gap` = evaluations since the previous one,
+    /// as reported by [`MtsClock::begin_eval`]).
+    pub(crate) fn store(&mut self, e: f64, f: &[[f64; 3]], gap: u64) {
+        std::mem::swap(&mut self.f_prev, &mut self.f_curr);
+        self.f_curr.clear();
+        self.f_curr.extend_from_slice(f);
+        self.e_prev = self.e_curr;
+        self.e_curr = e;
+        self.span = gap as f64;
+        self.solves += 1;
+    }
+
+    /// Write the held (or extrapolated) site forces `m` evaluations past
+    /// the latest solve into `out` and return the matching energy.
+    /// [`MtsExtrap::Linear`] needs two retained solves a nonzero span
+    /// apart; until then it degrades to hold.
+    pub(crate) fn fill(&self, extrap: MtsExtrap, m: u64, out: &mut Vec<[f64; 3]>) -> f64 {
+        out.clear();
+        let linear = extrap == MtsExtrap::Linear && self.solves >= 2 && self.span > 0.0;
+        if !linear {
+            out.extend_from_slice(&self.f_curr);
+            return self.e_curr;
+        }
+        let w = m as f64 / self.span;
+        out.reserve(self.f_curr.len());
+        for (c, p) in self.f_curr.iter().zip(&self.f_prev) {
+            out.push([
+                c[0] + w * (c[0] - p[0]),
+                c[1] + w * (c[1] - p[1]),
+                c[2] + w * (c[2] - p[2]),
+            ]);
+        }
+        self.e_curr + w * (self.e_curr - self.e_prev)
+    }
+
+    /// Drop the solve history (quench exit): the next solve starts a
+    /// fresh hold window instead of extrapolating across a
+    /// discontinuity.  Buffer capacity is kept.
+    pub(crate) fn restart(&mut self) {
+        self.solves = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extrap_parse_round_trips_and_rejects() {
+        assert_eq!(MtsExtrap::parse("hold").unwrap(), MtsExtrap::Hold);
+        assert_eq!(MtsExtrap::parse("linear").unwrap(), MtsExtrap::Linear);
+        for e in [MtsExtrap::Hold, MtsExtrap::Linear] {
+            assert_eq!(MtsExtrap::parse(e.name()).unwrap(), e);
+        }
+        for bad in ["", "Hold", "cubic", "linear "] {
+            let err = MtsExtrap::parse(bad).expect_err("must reject");
+            assert!(err.to_string().contains("extrapolation"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn clock_k1_always_solves() {
+        let mut c = MtsClock::new(1);
+        assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 0 });
+        for _ in 0..5 {
+            assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 1 });
+        }
+    }
+
+    #[test]
+    fn clock_k4_period_and_phases() {
+        let mut c = MtsClock::new(4);
+        assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 0 });
+        for period in 0..3 {
+            for m in 1..4 {
+                assert_eq!(c.begin_eval(), MtsPhase::Interp { m }, "period {period}");
+            }
+            assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 4 });
+        }
+    }
+
+    #[test]
+    fn clock_force_solve_suspends_the_stride_and_restart_resets_it() {
+        let mut c = MtsClock::new(3);
+        assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 0 });
+        assert_eq!(c.begin_eval(), MtsPhase::Interp { m: 1 });
+        c.set_force_solve(true);
+        assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 2 });
+        assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 1 });
+        c.set_force_solve(false);
+        c.restart();
+        assert_eq!(c.begin_eval(), MtsPhase::Solve { gap: 0 });
+        assert_eq!(c.begin_eval(), MtsPhase::Interp { m: 1 });
+    }
+
+    #[test]
+    fn held_hold_returns_the_latest_solve() {
+        let mut h = HeldKspace::default();
+        h.store(2.0, &[[1.0, 2.0, 3.0]], 0);
+        h.store(4.0, &[[2.0, 4.0, 6.0]], 3);
+        let mut out = Vec::new();
+        let e = h.fill(MtsExtrap::Hold, 2, &mut out);
+        assert_eq!(e, 4.0);
+        assert_eq!(out, vec![[2.0, 4.0, 6.0]]);
+    }
+
+    #[test]
+    fn held_linear_extrapolates_from_the_last_two_solves() {
+        let mut h = HeldKspace::default();
+        h.store(2.0, &[[1.0, 2.0, 3.0]], 0);
+        // before a second solve, linear degrades to hold
+        let mut out = Vec::new();
+        assert_eq!(h.fill(MtsExtrap::Linear, 1, &mut out), 2.0);
+        assert_eq!(out, vec![[1.0, 2.0, 3.0]]);
+        // two solves a span of 2 apart: slope = (f_curr - f_prev) / 2
+        h.store(4.0, &[[3.0, 6.0, 9.0]], 2);
+        let e = h.fill(MtsExtrap::Linear, 1, &mut out);
+        assert_eq!(e, 5.0);
+        assert_eq!(out, vec![[4.0, 8.0, 12.0]]);
+        // restart drops the history: next fill (after one solve) holds
+        h.restart();
+        h.store(10.0, &[[0.0, 0.0, 0.0]], 0);
+        assert_eq!(h.fill(MtsExtrap::Linear, 1, &mut out), 10.0);
+        assert_eq!(out, vec![[0.0, 0.0, 0.0]]);
+    }
+}

@@ -44,6 +44,7 @@
 //! per-replica solves bit-identical to dedicated per-replica solvers.
 
 use super::builder::{build_kspace, default_threads, KspaceConfig};
+use super::mts::{HeldKspace, MtsClock, MtsConfig, MtsExtrap, MtsPhase};
 use super::observe::{observer_fn, Observer, StepContext};
 use super::traits::{KspaceSolver, ShortRangeModel};
 use super::{SimConfig, StepObservables, StepTimes};
@@ -94,6 +95,9 @@ struct Replica {
     sites: Vec<[f64; 3]>,
     charges: Vec<f64>,
     site_forces: Vec<[f64; 3]>,
+    /// held reciprocal site forces/energy of the replica's last two
+    /// solves (`--mts k`; the stride clock itself lives on the set)
+    mts_held: HeldKspace,
     e_sr: f64,
     e_gt: f64,
     last_obs: Option<StepObservables>,
@@ -125,6 +129,10 @@ pub struct ReplicaSet {
     bnlist: Vec<i32>,
     bnlist_o: Vec<i32>,
     bf_wc: Vec<f64>,
+    /// one `--mts k` stride clock shared across the batch: all replicas
+    /// solve on the same evaluations, so an N-replica set stays
+    /// bit-identical to N strided single runs
+    mts_clock: MtsClock,
     observers: Vec<Box<dyn Observer>>,
     observing: bool,
     observed_steps: u64,
@@ -327,51 +335,61 @@ impl ReplicaSet {
                 .collect()
         };
 
-        // --- DW forward: one batched pass (or N fallback passes) ---
-        let t = Instant::now();
-        let delta_all: Vec<f64> = if self.batched {
-            self.model.dw_fwd(&self.bcoords, box_len, &self.bnlist_o)?
-        } else {
-            let mut all = vec![0.0; 3 * nrep * nmol];
-            for (r, rep) in self.replicas.iter().enumerate() {
-                let nlo: &[i32] = &rep.nlist_o.as_ref().unwrap().data;
-                let d = self.model.dw_fwd(&rcoords[r], box_len, nlo)?;
-                all[3 * r * nmol..3 * (r + 1) * nmol].copy_from_slice(&d);
-            }
-            all
-        };
-        let t_dw = t.elapsed().as_secs_f64();
-        times.dw_fwd += t_dw;
-        for rep in self.replicas.iter_mut() {
-            rep.times.dw_fwd += t_dw * share;
-        }
+        // --- MTS stride clock: the whole batch shares one clock, so all
+        // replicas solve on the same evaluations (`engine::mts`; an
+        // N-replica set stays bit-identical to N strided single runs) ---
+        let phase = self.mts_clock.begin_eval();
+        let solve = matches!(phase, MtsPhase::Solve { .. });
 
-        // per-replica site sets: ions then WCs, exactly as `Simulation`
-        for (r, rep) in self.replicas.iter_mut().enumerate() {
-            rep.sites.clear();
-            rep.charges.clear();
-            rep.sites.reserve(natoms + nmol);
-            rep.charges.reserve(natoms + nmol);
-            for i in 0..natoms {
-                rep.sites.push(rep.sys.pos[i]);
-                rep.charges.push(if i < nmol { Q_O } else { Q_H });
+        if solve {
+            // --- DW forward: one batched pass (or N fallback passes) ---
+            let t = Instant::now();
+            let delta_all: Vec<f64> = if self.batched {
+                self.model.dw_fwd(&self.bcoords, box_len, &self.bnlist_o)?
+            } else {
+                let mut all = vec![0.0; 3 * nrep * nmol];
+                for (r, rep) in self.replicas.iter().enumerate() {
+                    let nlo: &[i32] = &rep.nlist_o.as_ref().unwrap().data;
+                    let d = self.model.dw_fwd(&rcoords[r], box_len, nlo)?;
+                    all[3 * r * nmol..3 * (r + 1) * nmol].copy_from_slice(&d);
+                }
+                all
+            };
+            let t_dw = t.elapsed().as_secs_f64();
+            times.dw_fwd += t_dw;
+            for rep in self.replicas.iter_mut() {
+                rep.times.dw_fwd += t_dw * share;
             }
-            for m in 0..nmol {
-                let g = 3 * (r * nmol + m);
-                rep.sites.push([
-                    rep.sys.pos[m][0] + delta_all[g],
-                    rep.sys.pos[m][1] + delta_all[g + 1],
-                    rep.sys.pos[m][2] + delta_all[g + 2],
-                ]);
-                rep.charges.push(Q_WC);
+
+            // per-replica site sets: ions then WCs, exactly as `Simulation`
+            for (r, rep) in self.replicas.iter_mut().enumerate() {
+                rep.sites.clear();
+                rep.charges.clear();
+                rep.sites.reserve(natoms + nmol);
+                rep.charges.reserve(natoms + nmol);
+                for i in 0..natoms {
+                    rep.sites.push(rep.sys.pos[i]);
+                    rep.charges.push(if i < nmol { Q_O } else { Q_H });
+                }
+                for m in 0..nmol {
+                    let g = 3 * (r * nmol + m);
+                    rep.sites.push([
+                        rep.sys.pos[m][0] + delta_all[g],
+                        rep.sys.pos[m][1] + delta_all[g + 1],
+                        rep.sys.pos[m][2] + delta_all[g + 2],
+                    ]);
+                    rep.charges.push(Q_WC);
+                }
             }
         }
 
         // --- k-space (one shared solver, one call per replica) || DP ---
         // The overlap thread needs exclusive access to the per-replica
         // site buffers, so it only coexists with the *batched* DP call;
-        // the fallback loops walk the replicas and run sequentially.
-        let overlap = self.cfg.overlap && self.batched;
+        // the fallback loops walk the replicas and run sequentially.  On
+        // held MTS evaluations no solve is due, so the overlap thread is
+        // skipped entirely (the wall-clock win).
+        let overlap = self.cfg.overlap && self.batched && solve;
         let bc: &[f64] = &self.bcoords;
         let bl: &[i32] = &self.bnlist;
         let kres: Vec<(f64, f64)>;
@@ -414,12 +432,22 @@ impl ReplicaSet {
             t_dp = tdp;
         } else {
             let mut kr = Vec::with_capacity(nrep);
-            for rep in self.replicas.iter_mut() {
-                let t = Instant::now();
-                let e = self
-                    .kspace
-                    .energy_forces_into(&rep.sites, &rep.charges, &mut rep.site_forces);
-                kr.push((e, t.elapsed().as_secs_f64()));
+            if let MtsPhase::Interp { m } = phase {
+                // hold/extrapolate each replica's retained solve
+                let extrap = self.cfg.mts.extrap;
+                for rep in self.replicas.iter_mut() {
+                    let t = Instant::now();
+                    let e = rep.mts_held.fill(extrap, m, &mut rep.site_forces);
+                    kr.push((e, t.elapsed().as_secs_f64()));
+                }
+            } else {
+                for rep in self.replicas.iter_mut() {
+                    let t = Instant::now();
+                    let e = self
+                        .kspace
+                        .energy_forces_into(&rep.sites, &rep.charges, &mut rep.site_forces);
+                    kr.push((e, t.elapsed().as_secs_f64()));
+                }
             }
             kres = kr;
             let t = Instant::now();
@@ -442,6 +470,10 @@ impl ReplicaSet {
             rep.times.kspace += *t_k;
             times.kspace += *t_k;
             rep.times.dp_all += t_dp * share;
+            if let MtsPhase::Solve { gap } = phase {
+                // retain this replica's solve for the held evaluations
+                rep.mts_held.store(*e_gt, &rep.site_forces, gap);
+            }
         }
 
         // --- DW backward: batched VJP seeded with every replica's WC
@@ -591,6 +623,11 @@ impl ReplicaSet {
         }
         let saved_observing = self.observing;
         self.observing = false;
+        // MTS: solve every quench evaluation and restart on exit, exactly
+        // as `Simulation::quench` — the identical discipline is what keeps
+        // a strided N-replica set bitwise equal to N strided single runs
+        // across a quench
+        self.mts_clock.set_force_solve(true);
         let mut result = Ok(());
         for k in 0..steps {
             if let Err(e) = self.step() {
@@ -604,6 +641,11 @@ impl ReplicaSet {
                     }
                 }
             }
+        }
+        self.mts_clock.set_force_solve(false);
+        self.mts_clock.restart();
+        for rep in self.replicas.iter_mut() {
+            rep.mts_held.restart();
         }
         self.observing = saved_observing;
         self.cfg.dt_fs = saved_dt;
@@ -655,6 +697,7 @@ pub struct ReplicaSetBuilder {
     nlist: NlistParams,
     nlist_max_age: usize,
     threads: Option<usize>,
+    mts: MtsConfig,
     observers: Vec<Box<dyn Observer>>,
     seed: Option<u64>,
     batched: bool,
@@ -674,6 +717,7 @@ impl ReplicaSetBuilder {
             nlist: NlistParams::default(),
             nlist_max_age: 50,
             threads: None,
+            mts: MtsConfig::default(),
             observers: Vec::new(),
             seed: None,
             batched: true,
@@ -750,6 +794,22 @@ impl ReplicaSetBuilder {
     /// Results are bit-identical for any value.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n);
+        self
+    }
+
+    /// Multiple time-stepping for the shared k-space solve, with one
+    /// stride clock across the whole batch (all replicas solve on the
+    /// same evaluations); semantics as
+    /// [`super::SimulationBuilder::mts`].
+    pub fn mts(mut self, k: usize) -> Self {
+        self.mts.k = k;
+        self
+    }
+
+    /// Between-solve carry strategy for [`Self::mts`] (default
+    /// [`MtsExtrap::Hold`]).
+    pub fn mts_extrap(mut self, extrap: MtsExtrap) -> Self {
+        self.mts.extrap = extrap;
         self
     }
 
@@ -859,6 +919,9 @@ impl ReplicaSetBuilder {
             Some(t) => t,
             None => default_threads(),
         };
+        if self.mts.k == 0 {
+            bail!("mts stride must be >= 1 (1 = solve k-space every step), got 0");
+        }
         let pool = Arc::new(ThreadPool::new(threads));
 
         let (mut kspace, pppm_cfg) = build_kspace(self.kspace, box_len)?;
@@ -882,6 +945,7 @@ impl ReplicaSetBuilder {
             nlist: self.nlist,
             nlist_max_age: self.nlist_max_age,
             threads,
+            mts: self.mts,
         };
         let natoms = self.systems[0].natoms();
         let s = cfg.nlist.sel_total();
@@ -906,6 +970,7 @@ impl ReplicaSetBuilder {
                 sites: Vec::new(),
                 charges: Vec::new(),
                 site_forces: Vec::new(),
+                mts_held: HeldKspace::default(),
                 e_sr: 0.0,
                 e_gt: 0.0,
                 last_obs: None,
@@ -933,6 +998,7 @@ impl ReplicaSetBuilder {
                 Vec::new()
             },
             bf_wc: Vec::new(),
+            mts_clock: MtsClock::new(cfg.mts.k),
             observers: self.observers,
             observing: true,
             observed_steps: 0,

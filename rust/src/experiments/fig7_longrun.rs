@@ -6,7 +6,7 @@
 //! `--steps` restores any length.  Trace sampling rides the engine's
 //! observer hook instead of a hand-rolled run loop.
 
-use crate::engine::{KspaceConfig, Simulation, StepContext};
+use crate::engine::{KspaceConfig, MtsExtrap, Simulation, StepContext};
 use crate::md::water::water_box;
 use crate::native::NativeModel;
 use crate::pppm::{MeshMode, PppmConfig};
@@ -26,6 +26,10 @@ pub struct Config {
     pub sample_every: usize,
     /// Optional JSON output path for the traces.
     pub out_json: Option<String>,
+    /// K-space strides for the MTS section (`run_mts`).
+    pub mts_ks: Vec<usize>,
+    /// Between-solve carry strategy for the MTS section.
+    pub mts_extrap: MtsExtrap,
 }
 
 impl Default for Config {
@@ -35,6 +39,8 @@ impl Default for Config {
             steps: 1500,
             sample_every: 10,
             out_json: Some("fig7_traces.json".to_string()),
+            mts_ks: vec![2, 4],
+            mts_extrap: MtsExtrap::Linear,
         }
     }
 }
@@ -52,7 +58,12 @@ pub struct Trace {
     pub temperature: Vec<f64>,
 }
 
-fn run_one(cfg: &Config, label: &str, mode: Option<MeshMode>) -> Result<Trace> {
+fn run_one(
+    cfg: &Config,
+    label: &str,
+    mode: Option<MeshMode>,
+    mts: (usize, MtsExtrap),
+) -> Result<Trace> {
     let mut sys = water_box(cfg.nmol, 4242);
     let mut rng = Rng::new(17);
     sys.thermalize(300.0, &mut rng);
@@ -76,6 +87,8 @@ fn run_one(cfg: &Config, label: &str, mode: Option<MeshMode>) -> Result<Trace> {
     let mut sim = Simulation::builder(sys)
         .thermostat(300.0, 0.5)
         .overlap(true)
+        .mts(mts.0)
+        .mts_extrap(mts.1)
         .kspace(kspace)
         .short_range(Box::new(NativeModel::load(&artifacts_dir())?))
         .observe(move |ctx: &StepContext| {
@@ -101,11 +114,13 @@ fn run_one(cfg: &Config, label: &str, mode: Option<MeshMode>) -> Result<Trace> {
 
 /// Run the double and mixed-int NVT traces (`dplr longrun`).
 pub fn run(cfg: &Config) -> Result<(Trace, Trace)> {
-    let double = run_one(cfg, "double", None)?;
+    let unstrided = (1, MtsExtrap::Hold);
+    let double = run_one(cfg, "double", None, unstrided)?;
     let quant = run_one(
         cfg,
         "mixed-int2",
         Some(MeshMode::QuantInt32 { nseg: [2, 3, 2] }),
+        unstrided,
     )?;
     if let Some(path) = &cfg.out_json {
         let dump = |t: &Trace| {
@@ -123,6 +138,54 @@ pub fn run(cfg: &Config) -> Result<(Trace, Trace)> {
         std::fs::write(path, j.to_string_pretty())?;
     }
     Ok((double, quant))
+}
+
+/// Run the `--mts` section: strided double-precision traces, one per
+/// stride in `cfg.mts_ks` (plus the physics of the k=1 trace already
+/// produced by [`run`]).  Same box, seeds, thermostat, and relaxation as
+/// the main traces, so the strided energies are directly comparable to
+/// the `double` trace.
+pub fn run_mts(cfg: &Config) -> Result<Vec<Trace>> {
+    let mut traces = Vec::with_capacity(cfg.mts_ks.len());
+    for &k in &cfg.mts_ks {
+        let label = format!("double-mts{k}-{}", cfg.mts_extrap.name());
+        traces.push(run_one(cfg, &label, None, (k, cfg.mts_extrap))?);
+    }
+    Ok(traces)
+}
+
+/// Print stability statistics of the strided traces from [`run_mts`].
+pub fn print_mts_summary(traces: &[Trace]) {
+    if traces.is_empty() {
+        return;
+    }
+    let stat = |v: &[f64]| {
+        let n = v.len().max(1) as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let sd = (v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n).sqrt();
+        (mean, sd)
+    };
+    println!("\n=== Fig 7 (MTS): strided k-space traces ===");
+    for t in traces {
+        let half = t.energy.len() / 2;
+        let (ea, _) = stat(&t.energy[..half.max(1)]);
+        let (em, es) = stat(&t.energy[half..]);
+        let (tm, ts) = stat(&t.temperature[half..]);
+        // per-sample drift between the half-trace means: the long-run
+        // analogue of the `dplr mtsdrift` gate readout
+        let drift = (em - ea).abs() / (half.max(1) as f64);
+        println!(
+            "{:>20}: <E> = {:.3} +- {:.3} eV   <T> = {:.1} +- {:.1} K   \
+             half-mean drift = {:.2e} eV/sample   ({} samples)",
+            t.label,
+            em,
+            es,
+            tm,
+            ts,
+            drift,
+            t.energy.len()
+        );
+    }
 }
 
 /// Print drift/temperature statistics of the two traces.

@@ -6,4 +6,5 @@ pub mod fig10_weak;
 pub mod fig7_longrun;
 pub mod fig8_fft;
 pub mod fig9_stepopt;
+pub mod mts_drift;
 pub mod table1_accuracy;

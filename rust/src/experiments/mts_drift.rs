@@ -1,0 +1,199 @@
+//! The `--mts k` conserved-quantity drift harness (`dplr mtsdrift`, the
+//! CI `mts-drift` gate): short deterministic NVE trajectories at k-space
+//! strides `k` on each requested backend, reporting the conserved-energy
+//! drift per atom per step against a Table-1-derived threshold.
+//!
+//! **Threshold derivation.**  Table 1 budgets `1e-4` eV/atom of energy
+//! error per k-space evaluation for the production meshes
+//! (`rust/tests/kspace_parity.rs` pins the same bound at the engine
+//! level).  A trustworthy stride must not leak more than that budget per
+//! step into the NVE conserved quantity, so the gate is
+//! `|drift| <= 1e-4 eV/(atom*step)`.  Velocity-Verlet fluctuation on an
+//! equilibrated box sits orders of magnitude below this bound, while a
+//! destabilized stride (e.g. broken held-force bookkeeping) blows
+//! exponentially past it — the gate is insensitive to host timing yet
+//! trips on any real instability.
+//!
+//! Deterministic by construction: fixed seeds, fixed dt, f64 end to end,
+//! synthetic-weight fallback when the fitted artifacts are absent (the
+//! drift of the stride is a property of the dynamics, not of which
+//! weights produced them), so CI runs bit-identical trajectories on
+//! every host.
+
+use crate::engine::{KspaceConfig, MtsExtrap, ShortRangeModel, Simulation, StepContext};
+use crate::md::water::water_box;
+use crate::native::NativeModel;
+use crate::runtime::manifest::artifacts_dir;
+use crate::util::stats::summarize;
+use crate::util::table::Table;
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// Conserved-quantity drift budget: the Table-1 per-atom energy error
+/// budget (1e-4 eV/atom, see the module docs) applied per production
+/// step, in eV/(atom*step).
+pub const DRIFT_THRESHOLD: f64 = 1.0e-4;
+
+/// Run configuration for the drift harness.
+pub struct Config {
+    /// Water molecules in the box.
+    pub nmol: usize,
+    /// Production (measured) NVE steps.
+    pub steps: usize,
+    /// Quench steps before production.
+    pub quench: usize,
+    /// MD timestep [fs].
+    pub dt_fs: f64,
+    /// K-space strides to gate.
+    pub ks: Vec<usize>,
+    /// Backends to gate (`pppm` | `ewald` | `dist`).
+    pub backends: Vec<String>,
+    /// Between-solve carry strategy.
+    pub extrap: MtsExtrap,
+    /// Worker-pool size (None = `DPLR_THREADS` or 1).
+    pub threads: Option<usize>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            nmol: 32,
+            steps: 200,
+            quench: 80,
+            dt_fs: 0.5,
+            ks: vec![1, 2, 4],
+            backends: vec!["pppm".to_string(), "dist".to_string()],
+            extrap: MtsExtrap::Hold,
+            threads: None,
+        }
+    }
+}
+
+/// One gate row: the measured drift of a (backend, k) combination.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// K-space backend label.
+    pub backend: String,
+    /// K-space solve stride.
+    pub k: usize,
+    /// Between-solve carry strategy.
+    pub extrap: MtsExtrap,
+    /// |second-half mean - first-half mean| of the conserved quantity,
+    /// per half-trace step, per atom [eV/(atom*step)].
+    pub drift: f64,
+    /// The gate threshold the row was judged against.
+    pub threshold: f64,
+    /// `drift <= threshold`.
+    pub pass: bool,
+    /// Second-half standard deviation of the conserved quantity [eV].
+    pub conserved_sd: f64,
+}
+
+fn backend_config(name: &str) -> Result<KspaceConfig> {
+    Ok(match name {
+        "pppm" => KspaceConfig::PppmAuto { alpha: 0.3 },
+        "ewald" => KspaceConfig::Ewald {
+            alpha: 0.3,
+            tol: 1e-10,
+        },
+        // a real 2x2x1 torus so the gate exercises brick decomposition +
+        // ghost halos, not the ranks-1 bit-identity fast path
+        "dist" => KspaceConfig::Dist {
+            alpha: 0.3,
+            ranks: [2, 2, 1],
+            quantized: false,
+            matvec: false,
+        },
+        other => bail!("unknown mts-drift backend {other} (expected pppm|ewald|dist)"),
+    })
+}
+
+fn load_or_synthetic() -> Box<dyn ShortRangeModel> {
+    match NativeModel::load(&artifacts_dir()) {
+        Ok(m) => Box::new(m),
+        Err(_) => Box::new(NativeModel::synthetic(20250710)),
+    }
+}
+
+fn run_one(cfg: &Config, backend: &str, k: usize) -> Result<Row> {
+    let sys = water_box(cfg.nmol, 2026);
+    let trace: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::with_capacity(cfg.steps)));
+    let sink = trace.clone();
+    let mut builder = Simulation::builder(sys)
+        .dt_fs(cfg.dt_fs)
+        .nve()
+        .temperature(300.0)
+        .mts(k)
+        .mts_extrap(cfg.extrap)
+        .kspace(backend_config(backend)?)
+        .short_range(load_or_synthetic())
+        .observe(move |ctx: &StepContext| {
+            sink.lock().unwrap().push(ctx.obs.conserved);
+        });
+    if let Some(t) = cfg.threads {
+        builder = builder.threads(t);
+    }
+    let mut sim = builder.build()?;
+    sim.quench(cfg.quench)?;
+    sim.reheat(300.0, 29);
+    sim.run(cfg.steps)?;
+
+    // drift estimator: difference of the two half-trace means per
+    // half-trace step (the `dplr replicas` stability readout), per atom
+    let natoms = sim.sys.natoms() as f64;
+    let trace = trace.lock().unwrap();
+    let half = trace.len() / 2;
+    let (drift, sd) = if half > 0 {
+        let (a, b) = trace.split_at(half);
+        let (sa, sb) = (summarize(a), summarize(b));
+        (((sb.mean - sa.mean) / half as f64 / natoms).abs(), sb.std)
+    } else {
+        (0.0, 0.0)
+    };
+    Ok(Row {
+        backend: backend.to_string(),
+        k,
+        extrap: cfg.extrap,
+        drift,
+        threshold: DRIFT_THRESHOLD,
+        pass: drift <= DRIFT_THRESHOLD,
+        conserved_sd: sd,
+    })
+}
+
+/// Run the drift harness over every (backend, k) combination.
+pub fn run(cfg: &Config) -> Result<Vec<Row>> {
+    let mut rows = Vec::with_capacity(cfg.backends.len() * cfg.ks.len());
+    for backend in &cfg.backends {
+        for &k in &cfg.ks {
+            rows.push(run_one(cfg, backend, k)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Print the gate table.
+pub fn print_rows(rows: &[Row]) {
+    let mut t = Table::new(&[
+        "backend",
+        "k",
+        "extrap",
+        "drift [eV/(atom*step)]",
+        "threshold",
+        "cons. sd [eV]",
+        "verdict",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.backend.clone(),
+            r.k.to_string(),
+            r.extrap.name().to_string(),
+            format!("{:.3e}", r.drift),
+            format!("{:.1e}", r.threshold),
+            format!("{:.2e}", r.conserved_sd),
+            if r.pass { "pass".to_string() } else { "FAIL".to_string() },
+        ]);
+    }
+    println!("\n=== MTS conserved-quantity drift gate ===");
+    t.print();
+}

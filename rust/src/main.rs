@@ -4,6 +4,7 @@
 //!   run          real MD on the full DPLR stack (any backend, any size)
 //!   accuracy     Table 1  — precision-configuration errors
 //!   longrun      Fig 7    — double vs mixed-int2 NVT traces
+//!   mtsdrift     `--mts k` conserved-quantity drift gate (CI)
 //!   fftbench     Fig 8    — FFT-MPI / heFFTe / utofu-FFT comparison
 //!   stepopt      Fig 9    — step-by-step optimization ladder
 //!   weakscaling  Fig 10   — 12 -> 8400 nodes at 47 atoms/node
@@ -13,7 +14,8 @@
 
 use anyhow::{bail, Result};
 use dplr::engine::{
-    observer_fn, KspaceConfig, ReplicaSet, ShortRangeModel, Simulation, StepContext, StepRecorder,
+    observer_fn, KspaceConfig, MtsExtrap, ReplicaSet, ShortRangeModel, Simulation, StepContext,
+    StepRecorder,
 };
 use dplr::experiments::*;
 use dplr::md::units::ns_per_day;
@@ -32,6 +34,7 @@ fn main() {
         "replicas" => cmd_replicas(&args),
         "accuracy" => cmd_accuracy(&args),
         "longrun" => cmd_longrun(&args),
+        "mtsdrift" => cmd_mtsdrift(&args),
         "fftbench" => cmd_fftbench(&args),
         "stepopt" => cmd_stepopt(&args),
         "weakscaling" => cmd_weakscaling(&args),
@@ -63,15 +66,27 @@ fn print_help() {
          \x20              default 1,1,1 = bit-identical to pppm;\n\
          \x20              --ring-quant for int32-packed ring payloads;\n\
          \x20              --dist-matvec for the O(n^2) Eq.-8 partial-DFT\n\
-         \x20              matvecs instead of the rank-local FFT fast path)\n\
+         \x20              matvecs instead of the rank-local FFT fast path;\n\
+         \x20              --mts k: solve k-space every k-th step, holding\n\
+         \x20              the reciprocal forces in between (--mts-extrap\n\
+         \x20              hold|linear; --mts 1 = bit-identical default)\n\
          \x20 replicas     batched replica ensemble: N trajectories through\n\
          \x20              one model (--n 8 --nmol 64 --steps 100 --quench 30\n\
          \x20              --kspace pppm|ewald|dist --threads N --overlap\n\
+         \x20              --mts k --mts-extrap hold|linear: one stride\n\
+         \x20              clock shared across the batch;\n\
          \x20              --no-batch: per-replica fallback loops;\n\
          \x20              --json PATH: aggregate ns/day + per-replica\n\
          \x20              energy-drift stats as JSON)\n\
          \x20 accuracy     Table 1: precision-config errors (--nmol 128)\n\
+         \x20              + --mts stride-error rows at k=2,4\n\
          \x20 longrun      Fig 7: NVT traces double vs mixed-int2 (--steps 1500)\n\
+         \x20              + an --mts section (strided double traces)\n\
+         \x20 mtsdrift     CI drift gate for --mts: NVE conserved-quantity\n\
+         \x20              drift per (backend, k) vs the documented\n\
+         \x20              threshold (--backends pppm,dist --ks 1,2,4\n\
+         \x20              --extrap hold|linear --nmol 32 --steps 200;\n\
+         \x20              exits nonzero on any failing row)\n\
          \x20 fftbench     Fig 8: distributed-FFT comparison\n\
          \x20 stepopt      Fig 9: optimization ladder at 96/768 nodes\n\
          \x20 weakscaling  Fig 10: 12..8400 nodes, ns/day\n\
@@ -163,6 +178,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .dt_fs(args.f64_or("dt", 1.0)?)
         .thermostat(300.0, 0.5)
         .overlap(args.bool("overlap"))
+        .mts(args.usize_or("mts", 1)?)
+        .mts_extrap(MtsExtrap::parse(&args.str_or("mts-extrap", "hold"))?)
         .kspace(kspace_from_args(args, 0.3)?)
         .short_range(short_range_from_args(args)?)
         .observer(Box::new(rec.clone()))
@@ -177,7 +194,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     println!(
         "running {} atoms ({} molecules), {} steps, backend={}, kspace={}, \
-         overlap={}, threads={}",
+         overlap={}, threads={}, mts={} ({})",
         sim.sys.natoms(),
         nmol,
         steps,
@@ -185,6 +202,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         sim.kspace_name(),
         sim.cfg.overlap,
         sim.cfg.threads,
+        sim.cfg.mts.k,
+        sim.cfg.mts.extrap.name(),
     );
     sim.quench(quench)?;
     sim.rescale_to(300.0);
@@ -233,6 +252,8 @@ fn cmd_replicas(args: &Args) -> Result<()> {
         .thermostat(300.0, 0.5)
         .seed(7)
         .overlap(args.bool("overlap"))
+        .mts(args.usize_or("mts", 1)?)
+        .mts_extrap(MtsExtrap::parse(&args.str_or("mts-extrap", "hold"))?)
         .batched(!args.bool("no-batch"))
         .kspace(kspace_from_args(args, 0.3)?)
         .short_range(short_range_from_args(args)?)
@@ -250,7 +271,7 @@ fn cmd_replicas(args: &Args) -> Result<()> {
 
     println!(
         "replica ensemble: {} x {} atoms ({} molecules), {} steps, backend={}, \
-         kspace={}, batched={}, overlap={}, threads={}",
+         kspace={}, batched={}, overlap={}, threads={}, mts={} ({})",
         n,
         set.replica_sys(0).natoms(),
         nmol,
@@ -260,6 +281,8 @@ fn cmd_replicas(args: &Args) -> Result<()> {
         set.batched(),
         set.cfg.overlap,
         set.cfg.threads,
+        set.cfg.mts.k,
+        set.cfg.mts.extrap.name(),
     );
     set.quench(quench)?;
     set.rescale_to(300.0);
@@ -340,6 +363,10 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
     cfg.nmol = args.usize_or("nmol", cfg.nmol)?;
     let rows = table1_accuracy::run(&cfg)?;
     table1_accuracy::print_rows(&rows);
+    // Table-1 tolerance checks at each mts stride (hold + linear)
+    let ks = parse_usize_list(&args.str_or("ks", "2,4"))?;
+    let mts = table1_accuracy::mts_stride_rows(&cfg, &ks)?;
+    table1_accuracy::print_mts_rows(&mts);
     Ok(())
 }
 
@@ -347,11 +374,109 @@ fn cmd_longrun(args: &Args) -> Result<()> {
     let mut cfg = fig7_longrun::Config::default();
     cfg.steps = args.usize_or("steps", cfg.steps)?;
     cfg.nmol = args.usize_or("nmol", cfg.nmol)?;
+    if let Some(ks) = args.str_opt("mts-ks") {
+        cfg.mts_ks = parse_usize_list(&ks)?;
+    }
     if let Some(o) = args.str_opt("out") {
         cfg.out_json = Some(o.to_string());
     }
     let (a, b) = fig7_longrun::run(&cfg)?;
     fig7_longrun::print_summary(&a, &b);
+    let mts = fig7_longrun::run_mts(&cfg)?;
+    fig7_longrun::print_mts_summary(&mts);
+    Ok(())
+}
+
+/// Parse a comma-separated integer list (`--ks 1,2,4`).
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("list component '{p}' is not an integer"))
+        })
+        .collect()
+}
+
+fn cmd_mtsdrift(args: &Args) -> Result<()> {
+    use dplr::util::json::Json;
+
+    let mut cfg = mts_drift::Config::default();
+    cfg.nmol = args.usize_or("nmol", cfg.nmol)?;
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.quench = args.usize_or("quench", cfg.quench)?;
+    cfg.extrap = MtsExtrap::parse(&args.str_or("extrap", "hold"))?;
+    if let Some(ks) = args.str_opt("ks") {
+        cfg.ks = parse_usize_list(&ks)?;
+    }
+    if let Some(b) = args.str_opt("backends") {
+        cfg.backends = b.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(t) = args.str_opt("threads") {
+        let t: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects an integer, got '{t}'"))?;
+        cfg.threads = Some(t);
+    }
+
+    let rows = mts_drift::run(&cfg)?;
+    mts_drift::print_rows(&rows);
+
+    if let Some(path) = args.str_opt("json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("mts_drift".to_string())),
+            ("nmol", Json::Num(cfg.nmol as f64)),
+            ("steps", Json::Num(cfg.steps as f64)),
+            (
+                "threshold_ev_per_atom_step",
+                Json::Num(mts_drift::DRIFT_THRESHOLD),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("backend", Json::Str(r.backend.clone())),
+                                ("k", Json::Num(r.k as f64)),
+                                ("extrap", Json::Str(r.extrap.name().to_string())),
+                                ("drift_ev_per_atom_step", Json::Num(r.drift)),
+                                ("conserved_sd", Json::Num(r.conserved_sd)),
+                                ("pass", Json::Bool(r.pass)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let text = doc.to_string_pretty();
+        if path == "true" {
+            println!("{text}");
+        } else {
+            std::fs::write(&path, text)?;
+            println!("wrote {path}");
+        }
+    }
+
+    let failing: Vec<String> = rows
+        .iter()
+        .filter(|r| !r.pass)
+        .map(|r| format!("{} k={} ({})", r.backend, r.k, r.extrap.name()))
+        .collect();
+    if !failing.is_empty() {
+        bail!(
+            "mts drift gate FAILED for {} row(s): {} \
+             (threshold {:.1e} eV/(atom*step))",
+            failing.len(),
+            failing.join(", "),
+            mts_drift::DRIFT_THRESHOLD
+        );
+    }
+    println!(
+        "mts drift gate passed: {} rows within {:.1e} eV/(atom*step)",
+        rows.len(),
+        mts_drift::DRIFT_THRESHOLD
+    );
     Ok(())
 }
 

@@ -271,6 +271,37 @@ pub fn ns_per_day(step: f64) -> f64 {
     crate::md::units::ns_per_day(step, 1.0)
 }
 
+/// Predicted full-step speedup of `--mts k` on the paper's headline
+/// 12-node configuration (47 atoms/node on 47 usable cores, 8x12x8
+/// mesh): the k-space solve amortizes over k steps while the
+/// short-range NN still runs every step, so the ceiling is
+/// `(t_sr + t_k) / (t_sr + t_k / k)`.
+///
+/// Pure arithmetic over the cost table — host-independent and fully
+/// deterministic.  `scripts/mts_model_baseline.py` mirrors this function
+/// line-for-line and the bench-regression gate pins the
+/// `model_mts_speedup_k*` hotpath keys at 0% tolerance against it.
+pub fn mts_model_speedup(k: usize, cost: &CostTable) -> f64 {
+    let k = k.max(1) as f64;
+    // headline per-node load (51 ns/day anchor): 47 atoms on 47 usable
+    // cores with node-level task division and fp32 inference
+    let atoms = 47.0;
+    let mols = atoms / 3.0;
+    let cores = 47.0;
+    let t_sr = (atoms * cost.dp_per_atom + mols * (cost.dw_fwd_per_mol + cost.dw_bwd_per_mol))
+        / cost.fp32_speedup
+        / cores;
+    // k-space: spread/gather per charged site (ions + WCs) plus the 4
+    // FFTs of the 8x12x8 = 768-point headline mesh on one core
+    // (MachineConfig::default() node flops over its 48 cores)
+    let sites = atoms + mols;
+    let n = 768.0_f64;
+    let fft_flops = 4.0 * 5.0 * n * n.log2();
+    let core_flops = 6.0e11 / 48.0;
+    let t_k = sites * cost.spread_gather_per_site + fft_flops / core_flops;
+    (t_sr + t_k) / (t_sr + t_k / k)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,6 +381,19 @@ mod tests {
             .unwrap();
         assert_eq!(max.0, "+Inference-opt", "gains: {gains:?}");
         assert!(max.1 > 4.0, "inference gain {}", max.1);
+    }
+
+    #[test]
+    fn mts_model_speedup_is_anchored_and_monotone() {
+        let cost = CostTable::default();
+        // k = 1 is the unstrided path: numerator and denominator are the
+        // same expression, so the ratio is exactly 1
+        assert_eq!(mts_model_speedup(1, &cost), 1.0);
+        let s2 = mts_model_speedup(2, &cost);
+        let s4 = mts_model_speedup(4, &cost);
+        assert!(s2 > 1.0 && s4 > s2, "not monotone: s2={s2} s4={s4}");
+        // k-space is a minority of the headline step, so the ceiling is low
+        assert!(s4 < 2.0, "implausible mts ceiling: s4={s4}");
     }
 
     #[test]

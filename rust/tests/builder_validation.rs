@@ -6,7 +6,7 @@
 //!
 //! Runs from a clean checkout (synthetic seeded weights).
 
-use dplr::engine::{KspaceConfig, ReplicaSet, Simulation};
+use dplr::engine::{KspaceConfig, MtsExtrap, ReplicaSet, Simulation};
 use dplr::md::water::{replica_boxes, water_box};
 use dplr::native::NativeModel;
 use dplr::pppm::PppmConfig;
@@ -161,6 +161,41 @@ fn bad_dist_ranks_are_rejected() {
 }
 
 #[test]
+fn mts_zero_is_rejected_and_valid_strides_are_recorded() {
+    let err = builder()
+        .threads(1)
+        .mts(0)
+        .build()
+        .expect_err("mts stride 0 must be rejected");
+    assert!(err.to_string().contains("mts"), "unexpected error: {err:#}");
+
+    let sim = builder()
+        .threads(1)
+        .mts(4)
+        .mts_extrap(MtsExtrap::Linear)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+        .build()
+        .expect("mts 4 + linear must build");
+    assert_eq!(sim.cfg.mts.k, 4);
+    assert_eq!(sim.cfg.mts.extrap, MtsExtrap::Linear);
+}
+
+#[test]
+fn mts_extrap_parses_and_rejects() {
+    assert_eq!(MtsExtrap::parse("hold").unwrap(), MtsExtrap::Hold);
+    assert_eq!(MtsExtrap::parse("linear").unwrap(), MtsExtrap::Linear);
+    assert_eq!(MtsExtrap::Hold.name(), "hold");
+    assert_eq!(MtsExtrap::Linear.name(), "linear");
+    for bad in ["", "quadratic", "LINEAR", "hold "] {
+        let err = MtsExtrap::parse(bad).expect_err("invalid extrapolation");
+        assert!(
+            err.to_string().contains("extrapolation"),
+            "'{bad}': unexpected error: {err:#}"
+        );
+    }
+}
+
+#[test]
 fn missing_short_range_model_is_rejected() {
     let err = Simulation::builder(water_box(8, 1))
         .threads(1)
@@ -283,6 +318,17 @@ fn replica_builder_rejects_what_simulation_builder_rejects() {
 
     let err = replica_builder(2).threads(0).build().expect_err("threads 0");
     assert!(err.to_string().contains("threads"));
+
+    let err = replica_builder(2).mts(0).build().expect_err("mts 0");
+    assert!(err.to_string().contains("mts"), "unexpected error: {err:#}");
+
+    let set = replica_builder(2)
+        .mts(2)
+        .mts_extrap(MtsExtrap::Linear)
+        .build()
+        .expect("strided replica set must build");
+    assert_eq!(set.cfg.mts.k, 2);
+    assert_eq!(set.cfg.mts.extrap, MtsExtrap::Linear);
 
     let err = ReplicaSet::builder(replica_boxes(8, 2, 1))
         .threads(1)

@@ -1,0 +1,219 @@
+//! MTS invariance: the `--mts k` stride contract at the engine level.
+//!
+//! Three pillars: (1) `--mts 1` is BIT-identical to the unstrided default
+//! on every k-space backend — the stride machinery at k = 1 must be pure
+//! bookkeeping; (2) strided trajectories are invariant under the worker
+//! pool size, like every other engine path; (3) a `ReplicaSet` with one
+//! shared stride clock reproduces N standalone strided simulations
+//! bitwise, quench included.  On top of the bitwise pillars, the quick
+//! drift harness and the Table-1 stride-error rows run in-tree with
+//! relaxed (order-of-magnitude) budgets so CI exercises the physics
+//! readouts, not just the bookkeeping.
+//!
+//! Uses synthetic seeded weights so the suite runs from a clean checkout.
+
+use dplr::engine::{KspaceConfig, MtsExtrap, ReplicaSet, Simulation};
+use dplr::experiments::{mts_drift, table1_accuracy};
+use dplr::md::system::System;
+use dplr::md::water::water_box;
+use dplr::native::NativeModel;
+use dplr::util::rng::Rng;
+
+const NMOL: usize = 16;
+const STEPS: usize = 4;
+
+/// Pre-thermalized test system (shared verbatim by both sides of every
+/// comparison, so each starts from identical bits).
+fn make_sys(r: usize) -> System {
+    let mut sys = water_box(NMOL, 100 + r as u64);
+    let mut rng = Rng::new(50 + r as u64);
+    sys.thermalize(300.0, &mut rng);
+    sys
+}
+
+/// Per-step (e_sr, e_gt, conserved) bit patterns.
+type Trace = Vec<(u64, u64, u64)>;
+
+/// Run quench + production on a single simulation; `mts = None` leaves
+/// the builder's default (unstrided) configuration untouched.
+fn single_traj(
+    sys: System,
+    kspace: KspaceConfig,
+    threads: usize,
+    mts: Option<(usize, MtsExtrap)>,
+) -> Trace {
+    let mut b = Simulation::builder(sys)
+        .dt_fs(0.5)
+        .thermostat(300.0, 0.5)
+        .kspace(kspace)
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .threads(threads);
+    if let Some((k, extrap)) = mts {
+        b = b.mts(k).mts_extrap(extrap);
+    }
+    let mut sim = b.build().expect("valid configuration");
+    // quench forces a solve on every eval and restarts the stride on
+    // exit — include it so that discipline is part of the contract
+    sim.quench(2).expect("quench");
+    let mut trace = Vec::new();
+    for _ in 0..STEPS {
+        sim.step().expect("step");
+        let o = sim.last_obs.unwrap();
+        trace.push((o.e_sr.to_bits(), o.e_gt.to_bits(), o.conserved.to_bits()));
+    }
+    trace
+}
+
+fn backends() -> Vec<(&'static str, KspaceConfig)> {
+    vec![
+        ("pppm", KspaceConfig::PppmAuto { alpha: 0.35 }),
+        (
+            "ewald",
+            KspaceConfig::Ewald {
+                alpha: 0.35,
+                tol: 1e-8,
+            },
+        ),
+        (
+            "dist",
+            KspaceConfig::Dist {
+                alpha: 0.35,
+                ranks: [2, 2, 1],
+                quantized: false,
+                matvec: false,
+            },
+        ),
+    ]
+}
+
+#[test]
+fn mts1_bit_identical_to_default_on_every_backend() {
+    // the headline contract: --mts 1 always takes the solve path, so the
+    // stride machinery must not perturb a single bit on any solver (the
+    // extrapolation setting is dead configuration at k = 1)
+    for (name, kspace) in backends() {
+        let base = single_traj(make_sys(0), kspace.clone(), 1, None);
+        for extrap in [MtsExtrap::Hold, MtsExtrap::Linear] {
+            let strided = single_traj(make_sys(0), kspace.clone(), 1, Some((1, extrap)));
+            assert_eq!(
+                strided, base,
+                "--mts 1 ({extrap:?}) diverged from the default path on {name}"
+            );
+        }
+    }
+}
+
+#[test]
+fn strided_trajectories_invariant_under_thread_count() {
+    // the engine's thread-invariance contract extends to held evals: the
+    // stride changes WHEN the solver runs, never how sums are ordered
+    for extrap in [MtsExtrap::Hold, MtsExtrap::Linear] {
+        let kspace = KspaceConfig::PppmAuto { alpha: 0.35 };
+        let t1 = single_traj(make_sys(1), kspace.clone(), 1, Some((3, extrap)));
+        let t3 = single_traj(make_sys(1), kspace.clone(), 3, Some((3, extrap)));
+        assert_eq!(
+            t1, t3,
+            "mts k=3 ({extrap:?}) diverged between 1 and 3 threads"
+        );
+    }
+}
+
+#[test]
+fn replica_set_stride_matches_single_runs() {
+    // one stride clock shared across the batch == each replica running
+    // its own clock alone: same solve schedule, same held forces, same
+    // bits — quench included (force-solve + restart discipline)
+    let nrep = 3usize;
+    let mts = (2usize, MtsExtrap::Linear);
+    let singles: Vec<Trace> = (0..nrep)
+        .map(|r| {
+            single_traj(
+                make_sys(r),
+                KspaceConfig::PppmAuto { alpha: 0.35 },
+                1,
+                Some(mts),
+            )
+        })
+        .collect();
+
+    let systems: Vec<System> = (0..nrep).map(make_sys).collect();
+    let mut set = ReplicaSet::builder(systems)
+        .dt_fs(0.5)
+        .thermostat(300.0, 0.5)
+        .kspace(KspaceConfig::PppmAuto { alpha: 0.35 })
+        .short_range(Box::new(NativeModel::synthetic(7)))
+        .threads(1)
+        .mts(mts.0)
+        .mts_extrap(mts.1)
+        .build()
+        .expect("valid replica-set configuration");
+    set.quench(2).expect("quench");
+    let mut traces = vec![Vec::new(); nrep];
+    for _ in 0..STEPS {
+        set.step().expect("replica step");
+        for (k, trace) in traces.iter_mut().enumerate() {
+            let o = set.last_obs(k).unwrap();
+            trace.push((o.e_sr.to_bits(), o.e_gt.to_bits(), o.conserved.to_bits()));
+        }
+    }
+    assert_eq!(
+        traces, singles,
+        "strided replica set diverged from standalone strided runs"
+    );
+}
+
+#[test]
+fn quick_drift_harness_passes_at_k4() {
+    // the CI mtsdrift gate, shrunk to test size: both carry strategies
+    // must hold the conserved quantity within the Table-1-derived budget
+    for extrap in [MtsExtrap::Hold, MtsExtrap::Linear] {
+        let cfg = mts_drift::Config {
+            nmol: 8,
+            steps: 80,
+            quench: 40,
+            ks: vec![1, 4],
+            backends: vec!["pppm".to_string()],
+            extrap,
+            threads: Some(1),
+            ..mts_drift::Config::default()
+        };
+        let rows = mts_drift::run(&cfg).expect("drift harness");
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(
+                r.pass,
+                "drift gate row failed: {} k={} ({:?}): {:.3e} > {:.1e}",
+                r.backend, r.k, r.extrap, r.drift, r.threshold
+            );
+        }
+    }
+}
+
+#[test]
+fn stride_error_rows_within_relaxed_budget() {
+    // the Table-1 stride rows at test size: one order of magnitude above
+    // the production tolerances (energy 1e-4 -> 1e-3 eV/atom, force RMS
+    // 2e-3 -> 2e-2 eV/A) — the stride carry error over a few 0.5 fs
+    // steps is small, but it is a real physics error, not a solver error
+    let cfg = table1_accuracy::Config {
+        nmol: 16,
+        nseg: [2, 3, 2],
+        equil: 10,
+    };
+    let rows = table1_accuracy::mts_stride_rows(&cfg, &[2, 4]).expect("stride rows");
+    assert_eq!(rows.len(), 4, "hold + linear rows at k = 2 and 4");
+    for r in &rows {
+        assert!(
+            r.energy_err_per_atom < 1e-3,
+            "{}: energy err {:.3e} over relaxed budget",
+            r.name,
+            r.energy_err_per_atom
+        );
+        assert!(
+            r.force_rms_err < 2e-2,
+            "{}: force RMS err {:.3e} over relaxed budget",
+            r.name,
+            r.force_rms_err
+        );
+    }
+}

@@ -43,6 +43,7 @@ measurements + verdicts are written to --out for the CI artifact upload.
 import argparse
 import fnmatch
 import json
+import os
 import sys
 
 # relative epsilon for "0% tolerance" deterministic keys
@@ -52,6 +53,43 @@ EXACT_EPS = 1e-9
 def is_exact(baseline: dict, bench: str, key: str) -> bool:
     pats = (baseline.get("exact") or {}).get(bench, [])
     return any(fnmatch.fnmatch(key, p) for p in pats)
+
+
+def write_step_summary(verdicts: dict, tol: float, failures: list) -> None:
+    """Render the verdict table as GitHub-flavoured markdown.
+
+    Appended to $GITHUB_STEP_SUMMARY when set (the CI job-summary pane);
+    printed to stdout otherwise so local runs see the same table.
+    """
+    def num(x):
+        return f"{x:.6g}" if isinstance(x, (int, float)) else "-"
+
+    lines = [
+        "## Bench regression gate",
+        "",
+        f"Wall-time tolerance +-{tol:.0%}; `exact`-gated keys at 0% "
+        f"(rel eps {EXACT_EPS:g}).",
+        "",
+        "| bench | key | measured | baseline | ratio | verdict |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for bench in sorted(verdicts):
+        for key in sorted(verdicts[bench]):
+            v = verdicts[bench][key]
+            ratio = v.get("ratio")
+            lines.append(
+                f"| {bench} | {key} | {num(v.get('secs'))} "
+                f"| {num(v.get('baseline'))} "
+                f"| {f'{ratio:.2f}x' if ratio is not None else '-'} "
+                f"| {v['verdict']} |")
+    lines += ["", "**Gate: FAILED**" if failures else "**Gate: passed**", ""]
+    text = "\n".join(lines)
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a") as f:
+            f.write(text)
+    else:
+        print(text)
 
 
 def main() -> int:
@@ -169,6 +207,7 @@ def main() -> int:
               "BENCH_baseline.json):")
         for line in faster:
             print(f"  {line}")
+    write_step_summary(verdicts, tol, failures)
     if failures:
         print("[bench-compare] FAILURES (wall-time regressions / exact "
               "mismatches):", file=sys.stderr)

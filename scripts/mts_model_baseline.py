@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Generate the deterministic hotpath `model_mts_speedup_k*` baseline keys.
+
+The hotpath bench (`cargo bench --bench hotpath -- --json ...`) records,
+next to its wall-clock `mts_k{1,2,4}` keys, the *model-predicted* MTS
+speedup ceiling `model_mts_speedup_k{2,4}`: pure arithmetic over
+`CostTable::default()` in `rust/src/perfmodel/mod.rs` (fn
+`mts_model_speedup`), host-independent and fully deterministic, so the
+bench-regression gate holds those keys at 0% tolerance (the comparison
+allows a 1e-9 relative epsilon for libm last-ulp and JSON round-trip
+noise).  The same keys appear in both the `hotpath` and `hotpath_simd`
+baseline sections — the model does not depend on the build features.
+
+This script is a line-for-line port of that arithmetic (identical
+operation order, so IEEE-754 doubles reproduce the Rust values up to
+libm last-ulp differences in log2):
+
+    python3 scripts/mts_model_baseline.py            # print the keys
+    python3 scripts/mts_model_baseline.py --check BENCH_baseline.json
+
+Rust reference: mts_model_speedup + CostTable::default() in
+rust/src/perfmodel/mod.rs, core flops from MachineConfig::default() in
+rust/src/config/mod.rs.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# CostTable::default() (rust/src/perfmodel/mod.rs)
+DP_PER_ATOM = 1.9e-3
+DW_FWD_PER_MOL = 0.35e-3
+DW_BWD_PER_MOL = 0.45e-3
+FP32_SPEEDUP = 1.45
+SPREAD_GATHER_PER_SITE = 2.0e-6
+
+
+def mts_model_speedup(k: int) -> float:
+    k = float(max(k, 1))
+    # headline per-node load (51 ns/day anchor): 47 atoms on 47 usable
+    # cores with node-level task division and fp32 inference
+    atoms = 47.0
+    mols = atoms / 3.0
+    cores = 47.0
+    t_sr = (
+        (atoms * DP_PER_ATOM + mols * (DW_FWD_PER_MOL + DW_BWD_PER_MOL))
+        / FP32_SPEEDUP
+        / cores
+    )
+    # k-space: spread/gather per charged site (ions + WCs) plus the 4
+    # FFTs of the 8x12x8 = 768-point headline mesh on one core
+    # (MachineConfig::default() node flops over its 48 cores)
+    sites = atoms + mols
+    n = 768.0
+    fft_flops = 4.0 * 5.0 * n * math.log2(n)
+    core_flops = 6.0e11 / 48.0
+    t_k = sites * SPREAD_GATHER_PER_SITE + fft_flops / core_flops
+    return (t_sr + t_k) / (t_sr + t_k / k)
+
+
+def model_keys() -> dict:
+    return {f"model_mts_speedup_k{k}": mts_model_speedup(k) for k in (2, 4)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="verify the hotpath/hotpath_simd model_mts_* keys "
+                         "of BASELINE match this script (1e-9 relative)")
+    args = ap.parse_args()
+    keys = model_keys()
+    if args.check:
+        with open(args.check) as f:
+            base = json.load(f)
+        bad = []
+        for section in ("hotpath", "hotpath_simd"):
+            rows = base.get(section) or {}
+            for k, v in keys.items():
+                ref = rows.get(k)
+                if ref is None:
+                    bad.append(f"{section}.{k}: missing from baseline")
+                elif abs(ref - v) > 1e-9 * max(abs(v), 1e-300):
+                    bad.append(f"{section}.{k}: baseline {ref!r} vs model {v!r}")
+        if bad:
+            print("[mts-model] baseline out of date:", file=sys.stderr)
+            for line in bad:
+                print(f"  {line}", file=sys.stderr)
+            return 1
+        print(f"[mts-model] {2 * len(keys)} keys match the baseline")
+        return 0
+    print(json.dumps(keys, indent=1, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
