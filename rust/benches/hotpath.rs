@@ -11,6 +11,7 @@
 //! Runs with artifacts when present, otherwise with synthetic seeded
 //! weights (same architecture).
 use dplr::engine::{KspaceConfig, ReplicaSet, Simulation};
+use dplr::md::scenario;
 use dplr::md::units::ns_per_day;
 use dplr::md::water::{replica_boxes, water_box};
 use dplr::native::NativeModel;
@@ -308,6 +309,40 @@ fn main() {
         let s = mts_model_speedup(k, &CostTable::default());
         record(&format!("model_mts_speedup_k{k}"), s);
         println!("model mts ceiling k={k}: {s:.4}x (headline 12-node config)");
+    }
+
+    // ---- scenario registry: species-table fingerprints + step cost ----
+    // the model_scenario_* keys are deterministic species-table outputs
+    // (site count, sum of squared charges over ions + Wannier centroids)
+    // at a FIXED 64-molecule box, independent of --quick, so the bench
+    // gate pins the registry's charge layout exactly; scenario_step_*
+    // are ordinary wall-time keys
+    println!("\n=== scenario registry: engine step per scenario (64-molecule boxes, 1 thread) ===");
+    for name in ["water", "nacl", "slab"] {
+        let sys = scenario::build(name, 64, 99).expect("scenario build");
+        let natoms = sys.natoms();
+        let nsites = natoms + sys.nmol;
+        let q2_ion: f64 = (0..natoms).map(|i| sys.types.charge_of(i).powi(2)).sum();
+        let q2 = q2_ion + sys.nmol as f64 * sys.types.wc_charge().powi(2);
+        record(&format!("model_scenario_{name}_sites"), nsites as f64);
+        record(&format!("model_scenario_{name}_q2"), q2);
+        let mut sim = Simulation::builder(sys)
+            .dt_fs(0.5)
+            .thermostat(300.0, 0.5)
+            .threads(1)
+            .kspace(KspaceConfig::PppmAuto { alpha: 0.3 })
+            .short_range(Box::new(NativeModel::synthetic(20250710)))
+            .build()
+            .expect("scenario sim");
+        let t = summarize(&time_reps(1, reps, || {
+            sim.step().expect("scenario step");
+        }))
+        .p50;
+        record(&format!("scenario_step_{name}"), t);
+        println!(
+            "{name:>6}: {:8.2} ms/step   ({nsites} sites, sum q^2 = {q2:.0})",
+            t * 1e3
+        );
     }
 
     if let Some(path) = args.str_opt("json") {

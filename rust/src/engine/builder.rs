@@ -365,6 +365,8 @@ impl SimulationBuilder {
             ),
         };
         model.set_pool(pool.clone());
+        self.sys.types.check_system(self.sys.natoms(), &self.sys.mass)?;
+        model.set_type_map(&self.sys.types)?;
 
         let vv = VelocityVerlet::new(self.dt_fs * FS);
         let nh = self

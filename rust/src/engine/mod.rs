@@ -46,7 +46,7 @@ use mts::{HeldKspace, MtsClock, MtsPhase};
 
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
 use crate::md::system::System;
-use crate::md::units::{FS, Q_H, Q_O, Q_WC};
+use crate::md::units::FS;
 use crate::neighbor::{build_cells_par, NlistParams, PaddedNlist, VerletManager};
 use crate::pool::ThreadPool;
 use crate::pppm::{MeshMode, Pppm, PppmConfig};
@@ -246,7 +246,7 @@ impl Simulation {
         // evaluation solves and the path below is unchanged) ---
         let phase = self.mts_clock.begin_eval();
 
-        let (e_gt, dp_out, t_k, t_dp);
+        let (mut e_gt, dp_out, t_k, t_dp);
         match phase {
             MtsPhase::Solve { gap } => {
                 // --- DW forward (always precedes k-space: it defines the WCs) ---
@@ -255,7 +255,9 @@ impl Simulation {
                 times.dw_fwd += t.elapsed().as_secs_f64();
 
                 // site set: ions then WCs (persistent buffers; clear + extend keep
-                // capacity, so steady-state steps allocate nothing here)
+                // capacity, so steady-state steps allocate nothing here).
+                // Charges come from the species table — identical f64
+                // constants for water, per-block for ionic scenarios.
                 self.sites.clear();
                 self.charges.clear();
                 self.sites.reserve(natoms + nmol);
@@ -263,15 +265,16 @@ impl Simulation {
                 for i in 0..natoms {
                     self.sites
                         .push([coords[3 * i], coords[3 * i + 1], coords[3 * i + 2]]);
-                    self.charges.push(if i < nmol { Q_O } else { Q_H });
+                    self.charges.push(self.sys.types.charge_of(i));
                 }
+                let q_wc = self.sys.types.wc_charge();
                 for n in 0..nmol {
                     self.sites.push([
                         coords[3 * n] + delta[3 * n],
                         coords[3 * n + 1] + delta[3 * n + 1],
                         coords[3 * n + 2] + delta[3 * n + 2],
                     ]);
-                    self.charges.push(Q_WC);
+                    self.charges.push(q_wc);
                 }
 
                 // --- k-space || DP (the section 3.2 overlap, on real threads) ---
@@ -312,6 +315,18 @@ impl Simulation {
                     dp_out = self.model.dp_ef(&coords, box_len, nlist);
                     t_dp = t.elapsed().as_secs_f64();
                     e_gt = e;
+                }
+                // Yeh-Berkowitz EW3DC dipole correction for slab geometry
+                // (vacuum gap along z), applied on top of the solver output
+                // *before* the MTS hold so held/extrapolated evaluations
+                // carry the corrected energy and forces too.
+                if self.sys.slab {
+                    e_gt += crate::ewald::ew3dc(
+                        &self.sites,
+                        &self.charges,
+                        box_len,
+                        &mut self.site_forces,
+                    );
                 }
                 // retain the solve for the held evaluations of this stride
                 // window (at --mts 1 this only refreshes the buffers)

@@ -12,17 +12,20 @@
 //! # The supersystem layout
 //!
 //! The batched buffers concatenate replicas as one pseudo-system that is
-//! still globally type-sorted — all O atoms (replica-major), then all H
-//! atoms (replica-major):
+//! still globally type-sorted — species block by species block, replicas
+//! stacked within each block (water shown; ionic scenarios interleave
+//! their extra blocks the same way):
 //!
 //! ```text
 //! [ O(rep 0) | O(rep 1) | .. | O(rep N-1) | H(rep 0) | .. | H(rep N-1) ]
 //! ```
 //!
-//! so every `nmol = natoms / 3` typing assumption inside the model holds
-//! unchanged on the concatenated inputs.  [`batched_atom`] /
-//! [`single_atom`] are the two index maps; neighbour rows are remapped
-//! through [`batched_atom`] at Verlet-rebuild time, never per step.
+//! so the class-sorted typing contract inside the model holds unchanged
+//! on the concatenated inputs.  The index maps are
+//! [`crate::md::scenario::TypeMap::batched_index`] and its inverse
+//! `single_index` (which reduce to the historical water formulas for
+//! water maps); neighbour rows are remapped through them at
+//! Verlet-rebuild time, never per step.
 //!
 //! # The replica-invariance contract
 //!
@@ -50,7 +53,7 @@ use super::traits::{KspaceSolver, ShortRangeModel};
 use super::{SimConfig, StepObservables, StepTimes};
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
 use crate::md::system::System;
-use crate::md::units::{FS, Q_H, Q_O, Q_WC};
+use crate::md::units::FS;
 use crate::neighbor::{build_cells_par, NlistParams, PaddedNlist, VerletManager};
 use crate::pool::ThreadPool;
 use crate::pppm::PppmConfig;
@@ -60,6 +63,9 @@ use std::time::Instant;
 
 /// Map a replica-local atom index to its slot in the type-sorted
 /// supersystem (all O blocks replica-major, then all H blocks).
+/// Water-layout only — kept for the trait-default `dp_ef_replicas`
+/// fallback; the set itself indexes through
+/// [`crate::md::scenario::TypeMap::batched_index`].
 pub(crate) fn batched_atom(r: usize, i: usize, nmol: usize, nrep: usize) -> usize {
     if i < nmol {
         r * nmol + i
@@ -220,7 +226,8 @@ impl ReplicaSet {
     /// Per-replica Verlet maintenance.  A rebuilt replica re-derives its
     /// own padded lists (identical to its single-run lists) and, on the
     /// batched path, remaps just its rows of the concatenated lists
-    /// through [`batched_atom`] — the other replicas' rows are untouched.
+    /// through the species table's `batched_index` — the other replicas'
+    /// rows are untouched.
     fn maintain_nlists(&mut self, times: &mut StepTimes) {
         let nrep = self.replicas.len();
         let nmol = self.replicas[0].sys.nmol;
@@ -240,15 +247,16 @@ impl ReplicaSet {
                 ));
                 rep.verlet.mark_built(&rep.sys);
                 if self.batched {
+                    let types = &rep.sys.types;
                     let src = &rep.nlist.as_ref().unwrap().data;
                     for i in 0..natoms {
-                        let g = batched_atom(r, i, nmol, nrep);
+                        let g = types.batched_index(r, i, nrep);
                         let drow = &mut self.bnlist[g * s..(g + 1) * s];
                         for (dv, &sv) in drow.iter_mut().zip(&src[i * s..(i + 1) * s]) {
                             *dv = if sv < 0 {
                                 -1
                             } else {
-                                batched_atom(r, sv as usize, nmol, nrep) as i32
+                                types.batched_index(r, sv as usize, nrep) as i32
                             };
                         }
                     }
@@ -260,7 +268,7 @@ impl ReplicaSet {
                             *dv = if sv < 0 {
                                 -1
                             } else {
-                                batched_atom(r, sv as usize, nmol, nrep) as i32
+                                types.batched_index(r, sv as usize, nrep) as i32
                             };
                         }
                     }
@@ -278,7 +286,6 @@ impl ReplicaSet {
     /// layout so the downstream combine is identical on both paths.
     fn dp_fallback(&self, rcoords: &[Vec<f64>], box_len: [f64; 3]) -> Result<(Vec<f64>, Vec<f64>)> {
         let nrep = self.replicas.len();
-        let nmol = self.replicas[0].sys.nmol;
         let natoms = self.replicas[0].sys.natoms();
         let mut energies = Vec::with_capacity(nrep);
         let mut f_all = vec![0.0; 3 * nrep * natoms];
@@ -287,7 +294,7 @@ impl ReplicaSet {
             let (e, f) = self.model.dp_ef(&rcoords[r], box_len, nl)?;
             energies.push(e);
             for i in 0..natoms {
-                let g = batched_atom(r, i, nmol, nrep);
+                let g = rep.sys.types.batched_index(r, i, nrep);
                 for d in 0..3 {
                     f_all[3 * g + d] = f[3 * i + d];
                 }
@@ -309,18 +316,14 @@ impl ReplicaSet {
 
         self.maintain_nlists(times);
 
-        // gather the replica-concatenated coordinates (batched path)
+        // gather the replica-concatenated coordinates (batched path),
+        // species block by species block so the stack stays type-sorted
         if self.batched {
             self.bcoords.resize(3 * nrep * natoms, 0.0);
             for (r, rep) in self.replicas.iter().enumerate() {
-                let pos = &rep.sys.pos;
-                for (m, p) in pos.iter().take(nmol).enumerate() {
-                    let g = r * nmol + m;
-                    self.bcoords[3 * g..3 * g + 3].copy_from_slice(p);
-                }
-                let hbase = nrep * nmol + 2 * r * nmol;
-                for (h, p) in pos.iter().skip(nmol).enumerate() {
-                    let g = hbase + h;
+                let types = &rep.sys.types;
+                for (i, p) in rep.sys.pos.iter().enumerate() {
+                    let g = types.batched_index(r, i, nrep);
                     self.bcoords[3 * g..3 * g + 3].copy_from_slice(p);
                 }
             }
@@ -361,7 +364,8 @@ impl ReplicaSet {
                 rep.times.dw_fwd += t_dw * share;
             }
 
-            // per-replica site sets: ions then WCs, exactly as `Simulation`
+            // per-replica site sets: ions then WCs, exactly as
+            // `Simulation` (charges come from the species table)
             for (r, rep) in self.replicas.iter_mut().enumerate() {
                 rep.sites.clear();
                 rep.charges.clear();
@@ -369,8 +373,9 @@ impl ReplicaSet {
                 rep.charges.reserve(natoms + nmol);
                 for i in 0..natoms {
                     rep.sites.push(rep.sys.pos[i]);
-                    rep.charges.push(if i < nmol { Q_O } else { Q_H });
+                    rep.charges.push(rep.sys.types.charge_of(i));
                 }
+                let q_wc = rep.sys.types.wc_charge();
                 for m in 0..nmol {
                     let g = 3 * (r * nmol + m);
                     rep.sites.push([
@@ -378,7 +383,7 @@ impl ReplicaSet {
                         rep.sys.pos[m][1] + delta_all[g + 1],
                         rep.sys.pos[m][2] + delta_all[g + 2],
                     ]);
-                    rep.charges.push(Q_WC);
+                    rep.charges.push(q_wc);
                 }
             }
         }
@@ -465,14 +470,22 @@ impl ReplicaSet {
             .iter_mut()
             .zip(kres.iter().zip(e_sr_all.iter()))
         {
-            rep.e_gt = *e_gt;
+            let mut e_gt = *e_gt;
+            // Yeh-Berkowitz EW3DC slab dipole correction, per replica, on
+            // top of the fresh solve (held evaluations re-serve corrected
+            // forces, exactly as the single-replica engine)
+            if solve && rep.sys.slab {
+                let sf = &mut rep.site_forces;
+                e_gt += crate::ewald::ew3dc(&rep.sites, &rep.charges, box_len, sf);
+            }
+            rep.e_gt = e_gt;
             rep.e_sr = e_sr;
             rep.times.kspace += *t_k;
             times.kspace += *t_k;
             rep.times.dp_all += t_dp * share;
             if let MtsPhase::Solve { gap } = phase {
                 // retain this replica's solve for the held evaluations
-                rep.mts_held.store(*e_gt, &rep.site_forces, gap);
+                rep.mts_held.store(e_gt, &rep.site_forces, gap);
             }
         }
 
@@ -498,7 +511,7 @@ impl ReplicaSet {
                 let fw = &self.bf_wc[3 * r * nmol..3 * (r + 1) * nmol];
                 let (_, f) = self.model.dw_vjp(&rcoords[r], box_len, nlo, fw)?;
                 for i in 0..natoms {
-                    let g = batched_atom(r, i, nmol, nrep);
+                    let g = rep.sys.types.batched_index(r, i, nrep);
                     for d in 0..3 {
                         all[3 * g + d] = f[3 * i + d];
                     }
@@ -515,7 +528,7 @@ impl ReplicaSet {
             let mut forces = std::mem::take(&mut rep.fbuf);
             forces.resize(natoms, [0.0; 3]);
             for (i, fi) in forces.iter_mut().enumerate() {
-                let g = batched_atom(r, i, nmol, nrep);
+                let g = rep.sys.types.batched_index(r, i, nrep);
                 for d in 0..3 {
                     fi[d] = f_sr[3 * g + d] + rep.site_forces[i][d] + fc[3 * g + d];
                 }
@@ -869,6 +882,14 @@ impl ReplicaSetBuilder {
                     box_len
                 );
             }
+            if sys.types != self.systems[0].types || sys.slab != self.systems[0].slab {
+                bail!(
+                    "replica {r} species-table mismatch: every replica must \
+                     share replica 0's scenario layout (build all replicas \
+                     from the same scenario spec)"
+                );
+            }
+            sys.types.check_system(sys.natoms(), &sys.mass)?;
         }
         if !(self.dt_fs.is_finite() && self.dt_fs > 0.0) {
             bail!("dt_fs must be finite and > 0, got {}", self.dt_fs);
@@ -935,6 +956,9 @@ impl ReplicaSetBuilder {
             ),
         };
         model.set_pool(pool.clone());
+        // scenario layout install: backends without generalized index math
+        // reject non-water species tables here, at build time
+        model.set_type_map(&self.systems[0].types)?;
         let batched = self.batched && model.supports_replica_batch();
 
         let cfg = SimConfig {

@@ -24,6 +24,7 @@
 
 use crate::distpppm::DistPppm;
 use crate::ewald::EwaldRecipSolver;
+use crate::md::scenario::TypeMap;
 use crate::native::NativeModel;
 use crate::pool::ThreadPool;
 use crate::pppm::Pppm;
@@ -226,6 +227,27 @@ pub trait ShortRangeModel: Send + Sync {
         Ok((energies, f_all))
     }
 
+    /// Install the system's species table before the first evaluation,
+    /// so the model's index math (typed fit cut, replica bucketing,
+    /// prior pair classes) follows the scenario layout instead of the
+    /// historical `nmol = natoms / 3` water assumption.  The default
+    /// accepts only water-shaped layouts: backends that cannot
+    /// generalize (e.g. the frozen XLA artifacts) fail scenario builds
+    /// with a descriptive error instead of mis-indexing at runtime.
+    fn set_type_map(&mut self, tm: &TypeMap) -> Result<()> {
+        if tm.is_water_shape() {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "short-range backend '{}' only supports the water layout \
+                 (system has {} species blocks); run --system water or use \
+                 the native backend",
+                self.name(),
+                tm.nblocks()
+            )
+        }
+    }
+
     /// Share the engine's worker pool (no-op for backends that do not
     /// shard, e.g. the XLA runtime with its own intra-op threading).
     fn set_pool(&mut self, _pool: Arc<ThreadPool>) {}
@@ -255,6 +277,11 @@ impl ShortRangeModel for NativeModel {
 
     fn supports_replica_batch(&self) -> bool {
         true
+    }
+
+    fn set_type_map(&mut self, tm: &TypeMap) -> Result<()> {
+        NativeModel::install_type_map(self, tm);
+        Ok(())
     }
 
     fn dp_ef_replicas(

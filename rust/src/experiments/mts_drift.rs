@@ -21,7 +21,7 @@
 //! every host.
 
 use crate::engine::{KspaceConfig, MtsExtrap, ShortRangeModel, Simulation, StepContext};
-use crate::md::water::water_box;
+use crate::md::scenario;
 use crate::native::NativeModel;
 use crate::runtime::manifest::artifacts_dir;
 use crate::util::stats::summarize;
@@ -38,6 +38,9 @@ pub const DRIFT_THRESHOLD: f64 = 1.0e-4;
 pub struct Config {
     /// Water molecules in the box.
     pub nmol: usize,
+    /// Scenario spec (`md::scenario`): the gate runs the same NVE drift
+    /// contract on ionic and slab boxes (`dplr mtsdrift --system nacl`).
+    pub system: String,
     /// Production (measured) NVE steps.
     pub steps: usize,
     /// Quench steps before production.
@@ -58,6 +61,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             nmol: 32,
+            system: "water".to_string(),
             steps: 200,
             quench: 80,
             dt_fs: 0.5,
@@ -116,7 +120,7 @@ fn load_or_synthetic() -> Box<dyn ShortRangeModel> {
 }
 
 fn run_one(cfg: &Config, backend: &str, k: usize) -> Result<Row> {
-    let sys = water_box(cfg.nmol, 2026);
+    let sys = scenario::build(&cfg.system, cfg.nmol, 2026)?;
     let trace: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::with_capacity(cfg.steps)));
     let sink = trace.clone();
     let mut builder = Simulation::builder(sys)

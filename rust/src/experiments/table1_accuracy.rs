@@ -12,13 +12,18 @@
 //! k-space path a `&mut dyn KspaceSolver` (the exact `EwaldRecipSolver`
 //! for the golden row, `Pppm` for every configuration under test) — the
 //! same seams the engine itself dispatches through.
+//!
+//! `Config::system` reruns the sweep on any `md::scenario` box (NaCl
+//! electrolyte, charged slab, mixed solute): charges come from the
+//! species table, and slab rows add the Yeh-Berkowitz EW3DC dipole
+//! correction to the golden *and* candidate sides.
 
 use crate::engine::{
     KspaceConfig, KspaceSolver, MtsExtrap, PjrtModel, ShortRangeModel, Simulation, StepTimes,
 };
 use crate::ewald::EwaldRecipSolver;
-use crate::md::units::{Q_H, Q_O, Q_WC};
-use crate::md::water::water_box;
+use crate::md::scenario;
+use crate::md::system::System;
 use crate::native::NativeModel;
 use crate::pppm::MeshMode;
 use crate::runtime::manifest::artifacts_dir;
@@ -46,6 +51,10 @@ pub struct Row {
 pub struct Config {
     /// Water molecules in the box.
     pub nmol: usize,
+    /// Scenario spec (`md::scenario`): the rows measure the same
+    /// precision errors on ionic/slab boxes (slab rows add the EW3DC
+    /// dipole correction to *both* sides of the comparison).
+    pub system: String,
     /// Ring segments per dimension for the quantized rows.
     pub nseg: [usize; 3],
     /// equilibration steps before the measured single step
@@ -56,6 +65,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             nmol: 128,
+            system: "water".to_string(),
             nseg: [2, 3, 2], // the paper's 12-node 2x3x2 topology
             equil: 20,
         }
@@ -65,7 +75,7 @@ impl Default for Config {
 /// Build a mildly-equilibrated 128-water state shared by all rows: the
 /// 32^3 double-precision Table-1 baseline through the builder API.
 fn reference_state(cfg: &Config) -> Result<Simulation> {
-    let mut sys = water_box(cfg.nmol, 2025);
+    let mut sys = scenario::build(&cfg.system, cfg.nmol, 2025)?;
     let mut rng = Rng::new(5);
     sys.thermalize(300.0, &mut rng);
     let mesh = crate::pppm::PppmConfig::new([32, 32, 32], 5, 0.3);
@@ -95,18 +105,12 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
     let o_centres: Vec<usize> = (0..nmol).collect();
     let nlist_o = crate::neighbor::build_exact(&sys, &o_centres, &p).data;
 
-    // ---- golden reference: native f64 NN + exact direct k-space sum ----
-    let native = NativeModel::load(&dir)?;
+    // ---- golden reference: native f64 NN + exact direct k-space sum
+    // (EW3DC-corrected for slab scenarios, on both sides) ----
+    let mut native = NativeModel::load(&dir)?;
+    native.install_type_map(&sys.types);
     let mut golden_kspace = EwaldRecipSolver::new(alpha, sys.box_len, 1e-14);
-    let golden = full_forces(
-        &native,
-        &mut golden_kspace,
-        &coords,
-        sys.box_len,
-        &nlist,
-        &nlist_o,
-        nmol,
-    )?;
+    let golden = full_forces(&native, &mut golden_kspace, &sys, &coords, &nlist, &nlist_o)?;
 
     let mut rows = Vec::new();
     let configs: Vec<(&str, [usize; 3], MeshMode, bool)> = vec![
@@ -139,8 +143,14 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
         // native f64 NN, leaving only the mesh precision under test
         let pjrt;
         let mut nn_fallback = false;
+        // non-water scenarios reject backends without generalized index
+        // math at set_type_map, falling into the same f64 fallback
         let nn: &dyn ShortRangeModel = if f32_nn {
-            match PjrtModel::open(&dir, Dtype::F32) {
+            let opened = PjrtModel::open(&dir, Dtype::F32).and_then(|mut m| {
+                m.set_type_map(&sys.types)?;
+                Ok(m)
+            });
+            match opened {
                 Ok(m) => {
                     pjrt = m;
                     &pjrt
@@ -168,15 +178,7 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
         let mut mesh_cfg = crate::pppm::PppmConfig::new(grid, 5, alpha);
         mesh_cfg.mode = mode;
         let mut pppm = crate::pppm::Pppm::new(mesh_cfg, sys.box_len);
-        let got = full_forces(
-            nn,
-            &mut pppm,
-            &coords,
-            sys.box_len,
-            &nlist,
-            &nlist_o,
-            nmol,
-        )?;
+        let got = full_forces(nn, &mut pppm, &sys, &coords, &nlist, &nlist_o)?;
         let de = (got.0 - golden.0).abs() / natoms as f64;
         let mut rms = 0.0;
         let mut maxe = 0.0f64;
@@ -198,36 +200,42 @@ pub fn run(cfg: &Config) -> Result<Vec<Row>> {
 }
 
 /// One full force evaluation through the engine's provider traits: any
-/// `ShortRangeModel` for DP/DW, any `KspaceSolver` for E_Gt.
-#[allow(clippy::too_many_arguments)]
+/// `ShortRangeModel` for DP/DW, any `KspaceSolver` for E_Gt.  Site
+/// charges come from the system's species table; slab systems get the
+/// Yeh-Berkowitz EW3DC dipole correction on top of the solver output —
+/// for *every* solver, so golden and candidate rows stay comparable.
 fn full_forces(
     nn: &dyn ShortRangeModel,
     kspace: &mut dyn KspaceSolver,
+    sys: &System,
     coords: &[f64],
-    box_len: [f64; 3],
     nlist: &[i32],
     nlist_o: &[i32],
-    nmol: usize,
 ) -> Result<(f64, Vec<f64>)> {
     let natoms = coords.len() / 3;
+    let (nmol, box_len) = (sys.nmol, sys.box_len);
     let (e_sr, f_sr) = nn.dp_ef(coords, box_len, nlist)?;
     let delta = nn.dw_fwd(coords, box_len, nlist_o)?;
     let mut sites = Vec::with_capacity(natoms + nmol);
     let mut q = Vec::with_capacity(natoms + nmol);
     for i in 0..natoms {
         sites.push([coords[3 * i], coords[3 * i + 1], coords[3 * i + 2]]);
-        q.push(if i < nmol { Q_O } else { Q_H });
+        q.push(sys.types.charge_of(i));
     }
+    let q_wc = sys.types.wc_charge();
     for n in 0..nmol {
         sites.push([
             coords[3 * n] + delta[3 * n],
             coords[3 * n + 1] + delta[3 * n + 1],
             coords[3 * n + 2] + delta[3 * n + 2],
         ]);
-        q.push(Q_WC);
+        q.push(q_wc);
     }
     let mut f_sites = Vec::new();
-    let e_gt = kspace.energy_forces_into(&sites, &q, &mut f_sites);
+    let mut e_gt = kspace.energy_forces_into(&sites, &q, &mut f_sites);
+    if sys.slab {
+        e_gt += crate::ewald::ew3dc(&sites, &q, box_len, &mut f_sites);
+    }
     let mut f_wc = vec![0.0; nmol * 3];
     for n in 0..nmol {
         for d in 0..3 {
@@ -264,7 +272,7 @@ pub fn mts_stride_rows(cfg: &Config, ks: &[usize]) -> Result<Vec<Row>> {
         Ok(m) => Box::new(m),
         Err(_) => Box::new(NativeModel::synthetic(20250710)),
     };
-    let mut sys = water_box(cfg.nmol, 2025);
+    let mut sys = scenario::build(&cfg.system, cfg.nmol, 2025)?;
     let mut rng = Rng::new(5);
     sys.thermalize(300.0, &mut rng);
     let grid = [32, 32, 32];
@@ -297,7 +305,11 @@ pub fn mts_stride_rows(cfg: &Config, ks: &[usize]) -> Result<Vec<Row>> {
     let mut golden: Vec<(f64, Vec<[f64; 3]>)> = Vec::with_capacity(frames.len());
     let mut buf = Vec::new();
     for (sites, q) in &frames {
-        let e = gold.energy_forces_into(sites, q, &mut buf);
+        let mut e = gold.energy_forces_into(sites, q, &mut buf);
+        if sim.sys.slab {
+            // match the engine: held solves carry the EW3DC correction
+            e += crate::ewald::ew3dc(sites, q, sim.sys.box_len, &mut buf);
+        }
         golden.push((e, buf.clone()));
     }
 

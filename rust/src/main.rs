@@ -18,8 +18,8 @@ use dplr::engine::{
     StepRecorder,
 };
 use dplr::experiments::*;
+use dplr::md::scenario;
 use dplr::md::units::ns_per_day;
-use dplr::md::water::{replica_boxes, water_box};
 use dplr::native::NativeModel;
 use dplr::runtime::manifest::artifacts_dir;
 use dplr::runtime::Dtype;
@@ -59,6 +59,11 @@ fn print_help() {
          \x20 run          real MD (--nmol 64 --steps 100 --backend native|pjrt\n\
          \x20              --dtype f64|f32 --kspace pppm|ewald|dist --overlap\n\
          \x20              --dt 1.0 --quench 30\n\
+         \x20              --system water|nacl|slab|mixed picks the scenario\n\
+         \x20              (params after ':', e.g. nacl:pairs=8 or\n\
+         \x20              mixed:pairs=4,nsol=8; slab adds a vacuum gap +\n\
+         \x20              EW3DC dipole correction; native backend only for\n\
+         \x20              non-water scenarios);\n\
          \x20              --threads N: worker pool for DP/DW/kspace/nlist;\n\
          \x20              results are bit-for-bit identical for any N;\n\
          \x20              --kspace dist: executed rank-decomposed FFT\n\
@@ -75,17 +80,21 @@ fn print_help() {
          \x20              --kspace pppm|ewald|dist --threads N --overlap\n\
          \x20              --mts k --mts-extrap hold|linear: one stride\n\
          \x20              clock shared across the batch;\n\
+         \x20              --system <spec>: scenario per replica (seed+r);\n\
          \x20              --no-batch: per-replica fallback loops;\n\
          \x20              --json PATH: aggregate ns/day + per-replica\n\
          \x20              energy-drift stats as JSON)\n\
-         \x20 accuracy     Table 1: precision-config errors (--nmol 128)\n\
+         \x20 accuracy     Table 1: precision-config errors (--nmol 128\n\
+         \x20              --system water|nacl|slab|mixed: per-scenario rows\n\
+         \x20              vs the Ewald oracle, EW3DC-corrected for slab)\n\
          \x20              + --mts stride-error rows at k=2,4\n\
          \x20 longrun      Fig 7: NVT traces double vs mixed-int2 (--steps 1500)\n\
          \x20              + an --mts section (strided double traces)\n\
          \x20 mtsdrift     CI drift gate for --mts: NVE conserved-quantity\n\
          \x20              drift per (backend, k) vs the documented\n\
          \x20              threshold (--backends pppm,dist --ks 1,2,4\n\
-         \x20              --extrap hold|linear --nmol 32 --steps 200;\n\
+         \x20              --extrap hold|linear --nmol 32 --steps 200\n\
+         \x20              --system water|nacl|slab|mixed;\n\
          \x20              exits nonzero on any failing row)\n\
          \x20 fftbench     Fig 8: distributed-FFT comparison\n\
          \x20 stepopt      Fig 9: optimization ladder at 96/768 nodes\n\
@@ -157,7 +166,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let nmol = args.usize_or("nmol", 188)?;
     let steps = args.usize_or("steps", 100)?;
     let quench = args.usize_or("quench", 30)?;
-    let mut sys = water_box(nmol, args.usize_or("seed", 42)? as u64);
+    let system = args.str_or("system", "water");
+    let mut sys = scenario::build(&system, nmol, args.u64_or("seed", 42)?)?;
     let mut rng = Rng::new(7);
     sys.thermalize(300.0, &mut rng);
 
@@ -193,10 +203,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut sim = builder.build()?;
 
     println!(
-        "running {} atoms ({} molecules), {} steps, backend={}, kspace={}, \
-         overlap={}, threads={}, mts={} ({})",
+        "running {} atoms ({} molecules, system={}), {} steps, backend={}, \
+         kspace={}, overlap={}, threads={}, mts={} ({})",
         sim.sys.natoms(),
         nmol,
+        system,
         steps,
         sim.short_range_name(),
         sim.kspace_name(),
@@ -241,7 +252,8 @@ fn cmd_replicas(args: &Args) -> Result<()> {
     let nmol = args.usize_or("nmol", 64)?;
     let steps = args.usize_or("steps", 100)?;
     let quench = args.usize_or("quench", 30)?;
-    let systems = replica_boxes(nmol, n, args.usize_or("seed", 42)? as u64);
+    let system = args.str_or("system", "water");
+    let systems = scenario::replica_systems(&system, nmol, n, args.u64_or("seed", 42)?)?;
 
     // per-replica conserved-energy traces for the drift report
     let traces: Arc<Mutex<Vec<Vec<f64>>>> = Arc::new(Mutex::new(vec![Vec::new(); n]));
@@ -270,11 +282,12 @@ fn cmd_replicas(args: &Args) -> Result<()> {
     let mut set = builder.build()?;
 
     println!(
-        "replica ensemble: {} x {} atoms ({} molecules), {} steps, backend={}, \
-         kspace={}, batched={}, overlap={}, threads={}, mts={} ({})",
+        "replica ensemble: {} x {} atoms ({} molecules, system={}), {} steps, \
+         backend={}, kspace={}, batched={}, overlap={}, threads={}, mts={} ({})",
         n,
         set.replica_sys(0).natoms(),
         nmol,
+        system,
         steps,
         set.short_range_name(),
         set.kspace_name(),
@@ -361,6 +374,7 @@ fn cmd_replicas(args: &Args) -> Result<()> {
 fn cmd_accuracy(args: &Args) -> Result<()> {
     let mut cfg = table1_accuracy::Config::default();
     cfg.nmol = args.usize_or("nmol", cfg.nmol)?;
+    cfg.system = args.str_or("system", &cfg.system);
     let rows = table1_accuracy::run(&cfg)?;
     table1_accuracy::print_rows(&rows);
     // Table-1 tolerance checks at each mts stride (hold + linear)
@@ -403,6 +417,7 @@ fn cmd_mtsdrift(args: &Args) -> Result<()> {
 
     let mut cfg = mts_drift::Config::default();
     cfg.nmol = args.usize_or("nmol", cfg.nmol)?;
+    cfg.system = args.str_or("system", &cfg.system);
     cfg.steps = args.usize_or("steps", cfg.steps)?;
     cfg.quench = args.usize_or("quench", cfg.quench)?;
     cfg.extrap = MtsExtrap::parse(&args.str_or("extrap", "hold"))?;

@@ -1,8 +1,12 @@
-//! LAMMPS-like MD substrate: system state, water builder, integrators.
+//! LAMMPS-like MD substrate: system state, the scenario registry
+//! (water, NaCl electrolyte, charged slab, mixed boxes — see
+//! [`scenario`]), and integrators.
 
 pub mod integrate;
+pub mod scenario;
 pub mod system;
 pub mod units;
 pub mod water;
 
+pub use scenario::{Species, TypeMap};
 pub use system::System;

@@ -1,0 +1,265 @@
+//! The bundled scenario builders: bulk water, NaCl electrolyte, charged
+//! slab/interface, and the mixed NNP/MM-style heterogeneous box.
+
+use anyhow::Result;
+
+use super::species::{Species, TypeMap};
+use crate::md::system::System;
+use crate::md::units::*;
+use crate::md::water::{water_box, VOL_PER_MOL};
+use crate::util::rng::Rng;
+
+/// Seed-stream separator so ion/solute placement never perturbs the
+/// water builder's RNG consumption (water stays bit-identical).
+const ION_STREAM: u64 = 0xD1CE_BA11;
+
+/// Bulk water: delegates to [`water_box`] bit-for-bit.
+pub fn water(nmol: usize, seed: u64) -> System {
+    water_box(nmol, seed)
+}
+
+/// NaCl electrolyte: `nmol` waters plus `pairs` Na+/Cl- pairs in the same
+/// ~1 g/cc box.  Waters sit at jittered cell centres (the unchanged
+/// [`water_box`] stream); ions go on stride-selected cell *corners* with
+/// a separate RNG stream, so the minimum water-ion distance is about half
+/// a cell diagonal.  Layout: `[O | Cl | H | Na]` (class-sorted).
+pub fn nacl(nmol: usize, pairs: usize, seed: u64) -> Result<System> {
+    let w = water_box(nmol, seed);
+    let ncell = (nmol as f64).cbrt().ceil() as usize;
+    let a = [
+        w.box_len[0] / ncell as f64,
+        w.box_len[1] / ncell as f64,
+        w.box_len[2] / ncell as f64,
+    ];
+    let (cl, na) = ion_sites(pairs, ncell, a, seed);
+    splice_ionic(&w, cl, na, Vec::new())
+}
+
+/// Charged slab/interface: a water slab occupying the middle third of an
+/// elongated box (vacuum gaps above and below), decorated with a Na+
+/// layer on the lower face and a Cl- layer on the upper face so the cell
+/// carries a net dipole along z.  Sets [`System::slab`], which turns on
+/// the Yeh-Berkowitz EW3DC dipole correction in the engine.
+pub fn slab(nmol: usize, pairs: usize, seed: u64) -> Result<System> {
+    let w = water_box(nmol, seed);
+    let ez = w.box_len[2];
+    // unwrap each H onto its O along z (min image in the *original* box):
+    // the box is about to grow 3x in z, so a z-wrapped bond would split
+    // the molecule across the vacuum gap and corrupt M_z.
+    let mut pos = w.pos.clone();
+    for m in 0..nmol {
+        let oz = pos[m][2];
+        for h in [nmol + 2 * m, nmol + 2 * m + 1] {
+            let mut dz = pos[h][2] - oz;
+            dz -= ez * (dz / ez).round();
+            pos[h][2] = oz + dz;
+        }
+    }
+    // shift the slab into the middle third of L_z = 3 ez: every water
+    // coordinate lands in (ez - r0, 2 ez + r0), far from the z boundary,
+    // so the dipole moment M_z is well defined without unwrapping.
+    for p in &mut pos {
+        p[2] += ez;
+    }
+    let mut w = w;
+    w.pos = pos;
+    w.box_len[2] = 3.0 * ez;
+    // ion layers on an x-y grid hugging the two slab faces: Na+ below,
+    // Cl- above -> net M_z != 0 exercises the EW3DC term.
+    let mut rng = Rng::new(seed ^ ION_STREAM);
+    let side = (pairs as f64).sqrt().ceil().max(1.0) as usize;
+    let jitter = 0.2;
+    let mut na = Vec::with_capacity(pairs);
+    let mut cl = Vec::with_capacity(pairs);
+    for k in 0..pairs {
+        let (ix, iy) = (k % side, k / side);
+        let x = (ix as f64 + 0.5) * w.box_len[0] / side as f64;
+        let y = (iy as f64 + 0.5) * w.box_len[1] / side as f64;
+        na.push([
+            x + rng.range(-jitter, jitter),
+            y + rng.range(-jitter, jitter),
+            ez + 0.8,
+        ]);
+        cl.push([
+            x + rng.range(-jitter, jitter),
+            y + rng.range(-jitter, jitter),
+            2.0 * ez - 0.8,
+        ]);
+    }
+    let mut sys = splice_ionic(&w, cl, na, Vec::new())?;
+    sys.slab = true;
+    Ok(sys)
+}
+
+/// Mixed heterogeneous box (the NNP/MM shape): water + `pairs` NaCl plus
+/// `nsol` neutral LJ-prior solute sites.  Layout: `[O | Cl | X | H | Na]`.
+pub fn mixed(nmol: usize, pairs: usize, nsol: usize, seed: u64) -> Result<System> {
+    let w = water_box(nmol, seed);
+    let ncell = (nmol as f64).cbrt().ceil() as usize;
+    let a = [
+        w.box_len[0] / ncell as f64,
+        w.box_len[1] / ncell as f64,
+        w.box_len[2] / ncell as f64,
+    ];
+    let (cl, na, sol) = corner_sites(2 * pairs + nsol, pairs, ncell, a, seed);
+    splice_ionic(&w, cl, na, sol)
+}
+
+/// Stride-select `2 pairs` cell-corner sites and split them alternately
+/// into Cl (even) and Na (odd) positions.
+fn ion_sites(
+    pairs: usize,
+    ncell: usize,
+    a: [f64; 3],
+    seed: u64,
+) -> (Vec<[f64; 3]>, Vec<[f64; 3]>) {
+    let (cl, na, _) = corner_sites(2 * pairs, pairs, ncell, a, seed);
+    (cl, na)
+}
+
+/// Stride-select `nsites` cell corners; the first `2 npairs` alternate
+/// Cl/Na, the remainder become solute sites.
+fn corner_sites(
+    nsites: usize,
+    npairs: usize,
+    ncell: usize,
+    a: [f64; 3],
+    seed: u64,
+) -> (Vec<[f64; 3]>, Vec<[f64; 3]>, Vec<[f64; 3]>) {
+    let mut rng = Rng::new(seed ^ ION_STREAM);
+    let ncorners = ncell * ncell * ncell;
+    let jitter = 0.2;
+    let (mut cl, mut na, mut sol) = (Vec::new(), Vec::new(), Vec::new());
+    for count in 0..nsites {
+        let site = count * ncorners / nsites.max(1);
+        let (ix, rem) = (site / (ncell * ncell), site % (ncell * ncell));
+        let (iy, iz) = (rem / ncell, rem % ncell);
+        let p = [
+            ix as f64 * a[0] + rng.range(-jitter, jitter),
+            iy as f64 * a[1] + rng.range(-jitter, jitter),
+            iz as f64 * a[2] + rng.range(-jitter, jitter),
+        ];
+        if count < 2 * npairs {
+            if count % 2 == 0 {
+                cl.push(p);
+            } else {
+                na.push(p);
+            }
+        } else {
+            sol.push(p);
+        }
+    }
+    (cl, na, sol)
+}
+
+/// Assemble `[O | Cl | X | H | Na]` (empty blocks omitted) from a water
+/// system plus ion/solute positions, with the matching [`TypeMap`].
+fn splice_ionic(
+    w: &System,
+    cl: Vec<[f64; 3]>,
+    na: Vec<[f64; 3]>,
+    sol: Vec<[f64; 3]>,
+) -> Result<System> {
+    let nmol = w.nmol;
+    let mut blocks = vec![(Species::oxygen(), nmol)];
+    if !cl.is_empty() {
+        blocks.push((Species::chloride(), cl.len()));
+    }
+    if !sol.is_empty() {
+        blocks.push((Species::solute(), sol.len()));
+    }
+    blocks.push((Species::hydrogen(), 2 * nmol));
+    if !na.is_empty() {
+        blocks.push((Species::sodium(), na.len()));
+    }
+    let types = TypeMap::new(blocks)?;
+    let mut pos = Vec::with_capacity(types.natoms());
+    pos.extend_from_slice(&w.pos[..nmol]);
+    pos.extend_from_slice(&cl);
+    pos.extend_from_slice(&sol);
+    pos.extend_from_slice(&w.pos[nmol..]);
+    pos.extend_from_slice(&na);
+    let n = pos.len();
+    let mass: Vec<f64> = (0..n).map(|i| types.mass_of(i)).collect();
+    let mut sys = System {
+        nmol,
+        box_len: w.box_len,
+        pos,
+        vel: vec![[0.0; 3]; n],
+        mass,
+        types,
+        slab: w.slab,
+    };
+    sys.wrap();
+    Ok(sys)
+}
+
+/// Density-derived cubic edge for `nmol` waters (shared with
+/// [`water_box`]).
+pub fn cubic_edge(nmol: usize) -> f64 {
+    (VOL_PER_MOL * nmol as f64).cbrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nacl_layout_and_neutrality() {
+        let sys = nacl(27, 4, 7).unwrap();
+        assert_eq!(sys.natoms(), 27 + 4 + 54 + 4);
+        assert_eq!(sys.types.total_charge(), 0.0);
+        assert_eq!(sys.class0_end(), 31);
+        // water block positions are bit-identical to the plain water box
+        let w = water_box(27, 7);
+        assert_eq!(&sys.pos[..27], &w.pos[..27]);
+        assert_eq!(&sys.pos[31..31 + 54], &w.pos[27..]);
+    }
+
+    #[test]
+    fn nacl_ions_keep_clearance_from_water() {
+        let sys = nacl(64, 8, 3).unwrap();
+        let n0 = sys.nmol;
+        for ion in (n0..n0 + 8).chain(sys.natoms() - 8..sys.natoms()) {
+            for m in 0..n0 {
+                let mut r2 = 0.0;
+                for d in 0..3 {
+                    let mut x = sys.pos[ion][d] - sys.pos[m][d];
+                    x -= sys.box_len[d] * (x / sys.box_len[d]).round();
+                    r2 += x * x;
+                }
+                assert!(r2.sqrt() > 1.5, "ion {ion} vs O {m}: {}", r2.sqrt());
+            }
+        }
+    }
+
+    #[test]
+    fn slab_has_vacuum_gap_and_net_dipole() {
+        let sys = slab(27, 4, 11).unwrap();
+        assert!(sys.slab);
+        let lz = sys.box_len[2];
+        let third = lz / 3.0;
+        // all charge sits in the middle third (plus the bond overhang)
+        for p in &sys.pos {
+            assert!(p[2] > third - 1.5 && p[2] < 2.0 * third + 1.5, "z = {}", p[2]);
+        }
+        // net dipole: Na below, Cl above, so M_z < 0 from the ions
+        let mz: f64 = (0..sys.natoms())
+            .map(|i| sys.ionic_charge(i) * sys.pos[i][2])
+            .sum::<f64>()
+            + (0..sys.nmol)
+                .map(|m| sys.types.wc_charge() * sys.pos[m][2])
+                .sum::<f64>();
+        assert!(mz.abs() > 1.0, "M_z = {mz}");
+    }
+
+    #[test]
+    fn mixed_box_has_five_blocks() {
+        let sys = mixed(27, 3, 5, 13).unwrap();
+        assert_eq!(sys.types.nblocks(), 5);
+        assert_eq!(sys.natoms(), 27 + 3 + 5 + 54 + 3);
+        assert_eq!(sys.types.total_charge(), 0.0);
+        assert!(sys.types.has_lj());
+        assert_eq!(sys.class0_end(), 27 + 3 + 5);
+    }
+}

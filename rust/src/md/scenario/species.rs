@@ -1,0 +1,475 @@
+//! Species table: the per-type layout description that replaces the
+//! hardwired O/H water cut throughout the engine.
+//!
+//! A [`TypeMap`] describes a type-sorted system as a sequence of species
+//! *blocks* (name, mass, ionic charge, NN class, optional Wannier-centroid
+//! charge, optional LJ prior), each with an atom count.  Every layer that
+//! used to derive structure from `nmol = natoms / 3` arithmetic — the
+//! neighbour builders, the native model's typed fit/prior splits, the
+//! engine's charge assembly and the replica stacking maps — consumes the
+//! table instead, so ionic and heterogeneous scenarios (NaCl electrolyte,
+//! charged slabs, mixed boxes) run through the identical code paths as the
+//! paper's bulk-water box.
+//!
+//! Two layout invariants are enforced at construction time (the
+//! "type-sorted" contract the NN input format requires):
+//!
+//! 1. **Class-sorted blocks** — every NN-class-0 block precedes every
+//!    NN-class-1 block, so the padded-neighbour column split and the typed
+//!    fitting-net split remain single cuts at [`TypeMap::class0_count`].
+//! 2. **WC block first** — at most one block carries a Wannier-centroid
+//!    charge and it must be block 0 (the O block), so WC centres are
+//!    always atoms `0..wc_count` and `System::wc_binding_atom` stays the
+//!    identity.
+
+use anyhow::{bail, Result};
+
+use crate::md::units::*;
+
+/// One species block: the per-type physical constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Species {
+    /// Species name ("O", "H", "Na", ...).
+    pub name: String,
+    /// Mass in internal units (eV ps^2 / A^2).
+    pub mass: f64,
+    /// Ionic charge [e] (DPLR convention: core + tightly bound shells).
+    pub charge: f64,
+    /// NN class (0 = O-like embed/fit nets, 1 = H-like).
+    pub nn_class: usize,
+    /// Wannier-centroid charge [e]; `Some` means every atom of this
+    /// species carries one WC site (water O: -8).
+    pub wc_charge: Option<f64>,
+    /// Lennard-Jones prior `(epsilon [eV], sigma [A])` for neutral
+    /// solute species; pairs where *both* partners carry parameters get
+    /// an LJ term in the short-range prior.
+    pub lj: Option<(f64, f64)>,
+}
+
+impl Species {
+    /// Water oxygen (NN class 0, one -8e Wannier centroid per atom).
+    pub fn oxygen() -> Species {
+        Species {
+            name: "O".to_string(),
+            mass: MASS_O * MASS_AMU_TO_INTERNAL,
+            charge: Q_O,
+            nn_class: 0,
+            wc_charge: Some(Q_WC),
+            lj: None,
+        }
+    }
+
+    /// Water hydrogen (NN class 1).
+    pub fn hydrogen() -> Species {
+        Species {
+            name: "H".to_string(),
+            mass: MASS_H * MASS_AMU_TO_INTERNAL,
+            charge: Q_H,
+            nn_class: 1,
+            wc_charge: None,
+            lj: None,
+        }
+    }
+
+    /// Sodium cation (+1e, NN class 1: a bare positive centre like H).
+    pub fn sodium() -> Species {
+        Species {
+            name: "Na".to_string(),
+            mass: MASS_NA * MASS_AMU_TO_INTERNAL,
+            charge: Q_NA,
+            nn_class: 1,
+            wc_charge: None,
+            lj: None,
+        }
+    }
+
+    /// Chloride anion (-1e, NN class 0: an electron-rich centre like O).
+    pub fn chloride() -> Species {
+        Species {
+            name: "Cl".to_string(),
+            mass: MASS_CL * MASS_AMU_TO_INTERNAL,
+            charge: Q_CL,
+            nn_class: 0,
+            wc_charge: None,
+            lj: None,
+        }
+    }
+
+    /// Neutral LJ-prior solute site (the classical region of the NNP/MM
+    /// shape: charge-free, held together by an explicit LJ prior).
+    pub fn solute() -> Species {
+        Species {
+            name: "X".to_string(),
+            mass: MASS_SOLUTE * MASS_AMU_TO_INTERNAL,
+            charge: 0.0,
+            nn_class: 0,
+            wc_charge: None,
+            lj: Some((SOLUTE_LJ_EPS, SOLUTE_LJ_SIGMA)),
+        }
+    }
+}
+
+/// Type-sorted species layout: an ordered list of species blocks with
+/// their atom counts.  See the module docs for the layout invariants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TypeMap {
+    species: Vec<Species>,
+    counts: Vec<usize>,
+    offsets: Vec<usize>,
+}
+
+impl TypeMap {
+    /// Build a map from `(species, count)` blocks, validating the layout
+    /// invariants (class-sorted blocks, WC block first, water H pairing).
+    pub fn new(blocks: Vec<(Species, usize)>) -> Result<TypeMap> {
+        if blocks.is_empty() {
+            bail!("TypeMap needs at least one species block");
+        }
+        let mut species = Vec::with_capacity(blocks.len());
+        let mut counts = Vec::with_capacity(blocks.len());
+        let mut offsets = Vec::with_capacity(blocks.len());
+        let mut off = 0usize;
+        for (sp, c) in blocks {
+            if c == 0 {
+                bail!("species block '{}' has zero atoms (omit empty blocks)", sp.name);
+            }
+            if sp.nn_class > 1 {
+                bail!(
+                    "species '{}' has NN class {} (only classes 0 and 1 exist)",
+                    sp.name,
+                    sp.nn_class
+                );
+            }
+            offsets.push(off);
+            off += c;
+            species.push(sp);
+            counts.push(c);
+        }
+        // invariant 1: class-sorted blocks (single cut at class0_count)
+        for w in species.windows(2) {
+            if w[0].nn_class > w[1].nn_class {
+                bail!(
+                    "species layout is not type-sorted: block '{}' (NN class {}) precedes \
+                     block '{}' (NN class {}); the padded-neighbour format and the typed \
+                     fitting split require every class-0 block before every class-1 block",
+                    w[0].name,
+                    w[0].nn_class,
+                    w[1].name,
+                    w[1].nn_class
+                );
+            }
+        }
+        // invariant 2: at most one WC-bearing block, and it is block 0
+        for (b, sp) in species.iter().enumerate() {
+            if sp.wc_charge.is_some() && b != 0 {
+                bail!(
+                    "Wannier-centroid species '{}' must be the first block \
+                     (WC centres are atoms 0..wc_count)",
+                    sp.name
+                );
+            }
+        }
+        let map = TypeMap {
+            species,
+            counts,
+            offsets,
+        };
+        // the bonded water prior pairs block 0 (O) with an H block holding
+        // exactly two atoms per O
+        if map.species[0].wc_charge.is_some() && map.water_pair().is_none() {
+            bail!(
+                "WC block '{}' ({} atoms) has no matching H block with {} atoms \
+                 (the bonded water prior needs H pairs)",
+                map.species[0].name,
+                map.counts[0],
+                2 * map.counts[0]
+            );
+        }
+        Ok(map)
+    }
+
+    /// The classic DPLR water layout: `nmol` O then `2 nmol` H.
+    pub fn water(nmol: usize) -> TypeMap {
+        TypeMap::new(vec![
+            (Species::oxygen(), nmol),
+            (Species::hydrogen(), 2 * nmol),
+        ])
+        .expect("water layout is always valid")
+    }
+
+    /// Total atom count (sum of block counts; WC sites not included).
+    pub fn natoms(&self) -> usize {
+        self.offsets.last().unwrap() + self.counts.last().unwrap()
+    }
+
+    /// Number of species blocks.
+    pub fn nblocks(&self) -> usize {
+        self.species.len()
+    }
+
+    /// The species of block `b`.
+    pub fn species(&self, b: usize) -> &Species {
+        &self.species[b]
+    }
+
+    /// Atom count of block `b`.
+    pub fn count(&self, b: usize) -> usize {
+        self.counts[b]
+    }
+
+    /// First atom index of block `b`.
+    pub fn offset(&self, b: usize) -> usize {
+        self.offsets[b]
+    }
+
+    /// Block index owning atom `i`.
+    pub fn block_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.natoms(), "atom {i} out of range");
+        let mut b = self.species.len() - 1;
+        while self.offsets[b] > i {
+            b -= 1;
+        }
+        b
+    }
+
+    /// NN class (0 or 1) of atom `i`.
+    pub fn nn_class_of(&self, i: usize) -> usize {
+        self.species[self.block_of(i)].nn_class
+    }
+
+    /// Ionic charge [e] of atom `i`.
+    pub fn charge_of(&self, i: usize) -> f64 {
+        self.species[self.block_of(i)].charge
+    }
+
+    /// Mass (internal units) of atom `i`.
+    pub fn mass_of(&self, i: usize) -> f64 {
+        self.species[self.block_of(i)].mass
+    }
+
+    /// Number of NN-class-0 atoms == the padded-list/typed-fit cut index
+    /// (class-0 atoms are exactly `0..class0_count`).
+    pub fn class0_count(&self) -> usize {
+        self.species
+            .iter()
+            .zip(&self.counts)
+            .filter(|(sp, _)| sp.nn_class == 0)
+            .map(|(_, &c)| c)
+            .sum()
+    }
+
+    /// Number of Wannier centroids (= atoms of the WC-bearing block 0).
+    pub fn wc_count(&self) -> usize {
+        if self.species[0].wc_charge.is_some() {
+            self.counts[0]
+        } else {
+            0
+        }
+    }
+
+    /// Charge [e] of each Wannier centroid (0 when no block carries WCs).
+    pub fn wc_charge(&self) -> f64 {
+        self.species[0].wc_charge.unwrap_or(0.0)
+    }
+
+    /// Water-prior pairing: `(nmol, h_offset)` when block 0 carries WCs
+    /// and a class-1 "H" block holds exactly `2 nmol` atoms.
+    pub fn water_pair(&self) -> Option<(usize, usize)> {
+        self.species[0].wc_charge?;
+        let nmol = self.counts[0];
+        for b in 1..self.species.len() {
+            if self.species[b].nn_class == 1
+                && self.species[b].name == "H"
+                && self.counts[b] == 2 * nmol
+            {
+                return Some((nmol, self.offsets[b]));
+            }
+        }
+        None
+    }
+
+    /// True for the plain 2-block water layout (`nmol` O + `2 nmol` H).
+    pub fn is_water_shape(&self) -> bool {
+        self.nblocks() == 2 && *self == TypeMap::water(self.counts[0])
+    }
+
+    /// True when any block carries LJ-prior parameters.
+    pub fn has_lj(&self) -> bool {
+        self.species.iter().any(|sp| sp.lj.is_some())
+    }
+
+    /// LJ parameters of block `b`.
+    pub fn lj_of_block(&self, b: usize) -> Option<(f64, f64)> {
+        self.species[b].lj
+    }
+
+    /// Total charge [e] including Wannier centroids (0 for every bundled
+    /// scenario: the k-space solvers assume neutral cells).
+    pub fn total_charge(&self) -> f64 {
+        let ionic: f64 = self
+            .species
+            .iter()
+            .zip(&self.counts)
+            .map(|(sp, &c)| sp.charge * c as f64)
+            .sum();
+        ionic + self.wc_count() as f64 * self.wc_charge()
+    }
+
+    /// Check that a coordinate/mass buffer matches this layout.
+    pub fn check_system(&self, natoms: usize, mass: &[f64]) -> Result<()> {
+        if natoms != self.natoms() {
+            bail!(
+                "system has {natoms} atoms but its TypeMap describes {}",
+                self.natoms()
+            );
+        }
+        for (i, &m) in mass.iter().enumerate() {
+            let want = self.mass_of(i);
+            if (m - want).abs() > 1e-12 {
+                bail!(
+                    "atom {i} mass {m} does not match species '{}' ({want})",
+                    self.species[self.block_of(i)].name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ---- stacked replica supersystem layout --------------------------------
+
+    /// Index of replica `r`'s atom `i` in the `nrep`-replica stacked
+    /// supersystem.  Blocks are concatenated per species, replica-major
+    /// within each block, so the stack is itself a valid type-sorted
+    /// system (block b of width `c_b` starts at `nrep * offset(b)`;
+    /// replica `r`'s slice begins `r * c_b` into it).  For the water map
+    /// this reduces to the classic `r*nmol + i` / `nrep*nmol + 2*r*nmol +
+    /// (i - nmol)` formulas of [`crate::engine::ReplicaSet`].
+    pub fn batched_index(&self, r: usize, i: usize, nrep: usize) -> usize {
+        let b = self.block_of(i);
+        nrep * self.offsets[b] + r * self.counts[b] + (i - self.offsets[b])
+    }
+
+    /// Inverse of [`Self::batched_index`]: `(replica, local atom)` of
+    /// stacked index `g`.
+    pub fn single_index(&self, g: usize, nrep: usize) -> (usize, usize) {
+        debug_assert!(g < nrep * self.natoms(), "stacked atom {g} out of range");
+        let mut b = self.species.len() - 1;
+        while nrep * self.offsets[b] > g {
+            b -= 1;
+        }
+        let rel = g - nrep * self.offsets[b];
+        (rel / self.counts[b], self.offsets[b] + rel % self.counts[b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nacl_map(nmol: usize, pairs: usize) -> TypeMap {
+        TypeMap::new(vec![
+            (Species::oxygen(), nmol),
+            (Species::chloride(), pairs),
+            (Species::hydrogen(), 2 * nmol),
+            (Species::sodium(), pairs),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn water_map_matches_hardwired_layout() {
+        let tm = TypeMap::water(8);
+        assert_eq!(tm.natoms(), 24);
+        assert_eq!(tm.class0_count(), 8);
+        assert_eq!(tm.wc_count(), 8);
+        assert_eq!(tm.wc_charge(), Q_WC);
+        assert!(tm.is_water_shape());
+        assert_eq!(tm.water_pair(), Some((8, 8)));
+        for i in 0..24 {
+            assert_eq!(tm.nn_class_of(i), usize::from(i >= 8));
+            assert_eq!(tm.charge_of(i), if i < 8 { Q_O } else { Q_H });
+        }
+        assert_eq!(tm.total_charge(), 0.0);
+    }
+
+    #[test]
+    fn batched_index_reduces_to_water_formulas() {
+        let (nmol, nrep) = (5usize, 3usize);
+        let tm = TypeMap::water(nmol);
+        for r in 0..nrep {
+            for i in 0..3 * nmol {
+                let want = if i < nmol {
+                    r * nmol + i
+                } else {
+                    nrep * nmol + 2 * r * nmol + (i - nmol)
+                };
+                assert_eq!(tm.batched_index(r, i, nrep), want, "r={r} i={i}");
+                assert_eq!(tm.single_index(want, nrep), (r, i));
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_map_is_a_bijection_and_stays_type_sorted() {
+        let tm = nacl_map(6, 2);
+        let nrep = 4;
+        let n = tm.natoms();
+        let mut seen = vec![false; nrep * n];
+        for r in 0..nrep {
+            for i in 0..n {
+                let g = tm.batched_index(r, i, nrep);
+                assert!(!seen[g], "collision at {g}");
+                seen[g] = true;
+                assert_eq!(tm.single_index(g, nrep), (r, i));
+                // class sorting survives stacking
+                let class_single = tm.nn_class_of(i);
+                let class_stacked = usize::from(g >= nrep * tm.class0_count());
+                assert_eq!(class_single, class_stacked, "r={r} i={i} g={g}");
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn nacl_map_is_neutral_and_class_split() {
+        let tm = nacl_map(16, 4);
+        assert_eq!(tm.natoms(), 16 + 4 + 32 + 4);
+        assert_eq!(tm.class0_count(), 20);
+        assert_eq!(tm.wc_count(), 16);
+        assert_eq!(tm.total_charge(), 0.0);
+        assert!(!tm.is_water_shape());
+    }
+
+    #[test]
+    fn unsorted_layout_is_rejected_with_a_descriptive_error() {
+        let err = TypeMap::new(vec![
+            (Species::oxygen(), 4),
+            (Species::sodium(), 2),
+            (Species::chloride(), 2),
+            (Species::hydrogen(), 8),
+        ])
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("not type-sorted"), "{msg}");
+        assert!(msg.contains("Na") && msg.contains("Cl"), "{msg}");
+    }
+
+    #[test]
+    fn wc_block_must_come_first() {
+        let mut late_wc = Species::chloride();
+        late_wc.wc_charge = Some(-1.0);
+        let err = TypeMap::new(vec![(Species::solute(), 4), (late_wc, 2)]).unwrap_err();
+        assert!(format!("{err}").contains("first block"));
+    }
+
+    #[test]
+    fn check_system_catches_mismatches() {
+        let tm = TypeMap::water(2);
+        assert!(tm.check_system(5, &[]).is_err());
+        let mass: Vec<f64> = (0..6).map(|i| tm.mass_of(i)).collect();
+        assert!(tm.check_system(6, &mass).is_ok());
+        let mut bad = mass;
+        bad[3] = 1.0;
+        assert!(tm.check_system(6, &bad).is_err());
+    }
+}

@@ -1,53 +1,63 @@
-//! Simulation state for a water system (type-sorted atom layout).
+//! Simulation state for a type-sorted molecular system.
 
+use super::scenario::TypeMap;
 use super::units::*;
 use crate::util::rng::Rng;
 
-/// Atom type indices (shared with python: O block first, then H pairs).
+/// NN class index of O-like species (shared with python: class-0 block
+/// first, then class-1).
 pub const TYPE_O: usize = 0;
-/// Hydrogen type index.
+/// NN class index of H-like species.
 pub const TYPE_H: usize = 1;
 
 #[derive(Debug, Clone)]
-/// Positions/velocities/masses of a water system plus its box.
+/// Positions/velocities/masses of a type-sorted system plus its box and
+/// species table.
 pub struct System {
-    /// number of water molecules; natoms = 3 * nmol
+    /// number of water molecules (== size of the leading O block; the
+    /// Wannier-centroid count)
     pub nmol: usize,
     /// orthorhombic box edge lengths [A]
     pub box_len: [f64; 3],
-    /// positions [A], layout: [O_0..O_nmol, H1_0, H2_0, H1_1, ...]
+    /// positions [A], species-block layout described by `types`
+    /// (water: [O_0..O_nmol, H1_0, H2_0, H1_1, ...])
     pub pos: Vec<[f64; 3]>,
     /// velocities [A/ps]
     pub vel: Vec<[f64; 3]>,
     /// masses in internal units (eV ps^2 / A^2)
     pub mass: Vec<f64>,
+    /// species table: per-type charge/mass/class and block layout
+    pub types: TypeMap,
+    /// slab geometry flag: when set, the k-space energy/forces get the
+    /// Yeh-Berkowitz EW3DC dipole correction (vacuum gap along z)
+    pub slab: bool,
 }
 
 impl System {
-    /// Total atom count (3 per molecule).
+    /// Total atom count.
     pub fn natoms(&self) -> usize {
-        3 * self.nmol
+        self.pos.len()
     }
 
-    /// Type index of atom `i` (O block first, then H).
+    /// NN class of atom `i` (0 = O-like, 1 = H-like), from the species
+    /// table.
     pub fn atom_type(&self, i: usize) -> usize {
-        if i < self.nmol {
-            TYPE_O
-        } else {
-            TYPE_H
-        }
+        self.types.nn_class_of(i)
     }
 
-    /// Ionic charge of atom i (DPLR convention: O +6, H +1).
+    /// Ionic charge of atom i (DPLR convention, e.g. O +6, H +1).
     pub fn ionic_charge(&self, i: usize) -> f64 {
-        if i < self.nmol {
-            Q_O
-        } else {
-            Q_H
-        }
+        self.types.charge_of(i)
     }
 
-    /// Index of the O atom binding Wannier centroid n (identity here).
+    /// Number of NN-class-0 atoms; class-0 atoms occupy `0..class0_end()`
+    /// (the type-sorted cut the neighbour/model layers split on).
+    pub fn class0_end(&self) -> usize {
+        self.types.class0_count()
+    }
+
+    /// Index of the O atom binding Wannier centroid n (identity here:
+    /// the WC-bearing species is always block 0).
     pub fn wc_binding_atom(&self, n: usize) -> usize {
         n
     }
@@ -152,6 +162,8 @@ mod tests {
         let total: f64 = (0..sys.natoms()).map(|i| sys.ionic_charge(i)).sum::<f64>()
             + sys.nmol as f64 * Q_WC;
         assert_eq!(total, 0.0);
+        assert_eq!(sys.types.total_charge(), 0.0);
+        assert_eq!(sys.class0_end(), sys.nmol);
     }
 
     #[test]

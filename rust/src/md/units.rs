@@ -27,6 +27,23 @@ pub const Q_H: f64 = 1.0;
 /// Wannier-centroid charge [e] (4 doubly-occupied centres merged).
 pub const Q_WC: f64 = -8.0;
 
+/// Na mass (g/mol), for the electrolyte scenarios.
+pub const MASS_NA: f64 = 22.98976928;
+/// Cl mass (g/mol).
+pub const MASS_CL: f64 = 35.453;
+/// Na ionic charge [e].
+pub const Q_NA: f64 = 1.0;
+/// Cl ionic charge [e].
+pub const Q_CL: f64 = -1.0;
+
+/// Mass of the neutral LJ-prior solute site in the mixed scenario
+/// (g/mol; methane-like united atom).
+pub const MASS_SOLUTE: f64 = 16.043;
+/// LJ epsilon [eV] for the solute prior (OPLS united-atom CH4 scale).
+pub const SOLUTE_LJ_EPS: f64 = 0.0128;
+/// LJ sigma [A] for the solute prior.
+pub const SOLUTE_LJ_SIGMA: f64 = 3.73;
+
 /// ns/day for a given seconds-per-step wall time at a 1 fs time step.
 pub fn ns_per_day(secs_per_step: f64, dt_fs: f64) -> f64 {
     let steps_per_day = 86_400.0 / secs_per_step;

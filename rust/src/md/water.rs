@@ -1,5 +1,9 @@
 //! Water-box builders (the paper's benchmark system, section 4).
+//!
+//! These remain the bit-exact reference path; the [`super::scenario`]
+//! registry layers ionic and heterogeneous systems on top of them.
 
+use super::scenario::TypeMap;
 use super::system::System;
 use super::units::*;
 use crate::util::rng::Rng;
@@ -59,6 +63,8 @@ pub fn water_box_with_edge(nmol: usize, box_len: [f64; 3], seed: u64) -> System 
         pos,
         vel: vec![[0.0; 3]; n],
         mass,
+        types: TypeMap::water(nmol),
+        slab: false,
     };
     sys.wrap();
     sys
@@ -140,6 +146,8 @@ pub fn replicated_base_box(rep: [usize; 3], seed: u64) -> System {
         pos,
         vel: vec![[0.0; 3]; n],
         mass,
+        types: TypeMap::water(nmol),
+        slab: false,
     }
 }
 

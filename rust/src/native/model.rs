@@ -18,26 +18,101 @@
 
 use super::linalg::Mat;
 use super::net::{backward, forward, seeded_mlp, Mlp, Tape};
-
-/// Replica owning centre `c` of a replica-concatenated system with `nmol`
-/// molecules total across `nrep` replicas.  Layout contract (shared with
-/// `engine::replica`): all O blocks first, replica by replica, then all H
-/// blocks, so the system stays globally type-sorted and every
-/// `nmol = natoms / 3` assumption in this module holds unchanged.
-fn replica_of(c: usize, nmol: usize, nrep: usize) -> usize {
-    let per = nmol / nrep.max(1);
-    if c < nmol {
-        c / per
-    } else {
-        (c - nmol) / (2 * per)
-    }
-}
+use crate::md::scenario::TypeMap;
 use crate::pool::balance::ShardPlan;
 use crate::pool::ThreadPool;
 use crate::runtime::manifest::Hyper;
 use crate::util::rng::Rng;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Resolved index layout of one evaluation: the species-block structure
+/// of a (possibly replica-concatenated) system, derived from the model's
+/// installed [`TypeMap`] or, when none is set, from the historical water
+/// assumption (`nmol` O then `2 nmol` H).  Replaces the old free
+/// `replica_of(c, nmol, nrep)` and its `nmol = natoms / 3` comment
+/// contract with explicit per-block arithmetic.  Layout contract (shared
+/// with `engine::replica`): species blocks concatenate in order, replica
+/// by replica within each block, so the stack stays globally type-sorted.
+struct Layout {
+    nrep: usize,
+    /// stacked class-0 boundary: class-0 atoms are exactly `0..n0`
+    n0: usize,
+    /// per-replica water molecule count (bond/angle prior extent)
+    nmol_w: usize,
+    /// stacked start of the water H block
+    h_start: usize,
+    /// `(stacked_start, per_replica_count, lj)` per species block
+    blocks: Vec<(usize, usize, Option<(f64, f64)>)>,
+    /// fast guard: any block carries LJ-prior parameters
+    has_lj: bool,
+}
+
+impl Layout {
+    /// Resolve the layout of a `natoms`-atom stacked system.  `nmol` is
+    /// the stacked class-0 boundary used by the water fallback when no
+    /// map is installed (callers without a map are water-shaped).
+    fn build(tm: Option<&TypeMap>, natoms: usize, nmol: usize, nrep: usize) -> Layout {
+        match tm {
+            Some(tm) if nrep * tm.natoms() == natoms => {
+                let blocks = (0..tm.nblocks())
+                    .map(|b| (nrep * tm.offset(b), tm.count(b), tm.lj_of_block(b)))
+                    .collect();
+                let (nmol_w, h_off) = tm.water_pair().unwrap_or((0, 0));
+                Layout {
+                    nrep,
+                    n0: nrep * tm.class0_count(),
+                    nmol_w,
+                    h_start: nrep * h_off,
+                    blocks,
+                    has_lj: tm.has_lj(),
+                }
+            }
+            _ => {
+                debug_assert!(
+                    tm.is_none(),
+                    "installed TypeMap describes {} atoms but the call stacks {natoms} \
+                     over {nrep} replicas",
+                    tm.map(|t| t.natoms()).unwrap_or(0)
+                );
+                let per = nmol / nrep.max(1);
+                Layout {
+                    nrep,
+                    n0: nmol,
+                    nmol_w: per,
+                    h_start: nmol,
+                    blocks: vec![(0, per, None), (nmol, 2 * per, None)],
+                    has_lj: false,
+                }
+            }
+        }
+    }
+
+    /// Replica owning stacked centre `c`.
+    fn replica_of(&self, c: usize) -> usize {
+        let b = self.block_at(c);
+        (c - self.blocks[b].0) / self.blocks[b].1
+    }
+
+    /// Species block owning stacked centre `c`.
+    fn block_at(&self, c: usize) -> usize {
+        let last = self.blocks.len() - 1;
+        debug_assert!(
+            c < self.blocks[last].0 + self.nrep * self.blocks[last].1,
+            "stacked centre {c} outside the layout"
+        );
+        let mut b = last;
+        while self.blocks[b].0 > c {
+            b -= 1;
+        }
+        b
+    }
+
+    /// LJ-prior parameters of stacked atom `c`'s species.
+    fn lj_of(&self, c: usize) -> Option<(f64, f64)> {
+        self.blocks[self.block_at(c)].2
+    }
+}
 
 /// All weights of the DP + DW models (from artifacts/weights.json).
 pub struct Weights {
@@ -151,6 +226,7 @@ pub struct NativeModel {
     /// All net weights.
     pub weights: Weights,
     pool: Arc<ThreadPool>,
+    type_map: Option<TypeMap>,
     plan_dp: Mutex<ShardPlan>,
     plan_prior: Mutex<ShardPlan>,
     plan_dw: Mutex<ShardPlan>,
@@ -163,6 +239,7 @@ impl NativeModel {
             hyper,
             weights,
             pool: Arc::new(ThreadPool::serial()),
+            type_map: None,
             plan_dp: Mutex::new(ShardPlan::new(0, 1)),
             plan_prior: Mutex::new(ShardPlan::new(0, 1)),
             plan_dw: Mutex::new(ShardPlan::new(0, 1)),
@@ -186,6 +263,19 @@ impl NativeModel {
     /// Share a worker pool; all hot loops shard across it.
     pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         self.pool = pool;
+    }
+
+    /// Install the species table that every index computation (fit cut,
+    /// replica bucketing, prior pair classes) derives its layout from.
+    /// Without a map the model assumes the historical water layout
+    /// (`nmol` O then `2 nmol` H); `md::scenario` systems always install
+    /// one through the engine builders.
+    pub fn install_type_map(&mut self, tm: &TypeMap) {
+        self.type_map = Some(tm.clone());
+    }
+
+    fn layout(&self, natoms: usize, nmol: usize, nrep: usize) -> Layout {
+        Layout::build(self.type_map.as_ref(), natoms, nmol, nrep)
     }
 
     /// The worker pool the hot loops shard across.
@@ -457,7 +547,7 @@ impl NativeModel {
         coords: &[f64],
         box_len: [f64; 3],
         nlist: &[i32],
-        nmol: usize,
+        n0: usize,
         lo: usize,
         hi: usize,
         s: usize,
@@ -475,9 +565,9 @@ impl NativeModel {
             descs.row_mut(r).copy_from_slice(&d);
             t1s.push(t1);
         }
-        // typed fitting: atoms are globally type-sorted (O block then H),
-        // so the shard's O/H split is one cut at global index nmol
-        let o_end = nmol.saturating_sub(lo).min(n);
+        // typed fitting: atoms are globally type-sorted (class-0 blocks
+        // then class-1), so the shard's split is one cut at global index n0
+        let o_end = n0.saturating_sub(lo).min(n);
         let d_o = Mat::from_vec(o_end, m1 * m2, descs.a[..o_end * m1 * m2].to_vec());
         let d_h = Mat::from_vec(n - o_end, m1 * m2, descs.a[o_end * m1 * m2..].to_vec());
         let tape_o = forward(&self.weights.fit_dp[0], &d_o);
@@ -549,13 +639,15 @@ impl NativeModel {
         let natoms = coords.len() / 3;
         let s = nlist.len() / natoms;
         debug_assert!(nrep >= 1 && nmol % nrep == 0);
+        let lay = self.layout(natoms, nmol, nrep);
+        let n0 = lay.n0;
         let shards = {
             let mut plan = self.plan_dp.lock().unwrap();
             plan.ensure(natoms, self.pool.nthreads());
             plan.ranges()
         };
         let outs = self.pool.map(shards.len(), |k| {
-            self.dp_nn_shard(coords, box_len, nlist, nmol, shards[k].start, shards[k].end, s)
+            self.dp_nn_shard(coords, box_len, nlist, n0, shards[k].start, shards[k].end, s)
         });
         {
             let mut plan = self.plan_dp.lock().unwrap();
@@ -571,7 +663,7 @@ impl NativeModel {
         for (k, out) in outs.iter().enumerate() {
             let lo = shards[k].start;
             for (off, &ec) in out.e.iter().enumerate() {
-                energies[replica_of(lo + off, nmol, nrep)] += ec;
+                energies[lay.replica_of(lo + off)] += ec;
             }
             dd_all[lo * s..lo * s + out.dd.len()].copy_from_slice(&out.dd);
         }
@@ -596,14 +688,15 @@ impl NativeModel {
 
     // ---- physical prior ---------------------------------------------------
 
-    /// Born-Mayer per-pair terms for the centre range `lo..hi`.
+    /// Born-Mayer (+ optional LJ solute) per-pair terms for the centre
+    /// range `lo..hi`.
     #[allow(clippy::too_many_arguments)]
     fn prior_shard(
         &self,
         coords: &[f64],
         box_len: [f64; 3],
         nlist: &[i32],
-        nmol: usize,
+        lay: &Layout,
         lo: usize,
         hi: usize,
         s: usize,
@@ -612,6 +705,7 @@ impl NativeModel {
         let h = &self.hyper;
         let n = hi - lo;
         let sel0 = h.sel[0];
+        let n0 = lay.n0;
         let mi = |mut x: f64, l: f64| {
             x -= l * (x / l).round();
             x
@@ -632,7 +726,7 @@ impl NativeModel {
                 }
                 let rr = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).max(1e-12).sqrt();
                 let (sw, dsw) = self.switch(rr);
-                let a = match (i < nmol, k < sel0) {
+                let a = match (i < n0, k < sel0) {
                     (true, true) => h.bm_a_oo,
                     (false, false) => h.bm_a_hh,
                     _ => h.bm_a_oh,
@@ -640,7 +734,21 @@ impl NativeModel {
                 let ex = (-rr / h.bm_rho).exp();
                 let idx = r * s + k;
                 e[idx] = 0.5 * sw * a * ex;
-                let dedr = 0.5 * a * ex * (dsw - sw / h.bm_rho);
+                let mut dedr = 0.5 * a * ex * (dsw - sw / h.bm_rho);
+                // LJ solute prior: pairs where both species carry
+                // parameters (Lorentz-Berthelot mixed), under the same
+                // switch envelope as Born-Mayer.  `has_lj` keeps the
+                // water/ionic hot path free of the block lookups.
+                if lay.has_lj {
+                    if let (Some((ei, si)), Some((ej, sj))) = (lay.lj_of(i), lay.lj_of(j)) {
+                        let eps = (ei * ej).sqrt();
+                        let sr6 = (0.5 * (si + sj) / rr).powi(6);
+                        let elj = 4.0 * eps * (sr6 * sr6 - sr6);
+                        let dlj = 4.0 * eps * (6.0 * sr6 - 12.0 * sr6 * sr6) / rr;
+                        e[idx] += 0.5 * sw * elj;
+                        dedr += 0.5 * (dsw * elj + sw * dlj);
+                    }
+                }
                 for t in 0..3 {
                     gv[idx][t] = dedr * d[t] / rr;
                 }
@@ -680,7 +788,7 @@ impl NativeModel {
         let natoms = coords.len() / 3;
         let s = nlist.len() / natoms;
         debug_assert!(nrep >= 1 && nmol % nrep == 0);
-        let per = nmol / nrep.max(1);
+        let lay = self.layout(natoms, nmol, nrep);
         let h = &self.hyper;
         let mut energies = vec![0.0; nrep];
         let mut forces = vec![0.0; natoms * 3];
@@ -688,12 +796,14 @@ impl NativeModel {
             x -= l * (x / l).round();
             x
         };
-        // bonds + angle per molecule: O(nmol), kept serial (negligible
-        // next to the O(natoms * sel) Born-Mayer scan below)
-        for m in 0..nmol {
+        // bonds + angle per water molecule: O(nmol), kept serial
+        // (negligible next to the O(natoms * sel) Born-Mayer scan below).
+        // Stacked molecule m owns O atom m (WC block first) and the H
+        // pair at h_start + 2m (water: h_start == stacked O count).
+        for m in 0..lay.nrep * lay.nmol_w {
             let o = m;
-            let h1 = nmol + 2 * m;
-            let h2 = nmol + 2 * m + 1;
+            let h1 = lay.h_start + 2 * m;
+            let h2 = h1 + 1;
             let mut d1 = [0.0; 3];
             let mut d2 = [0.0; 3];
             for t in 0..3 {
@@ -702,7 +812,7 @@ impl NativeModel {
             }
             let r1 = (d1[0] * d1[0] + d1[1] * d1[1] + d1[2] * d1[2]).sqrt();
             let r2 = (d2[0] * d2[0] + d2[1] * d2[1] + d2[2] * d2[2]).sqrt();
-            let em = &mut energies[m / per];
+            let em = &mut energies[m / lay.nmol_w];
             *em += h.bond_k * ((r1 - h.bond_r0).powi(2) + (r2 - h.bond_r0).powi(2));
             // dE/dr * unit vector; force on H = -dE/dd, on O = +dE/dd
             for (d, r, hi) in [(d1, r1, h1), (d2, r2, h2)] {
@@ -735,7 +845,7 @@ impl NativeModel {
             plan.ranges()
         };
         let outs = self.pool.map(shards.len(), |k| {
-            self.prior_shard(coords, box_len, nlist, nmol, shards[k].start, shards[k].end, s)
+            self.prior_shard(coords, box_len, nlist, &lay, shards[k].start, shards[k].end, s)
         });
         {
             let mut plan = self.plan_prior.lock().unwrap();
@@ -755,7 +865,7 @@ impl NativeModel {
                     }
                     let j = j as usize;
                     let idx = r * s + k;
-                    energies[replica_of(i, nmol, nrep)] += out.e[idx];
+                    energies[lay.replica_of(i)] += out.e[idx];
                     for t in 0..3 {
                         forces[3 * i + t] += out.g[idx][t];
                         forces[3 * j + t] -= out.g[idx][t];
@@ -786,7 +896,12 @@ impl NativeModel {
         nrep: usize,
     ) -> (Vec<f64>, Vec<f64>) {
         let natoms = coords.len() / 3;
-        let nmol = natoms / 3;
+        // stacked class-0 boundary: from the installed species table, or
+        // the historical water assumption (natoms / 3) without one
+        let nmol = match &self.type_map {
+            Some(tm) if natoms % tm.natoms() == 0 => natoms / tm.natoms() * tm.class0_count(),
+            _ => natoms / 3,
+        };
         let (e1, f1) = self.dp_nn_ef_multi(coords, box_len, nlist, nmol, nrep);
         let (e2, f2) = self.prior_ef_multi(coords, box_len, nlist, nmol, nrep);
         let energies = e1.iter().zip(&e2).map(|(a, b)| a + b).collect();
@@ -796,7 +911,8 @@ impl NativeModel {
 
     // ---- DW model ---------------------------------------------------------
 
-    /// Forward-only Wannier displacements (nmol x 3 flat).
+    /// Forward-only Wannier displacements (one 3-vector per WC centre,
+    /// flat).
     pub fn dw_fwd(&self, coords: &[f64], box_len: [f64; 3], nlist_o: &[i32]) -> Vec<f64> {
         self.dw_run(coords, box_len, nlist_o, None).0
     }
@@ -971,11 +1087,16 @@ impl NativeModel {
         f_wc: Option<&[f64]>,
     ) -> (Vec<f64>, Option<Vec<f64>>) {
         let natoms = coords.len() / 3;
-        let nmol = natoms / 3;
-        let s = nlist_o.len() / nmol;
+        // number of Wannier centroids = stacked size of the WC block
+        // (block 0); the water fallback keeps natoms / 3
+        let nwc = match &self.type_map {
+            Some(tm) if natoms % tm.natoms() == 0 => natoms / tm.natoms() * tm.wc_count(),
+            _ => natoms / 3,
+        };
+        let s = nlist_o.len() / nwc.max(1);
         let shards = {
             let mut plan = self.plan_dw.lock().unwrap();
-            plan.ensure(nmol, self.pool.nthreads());
+            plan.ensure(nwc, self.pool.nthreads());
             plan.ranges()
         };
         let outs = self.pool.map(shards.len(), |k| {
@@ -987,7 +1108,7 @@ impl NativeModel {
             plan.record(&times);
             plan.rebalance();
         }
-        let mut delta = vec![0.0; nmol * 3];
+        let mut delta = vec![0.0; nwc * 3];
         for (k, out) in outs.iter().enumerate() {
             let lo = shards[k].start;
             delta[3 * lo..3 * lo + out.delta.len()].copy_from_slice(&out.delta);
@@ -996,16 +1117,17 @@ impl NativeModel {
             Some(f) => f,
             None => return (delta, None),
         };
-        let mut dd_all = vec![[0.0f64; 3]; nmol * s];
+        let mut dd_all = vec![[0.0f64; 3]; nwc * s];
         for (k, out) in outs.iter().enumerate() {
             let lo = shards[k].start;
             let dd = out.dd.as_ref().expect("vjp shard output");
             dd_all[lo * s..lo * s + dd.len()].copy_from_slice(dd);
         }
         // scatter: W_n = R_O(n) + Delta_n ; f_contrib = f_wc (on O) + chain
-        // (global molecule/pair order — identical for any sharding)
+        // (global centroid/pair order — identical for any sharding; WC n
+        // binds atom n because the WC block leads the layout)
         let mut fc = vec![0.0; natoms * 3];
-        for i in 0..nmol {
+        for i in 0..nwc {
             for t in 0..3 {
                 fc[3 * i + t] += f_wc[3 * i + t];
             }

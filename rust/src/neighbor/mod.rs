@@ -71,9 +71,10 @@ pub fn build_exact(sys: &System, centres: &[usize], p: &NlistParams) -> PaddedNl
     let mut truncated = false;
     let mut cand: Vec<(f64, usize)> = Vec::with_capacity(n);
     for (row, &i) in centres.iter().enumerate() {
+        let n0 = sys.class0_end();
         for (t, (lo, cap)) in [(0usize, (0usize, p.sel[0])), (1, (p.sel[0], p.sel[1]))] {
             cand.clear();
-            let range = if t == 0 { 0..sys.nmol } else { sys.nmol..n };
+            let range = if t == 0 { 0..n0 } else { n0..n };
             for j in range {
                 if j == i {
                     continue;
@@ -192,6 +193,7 @@ fn cells_rows(
     let mut truncated = false;
     let mut cand0: Vec<(f64, usize)> = Vec::new();
     let mut cand1: Vec<(f64, usize)> = Vec::new();
+    let n0 = sys.class0_end();
     for (row, &i) in centres[range.clone()].iter().enumerate() {
         cand0.clear();
         cand1.clear();
@@ -218,7 +220,7 @@ fn cells_rows(
                         );
                         let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
                         if r2 < rc * rc {
-                            if j < sys.nmol {
+                            if j < n0 {
                                 cand0.push((r2, j));
                             } else {
                                 cand1.push((r2, j));

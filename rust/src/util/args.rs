@@ -66,6 +66,17 @@ impl Args {
         }
     }
 
+    /// `u64` flag or `default` (e.g. RNG seeds, which must round-trip the
+    /// full 64-bit range); errors on unparsable values.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
     /// Float flag or `default`; errors on unparsable values.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.flags.get(key) {
@@ -112,5 +123,14 @@ mod tests {
     fn bad_value_is_error() {
         let a = parse(&["--steps", "abc"]);
         assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn u64_round_trips_the_full_range() {
+        let big = u64::MAX.to_string();
+        let a = parse(&["--seed", &big]);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), u64::MAX);
+        assert_eq!(parse(&["x"]).u64_or("seed", 42).unwrap(), 42);
+        assert!(parse(&["--seed", "-3"]).u64_or("seed", 0).is_err());
     }
 }

@@ -199,6 +199,7 @@ fn stride_error_rows_within_relaxed_budget() {
         nmol: 16,
         nseg: [2, 3, 2],
         equil: 10,
+        system: "water".to_string(),
     };
     let rows = table1_accuracy::mts_stride_rows(&cfg, &[2, 4]).expect("stride rows");
     assert_eq!(rows.len(), 4, "hold + linear rows at k = 2 and 4");

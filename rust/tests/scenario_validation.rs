@@ -1,0 +1,138 @@
+//! End-to-end validation of the `md::scenario` registry: every bundled
+//! builder yields a neutral, type-sorted system matching its spec; the
+//! `water` scenario reproduces the historical `water_box` fixture
+//! bit-for-bit (the PR-over-PR compatibility contract); and the ionic +
+//! slab scenarios run through every k-space backend of the engine with
+//! backends agreeing on the long-range energy.
+//!
+//! Runs from a clean checkout (synthetic seeded weights, no artifacts).
+
+use dplr::engine::{KspaceConfig, Simulation};
+use dplr::md::scenario;
+use dplr::md::water::{replica_boxes, water_box};
+use dplr::native::NativeModel;
+
+#[test]
+fn every_bundled_scenario_is_neutral_and_self_consistent() {
+    for name in scenario::names() {
+        let sys = scenario::build(name, 16, 9).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(sys.types.total_charge(), 0.0, "{name}: net charge");
+        sys.types
+            .check_system(sys.natoms(), &sys.mass)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(sys.nmol, 16, "{name}: water count");
+        // class-0 block(s) lead the layout: the typed-fit cut is one slice
+        assert!(sys.types.class0_count() >= 16, "{name}: class-0 cut");
+    }
+}
+
+#[test]
+fn species_counts_match_the_spec_parameters() {
+    let sys = scenario::build("nacl:pairs=4", 16, 9).unwrap();
+    assert_eq!(sys.natoms(), 16 * 3 + 8, "nacl: 4 pairs = 8 ions");
+    assert_eq!(sys.types.class0_count(), 16 + 4, "nacl: O + Cl lead");
+
+    let sys = scenario::build("mixed:pairs=2,nsol=5", 16, 9).unwrap();
+    assert_eq!(sys.natoms(), 16 * 3 + 4 + 5, "mixed: ions + solute");
+    assert!(sys.types.has_lj(), "mixed: solute LJ prior present");
+
+    let sys = scenario::build("slab", 16, 9).unwrap();
+    assert!(sys.slab, "slab: EW3DC flag set");
+    let pairs = scenario::default_pairs(16);
+    assert_eq!(sys.natoms(), 16 * 3 + 2 * pairs, "slab: default pairs");
+}
+
+#[test]
+fn water_scenario_is_bit_identical_to_the_water_builder() {
+    let a = scenario::build("water", 27, 4242).unwrap();
+    let b = water_box(27, 4242);
+    assert_eq!(a.pos, b.pos);
+    assert_eq!(a.mass, b.mass);
+    assert_eq!(a.box_len, b.box_len);
+    assert!(!a.slab);
+    // the replica path too: replica r of the spec == water_box(seed + r)
+    let reps = scenario::replica_systems("water", 8, 3, 11).unwrap();
+    for (r, w) in reps.iter().zip(&replica_boxes(8, 3, 11)) {
+        assert_eq!(r.pos, w.pos, "replica water drifted from replica_boxes");
+    }
+}
+
+#[test]
+fn slab_charges_sit_inside_the_vacuum_gapped_box_with_net_dipole() {
+    let sys = scenario::build("slab", 27, 3).unwrap();
+    let lz = sys.box_len[2];
+    let third = lz / 3.0;
+    for (i, p) in sys.pos.iter().enumerate() {
+        assert!(
+            p[2] > third - 1.5 && p[2] < 2.0 * third + 1.5,
+            "atom {i} at z = {} outside the slab region of L_z = {lz}",
+            p[2]
+        );
+    }
+    let mut mz: f64 = (0..sys.natoms())
+        .map(|i| sys.types.charge_of(i) * sys.pos[i][2])
+        .sum();
+    mz += (0..sys.nmol)
+        .map(|m| sys.types.wc_charge() * sys.pos[m][2])
+        .sum::<f64>();
+    assert!(mz.abs() > 1.0, "slab carries no net dipole: M_z = {mz}");
+}
+
+#[test]
+fn malformed_specs_error_instead_of_panicking() {
+    assert!(scenario::build("argon", 8, 1).is_err(), "unknown name");
+    assert!(scenario::build("nacl:pairs=zero", 8, 1).is_err(), "bad value");
+    assert!(scenario::build("nacl:ions=3", 8, 1).is_err(), "unknown key");
+    assert!(scenario::build("water:pairs=2", 8, 1).is_err(), "water takes none");
+}
+
+#[test]
+fn ionic_and_slab_scenarios_run_on_every_kspace_backend() {
+    // the CLI acceptance path: `dplr run --system nacl|slab` must work on
+    // pppm, ewald and dist, and the backends must agree on E_Gt along the
+    // short trajectory (same tolerance as the water kspace-parity suite)
+    for spec in ["nacl", "slab"] {
+        let mut e_ref: Option<f64> = None;
+        let backends = [
+            ("pppm", KspaceConfig::PppmAuto { alpha: 0.35 }),
+            (
+                "ewald",
+                KspaceConfig::Ewald {
+                    alpha: 0.35,
+                    tol: 1e-8,
+                },
+            ),
+            (
+                "dist",
+                KspaceConfig::Dist {
+                    alpha: 0.35,
+                    ranks: [2, 2, 1],
+                    quantized: false,
+                    matvec: false,
+                },
+            ),
+        ];
+        for (name, cfg) in backends {
+            let sys = scenario::build(spec, 8, 21).unwrap();
+            let mut sim = Simulation::builder(sys)
+                .dt_fs(0.5)
+                .thermostat(300.0, 0.5)
+                .kspace(cfg)
+                .short_range(Box::new(NativeModel::synthetic(7)))
+                .build()
+                .unwrap_or_else(|e| panic!("{spec}/{name}: build failed: {e}"));
+            for _ in 0..3 {
+                sim.step().unwrap_or_else(|e| panic!("{spec}/{name}: step failed: {e}"));
+            }
+            let o = sim.last_obs.unwrap();
+            assert!(o.conserved.is_finite(), "{spec}/{name}: non-finite conserved");
+            match e_ref {
+                None => e_ref = Some(o.e_gt),
+                Some(e0) => {
+                    let gap = (o.e_gt - e0).abs() / e0.abs().max(1e-3);
+                    assert!(gap < 1e-2, "{spec}/{name}: E_Gt diverged {gap} from pppm");
+                }
+            }
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! export) so the suite runs from a clean checkout, no artifacts needed.
 
 use dplr::engine::{KspaceConfig, Simulation};
+use dplr::md::scenario;
 use dplr::md::water::water_box;
 use dplr::native::NativeModel;
 use dplr::neighbor::{build_cells_par, build_exact, NlistParams};
@@ -213,11 +214,18 @@ fn build_cells_parallel_matches_exact_on_64_molecules() {
     }
 }
 
+/// Scenario under test: the `DPLR_TEST_SYSTEM` CI matrix axis.  The
+/// default, `water`, builds a box bit-identical to the pre-registry
+/// `water_box(27, 5)` fixture, so the historical contract is unchanged.
+fn test_system() -> String {
+    std::env::var("DPLR_TEST_SYSTEM").unwrap_or_else(|_| "water".to_string())
+}
+
 /// Build the invariance-test simulation at a given pool size (the trait
 /// layer — `Box<dyn KspaceSolver>` / `Box<dyn ShortRangeModel>` — must
 /// preserve the bit-for-bit contract end to end).
-fn sim_with_threads(threads: usize, kspace: KspaceConfig) -> Simulation {
-    let mut sys = water_box(27, 5);
+fn sim_for(spec: &str, threads: usize, kspace: KspaceConfig) -> Simulation {
+    let mut sys = scenario::build(spec, 27, 5).expect("scenario build");
     let mut rng = Rng::new(9);
     sys.thermalize(300.0, &mut rng);
     Simulation::builder(sys)
@@ -228,6 +236,10 @@ fn sim_with_threads(threads: usize, kspace: KspaceConfig) -> Simulation {
         .threads(threads)
         .build()
         .expect("valid configuration")
+}
+
+fn sim_with_threads(threads: usize, kspace: KspaceConfig) -> Simulation {
+    sim_for(&test_system(), threads, kspace)
 }
 
 fn trajectory_bits(sim: &mut Simulation) -> Vec<(u64, u64, u64)> {
@@ -270,4 +282,17 @@ fn ewald_engine_trajectory_bit_identical_across_thread_counts() {
     let t1 = trajectory_bits(&mut sim_with_threads(1, cfg()));
     let t4 = trajectory_bits(&mut sim_with_threads(4, cfg()));
     assert_eq!(t1, t4, "ewald trajectories diverged between 1 and 4 threads");
+}
+
+#[test]
+fn ionic_and_slab_trajectories_bit_identical_across_thread_counts() {
+    // always-on (not just under the DPLR_TEST_SYSTEM matrix axis): the
+    // species-table hot paths — ion blocks in the type-sorted layout and
+    // the EW3DC slab term — must stay pool-size independent too
+    for spec in ["nacl", "slab"] {
+        let cfg = || KspaceConfig::PppmAuto { alpha: 0.35 };
+        let t1 = trajectory_bits(&mut sim_for(spec, 1, cfg()));
+        let t4 = trajectory_bits(&mut sim_for(spec, 4, cfg()));
+        assert_eq!(t1, t4, "{spec}: trajectories diverged between 1 and 4 threads");
+    }
 }
