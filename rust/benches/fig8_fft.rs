@@ -14,15 +14,24 @@
 //! are wall time, so they stay un-gated until the `bench-baseline` job
 //! refreshes `BENCH_baseline.json` (see docs/PERFORMANCE.md).
 //!
+//! A `measured_proc_*` section then times the **process-executed** ranks
+//! (`ProcPppm`: spawned `dplr rank-worker` processes over the Unix-socket
+//! transport) and fits measured per-message timings to the alpha-beta
+//! model (`mpisim::fit_alpha_beta`) — printed beside the analytic
+//! `MachineConfig` constants.  Also wall time, also un-gated.
+//!
 //! Flags: `--quick` (CI configuration: fewer reps, skip the model table),
 //! `--json PATH` writes `{"bench": "fig8_fft", "results": {...}}` for the
 //! bench-regression job.
 use dplr::config::MachineConfig;
 use dplr::distfft::utofu_fastpath_time;
+use dplr::distpppm::process::{ProcOptions, ProcPppm, WorkerLauncher};
 use dplr::distpppm::{LinePath, RankFft, RingPayload};
 use dplr::experiments::fig8_fft as f8;
 use dplr::fft::{C64, Fft3d, Fft3dScratch};
+use dplr::mpisim::fit_alpha_beta;
 use dplr::pool::ThreadPool;
+use dplr::pppm::PppmConfig;
 use dplr::tofu::{BgPayload, Torus};
 use dplr::util::args::Args;
 use dplr::util::json::Json;
@@ -167,6 +176,83 @@ fn main() {
                         .map(|m| format!("{:.1} us", m * 1e6))
                         .unwrap_or_else(|| "n/a".to_string()),
                 );
+            }
+        }
+    }
+
+    // process-executed ranks: real spawned workers over the Unix-socket
+    // transport.  Wall time + per-message samples feeding a measured
+    // alpha-beta fit next to the analytic models above.  Needs the dplr
+    // binary, which cargo only exposes to bench/test builds — skip (with
+    // a note) when it is absent rather than fail.
+    println!("\n=== process-executed ranks (ProcPppm over the socket transport) ===");
+    match option_env!("CARGO_BIN_EXE_dplr") {
+        None => println!("  (skipped: CARGO_BIN_EXE_dplr not set at compile time)"),
+        Some(bin) => {
+            let launcher = WorkerLauncher::Binary(bin.into());
+            let cfg = PppmConfig::new([12, 18, 12], 5, 0.3);
+            let box_len = [9.3, 11.1, 9.3];
+            let mut rng = Rng::new(88);
+            let pos: Vec<[f64; 3]> = (0..48)
+                .map(|_| {
+                    [
+                        rng.range(0.0, box_len[0]),
+                        rng.range(0.0, box_len[1]),
+                        rng.range(0.0, box_len[2]),
+                    ]
+                })
+                .collect();
+            let q: Vec<f64> = (0..48).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            let mut all_samples: Vec<(usize, f64)> = Vec::new();
+            for ranks in [[2usize, 1, 1], [2, 2, 1]] {
+                match ProcPppm::spawn(
+                    cfg.clone(),
+                    box_len,
+                    ranks,
+                    RingPayload::F64,
+                    &launcher,
+                    &ProcOptions::default(),
+                ) {
+                    Err(e) => println!("  (skipped ranks {ranks:?}: {e})"),
+                    Ok(mut proc_solver) => {
+                        // warm, then time whole solves (4 transforms each)
+                        proc_solver.energy_forces(&pos, &q).expect("warm solve");
+                        let t = summarize(&time_reps(1, reps, || {
+                            proc_solver.energy_forces(&pos, &q).expect("bench solve");
+                        }))
+                        .p50;
+                        let key = format!(
+                            "measured_proc_{}{}{}_f64",
+                            ranks[0], ranks[1], ranks[2]
+                        );
+                        println!(
+                            "  ranks {}x{}x{}: {:9.3} ms/solve over {} messages",
+                            ranks[0],
+                            ranks[1],
+                            ranks[2],
+                            t * 1e3,
+                            proc_solver.message_samples().len(),
+                        );
+                        results.insert(key, Json::Num(t));
+                        all_samples.extend_from_slice(proc_solver.message_samples());
+                        proc_solver.shutdown();
+                    }
+                }
+            }
+            match fit_alpha_beta(&all_samples) {
+                None => println!("  (alpha-beta fit skipped: not enough distinct sizes)"),
+                Some((alpha, beta)) => {
+                    println!(
+                        "  measured transport fit: alpha {:.2} us, beta {:.3} ns/byte \
+                         (model: alpha {:.2} us, beta {:.3} ns/byte)",
+                        alpha * 1e6,
+                        beta * 1e9,
+                        mcfg.p2p_latency * 1e6,
+                        1e9 / mcfg.link_bandwidth,
+                    );
+                    results.insert("measured_proc_alpha".to_string(), Json::Num(alpha));
+                    results.insert("measured_proc_beta".to_string(), Json::Num(beta));
+                }
             }
         }
     }

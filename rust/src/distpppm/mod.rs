@@ -68,6 +68,14 @@
 //! The quantized ring is *not* rank-count invariant — each rank's partial
 //! is rounded before the exact integer sum, which is precisely the
 //! segmentation-dependent error Table 1's Mixed-int rows measure.
+//!
+//! The [`process`] submodule executes this same schedule over **real
+//! OS-process ranks** (`--kspace dist --proc`): per-rank brick storage,
+//! ring payloads over the [`crate::transport`] layer, and the identical
+//! arithmetic — so the f64 contracts above carry over bit for bit
+//! (asserted by `rust/tests/proc_parity.rs`).
+
+pub mod process;
 
 use crate::distfft::DistFftSchedule;
 use crate::fft::{dft_matrix, C64, Fft1d, Fft3dScratch, LINE_SHARDS, SegmentFft};

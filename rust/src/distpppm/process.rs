@@ -1,0 +1,1451 @@
+//! Process-executed rank torus for `--kspace dist --proc`: the same
+//! section-3.1 ring schedule as the emulated [`RankFft`](super::RankFft),
+//! but with each rank holding **its own brick** in a real OS process (or
+//! a loopback-linked thread), exchanging ring payloads over the
+//! [`crate::transport`] layer.
+//!
+//! # Topology and protocol
+//!
+//! Workers connect to the coordinator in a star over a Unix-domain
+//! socket; the coordinator relays ring frames between d-neighbours
+//! (recv-all-then-send-all per hop, which is deadlock-free because every
+//! worker sends its hop frame before posting the matching receive).  Per
+//! 3-D transform (4 per PPPM solve):
+//!
+//! ```text
+//! coordinator                          worker (x, y, z)
+//!     | -- Transform(fwd, seq, brick) --> |   scatter: per-rank brick
+//!     |    per dim d in z, y, x with R_d > 1:
+//!     | <--------- MaxAbs(line maxes) --- |   (quantized ring only)
+//!     | ---- MaxAbsRed(group maxes) ----> |   exact f64 max-reduce
+//!     |    per hop h in 0 .. R_d - 1:
+//!     | <--------- Ring(block) ---------- |   snapshot sent BEFORE any
+//!     | ---- RingDeliver(to successor) -> |   rank transforms its lines
+//!     | <------ BrickBack(sat, brick) --- |   gather: transformed brick
+//! ```
+//!
+//! The f64 ring allgathers each rank's **pre-transform** d-segments, so
+//! every rank reassembles each of its grid lines in strict ascending
+//! column order and closes with one whole-line local FFT — exactly the
+//! arithmetic of the emulated fast path, which is why the process run is
+//! bit-identical to `--kspace pppm` at any torus (`tests/proc_parity.rs`).
+//! The quantized ring ships each rank's int32-packed partial spectrum
+//! (8 bytes/value instead of 16, the paper's halved BG traffic) after an
+//! exact f64 max-reduce fixes the per-line scale; packed lane sums are
+//! integer-exact, so the result matches the emulated
+//! [`RingPayload::PackedI32`] ring value for value.
+//!
+//! # Faults
+//!
+//! Every coordinator receive runs under a watchdog
+//! ([`ProcOptions::watchdog`], default `DPLR_PROC_TIMEOUT_MS` or 5 s): a
+//! killed rank surfaces as [`TransportErrorKind::Closed`] and a stalled
+//! one as [`TransportErrorKind::Timeout`], both naming the rank's torus
+//! coordinates, and the solver poisons itself (every later solve returns
+//! the first error).  Children are reaped on success (`Bye` + wait) and
+//! failure (kill + wait) — `tests/proc_fault.rs` checks for zombies.
+
+use super::RingPayload;
+use crate::distfft::DistFftSchedule;
+use crate::engine::KspaceSolver;
+use crate::fft::{C64, Fft1d, Fft3dScratch, SegmentFft};
+use crate::pool::ThreadPool;
+use crate::pppm::quant::{self, QuantSpec};
+use crate::pppm::{MeshDecomp, MeshMode, Pppm, PppmConfig};
+use crate::tofu::Torus;
+use crate::transport::{
+    accept_with_deadline, loopback_pair, wire, Conn, FramedStream, Peer, TransportError,
+    TransportErrorKind,
+};
+use crate::util::args::Args;
+use std::ops::Range;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const TAG_HELLO: u32 = 1;
+const TAG_HELLO_ACK: u32 = 2;
+const TAG_TRANSFORM: u32 = 3;
+const TAG_RING: u32 = 4;
+const TAG_RING_DELIVER: u32 = 5;
+const TAG_MAXABS: u32 = 6;
+const TAG_MAXABS_RED: u32 = 7;
+const TAG_BRICK_BACK: u32 = 8;
+const TAG_BYE: u32 = 9;
+
+/// How rank workers are brought up.
+pub enum WorkerLauncher {
+    /// Spawn `<binary> rank-worker ...` child processes talking over a
+    /// Unix-domain socket — the real multi-process deployment.
+    Binary(PathBuf),
+    /// Run the identical worker loop on threads over in-process loopback
+    /// links — every protocol path without spawning (tests, propcheck).
+    InProcess,
+}
+
+impl WorkerLauncher {
+    /// The deployment default: the `DPLR_WORKER_BIN` override if set
+    /// (integration tests point it at the real `dplr` binary, because
+    /// `current_exe` inside a test harness is the harness itself),
+    /// otherwise the running executable.
+    pub fn from_env() -> WorkerLauncher {
+        if let Ok(p) = std::env::var("DPLR_WORKER_BIN") {
+            if !p.is_empty() {
+                return WorkerLauncher::Binary(PathBuf::from(p));
+            }
+        }
+        match std::env::current_exe() {
+            Ok(p) => WorkerLauncher::Binary(p),
+            Err(_) => WorkerLauncher::InProcess,
+        }
+    }
+}
+
+/// Coordinator-side options for a process-rank solver.
+pub struct ProcOptions {
+    /// Watchdog applied to every coordinator receive (and the handshake
+    /// accept): a rank that stays silent this long is reported as a
+    /// [`TransportErrorKind::Timeout`] naming its coordinates.
+    pub watchdog: Duration,
+    /// Fault injection: make the worker at the given coordinates sleep
+    /// for the given milliseconds just before its first ring-phase send.
+    pub stall: Option<([usize; 3], u64)>,
+}
+
+impl Default for ProcOptions {
+    fn default() -> ProcOptions {
+        let ms = std::env::var("DPLR_PROC_TIMEOUT_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(5000);
+        ProcOptions {
+            watchdog: Duration::from_millis(ms),
+            stall: None,
+        }
+    }
+}
+
+/// Everything a rank worker needs to run its passes (parsed from the
+/// `rank-worker` CLI in process mode, built directly in loopback mode).
+pub(crate) struct WorkerCfg {
+    grid: [usize; 3],
+    ranks: [usize; 3],
+    coords: [usize; 3],
+    payload: RingPayload,
+    stall_ms: Option<u64>,
+    watchdog: Duration,
+}
+
+enum ChildHandle {
+    Process(Child),
+    Thread(Option<JoinHandle<()>>),
+}
+
+fn lin_of(c: [usize; 3], r: [usize; 3]) -> usize {
+    (c[0] * r[1] + c[1]) * r[2] + c[2]
+}
+
+fn coords_of(lin: usize, r: [usize; 3]) -> [usize; 3] {
+    [lin / (r[1] * r[2]), (lin / r[2]) % r[1], lin % r[2]]
+}
+
+fn succ_lin(lin: usize, d: usize, r: [usize; 3]) -> usize {
+    let mut c = coords_of(lin, r);
+    c[d] = (c[d] + 1) % r[d];
+    lin_of(c, r)
+}
+
+fn io_error(peer: Peer, phase: &str, e: &std::io::Error, watchdog: Duration) -> TransportError {
+    let kind = match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            TransportErrorKind::Timeout {
+                waited_ms: watchdog.as_millis() as u64,
+            }
+        }
+        kind => TransportErrorKind::Io { kind },
+    };
+    TransportError::new(peer, phase, kind)
+}
+
+/// The process-executed distributed PPPM solver: a [`Pppm`] whose four
+/// 3-D transforms are carried out by real rank workers over the
+/// [`crate::transport`] layer (see the [module docs](self) for the
+/// protocol).  Registered as `dplr run --kspace dist --proc`
+/// (solver name `"dist-proc"`).
+///
+/// The typed entry point is [`ProcPppm::try_energy_forces_into`]; the
+/// [`KspaceSolver`] impl wraps it and **panics** on a transport failure
+/// (the trait has no error channel), so engine-level callers get the
+/// rank-naming message either way.  After a failure the solver is
+/// poisoned: every subsequent solve returns the first error.
+pub struct ProcPppm {
+    inner: Pppm,
+    decomp: MeshDecomp,
+    sched: DistFftSchedule,
+    payload: RingPayload,
+    links: Vec<FramedStream<Conn>>,
+    children: Vec<ChildHandle>,
+    watchdog: Duration,
+    samples: Vec<(usize, f64)>,
+    err: Option<TransportError>,
+    socket_path: Option<PathBuf>,
+    seq: u64,
+    done: bool,
+}
+
+static SOCK_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl ProcPppm {
+    /// Spawn the rank workers, run the connect/`Hello` handshake and
+    /// return the ready solver.  Any spawn, accept or handshake failure
+    /// reaps the already-started workers before returning the error.
+    ///
+    /// # Panics
+    /// If `cfg.mode` is not `MeshMode::Double` (like
+    /// [`DistPppm`](super::DistPppm), the ring payload owns the
+    /// transform precision).
+    pub fn spawn(
+        cfg: PppmConfig,
+        box_len: [f64; 3],
+        ranks: [usize; 3],
+        payload: RingPayload,
+        launcher: &WorkerLauncher,
+        opts: &ProcOptions,
+    ) -> Result<ProcPppm, TransportError> {
+        assert!(
+            matches!(cfg.mode, MeshMode::Double),
+            "ProcPppm owns the transform precision; select RingPayload instead of MeshMode"
+        );
+        for (d, &r) in ranks.iter().enumerate() {
+            if r == 0 || r > cfg.grid[d] {
+                return Err(TransportError::new(
+                    Peer::Coordinator,
+                    "spawn",
+                    TransportErrorKind::Protocol {
+                        what: format!(
+                            "ranks[{d}] = {r} is outside 1..={} for grid {:?}",
+                            cfg.grid[d], cfg.grid
+                        ),
+                    },
+                ));
+            }
+        }
+        let sched = DistFftSchedule::new(cfg.grid, Torus::new(ranks));
+        let slabs = [sched.segments(0), sched.segments(1), sched.segments(2)];
+        let decomp = MeshDecomp::new(
+            &slabs,
+            cfg.order - 1,
+            cfg.grid,
+            payload == RingPayload::PackedI32,
+        );
+        let nranks = ranks[0] * ranks[1] * ranks[2];
+        let mut children: Vec<ChildHandle> = Vec::new();
+        let mut links: Vec<Option<FramedStream<Conn>>> = (0..nranks).map(|_| None).collect();
+        let mut socket_path: Option<PathBuf> = None;
+        if let Err(e) = connect_workers(
+            &cfg,
+            ranks,
+            payload,
+            launcher,
+            opts,
+            &mut children,
+            &mut links,
+            &mut socket_path,
+        ) {
+            links.clear(); // closing the links unblocks thread workers
+            reap_children(&mut children, Duration::from_millis(2000));
+            if let Some(p) = socket_path.take() {
+                let _ = std::fs::remove_file(p);
+            }
+            return Err(e);
+        }
+        let links = links.into_iter().map(|l| l.unwrap()).collect();
+        Ok(ProcPppm {
+            inner: Pppm::new(cfg, box_len),
+            decomp,
+            sched,
+            payload,
+            links,
+            children,
+            watchdog: opts.watchdog,
+            samples: Vec::new(),
+            err: None,
+            socket_path,
+            seq: 0,
+            done: false,
+        })
+    }
+
+    /// The rank torus the mesh bricks are scattered over.
+    pub fn ranks(&self) -> [usize; 3] {
+        self.sched.torus.dims
+    }
+
+    /// The configured ring payload.
+    pub fn payload(&self) -> RingPayload {
+        self.payload
+    }
+
+    /// The mesh configuration (grid / spline order / alpha).
+    pub fn config(&self) -> &PppmConfig {
+        &self.inner.cfg
+    }
+
+    /// Cumulative quantization saturation events gathered from the
+    /// workers (0 for the f64 ring).
+    pub fn saturations(&self) -> u64 {
+        self.inner.quant_saturations
+    }
+
+    /// Per-message `(payload bytes, receive seconds)` samples from every
+    /// coordinator receive — the raw material for the fig8 bench's
+    /// measured alpha-beta fit ([`crate::mpisim::fit_alpha_beta`]).
+    pub fn message_samples(&self) -> &[(usize, f64)] {
+        &self.samples
+    }
+
+    /// The first transport failure, if the solver is poisoned.
+    pub fn last_error(&self) -> Option<&TransportError> {
+        self.err.as_ref()
+    }
+
+    /// OS pids of process-mode workers (empty in loopback mode) — the
+    /// fault-injection suite checks these are reaped, and aims `kill -9`
+    /// at them to simulate rank death mid-solve.
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.children
+            .iter()
+            .filter_map(|c| match c {
+                ChildHandle::Process(c) => Some(c.id()),
+                ChildHandle::Thread(_) => None,
+            })
+            .collect()
+    }
+
+    /// Fault injection: forcibly take down the worker at `coords`.  A
+    /// process worker is SIGKILLed and reaped; a loopback worker has its
+    /// link severed (the thread exits on the resulting EOF).  The next
+    /// solve surfaces a typed error naming these coordinates.
+    pub fn kill_worker(&mut self, coords: [usize; 3]) {
+        let lin = lin_of(coords, self.sched.torus.dims);
+        match &mut self.children[lin] {
+            ChildHandle::Process(c) => {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            ChildHandle::Thread(_) => {
+                let (dead, other) = loopback_pair();
+                drop(other);
+                self.links[lin] = FramedStream::new(Conn::Loopback(dead), Peer::Rank(coords));
+            }
+        }
+    }
+
+    /// Energy + forces with a typed error channel: the engine-facing
+    /// [`KspaceSolver`] wrapper panics on `Err`, but callers that can
+    /// handle faults (the fault-injection suite, future retry logic) use
+    /// this directly.
+    pub fn try_energy_forces_into(
+        &mut self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        out: &mut Vec<[f64; 3]>,
+    ) -> Result<f64, TransportError> {
+        if let Some(e) = &self.err {
+            return Err(e.clone());
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        let ProcPppm {
+            inner,
+            decomp,
+            sched,
+            payload,
+            links,
+            samples,
+            ..
+        } = self;
+        let payload = *payload;
+        let mut first_err: Option<TransportError> = None;
+        let mut transform = |g: &mut [C64], fwd: bool, _fs: &mut Fft3dScratch| -> u64 {
+            if first_err.is_some() {
+                return 0; // a failed transform poisons the whole solve
+            }
+            match coordinator_transform(links, sched, payload, samples, g, fwd, seq) {
+                Ok(sat) => sat,
+                Err(e) => {
+                    first_err = Some(e);
+                    0
+                }
+            }
+        };
+        let e = inner.energy_forces_with_transform(pos, q, out, &mut transform, Some(decomp));
+        drop(transform);
+        if let Some(err) = first_err {
+            self.err = Some(err.clone());
+            return Err(err);
+        }
+        Ok(e)
+    }
+
+    /// Allocating wrapper around [`Self::try_energy_forces_into`].
+    pub fn energy_forces(
+        &mut self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+    ) -> Result<(f64, Vec<[f64; 3]>), TransportError> {
+        let mut out = Vec::new();
+        let e = self.try_energy_forces_into(pos, q, &mut out)?;
+        Ok((e, out))
+    }
+
+    /// Orderly teardown: `Bye` every worker, close the links, reap every
+    /// child (wait with a grace period, then kill).  Idempotent; also
+    /// runs on [`Drop`], so no path leaks zombies.
+    pub fn shutdown(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        for link in self.links.iter_mut() {
+            let _ = link.send(TAG_BYE, &[]);
+        }
+        self.links.clear();
+        reap_children(&mut self.children, Duration::from_millis(2000));
+        if let Some(p) = self.socket_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for ProcPppm {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl KspaceSolver for ProcPppm {
+    /// # Panics
+    /// On a transport failure (rank death / stall): the trait has no
+    /// error channel, so the rank-naming [`TransportError`] message
+    /// becomes the panic payload.  Fault-aware callers use
+    /// [`ProcPppm::try_energy_forces_into`].
+    fn energy_forces_into(
+        &mut self,
+        sites: &[[f64; 3]],
+        charges: &[f64],
+        forces_out: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        match self.try_energy_forces_into(sites, charges, forces_out) {
+            Ok(e) => e,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        // only the coordinator-side spread/solve/gather shard over the
+        // pool; the transforms run in the rank workers
+        self.inner.set_pool(pool);
+    }
+
+    fn rebuild(&mut self, box_len: [f64; 3]) {
+        // the rank schedule depends only on the grid, which is unchanged
+        self.inner.rebuild(box_len);
+    }
+
+    fn saturations(&self) -> u64 {
+        self.inner.quant_saturations
+    }
+
+    fn name(&self) -> &'static str {
+        "dist-proc"
+    }
+}
+
+fn reap_children(children: &mut Vec<ChildHandle>, grace: Duration) {
+    for ch in children.iter_mut() {
+        match ch {
+            ChildHandle::Process(c) => {
+                let deadline = Instant::now() + grace;
+                loop {
+                    match c.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() >= deadline => {
+                            let _ = c.kill();
+                            let _ = c.wait();
+                            break;
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_millis(5)),
+                        Err(_) => break,
+                    }
+                }
+            }
+            ChildHandle::Thread(h) => {
+                if let Some(h) = h.take() {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+    children.clear();
+}
+
+#[allow(clippy::too_many_arguments)]
+fn connect_workers(
+    cfg: &PppmConfig,
+    ranks: [usize; 3],
+    payload: RingPayload,
+    launcher: &WorkerLauncher,
+    opts: &ProcOptions,
+    children: &mut Vec<ChildHandle>,
+    links: &mut [Option<FramedStream<Conn>>],
+    socket_path: &mut Option<PathBuf>,
+) -> Result<(), TransportError> {
+    let nranks = ranks[0] * ranks[1] * ranks[2];
+    match launcher {
+        WorkerLauncher::InProcess => {
+            for (lin, slot) in links.iter_mut().enumerate() {
+                let coords = coords_of(lin, ranks);
+                let (a, b) = loopback_pair();
+                let wcfg = WorkerCfg {
+                    grid: cfg.grid,
+                    ranks,
+                    coords,
+                    payload,
+                    stall_ms: opts
+                        .stall
+                        .and_then(|(r, ms)| if r == coords { Some(ms) } else { None }),
+                    watchdog: opts.watchdog,
+                };
+                let handle = std::thread::spawn(move || {
+                    let link = FramedStream::new(Conn::Loopback(b), Peer::Coordinator);
+                    let _ = worker_loop(wcfg, link);
+                });
+                children.push(ChildHandle::Thread(Some(handle)));
+                let mut fs = FramedStream::new(Conn::Loopback(a), Peer::Rank(coords));
+                let _ = fs.stream_mut().set_read_timeout(Some(opts.watchdog));
+                handshake(&mut fs, ranks, Some(coords))?;
+                *slot = Some(fs);
+            }
+        }
+        WorkerLauncher::Binary(bin) => {
+            let path = std::env::temp_dir().join(format!(
+                "dplr-proc-{}-{}.sock",
+                std::process::id(),
+                SOCK_COUNTER.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = std::fs::remove_file(&path);
+            let listener = UnixListener::bind(&path).map_err(|e| {
+                io_error(Peer::Coordinator, "socket bind", &e, opts.watchdog)
+            })?;
+            *socket_path = Some(path.clone());
+            for lin in 0..nranks {
+                let coords = coords_of(lin, ranks);
+                let mut cmd = Command::new(bin);
+                cmd.arg("rank-worker")
+                    .arg(format!("--socket={}", path.display()))
+                    .arg(format!("--rank={},{},{}", coords[0], coords[1], coords[2]))
+                    .arg(format!("--ranks={},{},{}", ranks[0], ranks[1], ranks[2]))
+                    .arg(format!(
+                        "--grid={},{},{}",
+                        cfg.grid[0], cfg.grid[1], cfg.grid[2]
+                    ))
+                    .arg(format!("--watchdog-ms={}", opts.watchdog.as_millis()))
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::null());
+                if payload == RingPayload::PackedI32 {
+                    cmd.arg("--ring-quant");
+                }
+                if let Some((r, ms)) = opts.stall {
+                    if r == coords {
+                        cmd.arg(format!("--stall-ms={ms}"));
+                    }
+                }
+                let child = cmd.spawn().map_err(|e| {
+                    TransportError::new(
+                        Peer::Rank(coords),
+                        "worker spawn",
+                        TransportErrorKind::Protocol {
+                            what: format!("failed to launch {}: {e}", bin.display()),
+                        },
+                    )
+                })?;
+                children.push(ChildHandle::Process(child));
+            }
+            // workers connect in arbitrary order; the Hello frame carries
+            // the coordinates that slot each link into linear rank order
+            for _ in 0..nranks {
+                let missing = (0..nranks)
+                    .find(|&l| links[l].is_none())
+                    .expect("an unconnected rank remains");
+                let stream = accept_with_deadline(&listener, Instant::now() + opts.watchdog)
+                    .map_err(|e| {
+                        io_error(
+                            Peer::Rank(coords_of(missing, ranks)),
+                            "handshake accept",
+                            &e,
+                            opts.watchdog,
+                        )
+                    })?;
+                let mut fs =
+                    FramedStream::new(Conn::Unix(stream), Peer::Rank(coords_of(missing, ranks)));
+                let _ = fs.stream_mut().set_read_timeout(Some(opts.watchdog));
+                let _ = fs.stream_mut().set_write_timeout(Some(opts.watchdog));
+                let coords = handshake(&mut fs, ranks, None)?;
+                let lin = lin_of(coords, ranks);
+                if links[lin].is_some() {
+                    return Err(TransportError::new(
+                        Peer::Rank(coords),
+                        "handshake",
+                        TransportErrorKind::Protocol {
+                            what: "duplicate Hello for these coordinates".into(),
+                        },
+                    ));
+                }
+                fs.set_peer(Peer::Rank(coords));
+                links[lin] = Some(fs);
+            }
+            if let Some(p) = socket_path.take() {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Coordinator side of the `Hello`/`HelloAck` handshake; returns the
+/// worker's claimed coordinates (validated against the torus, and
+/// against `expect` when the launcher already knows them).
+fn handshake(
+    fs: &mut FramedStream<Conn>,
+    ranks: [usize; 3],
+    expect: Option<[usize; 3]>,
+) -> Result<[usize; 3], TransportError> {
+    let payload = fs.recv_expect(TAG_HELLO).map_err(|e| e.in_phase("handshake"))?;
+    let mut r = wire::Reader::new(&payload, fs.peer(), "handshake");
+    let coords = [r.u32()? as usize, r.u32()? as usize, r.u32()? as usize];
+    r.finish()?;
+    for d in 0..3 {
+        if coords[d] >= ranks[d] {
+            return Err(TransportError::new(
+                fs.peer(),
+                "handshake",
+                TransportErrorKind::Protocol {
+                    what: format!("Hello coordinates {coords:?} outside torus {ranks:?}"),
+                },
+            ));
+        }
+    }
+    if let Some(exp) = expect {
+        if coords != exp {
+            return Err(TransportError::new(
+                fs.peer(),
+                "handshake",
+                TransportErrorKind::Protocol {
+                    what: format!("Hello coordinates {coords:?} do not match assigned {exp:?}"),
+                },
+            ));
+        }
+    }
+    fs.send(TAG_HELLO_ACK, &[]).map_err(|e| e.in_phase("handshake"))?;
+    Ok(coords)
+}
+
+/// One full 3-D transform driven from the coordinator: scatter bricks,
+/// relay the ring schedule per divided dimension (quantized rings get an
+/// exact f64 max-reduce first), gather transformed bricks.  Every
+/// receive is timed into `samples`.
+fn coordinator_transform(
+    links: &mut [FramedStream<Conn>],
+    sched: &DistFftSchedule,
+    payload: RingPayload,
+    samples: &mut Vec<(usize, f64)>,
+    g: &mut [C64],
+    forward: bool,
+    seq: u64,
+) -> Result<u64, TransportError> {
+    let ranks = sched.torus.dims;
+    let [_, ny, nz] = sched.grid;
+    let slabs = [sched.segments(0), sched.segments(1), sched.segments(2)];
+    let nranks = links.len();
+    // scatter: per-rank brick, i-major within the rank's ranges
+    for lin in 0..nranks {
+        let co = coords_of(lin, ranks);
+        let (r0, r1, r2) = (
+            slabs[0][co[0]].clone(),
+            slabs[1][co[1]].clone(),
+            slabs[2][co[2]].clone(),
+        );
+        let mut body = Vec::with_capacity(12 + 16 * r0.len() * r1.len() * r2.len());
+        wire::put_u32(&mut body, forward as u32);
+        wire::put_u64(&mut body, seq);
+        for i in r0.clone() {
+            for j in r1.clone() {
+                for k in r2.clone() {
+                    wire::put_c64(&mut body, g[(i * ny + j) * nz + k]);
+                }
+            }
+        }
+        links[lin]
+            .send(TAG_TRANSFORM, &body)
+            .map_err(|e| e.in_phase("brick scatter"))?;
+    }
+    // ring relay, pass order z, y, x like the host FFT
+    for d in [2usize, 1, 0] {
+        let rd = ranks[d];
+        if rd <= 1 {
+            continue;
+        }
+        if payload == RingPayload::PackedI32 {
+            let phase = format!("maxabs reduce dim {d}");
+            let mut per: Vec<Vec<f64>> = Vec::with_capacity(nranks);
+            for link in links.iter_mut() {
+                let t0 = Instant::now();
+                let p = link
+                    .recv_expect(TAG_MAXABS)
+                    .map_err(|e| e.in_phase(phase.clone()))?;
+                samples.push((p.len(), t0.elapsed().as_secs_f64()));
+                if p.len() % 8 != 0 {
+                    return Err(TransportError::new(
+                        link.peer(),
+                        phase.clone(),
+                        TransportErrorKind::Protocol {
+                            what: format!("MaxAbs payload of {} bytes is not f64-aligned", p.len()),
+                        },
+                    ));
+                }
+                per.push(
+                    p.chunks_exact(8)
+                        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+                        .collect(),
+                );
+            }
+            // exact elementwise f64 max over each d-ring group (ring
+            // members share line sets, so the vectors are aligned)
+            for lin in 0..nranks {
+                let nl = per[lin].len();
+                let mut red = per[lin].clone();
+                let mut co = coords_of(lin, ranks);
+                for s in 0..rd {
+                    co[d] = s;
+                    let m = lin_of(co, ranks);
+                    if per[m].len() != nl {
+                        return Err(TransportError::new(
+                            links[m].peer(),
+                            phase.clone(),
+                            TransportErrorKind::Protocol {
+                                what: "MaxAbs length mismatch inside a ring group".into(),
+                            },
+                        ));
+                    }
+                    for (o, v) in red.iter_mut().zip(&per[m]) {
+                        *o = o.max(*v);
+                    }
+                }
+                let mut body = Vec::with_capacity(8 * nl);
+                for v in &red {
+                    wire::put_f64(&mut body, *v);
+                }
+                links[lin]
+                    .send(TAG_MAXABS_RED, &body)
+                    .map_err(|e| e.in_phase(phase.clone()))?;
+            }
+        }
+        for h in 0..rd - 1 {
+            let phase = format!("ring pass dim {d} hop {h}");
+            // recv every rank's hop frame first, then deliver to each
+            // d-successor: workers always send before they receive, so
+            // this drain order cannot deadlock
+            let mut blocks: Vec<Vec<u8>> = Vec::with_capacity(nranks);
+            for link in links.iter_mut() {
+                let t0 = Instant::now();
+                let b = link
+                    .recv_expect(TAG_RING)
+                    .map_err(|e| e.in_phase(phase.clone()))?;
+                samples.push((b.len(), t0.elapsed().as_secs_f64()));
+                blocks.push(b);
+            }
+            for (lin, block) in blocks.into_iter().enumerate() {
+                let succ = succ_lin(lin, d, ranks);
+                links[succ]
+                    .send(TAG_RING_DELIVER, &block)
+                    .map_err(|e| e.in_phase(phase.clone()))?;
+            }
+        }
+    }
+    // gather transformed bricks + saturation counts
+    let mut sat = 0u64;
+    for lin in 0..nranks {
+        let t0 = Instant::now();
+        let peer = links[lin].peer();
+        let p = links[lin]
+            .recv_expect(TAG_BRICK_BACK)
+            .map_err(|e| e.in_phase("brick gather"))?;
+        samples.push((p.len(), t0.elapsed().as_secs_f64()));
+        let co = coords_of(lin, ranks);
+        let (r0, r1, r2) = (
+            slabs[0][co[0]].clone(),
+            slabs[1][co[1]].clone(),
+            slabs[2][co[2]].clone(),
+        );
+        let mut r = wire::Reader::new(&p, peer, "brick gather");
+        sat += r.u64()?;
+        for i in r0.clone() {
+            for j in r1.clone() {
+                for k in r2.clone() {
+                    g[(i * ny + j) * nz + k] = r.c64()?;
+                }
+            }
+        }
+        r.finish()?;
+    }
+    Ok(sat)
+}
+
+// ---------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------
+
+/// Entry point of the hidden `dplr rank-worker` subcommand: parse the
+/// worker CLI, connect to the coordinator socket and serve transforms
+/// until `Bye`.  Returns the process exit code.
+pub fn worker_main(args: &Args) -> i32 {
+    match worker_run(args) {
+        Ok(()) => 0,
+        Err(msg) => {
+            eprintln!("rank-worker: {msg}");
+            1
+        }
+    }
+}
+
+fn parse_triple(s: &str, what: &str) -> Result<[usize; 3], String> {
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != 3 {
+        return Err(format!("--{what} expects X,Y,Z (got {s:?})"));
+    }
+    let mut out = [0usize; 3];
+    for (d, p) in parts.iter().enumerate() {
+        out[d] = p
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("--{what}: bad component {p:?}"))?;
+    }
+    Ok(out)
+}
+
+fn worker_run(args: &Args) -> Result<(), String> {
+    let socket = args.str_or("socket", "");
+    if socket.is_empty() {
+        return Err("missing --socket".into());
+    }
+    let grid = parse_triple(&args.str_or("grid", ""), "grid")?;
+    let ranks = parse_triple(&args.str_or("ranks", ""), "ranks")?;
+    let coords = parse_triple(&args.str_or("rank", ""), "rank")?;
+    for d in 0..3 {
+        if ranks[d] == 0 || ranks[d] > grid[d] || coords[d] >= ranks[d] {
+            return Err(format!(
+                "inconsistent geometry: rank {coords:?} of torus {ranks:?} on grid {grid:?}"
+            ));
+        }
+    }
+    let watchdog = Duration::from_millis(
+        args.u64_or("watchdog-ms", 5000).map_err(|e| e.to_string())?,
+    );
+    let stall_ms = match args.u64_or("stall-ms", 0).map_err(|e| e.to_string())? {
+        0 => None,
+        ms => Some(ms),
+    };
+    let payload = if args.bool("ring-quant") {
+        RingPayload::PackedI32
+    } else {
+        RingPayload::F64
+    };
+    let stream =
+        UnixStream::connect(&socket).map_err(|e| format!("connect {socket}: {e}"))?;
+    let link = FramedStream::new(Conn::Unix(stream), Peer::Coordinator);
+    let cfg = WorkerCfg {
+        grid,
+        ranks,
+        coords,
+        payload,
+        stall_ms,
+        watchdog,
+    };
+    worker_loop(cfg, link).map_err(|e| e.to_string())
+}
+
+/// Per-rank state: the brick, the per-dimension slab geometry and the
+/// persistent FFT plans/scratch.
+struct WorkerState {
+    cfg: WorkerCfg,
+    own: [Range<usize>; 3],
+    slabs: [Vec<Range<usize>>; 3],
+    plans: [Fft1d; 3],
+    segfft: [SegmentFft; 3],
+    blu: Vec<C64>,
+    brick: Vec<C64>,
+    xline: Vec<C64>,
+    xseg: Vec<C64>,
+    stalled: bool,
+}
+
+fn bidx(own: &[Range<usize>; 3], i: usize, j: usize, k: usize) -> usize {
+    let ly = own[1].len();
+    let lz = own[2].len();
+    ((i - own[0].start) * ly + (j - own[1].start)) * lz + (k - own[2].start)
+}
+
+/// The rank's grid lines for pass `d`: the cartesian product of its two
+/// orthogonal slab ranges in row-major order.  Ranks in the same d-ring
+/// share those ranges, so their enumeration orders are identical — which
+/// is what lets ring blocks be indexed by line position.
+fn line_list(own: &[Range<usize>; 3], d: usize) -> Vec<(usize, usize)> {
+    let (a, b) = match d {
+        2 => (0, 1),
+        1 => (0, 2),
+        _ => (1, 2),
+    };
+    let mut out = Vec::with_capacity(own[a].len() * own[b].len());
+    for u in own[a].clone() {
+        for v in own[b].clone() {
+            out.push((u, v));
+        }
+    }
+    out
+}
+
+fn load_seg(
+    brick: &[C64],
+    own: &[Range<usize>; 3],
+    d: usize,
+    line: (usize, usize),
+    out: &mut [C64],
+) {
+    match d {
+        2 => {
+            let (i, j) = line;
+            for (t, k) in own[2].clone().enumerate() {
+                out[t] = brick[bidx(own, i, j, k)];
+            }
+        }
+        1 => {
+            let (i, k) = line;
+            for (t, j) in own[1].clone().enumerate() {
+                out[t] = brick[bidx(own, i, j, k)];
+            }
+        }
+        _ => {
+            let (j, k) = line;
+            for (t, i) in own[0].clone().enumerate() {
+                out[t] = brick[bidx(own, i, j, k)];
+            }
+        }
+    }
+}
+
+fn store_seg(
+    brick: &mut [C64],
+    own: &[Range<usize>; 3],
+    d: usize,
+    line: (usize, usize),
+    vals: &[C64],
+) {
+    match d {
+        2 => {
+            let (i, j) = line;
+            for (t, k) in own[2].clone().enumerate() {
+                brick[bidx(own, i, j, k)] = vals[t];
+            }
+        }
+        1 => {
+            let (i, k) = line;
+            for (t, j) in own[1].clone().enumerate() {
+                brick[bidx(own, i, j, k)] = vals[t];
+            }
+        }
+        _ => {
+            let (j, k) = line;
+            for (t, i) in own[0].clone().enumerate() {
+                brick[bidx(own, i, j, k)] = vals[t];
+            }
+        }
+    }
+}
+
+impl WorkerState {
+    fn new(cfg: WorkerCfg) -> WorkerState {
+        let sched = DistFftSchedule::new(cfg.grid, Torus::new(cfg.ranks));
+        let slabs = [sched.segments(0), sched.segments(1), sched.segments(2)];
+        let own = [
+            slabs[0][cfg.coords[0]].clone(),
+            slabs[1][cfg.coords[1]].clone(),
+            slabs[2][cfg.coords[2]].clone(),
+        ];
+        let plans = [
+            Fft1d::new(cfg.grid[0]),
+            Fft1d::new(cfg.grid[1]),
+            Fft1d::new(cfg.grid[2]),
+        ];
+        let segfft = [
+            SegmentFft::new(cfg.grid[0], own[0].clone()),
+            SegmentFft::new(cfg.grid[1], own[1].clone()),
+            SegmentFft::new(cfg.grid[2], own[2].clone()),
+        ];
+        let blu_len = plans.iter().map(|p| p.scratch_len()).max().unwrap_or(0);
+        let maxn = cfg.grid.iter().copied().max().unwrap_or(1);
+        let brick_len = own.iter().map(|r| r.len()).product();
+        WorkerState {
+            cfg,
+            own,
+            slabs,
+            plans,
+            segfft,
+            blu: vec![C64::ZERO; blu_len],
+            brick: vec![C64::ZERO; brick_len],
+            xline: vec![C64::ZERO; maxn],
+            xseg: vec![C64::ZERO; maxn],
+            stalled: false,
+        }
+    }
+
+    fn load_brick(&mut self, payload: &[u8]) -> Result<bool, TransportError> {
+        let mut r = wire::Reader::new(payload, Peer::Coordinator, "brick scatter");
+        let forward = r.u32()? == 1;
+        let _seq = r.u64()?;
+        for v in self.brick.iter_mut() {
+            *v = r.c64()?;
+        }
+        r.finish()?;
+        Ok(forward)
+    }
+
+    /// One dimension's pass over this rank's brick (see the
+    /// [module docs](self)).  Crucially, the rank's ring block is
+    /// snapshotted from the brick and sent **before** any line is
+    /// transformed, so peers always combine pre-transform segments.
+    fn pass(
+        &mut self,
+        d: usize,
+        forward: bool,
+        link: &mut FramedStream<Conn>,
+    ) -> Result<u64, TransportError> {
+        let WorkerState {
+            cfg,
+            own,
+            slabs,
+            plans,
+            segfft,
+            blu,
+            brick,
+            xline,
+            xseg,
+            stalled,
+        } = self;
+        let n = cfg.grid[d];
+        let rd = cfg.ranks[d];
+        let c = cfg.coords[d];
+        let plan = &plans[d];
+        let lines = line_list(own, d);
+        if rd == 1 {
+            // the rank owns whole lines: transform them locally, exactly
+            // like the host FFT's pass
+            for &line in &lines {
+                load_seg(brick, own, d, line, &mut xline[..n]);
+                if forward {
+                    plan.forward_with(&mut xline[..n], blu);
+                } else {
+                    plan.inverse_with(&mut xline[..n], blu);
+                }
+                store_seg(brick, own, d, line, &xline[..n]);
+            }
+            return Ok(0);
+        }
+        if let Some(ms) = cfg.stall_ms {
+            if !*stalled {
+                // fault injection: go silent right where the coordinator
+                // expects this rank's first ring-phase frame
+                *stalled = true;
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        let seg = own[d].clone();
+        let sl = seg.len();
+        let nl = lines.len();
+        let mut slots: Vec<Vec<u8>> = vec![Vec::new(); rd];
+        let mut sat = 0u64;
+        let mut scales: Vec<f64> = Vec::new();
+        match cfg.payload {
+            RingPayload::F64 => {
+                // snapshot the pre-transform d-segments of every line
+                let mut blk = Vec::with_capacity(16 * nl * sl);
+                for &line in &lines {
+                    load_seg(brick, own, d, line, &mut xseg[..sl]);
+                    for v in &xseg[..sl] {
+                        wire::put_c64(&mut blk, *v);
+                    }
+                }
+                slots[c] = blk;
+            }
+            RingPayload::PackedI32 => {
+                // own partial spectra (zero-pad + offset twiddle) and the
+                // per-line maxabs that seeds the global scale reduce
+                let mut parts = vec![C64::ZERO; nl * n];
+                let mut mx = Vec::with_capacity(8 * nl);
+                for (li, &line) in lines.iter().enumerate() {
+                    load_seg(brick, own, d, line, &mut xseg[..sl]);
+                    let out = &mut parts[li * n..(li + 1) * n];
+                    segfft[d].partial_spectrum(plan, &xseg[..sl], out, blu, forward);
+                    let m = out
+                        .iter()
+                        .map(|v| v.re.abs().max(v.im.abs()))
+                        .fold(0.0f64, f64::max);
+                    wire::put_f64(&mut mx, m);
+                }
+                let phase = format!("maxabs reduce dim {d}");
+                link.send(TAG_MAXABS, &mx)
+                    .map_err(|e| e.in_phase(phase.clone()))?;
+                let red = link
+                    .recv_expect(TAG_MAXABS_RED)
+                    .map_err(|e| e.in_phase(phase.clone()))?;
+                let mut r = wire::Reader::new(&red, Peer::Coordinator, &phase);
+                let spec = QuantSpec::default();
+                let mut blk = Vec::with_capacity(8 * nl * n);
+                scales = Vec::with_capacity(nl);
+                for li in 0..nl {
+                    // the globally-reduced maxabs fixes the line's scale
+                    // exactly as the emulated ring resolves it
+                    let scale = spec.resolve(r.f64()?, rd);
+                    scales.push(scale);
+                    for k in 0..n {
+                        let v = parts[li * n + k];
+                        let (qr, s1) = quant::quantize(v.re, scale);
+                        let (qi, s2) = quant::quantize(v.im, scale);
+                        sat += s1 as u64 + s2 as u64;
+                        wire::put_u64(&mut blk, quant::pack2(qr, qi));
+                    }
+                }
+                r.finish()?;
+                slots[c] = blk;
+            }
+        }
+        // ring allgather: at hop h forward the block received at hop
+        // h - 1 (own block first) and slot the incoming one by origin
+        for h in 0..rd - 1 {
+            let phase = format!("ring pass dim {d} hop {h}");
+            link.send(TAG_RING, &slots[(c + rd - h) % rd])
+                .map_err(|e| e.in_phase(phase.clone()))?;
+            let blk = link
+                .recv_expect(TAG_RING_DELIVER)
+                .map_err(|e| e.in_phase(phase))?;
+            slots[(c + rd - 1 - h) % rd] = blk;
+        }
+        match cfg.payload {
+            RingPayload::F64 => {
+                for (s, sr) in slabs[d].iter().enumerate() {
+                    if slots[s].len() != 16 * nl * sr.len() {
+                        return Err(ring_size_error(d, s, slots[s].len(), 16 * nl * sr.len()));
+                    }
+                }
+                // reassemble each full line in ascending column order and
+                // close with one local whole-line FFT — the emulated fast
+                // path's arithmetic, bit-identical to the host FFT
+                for (li, &line) in lines.iter().enumerate() {
+                    for (s, sr) in slabs[d].iter().enumerate() {
+                        let sn = sr.len();
+                        let mut rdr = wire::Reader::new(
+                            &slots[s][li * 16 * sn..(li + 1) * 16 * sn],
+                            Peer::Coordinator,
+                            "ring assemble",
+                        );
+                        for t in 0..sn {
+                            xline[sr.start + t] = rdr.c64()?;
+                        }
+                    }
+                    if forward {
+                        plan.forward_with(&mut xline[..n], blu);
+                    } else {
+                        plan.inverse_with(&mut xline[..n], blu);
+                    }
+                    store_seg(brick, own, d, line, &xline[seg.clone()]);
+                }
+            }
+            RingPayload::PackedI32 => {
+                for (s, slot) in slots.iter().enumerate() {
+                    if slot.len() != 8 * nl * n {
+                        return Err(ring_size_error(d, s, slot.len(), 8 * nl * n));
+                    }
+                }
+                // exact packed-lane integer sums in ascending rank order,
+                // dequantized for this rank's slab only
+                let inv = 1.0 / n as f64;
+                for (li, &line) in lines.iter().enumerate() {
+                    let scale = scales[li];
+                    let mut overflow = false;
+                    for t in 0..sl {
+                        let k = seg.start + t;
+                        let mut acc = 0u64;
+                        for slot in slots.iter() {
+                            let off = (li * n + k) * 8;
+                            let q = u64::from_le_bytes(slot[off..off + 8].try_into().unwrap());
+                            acc = quant::lane_add(acc, q, &mut overflow);
+                        }
+                        let (qr, qi) = quant::unpack2(acc);
+                        let mut v = C64::new(
+                            quant::dequantize(qr as i64, scale),
+                            quant::dequantize(qi as i64, scale),
+                        );
+                        if !forward {
+                            v = v.scale(inv);
+                        }
+                        xseg[t] = v;
+                    }
+                    if overflow {
+                        sat += 1;
+                    }
+                    store_seg(brick, own, d, line, &xseg[..sl]);
+                }
+            }
+        }
+        Ok(sat)
+    }
+}
+
+fn ring_size_error(d: usize, s: usize, got: usize, want: usize) -> TransportError {
+    TransportError::new(
+        Peer::Coordinator,
+        format!("ring pass dim {d}"),
+        TransportErrorKind::Protocol {
+            what: format!("ring block from slot {s} has {got} bytes, expected {want}"),
+        },
+    )
+}
+
+/// The worker's serve loop (both launch modes run exactly this code):
+/// `Hello` handshake, then `Transform` requests until `Bye` or link
+/// loss.  The watchdog applies while a transform is in flight; idle
+/// waits between solves block indefinitely (coordinator death still
+/// surfaces as EOF).
+pub(crate) fn worker_loop(
+    cfg: WorkerCfg,
+    mut link: FramedStream<Conn>,
+) -> Result<(), TransportError> {
+    let mut hello = Vec::new();
+    for d in 0..3 {
+        wire::put_u32(&mut hello, cfg.coords[d] as u32);
+    }
+    link.send(TAG_HELLO, &hello)?;
+    let _ = link.stream_mut().set_read_timeout(Some(cfg.watchdog));
+    link.recv_expect(TAG_HELLO_ACK)?;
+    let _ = link.stream_mut().set_read_timeout(None);
+    let watchdog = cfg.watchdog;
+    let mut st = WorkerState::new(cfg);
+    loop {
+        let (tag, payload) = link.recv()?;
+        match tag {
+            TAG_BYE => return Ok(()),
+            TAG_TRANSFORM => {
+                let _ = link.stream_mut().set_read_timeout(Some(watchdog));
+                let forward = st.load_brick(&payload)?;
+                let mut sat = 0u64;
+                for d in [2usize, 1, 0] {
+                    sat += st.pass(d, forward, &mut link)?;
+                }
+                let mut out = Vec::with_capacity(8 + 16 * st.brick.len());
+                wire::put_u64(&mut out, sat);
+                for v in &st.brick {
+                    wire::put_c64(&mut out, *v);
+                }
+                link.send(TAG_BRICK_BACK, &out)?;
+                let _ = link.stream_mut().set_read_timeout(None);
+            }
+            got => {
+                return Err(TransportError::new(
+                    Peer::Coordinator,
+                    "worker loop",
+                    TransportErrorKind::UnexpectedTag {
+                        expected: TAG_TRANSFORM,
+                        got,
+                    },
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DistPppm, RankFft};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn test_sites(n: usize, seed: u64) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
+        let box_len = [9.3, 11.1, 9.3];
+        let mut r = Rng::new(seed);
+        let pos = (0..n)
+            .map(|_| {
+                [
+                    r.range(0.0, box_len[0]),
+                    r.range(0.0, box_len[1]),
+                    r.range(0.0, box_len[2]),
+                ]
+            })
+            .collect();
+        let q = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        (pos, q, box_len)
+    }
+
+    fn cfg() -> PppmConfig {
+        PppmConfig::new([12, 18, 12], 5, 0.3)
+    }
+
+    #[test]
+    fn loopback_process_ranks_bit_match_serial_pppm() {
+        let (pos, q, box_len) = test_sites(40, 2024);
+        let mut host = Pppm::new(cfg(), box_len);
+        let mut hf = Vec::new();
+        let he = KspaceSolver::energy_forces_into(&mut host, &pos, &q, &mut hf);
+        for ranks in [[2usize, 1, 1], [2, 2, 1], [2, 3, 2]] {
+            let mut proc = ProcPppm::spawn(
+                cfg(),
+                box_len,
+                ranks,
+                RingPayload::F64,
+                &WorkerLauncher::InProcess,
+                &ProcOptions::default(),
+            )
+            .expect("spawn loopback ranks");
+            let (pe, pf) = proc.energy_forces(&pos, &q).expect("solve");
+            assert_eq!(he.to_bits(), pe.to_bits(), "energy at ranks {ranks:?}");
+            for (i, (a, b)) in hf.iter().zip(&pf).enumerate() {
+                for d in 0..3 {
+                    assert_eq!(
+                        a[d].to_bits(),
+                        b[d].to_bits(),
+                        "force[{i}][{d}] at ranks {ranks:?}"
+                    );
+                }
+            }
+            assert!(!proc.message_samples().is_empty(), "receives were sampled");
+            proc.shutdown();
+        }
+    }
+
+    #[test]
+    fn loopback_quantized_ring_matches_emulated_dist() {
+        let (pos, q, box_len) = test_sites(40, 77);
+        let ranks = [2usize, 3, 1];
+        let mut emu = DistPppm::new(cfg(), box_len, ranks, RingPayload::PackedI32);
+        let (ee, ef) = emu.energy_forces(&pos, &q);
+        let mut proc = ProcPppm::spawn(
+            cfg(),
+            box_len,
+            ranks,
+            RingPayload::PackedI32,
+            &WorkerLauncher::InProcess,
+            &ProcOptions::default(),
+        )
+        .expect("spawn loopback ranks");
+        let (pe, pf) = proc.energy_forces(&pos, &q).expect("solve");
+        // the distributed quantized arithmetic mirrors the emulated ring
+        // operation for operation; tolerance instead of bitwise keeps the
+        // assertion honest about cross-process float transport only
+        let scale = ee.abs().max(1.0);
+        assert!(
+            (ee - pe).abs() <= 1e-9 * scale,
+            "quantized energy: emulated {ee} vs process {pe}"
+        );
+        for (a, b) in ef.iter().zip(&pf) {
+            for d in 0..3 {
+                assert!((a[d] - b[d]).abs() <= 1e-9, "{} vs {}", a[d], b[d]);
+            }
+        }
+        proc.shutdown();
+    }
+
+    #[test]
+    fn raw_transform_matches_emulated_rank_fft() {
+        // drive coordinator_transform directly on a random grid: it must
+        // reproduce the emulated fast-path ring bit for bit
+        let dims = [8usize, 12, 10];
+        let ranks = [2usize, 2, 1];
+        let n = dims[0] * dims[1] * dims[2];
+        let mut r = Rng::new(5150);
+        let base: Vec<C64> = (0..n)
+            .map(|_| C64::new(r.range(-1.0, 1.0), r.range(-1.0, 1.0)))
+            .collect();
+        let mut want = base.clone();
+        let pool = ThreadPool::serial();
+        RankFft::new(dims, ranks, RingPayload::F64).execute(&mut want, true, &pool);
+        let mut proc = ProcPppm::spawn(
+            PppmConfig::new(dims, 5, 0.3),
+            [9.0, 9.0, 9.0],
+            ranks,
+            RingPayload::F64,
+            &WorkerLauncher::InProcess,
+            &ProcOptions::default(),
+        )
+        .expect("spawn");
+        let mut got = base.clone();
+        let ProcPppm {
+            sched,
+            payload,
+            links,
+            samples,
+            ..
+        } = &mut proc;
+        coordinator_transform(links, sched, *payload, samples, &mut got, true, 0)
+            .expect("transform");
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.re.to_bits(), b.re.to_bits(), "[{i}].re");
+            assert_eq!(a.im.to_bits(), b.im.to_bits(), "[{i}].im");
+        }
+        proc.shutdown();
+    }
+
+    #[test]
+    fn killed_loopback_worker_poisons_with_named_rank() {
+        let (pos, q, box_len) = test_sites(24, 9);
+        let mut proc = ProcPppm::spawn(
+            cfg(),
+            box_len,
+            [2, 1, 1],
+            RingPayload::F64,
+            &WorkerLauncher::InProcess,
+            &ProcOptions {
+                watchdog: Duration::from_millis(500),
+                stall: None,
+            },
+        )
+        .expect("spawn");
+        proc.energy_forces(&pos, &q).expect("healthy solve");
+        proc.kill_worker([1, 0, 0]);
+        let err = proc
+            .energy_forces(&pos, &q)
+            .expect_err("severed rank must fail the solve");
+        assert!(err.to_string().contains("rank (1, 0, 0)"), "{err}");
+        // poisoned: the same typed error comes back without deadlocking
+        let again = proc.energy_forces(&pos, &q).expect_err("poisoned");
+        assert_eq!(again, err);
+        proc.shutdown();
+    }
+
+    #[test]
+    fn bad_torus_is_rejected_before_spawning() {
+        let err = ProcPppm::spawn(
+            cfg(),
+            [9.0, 9.0, 9.0],
+            [0, 2, 1],
+            RingPayload::F64,
+            &WorkerLauncher::InProcess,
+            &ProcOptions::default(),
+        )
+        .expect_err("zero rank count");
+        assert!(err.to_string().contains("ranks[0]"), "{err}");
+    }
+}

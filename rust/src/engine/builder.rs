@@ -25,6 +25,7 @@ use super::mts::{HeldKspace, MtsClock, MtsConfig, MtsExtrap};
 use super::observe::{observer_fn, Observer, StepContext};
 use super::traits::{KspaceSolver, ShortRangeModel};
 use super::{SimConfig, Simulation};
+use crate::distpppm::process::{ProcOptions, ProcPppm, WorkerLauncher};
 use crate::distpppm::{DistPppm, LinePath, RingPayload};
 use crate::ewald::EwaldRecipSolver;
 use crate::md::integrate::{NoseHoover, VelocityVerlet};
@@ -72,7 +73,54 @@ pub enum KspaceConfig {
         /// ([`crate::distpppm::LinePath::LocalFft`], the default).
         matvec: bool,
     },
+    /// The **process-executed** rank torus (`--kspace dist --proc`): the
+    /// same mesh and section-3.1 ring schedule as [`KspaceConfig::Dist`],
+    /// but each rank is a real OS process (spawned via the hidden
+    /// `dplr rank-worker` subcommand) holding its own mesh brick and
+    /// exchanging ring payloads over the [`crate::transport`] layer
+    /// ([`crate::distpppm::process::ProcPppm`]).  Exact-f64 rings stay
+    /// bit-identical to `--kspace pppm`; worker spawn or handshake
+    /// failures surface as build errors naming the rank.
+    DistProc {
+        /// Ewald splitting parameter (as in `PppmAuto`).
+        alpha: f64,
+        /// Rank torus; each component must be `>= 1` (the error names the
+        /// axis) and no larger than the mesh dimension.
+        ranks: [usize; 3],
+        /// `true` = int32-quantized packed ring payload; `false` = exact
+        /// f64 rings.
+        quantized: bool,
+    },
 }
+
+/// Axis names for rank-torus validation errors (`--ranks 0,2,1` must say
+/// *which* dimension is malformed, not just that one is).
+const AXES: [&str; 3] = ["x", "y", "z"];
+
+/// Shared `--ranks` validation for the emulated and process-executed
+/// dist backends: every component must be >= 1 and no larger than the
+/// mesh dimension, with errors naming the offending axis.
+fn validate_ranks(what: &str, ranks: [usize; 3], grid: [usize; 3]) -> Result<()> {
+    for (d, &r) in ranks.iter().enumerate() {
+        let axis = AXES[d];
+        if r == 0 {
+            bail!("{what}: ranks[{d}] ({axis} axis) must be >= 1, got 0 — use 1 for an undivided dimension");
+        }
+        if r > grid[d] {
+            bail!(
+                "{what}: ranks[{d}] ({axis} axis, {r}) exceeds mesh dimension {} — \
+                 a rank would own an empty brick",
+                grid[d]
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Cap on the process-rank count: each rank is a real OS process (or a
+/// loopback thread), so a typo like `--ranks 64,64,64` must fail fast
+/// instead of fork-bombing the machine.
+const MAX_PROC_RANKS: usize = 64;
 
 enum KspaceChoice {
     Config(KspaceConfig),
@@ -119,18 +167,7 @@ pub(crate) fn build_kspace(
         } => {
             let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
             cfg.validate()?;
-            for (d, &r) in ranks.iter().enumerate() {
-                if r == 0 {
-                    bail!("dist kspace: ranks[{d}] must be >= 1");
-                }
-                if r > cfg.grid[d] {
-                    bail!(
-                        "dist kspace: ranks[{d}] ({r}) exceeds mesh dimension {} — \
-                         a rank would own an empty brick",
-                        cfg.grid[d]
-                    );
-                }
-            }
+            validate_ranks("dist kspace", ranks, cfg.grid)?;
             let payload = if quantized {
                 RingPayload::PackedI32
             } else {
@@ -151,6 +188,40 @@ pub(crate) fn build_kspace(
                 )),
                 Some(cfg),
             )
+        }
+        KspaceConfig::DistProc {
+            alpha,
+            ranks,
+            quantized,
+        } => {
+            let cfg = PppmConfig::new(PppmConfig::auto_grid(box_len), 5, alpha);
+            cfg.validate()?;
+            validate_ranks("dist-proc kspace", ranks, cfg.grid)?;
+            let nranks = ranks[0] * ranks[1] * ranks[2];
+            if nranks > MAX_PROC_RANKS {
+                bail!(
+                    "dist-proc kspace: ranks {}x{}x{} would spawn {nranks} worker \
+                     processes (cap {MAX_PROC_RANKS})",
+                    ranks[0],
+                    ranks[1],
+                    ranks[2]
+                );
+            }
+            let payload = if quantized {
+                RingPayload::PackedI32
+            } else {
+                RingPayload::F64
+            };
+            let solver = ProcPppm::spawn(
+                cfg.clone(),
+                box_len,
+                ranks,
+                payload,
+                &WorkerLauncher::from_env(),
+                &ProcOptions::default(),
+            )
+            .map_err(|e| anyhow::anyhow!("dist-proc kspace: {e}"))?;
+            (Box::new(solver) as Box<dyn KspaceSolver>, Some(cfg))
         }
         KspaceConfig::Ewald { alpha, tol } => {
             if !(alpha.is_finite() && alpha > 0.0) {

@@ -17,7 +17,9 @@
 //!    DP + DW backward -> integrate) with optional real-thread overlap;
 //!  * [`distpppm`] *executes* the paper's section-3.1 rank-decomposed,
 //!    transpose-free FFT schedule over a virtual torus emulated on the
-//!    worker pool (`dplr run --kspace dist`);
+//!    worker pool (`dplr run --kspace dist`), or over real OS-process
+//!    ranks ([`distpppm::process`], `--kspace dist --proc`) exchanging
+//!    ring payloads through the length-framed [`transport`] layer;
 //!  * [`simnet`]/[`tofu`]/[`mpisim`]/[`distfft`]/[`coordinator`]/
 //!    [`perfmodel`] reproduce the paper's large-scale experiments on a
 //!    calibrated discrete-event model of Fugaku.
@@ -64,5 +66,6 @@ pub mod pppm;
 pub mod runtime;
 pub mod simnet;
 pub mod tofu;
+pub mod transport;
 pub mod util;
 pub mod experiments;

@@ -29,6 +29,11 @@ use dplr::util::rng::Rng;
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    // hidden subcommand: a rank worker of `--kspace dist --proc`, spawned
+    // by the coordinating dplr process (never typed by hand)
+    if cmd == "rank-worker" {
+        std::process::exit(dplr::distpppm::process::worker_main(&args));
+    }
     let r = match cmd {
         "run" => cmd_run(&args),
         "replicas" => cmd_replicas(&args),
@@ -72,6 +77,9 @@ fn print_help() {
          \x20              --ring-quant for int32-packed ring payloads;\n\
          \x20              --dist-matvec for the O(n^2) Eq.-8 partial-DFT\n\
          \x20              matvecs instead of the rank-local FFT fast path;\n\
+         \x20              --proc: execute the ranks as real OS processes\n\
+         \x20              (spawned rank workers over a Unix-socket ring\n\
+         \x20              transport; f64 rings stay bit-identical to pppm);\n\
          \x20              --mts k: solve k-space every k-th step, holding\n\
          \x20              the reciprocal forces in between (--mts-extrap\n\
          \x20              hold|linear; --mts 1 = bit-identical default)\n\
@@ -152,6 +160,16 @@ fn kspace_from_args(args: &Args, alpha: f64) -> Result<KspaceConfig> {
             alpha,
             tol: args.f64_or("ewald-tol", 1e-10)?,
         }),
+        "dist" if args.bool("proc") => {
+            if args.bool("dist-matvec") {
+                bail!("--proc executes the rank-local FFT fast path; it cannot be combined with --dist-matvec");
+            }
+            Ok(KspaceConfig::DistProc {
+                alpha,
+                ranks: parse_ranks(&args.str_or("ranks", "1,1,1"))?,
+                quantized: args.bool("ring-quant"),
+            })
+        }
         "dist" => Ok(KspaceConfig::Dist {
             alpha,
             ranks: parse_ranks(&args.str_or("ranks", "1,1,1"))?,

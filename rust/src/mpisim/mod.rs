@@ -55,6 +55,36 @@ pub fn mapped_hops(t: &Torus, mapping_quality: f64) -> f64 {
     1.0 + (mapping_quality - 1.0) * (avg_dim / 4.0)
 }
 
+/// Least-squares alpha-beta fit `t = alpha + beta * bytes` over measured
+/// `(payload bytes, seconds)` samples — the inverse of [`p2p_time`]'s
+/// model, used by the fig8 bench to sit measured per-message timings from
+/// the process-executed ring
+/// ([`ProcPppm::message_samples`](crate::distpppm::process::ProcPppm::message_samples))
+/// next to the analytic collectives above.  Returns `(alpha, beta)`, or
+/// `None` when the fit is underdetermined (fewer than two samples, or all
+/// samples the same size).
+pub fn fit_alpha_beta(samples: &[(usize, f64)]) -> Option<(f64, f64)> {
+    if samples.len() < 2 {
+        return None;
+    }
+    let n = samples.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for &(bytes, t) in samples {
+        let x = bytes as f64;
+        sx += x;
+        sy += t;
+        sxx += x * x;
+        sxy += x * t;
+    }
+    let det = n * sxx - sx * sx;
+    if det.abs() < 1e-12 * n * sxx.max(1.0) {
+        return None; // all sizes (numerically) identical: slope unresolvable
+    }
+    let beta = (n * sxy - sx * sy) / det;
+    let alpha = (sy - beta * sx) / n;
+    Some((alpha, beta))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +127,26 @@ mod tests {
         let t = Torus::new([8, 12, 8]);
         assert!((mapped_hops(&t, 1.0) - 1.0).abs() < 1e-12);
         assert!(mapped_hops(&t, 2.0) > 2.0);
+    }
+
+    #[test]
+    fn alpha_beta_fit_recovers_a_synthetic_line() {
+        let (alpha, beta) = (3.5e-6, 1.0 / 6.8e9);
+        let samples: Vec<(usize, f64)> = [64usize, 1024, 65536, 1 << 20]
+            .iter()
+            .map(|&b| (b, alpha + beta * b as f64))
+            .collect();
+        let (a, b) = fit_alpha_beta(&samples).expect("well-posed fit");
+        assert!((a - alpha).abs() < 1e-9, "alpha {a} vs {alpha}");
+        assert!((b / beta - 1.0).abs() < 1e-6, "beta {b} vs {beta}");
+    }
+
+    #[test]
+    fn alpha_beta_fit_rejects_underdetermined_input() {
+        assert!(fit_alpha_beta(&[]).is_none());
+        assert!(fit_alpha_beta(&[(1024, 1e-5)]).is_none());
+        // many samples, all the same size: slope unresolvable
+        let same = vec![(4096usize, 2e-5); 8];
+        assert!(fit_alpha_beta(&same).is_none());
     }
 }

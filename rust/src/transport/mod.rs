@@ -1,0 +1,658 @@
+//! Length-framed message transport for the process-parallel k-space
+//! backend (`--kspace dist --proc`).
+//!
+//! The coordinator and its rank-worker processes exchange *frames*: a
+//! fixed 16-byte header (`magic | tag | payload length`, little-endian)
+//! followed by the payload bytes.  Framing lives in [`FramedStream`],
+//! generic over any `Read + Write` byte stream so every code path is
+//! unit-testable without spawning a process:
+//!
+//!  * [`Conn::Unix`] — a `UnixStream` to a real rank process, with
+//!    read/write timeouts acting as the coordinator's watchdog;
+//!  * [`Conn::Loopback`] — an in-process duplex byte queue
+//!    ([`loopback_pair`]) driving the *same* worker code on a thread,
+//!    used by the unit tests and the thread-backed launcher.
+//!
+//! Failures are typed ([`TransportError`]): the error names the peer
+//! rank coordinates and the protocol phase, so a killed or stalled rank
+//! surfaces as e.g. `transport error with rank (1, 0, 0) during
+//! "ring pass dim 0": peer closed the connection` instead of a deadlock
+//! (see `rust/tests/proc_fault.rs`).  Partial reads and short writes are
+//! handled by construction (`read`/`write` loops), oversized and
+//! truncated frames are rejected — `rust/tests/transport_props.rs`
+//! fuzzes all of this over random payloads.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub mod wire;
+
+/// Frame header magic (`"DPLF"` little-endian) — rejects streams that
+/// are not speaking the framing protocol at the first frame.
+pub const FRAME_MAGIC: u32 = 0x464C5044;
+
+/// Hard cap on a single frame's payload (1 GiB).  A header advertising
+/// more is rejected as [`TransportErrorKind::FrameTooLarge`] before any
+/// allocation happens.
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// Frame header length in bytes (`magic u32 | tag u32 | len u64`).
+pub const HEADER_LEN: usize = 16;
+
+/// The remote end of a transport link, named for error messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Peer {
+    /// The coordinator process (errors seen by a rank worker).
+    Coordinator,
+    /// A rank worker at the given torus coordinates (errors seen by the
+    /// coordinator — the watchdog names exactly which rank failed).
+    Rank([usize; 3]),
+}
+
+impl std::fmt::Display for Peer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Peer::Coordinator => write!(f, "the coordinator"),
+            Peer::Rank([x, y, z]) => write!(f, "rank ({x}, {y}, {z})"),
+        }
+    }
+}
+
+/// What went wrong on a transport link (the typed payload of
+/// [`TransportError`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportErrorKind {
+    /// The peer closed the connection (process death surfaces here).
+    Closed,
+    /// The watchdog expired while waiting on the peer (stalled rank).
+    Timeout {
+        /// How long the coordinator waited before giving up.
+        waited_ms: u64,
+    },
+    /// A frame header advertised a payload larger than [`MAX_FRAME`].
+    FrameTooLarge {
+        /// The advertised payload length.
+        len: u64,
+    },
+    /// The stream ended in the middle of a frame.
+    Truncated {
+        /// Bytes the frame still owed when the stream ended.
+        missing: usize,
+    },
+    /// The frame header's magic did not match [`FRAME_MAGIC`].
+    BadMagic {
+        /// The magic value actually read.
+        got: u32,
+    },
+    /// A frame arrived with an unexpected tag.
+    UnexpectedTag {
+        /// The tag the protocol expected.
+        expected: u32,
+        /// The tag that arrived.
+        got: u32,
+    },
+    /// Any other I/O failure.
+    Io {
+        /// The underlying `io::ErrorKind`.
+        kind: io::ErrorKind,
+    },
+    /// A protocol-level violation (bad payload size, duplicate
+    /// handshake, failed spawn, ...).
+    Protocol {
+        /// Human-readable description.
+        what: String,
+    },
+}
+
+/// A typed transport failure: which peer, during which protocol phase,
+/// and what kind of failure.  `Display` always names the rank
+/// coordinates, which is the fault-injection suite's acceptance signal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportError {
+    /// The peer the failing link pointed at.
+    pub peer: Peer,
+    /// The protocol phase the failure happened in (e.g. `"handshake"`,
+    /// `"ring pass dim 2"`, `"brick gather"`).
+    pub phase: String,
+    /// The failure itself.
+    pub kind: TransportErrorKind,
+}
+
+impl TransportError {
+    /// Build an error for `peer` in `phase`.
+    pub fn new(peer: Peer, phase: impl Into<String>, kind: TransportErrorKind) -> TransportError {
+        TransportError {
+            peer,
+            phase: phase.into(),
+            kind,
+        }
+    }
+
+    /// Re-label the protocol phase (the framing layer reports generic
+    /// phases; the coordinator overwrites them with the schedule step).
+    pub fn in_phase(mut self, phase: impl Into<String>) -> TransportError {
+        self.phase = phase.into();
+        self
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transport error with {} during \"{}\": ", self.peer, self.phase)?;
+        match &self.kind {
+            TransportErrorKind::Closed => write!(f, "peer closed the connection"),
+            TransportErrorKind::Timeout { waited_ms } => {
+                write!(f, "watchdog timeout after {waited_ms} ms")
+            }
+            TransportErrorKind::FrameTooLarge { len } => {
+                write!(f, "frame payload of {len} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            TransportErrorKind::Truncated { missing } => {
+                write!(f, "stream ended mid-frame ({missing} bytes missing)")
+            }
+            TransportErrorKind::BadMagic { got } => {
+                write!(f, "bad frame magic {got:#010x} (expected {FRAME_MAGIC:#010x})")
+            }
+            TransportErrorKind::UnexpectedTag { expected, got } => {
+                write!(f, "unexpected frame tag {got} (expected {expected})")
+            }
+            TransportErrorKind::Io { kind } => write!(f, "i/o failure: {kind:?}"),
+            TransportErrorKind::Protocol { what } => write!(f, "protocol violation: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Map an `io::Error` seen on a link to the typed transport failure.
+/// `WouldBlock`/`TimedOut` are the socket-timeout watchdog, the
+/// disconnect family is [`TransportErrorKind::Closed`].
+fn io_kind(e: &io::Error, waited: Duration) -> TransportErrorKind {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => TransportErrorKind::Timeout {
+            waited_ms: waited.as_millis() as u64,
+        },
+        io::ErrorKind::BrokenPipe
+        | io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::UnexpectedEof => TransportErrorKind::Closed,
+        kind => TransportErrorKind::Io { kind },
+    }
+}
+
+/// A byte stream a [`FramedStream`] can run over: either a real Unix
+/// socket to another process or the in-process loopback queue.
+pub enum Conn {
+    /// Unix-domain socket (real rank processes).
+    Unix(UnixStream),
+    /// In-process duplex queue (tests, thread-backed workers).
+    Loopback(LoopbackEnd),
+}
+
+impl Conn {
+    /// Install a read timeout (the watchdog): `None` blocks forever.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.set_read_timeout(t),
+            Conn::Loopback(l) => {
+                l.set_read_timeout(t);
+                Ok(())
+            }
+        }
+    }
+
+    /// Install a write timeout (Unix sockets only; loopback writes are
+    /// unbounded-queue and never block).
+    pub fn set_write_timeout(&mut self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.set_write_timeout(t),
+            Conn::Loopback(_) => Ok(()),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Loopback(l) => l.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Loopback(l) => l.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Loopback(l) => l.flush(),
+        }
+    }
+}
+
+/// One direction of a loopback link: a byte queue + closed flag behind a
+/// condvar, so reads can block with a timeout like a socket.
+struct LoopbackHalf {
+    state: Mutex<(VecDeque<u8>, bool)>,
+    cv: Condvar,
+}
+
+impl LoopbackHalf {
+    fn new() -> Arc<LoopbackHalf> {
+        Arc::new(LoopbackHalf {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// One endpoint of an in-process duplex byte stream (see
+/// [`loopback_pair`]).  Implements `Read`/`Write` with socket-like
+/// semantics: reads block until bytes, EOF (peer dropped -> `Ok(0)`) or
+/// the configured timeout (`WouldBlock`); writes to a dropped peer fail
+/// with `BrokenPipe`.
+pub struct LoopbackEnd {
+    inbox: Arc<LoopbackHalf>,
+    outbox: Arc<LoopbackHalf>,
+    read_timeout: Option<Duration>,
+}
+
+impl LoopbackEnd {
+    /// Install a read timeout: `None` blocks until bytes or EOF.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) {
+        self.read_timeout = t;
+    }
+}
+
+/// Create a connected pair of in-process loopback endpoints — the
+/// spawn-free twin of a Unix socketpair, used to unit-test the whole
+/// coordinator/worker protocol on threads.
+pub fn loopback_pair() -> (LoopbackEnd, LoopbackEnd) {
+    let ab = LoopbackHalf::new();
+    let ba = LoopbackHalf::new();
+    (
+        LoopbackEnd {
+            inbox: ba.clone(),
+            outbox: ab.clone(),
+            read_timeout: None,
+        },
+        LoopbackEnd {
+            inbox: ab,
+            outbox: ba,
+            read_timeout: None,
+        },
+    )
+}
+
+impl Read for LoopbackEnd {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let deadline = self.read_timeout.map(|t| Instant::now() + t);
+        let mut st = self.inbox.state.lock().unwrap();
+        loop {
+            if !st.0.is_empty() {
+                let n = buf.len().min(st.0.len());
+                for b in buf[..n].iter_mut() {
+                    *b = st.0.pop_front().unwrap();
+                }
+                return Ok(n);
+            }
+            if st.1 {
+                return Ok(0); // peer dropped: EOF
+            }
+            match deadline {
+                None => st = self.inbox.cv.wait(st).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return Err(io::Error::new(io::ErrorKind::WouldBlock, "loopback read timeout"));
+                    }
+                    let (g, _) = self.inbox.cv.wait_timeout(st, dl - now).unwrap();
+                    st = g;
+                }
+            }
+        }
+    }
+}
+
+impl Write for LoopbackEnd {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let mut st = self.outbox.state.lock().unwrap();
+        if st.1 {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "loopback peer dropped"));
+        }
+        st.0.extend(buf.iter().copied());
+        self.outbox.cv.notify_all();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for LoopbackEnd {
+    fn drop(&mut self) {
+        // closing an end kills both directions, like a socket close
+        self.inbox.close();
+        self.outbox.close();
+    }
+}
+
+/// Length-framed messages over any byte stream: `send` writes
+/// `header | payload`, `recv` reads exactly one frame back, rejecting
+/// oversized ([`MAX_FRAME`]) and truncated frames with typed errors that
+/// name the peer.  Short reads/writes are looped over, so the framing is
+/// correct over any stream chunking (property-tested with a chaos stream
+/// that trickles 1-3 bytes at a time).
+pub struct FramedStream<S> {
+    stream: S,
+    peer: Peer,
+}
+
+impl<S: Read + Write> FramedStream<S> {
+    /// Wrap a stream; `peer` names the remote end in errors.
+    pub fn new(stream: S, peer: Peer) -> FramedStream<S> {
+        FramedStream { stream, peer }
+    }
+
+    /// The peer this link points at.
+    pub fn peer(&self) -> Peer {
+        self.peer
+    }
+
+    /// Re-label the peer (the coordinator learns the rank coordinates
+    /// from the Hello frame, after the link already exists).
+    pub fn set_peer(&mut self, peer: Peer) {
+        self.peer = peer;
+    }
+
+    /// Mutable access to the underlying stream (timeout installation).
+    pub fn stream_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Send one frame.
+    pub fn send(&mut self, tag: u32, payload: &[u8]) -> Result<(), TransportError> {
+        let t0 = Instant::now();
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        header[4..8].copy_from_slice(&tag.to_le_bytes());
+        header[8..16].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        self.write_all(&header, t0)?;
+        self.write_all(payload, t0)?;
+        self.stream
+            .flush()
+            .map_err(|e| TransportError::new(self.peer, "send", io_kind(&e, t0.elapsed())))?;
+        Ok(())
+    }
+
+    /// Receive one frame, returning `(tag, payload)`.
+    pub fn recv(&mut self) -> Result<(u32, Vec<u8>), TransportError> {
+        let t0 = Instant::now();
+        let mut header = [0u8; HEADER_LEN];
+        self.read_all(&mut header, t0, true)?;
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        if magic != FRAME_MAGIC {
+            return Err(TransportError::new(
+                self.peer,
+                "recv",
+                TransportErrorKind::BadMagic { got: magic },
+            ));
+        }
+        let tag = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        if len > MAX_FRAME {
+            return Err(TransportError::new(
+                self.peer,
+                "recv",
+                TransportErrorKind::FrameTooLarge { len },
+            ));
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.read_all(&mut payload, t0, false)?;
+        Ok((tag, payload))
+    }
+
+    /// Receive one frame and require its tag.
+    pub fn recv_expect(&mut self, tag: u32) -> Result<Vec<u8>, TransportError> {
+        let (got, payload) = self.recv()?;
+        if got != tag {
+            return Err(TransportError::new(
+                self.peer,
+                "recv",
+                TransportErrorKind::UnexpectedTag { expected: tag, got },
+            ));
+        }
+        Ok(payload)
+    }
+
+    /// `write_all` with short-write looping and typed error mapping.
+    fn write_all(&mut self, mut buf: &[u8], t0: Instant) -> Result<(), TransportError> {
+        while !buf.is_empty() {
+            match self.stream.write(buf) {
+                Ok(0) => {
+                    return Err(TransportError::new(
+                        self.peer,
+                        "send",
+                        TransportErrorKind::Closed,
+                    ))
+                }
+                Ok(n) => buf = &buf[n..],
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(TransportError::new(self.peer, "send", io_kind(&e, t0.elapsed())))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `read_exact` with partial-read looping; EOF at a frame boundary
+    /// is [`TransportErrorKind::Closed`], EOF inside a frame is
+    /// [`TransportErrorKind::Truncated`].
+    fn read_all(
+        &mut self,
+        buf: &mut [u8],
+        t0: Instant,
+        at_boundary: bool,
+    ) -> Result<(), TransportError> {
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => {
+                    let kind = if at_boundary && filled == 0 {
+                        TransportErrorKind::Closed
+                    } else {
+                        TransportErrorKind::Truncated {
+                            missing: buf.len() - filled,
+                        }
+                    };
+                    return Err(TransportError::new(self.peer, "recv", kind));
+                }
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(TransportError::new(self.peer, "recv", io_kind(&e, t0.elapsed())))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Accept one connection on a nonblocking listener before `deadline`,
+/// returning the stream switched back to blocking mode.  Used by the
+/// coordinator's handshake so a worker that never connects (spawn
+/// failure, wrong binary) surfaces as a timeout instead of a hang.
+pub fn accept_with_deadline(
+    listener: &UnixListener,
+    deadline: Instant,
+) -> io::Result<UnixStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                stream.set_nonblocking(false)?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "no worker connected before the handshake deadline",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_round_trip() {
+        let (a, b) = loopback_pair();
+        let mut tx = FramedStream::new(a, Peer::Rank([1, 2, 3]));
+        let mut rx = FramedStream::new(b, Peer::Coordinator);
+        tx.send(7, b"hello frames").unwrap();
+        tx.send(8, &[]).unwrap();
+        let (tag, body) = rx.recv().unwrap();
+        assert_eq!((tag, body.as_slice()), (7, b"hello frames".as_slice()));
+        let body = rx.recv_expect(8).unwrap();
+        assert!(body.is_empty());
+    }
+
+    #[test]
+    fn unix_socketpair_round_trip() {
+        let (a, b) = UnixStream::pair().expect("socketpair");
+        let mut tx = FramedStream::new(Conn::Unix(a), Peer::Coordinator);
+        let mut rx = FramedStream::new(Conn::Unix(b), Peer::Rank([0, 0, 0]));
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let sender = std::thread::spawn(move || {
+            tx.send(42, &payload).unwrap();
+            tx
+        });
+        let (tag, body) = rx.recv().unwrap();
+        assert_eq!(tag, 42);
+        assert_eq!(body.len(), 100_000);
+        assert!(body.iter().enumerate().all(|(i, &b)| b == (i % 251) as u8));
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_peer_reads_as_closed() {
+        let (a, b) = loopback_pair();
+        let mut rx = FramedStream::new(a, Peer::Rank([2, 0, 1]));
+        drop(b);
+        let err = rx.recv().expect_err("EOF must be an error");
+        assert_eq!(err.kind, TransportErrorKind::Closed);
+        assert!(err.to_string().contains("rank (2, 0, 1)"), "{err}");
+    }
+
+    #[test]
+    fn read_timeout_is_typed() {
+        let (a, mut b) = loopback_pair();
+        b.set_read_timeout(Some(Duration::from_millis(20)));
+        let mut rx = FramedStream::new(b, Peer::Rank([0, 1, 0]));
+        let err = rx.recv().expect_err("timeout must be an error");
+        assert!(
+            matches!(err.kind, TransportErrorKind::Timeout { .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("rank (0, 1, 0)"), "{err}");
+        drop(a);
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_before_allocation() {
+        let (a, b) = loopback_pair();
+        let mut raw = a;
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        header[4..8].copy_from_slice(&1u32.to_le_bytes());
+        header[8..16].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        raw.write_all_buf(&header);
+        let mut rx = FramedStream::new(b, Peer::Rank([0, 0, 0]));
+        let err = rx.recv().expect_err("oversized frame must be rejected");
+        assert!(
+            matches!(err.kind, TransportErrorKind::FrameTooLarge { len } if len == MAX_FRAME + 1),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn truncated_frame_is_rejected() {
+        let (a, b) = loopback_pair();
+        {
+            let mut raw = a;
+            let mut header = [0u8; HEADER_LEN];
+            header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+            header[4..8].copy_from_slice(&3u32.to_le_bytes());
+            header[8..16].copy_from_slice(&100u64.to_le_bytes());
+            raw.write_all_buf(&header);
+            raw.write_all_buf(b"only ten b");
+            // `a` drops here: stream ends 90 bytes short of the frame
+        }
+        let mut rx = FramedStream::new(b, Peer::Rank([1, 1, 1]));
+        let err = rx.recv().expect_err("truncated frame must be rejected");
+        assert!(
+            matches!(err.kind, TransportErrorKind::Truncated { missing } if missing == 90),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let (a, b) = loopback_pair();
+        let mut raw = a;
+        raw.write_all_buf(&[0xDEu8; HEADER_LEN]);
+        let mut rx = FramedStream::new(b, Peer::Rank([0, 0, 0]));
+        let err = rx.recv().expect_err("bad magic must be rejected");
+        assert!(matches!(err.kind, TransportErrorKind::BadMagic { .. }), "{err}");
+    }
+
+    #[test]
+    fn unexpected_tag_is_typed() {
+        let (a, b) = loopback_pair();
+        let mut tx = FramedStream::new(a, Peer::Coordinator);
+        let mut rx = FramedStream::new(b, Peer::Rank([0, 2, 0]));
+        tx.send(5, b"x").unwrap();
+        let err = rx.recv_expect(6).expect_err("tag mismatch must be typed");
+        assert!(
+            matches!(err.kind, TransportErrorKind::UnexpectedTag { expected: 6, got: 5 }),
+            "{err}"
+        );
+    }
+
+    impl LoopbackEnd {
+        /// test helper: raw write without framing
+        fn write_all_buf(&mut self, buf: &[u8]) {
+            let mut rest = buf;
+            while !rest.is_empty() {
+                let n = self.write(rest).unwrap();
+                rest = &rest[n..];
+            }
+        }
+    }
+}

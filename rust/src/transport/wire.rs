@@ -1,0 +1,147 @@
+//! Payload encode/decode helpers for the rank-process protocol.
+//!
+//! Everything on the wire is little-endian fixed-width scalars; these
+//! helpers keep the (de)serialization in one place and make payload
+//! size violations typed ([`TransportErrorKind::Protocol`]) instead of
+//! panics.
+
+use super::{Peer, TransportError, TransportErrorKind};
+use crate::fft::C64;
+
+/// Append a `u32` (little-endian).
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64` (little-endian).
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f64` (little-endian bit pattern — exact round trip).
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append a complex value as `re | im`.
+pub fn put_c64(buf: &mut Vec<u8>, v: C64) {
+    put_f64(buf, v.re);
+    put_f64(buf, v.im);
+}
+
+/// A cursor over a received payload with typed underrun errors.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    peer: Peer,
+    phase: &'a str,
+}
+
+impl<'a> Reader<'a> {
+    /// Wrap a payload; `peer`/`phase` label any decode error.
+    pub fn new(buf: &'a [u8], peer: Peer, phase: &'a str) -> Reader<'a> {
+        Reader {
+            buf,
+            pos: 0,
+            peer,
+            phase,
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], TransportError> {
+        if self.pos + n > self.buf.len() {
+            return Err(TransportError::new(
+                self.peer,
+                self.phase,
+                TransportErrorKind::Protocol {
+                    what: format!(
+                        "payload underrun: wanted {n} bytes at offset {}, have {}",
+                        self.pos,
+                        self.buf.len()
+                    ),
+                },
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32, TransportError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64, TransportError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read an `f64` (exact bit pattern).
+    pub fn f64(&mut self) -> Result<f64, TransportError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a complex value (`re | im`).
+    pub fn c64(&mut self) -> Result<C64, TransportError> {
+        let re = self.f64()?;
+        let im = self.f64()?;
+        Ok(C64 { re, im })
+    }
+
+    /// Require the payload to be fully consumed.
+    pub fn finish(self) -> Result<(), TransportError> {
+        if self.pos != self.buf.len() {
+            return Err(TransportError::new(
+                self.peer,
+                self.phase,
+                TransportErrorKind::Protocol {
+                    what: format!(
+                        "payload overrun: {} trailing bytes",
+                        self.buf.len() - self.pos
+                    ),
+                },
+            ));
+        }
+        Ok(())
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trip_is_exact() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 3);
+        put_f64(&mut buf, -0.1f64);
+        put_c64(&mut buf, C64 { re: 1e-300, im: f64::MAX });
+        let mut r = Reader::new(&buf, Peer::Coordinator, "test");
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.1f64).to_bits());
+        let c = r.c64().unwrap();
+        assert_eq!(c.re.to_bits(), 1e-300f64.to_bits());
+        assert_eq!(c.im.to_bits(), f64::MAX.to_bits());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn underrun_and_overrun_are_typed() {
+        let buf = [0u8; 6];
+        let mut r = Reader::new(&buf, Peer::Rank([1, 0, 2]), "test");
+        let err = r.u64().expect_err("underrun");
+        assert!(err.to_string().contains("rank (1, 0, 2)"), "{err}");
+        let mut r = Reader::new(&buf, Peer::Coordinator, "test");
+        r.u32().unwrap();
+        let err = r.finish().expect_err("overrun");
+        assert!(matches!(err.kind, TransportErrorKind::Protocol { .. }), "{err}");
+    }
+}

@@ -161,6 +161,99 @@ fn bad_dist_ranks_are_rejected() {
 }
 
 #[test]
+fn bad_proc_ranks_are_rejected_naming_the_axis() {
+    // the process-executed backend shares the emulated backend's rank
+    // validation, and the error names the offending dimension: a user
+    // typing `--ranks 0,2,1` learns it is the x axis that is malformed
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::DistProc {
+            alpha: 0.3,
+            ranks: [0, 2, 1],
+            quantized: false,
+        })
+        .build()
+        .expect_err("ranks[0] = 0 must be rejected before any spawn");
+    let msg = err.to_string();
+    assert!(msg.contains("ranks[0]"), "unexpected error: {err:#}");
+    assert!(msg.contains("x axis"), "unexpected error: {err:#}");
+
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::DistProc {
+            alpha: 0.3,
+            ranks: [1, 4096, 1],
+            quantized: false,
+        })
+        .build()
+        .expect_err("oversubscribed torus dimension must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("ranks[1]"), "unexpected error: {err:#}");
+    assert!(msg.contains("y axis"), "unexpected error: {err:#}");
+
+    // the emulated backend now names the axis too
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::Dist {
+            alpha: 0.3,
+            ranks: [2, 1, 0],
+            quantized: false,
+            matvec: false,
+        })
+        .build()
+        .expect_err("ranks[2] = 0 must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("ranks[2]"), "unexpected error: {err:#}");
+    assert!(msg.contains("z axis"), "unexpected error: {err:#}");
+}
+
+#[test]
+fn proc_rank_count_is_capped() {
+    // each rank is a real OS process: a fork-bomb-sized torus must fail
+    // validation, not spawn 125 workers
+    let err = builder()
+        .threads(1)
+        .kspace(KspaceConfig::DistProc {
+            alpha: 0.3,
+            ranks: [5, 5, 5],
+            quantized: false,
+        })
+        .build()
+        .expect_err("125 worker processes must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("worker processes"), "unexpected error: {err:#}");
+    assert!(msg.contains("125"), "unexpected error: {err:#}");
+}
+
+#[test]
+fn proc_worker_spawn_failure_is_a_build_error() {
+    // a broken worker binary must surface at build() as a typed error
+    // naming the backend and the phase — not a hang or a panic
+    let _guard = ENV_LOCK.lock().unwrap();
+    let saved = std::env::var("DPLR_WORKER_BIN").ok();
+    std::env::set_var("DPLR_WORKER_BIN", "/nonexistent/dplr-worker-binary");
+
+    let res = builder()
+        .threads(1)
+        .kspace(KspaceConfig::DistProc {
+            alpha: 0.3,
+            ranks: [2, 1, 1],
+            quantized: false,
+        })
+        .build();
+
+    match saved {
+        Some(v) => std::env::set_var("DPLR_WORKER_BIN", v),
+        None => std::env::remove_var("DPLR_WORKER_BIN"),
+    }
+
+    let err = res.expect_err("nonexistent worker binary must fail build()");
+    let msg = err.to_string();
+    assert!(msg.contains("dist-proc kspace"), "unexpected error: {err:#}");
+    assert!(msg.contains("worker spawn"), "unexpected error: {err:#}");
+}
+
+#[test]
 fn mts_zero_is_rejected_and_valid_strides_are_recorded() {
     let err = builder()
         .threads(1)

@@ -1,0 +1,271 @@
+//! Fault injection for the process-executed rank torus: a rank that dies
+//! or stalls mid-solve must surface as a typed [`TransportError`] naming
+//! the rank's torus coordinates within the watchdog timeout — never a
+//! deadlock — and child processes must be reaped (no zombies) on both
+//! the success and the failure paths.
+//!
+//! CI wraps this suite in a hard job timeout so a regression that *does*
+//! deadlock fails fast instead of hanging the runner.
+//!
+//! Runs from a clean checkout (synthetic seeded weights, no artifacts).
+
+use dplr::distpppm::process::{ProcOptions, ProcPppm, WorkerLauncher};
+use dplr::distpppm::RingPayload;
+use dplr::pppm::PppmConfig;
+use dplr::transport::TransportErrorKind;
+use dplr::util::rng::Rng;
+use std::sync::Once;
+use std::time::{Duration, Instant};
+
+static WORKER_BIN: Once = Once::new();
+
+fn set_worker_bin() {
+    WORKER_BIN.call_once(|| std::env::set_var("DPLR_WORKER_BIN", env!("CARGO_BIN_EXE_dplr")));
+}
+
+fn cfg() -> PppmConfig {
+    PppmConfig::new([12, 18, 12], 5, 0.3)
+}
+
+fn test_sites(n: usize, seed: u64) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
+    let box_len = [9.3, 11.1, 9.3];
+    let mut r = Rng::new(seed);
+    let pos = (0..n)
+        .map(|_| {
+            [
+                r.range(0.0, box_len[0]),
+                r.range(0.0, box_len[1]),
+                r.range(0.0, box_len[2]),
+            ]
+        })
+        .collect();
+    let q = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    (pos, q, box_len)
+}
+
+/// No-zombie assertion: after reaping, `/proc/<pid>/stat` is either gone
+/// entirely or (pid reuse aside) not in the `Z` state.
+fn assert_not_zombie(pid: u32) {
+    if let Ok(stat) = std::fs::read_to_string(format!("/proc/{pid}/stat")) {
+        // the state field follows the parenthesized comm, which may
+        // itself contain spaces — split from the right
+        let state = stat
+            .rsplit(')')
+            .next()
+            .unwrap_or("")
+            .trim()
+            .chars()
+            .next();
+        assert_ne!(state, Some('Z'), "pid {pid} was left a zombie");
+    }
+}
+
+#[test]
+fn clean_shutdown_reaps_every_worker() {
+    set_worker_bin();
+    let (pos, q, box_len) = test_sites(24, 41);
+    let mut solver = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        [2, 2, 1],
+        RingPayload::F64,
+        &WorkerLauncher::from_env(),
+        &ProcOptions::default(),
+    )
+    .expect("spawn");
+    let pids = solver.worker_pids();
+    assert_eq!(pids.len(), 4);
+    solver.energy_forces(&pos, &q).expect("healthy solve");
+    solver.shutdown();
+    for pid in pids {
+        assert_not_zombie(pid);
+    }
+}
+
+#[test]
+fn stalled_rank_times_out_with_named_coordinates() {
+    // rank (1, 0, 0) goes silent right before its first ring send; the
+    // coordinator's watchdog must fire within the timeout (not deadlock)
+    // and the error must carry the rank's torus coordinates
+    set_worker_bin();
+    let (pos, q, box_len) = test_sites(24, 42);
+    let watchdog = Duration::from_millis(400);
+    let mut solver = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        [2, 1, 1],
+        RingPayload::F64,
+        &WorkerLauncher::from_env(),
+        &ProcOptions {
+            watchdog,
+            stall: Some(([1, 0, 0], 60_000)),
+        },
+    )
+    .expect("spawn");
+    let pids = solver.worker_pids();
+    let t0 = Instant::now();
+    let err = solver
+        .energy_forces(&pos, &q)
+        .expect_err("stalled peer must fail the solve");
+    let waited = t0.elapsed();
+    assert!(
+        waited < watchdog + Duration::from_secs(3),
+        "watchdog did not bound the stall: waited {waited:?}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("rank (1, 0, 0)"), "unhelpful error: {msg}");
+    assert!(
+        matches!(err.kind, TransportErrorKind::Timeout { .. }),
+        "expected a timeout, got: {err}"
+    );
+    // teardown must reap the sleeping child (kill after the grace period)
+    solver.shutdown();
+    for pid in pids {
+        assert_not_zombie(pid);
+    }
+}
+
+#[test]
+fn killed_rank_mid_solve_surfaces_closed_with_named_coordinates() {
+    // SIGKILL rank (1, 0, 0) while the solve is in flight (it is held in
+    // a stall so the kill reliably lands mid-transform): the coordinator
+    // must report the severed link with the rank's coordinates, well
+    // before the watchdog, and reap everything
+    set_worker_bin();
+    let (pos, q, box_len) = test_sites(24, 43);
+    let mut solver = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        [2, 1, 1],
+        RingPayload::F64,
+        &WorkerLauncher::from_env(),
+        &ProcOptions {
+            watchdog: Duration::from_millis(5000),
+            stall: Some(([1, 0, 0], 60_000)),
+        },
+    )
+    .expect("spawn");
+    let pids = solver.worker_pids();
+    assert_eq!(pids.len(), 2);
+    let victim = pids[1]; // children are stored in linear rank order
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(200));
+        let status = std::process::Command::new("sh")
+            .arg("-c")
+            .arg(format!("kill -9 {victim}"))
+            .status()
+            .expect("spawn kill");
+        assert!(status.success(), "kill -9 {victim} failed");
+    });
+    let t0 = Instant::now();
+    let err = solver
+        .energy_forces(&pos, &q)
+        .expect_err("killed rank must fail the solve");
+    let waited = t0.elapsed();
+    killer.join().unwrap();
+    assert!(
+        waited < Duration::from_secs(4),
+        "took {waited:?} — the EOF should arrive long before the watchdog"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("rank (1, 0, 0)"), "unhelpful error: {msg}");
+    assert!(
+        matches!(err.kind, TransportErrorKind::Closed),
+        "expected a closed link, got: {err}"
+    );
+    // the solver is poisoned: the next solve returns the same typed
+    // error immediately instead of deadlocking on dead links
+    let again = solver
+        .energy_forces(&pos, &q)
+        .expect_err("poisoned solver must stay failed");
+    assert_eq!(again, err);
+    solver.shutdown();
+    for pid in pids {
+        assert_not_zombie(pid);
+    }
+}
+
+#[test]
+fn cross_solve_kill_is_detected_on_the_next_solve() {
+    // death BETWEEN solves (no stall, no in-flight transform): the next
+    // scatter hits the dead socket and names the rank
+    set_worker_bin();
+    let (pos, q, box_len) = test_sites(24, 44);
+    let mut solver = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        [2, 1, 1],
+        RingPayload::F64,
+        &WorkerLauncher::from_env(),
+        &ProcOptions::default(),
+    )
+    .expect("spawn");
+    let pids = solver.worker_pids();
+    solver.energy_forces(&pos, &q).expect("healthy solve");
+    solver.kill_worker([1, 0, 0]);
+    let err = solver
+        .energy_forces(&pos, &q)
+        .expect_err("dead rank must fail the next solve");
+    assert!(
+        err.to_string().contains("rank (1, 0, 0)"),
+        "unhelpful error: {err}"
+    );
+    solver.shutdown();
+    for pid in pids {
+        assert_not_zombie(pid);
+    }
+}
+
+#[test]
+fn loopback_stall_injection_times_out_identically() {
+    // the same watchdog semantics on the in-process loopback transport
+    // (no processes at all): protocol-level fault coverage that runs
+    // everywhere, even where spawning is restricted
+    let (pos, q, box_len) = test_sites(24, 45);
+    let mut solver = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        [2, 1, 1],
+        RingPayload::F64,
+        &WorkerLauncher::InProcess,
+        &ProcOptions {
+            watchdog: Duration::from_millis(300),
+            stall: Some(([1, 0, 0], 20_000)),
+        },
+    )
+    .expect("spawn loopback");
+    let t0 = Instant::now();
+    let err = solver
+        .energy_forces(&pos, &q)
+        .expect_err("stalled loopback worker must time out");
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "loopback watchdog did not fire"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("rank (1, 0, 0)"), "unhelpful error: {msg}");
+    assert!(
+        matches!(err.kind, TransportErrorKind::Timeout { .. }),
+        "expected a timeout, got: {err}"
+    );
+    solver.shutdown();
+}
+
+#[test]
+fn spawn_failure_reports_the_rank_it_could_not_launch() {
+    // a nonexistent worker binary must fail the spawn itself (not hang
+    // the handshake), naming the rank being launched
+    let (_, _, box_len) = test_sites(4, 46);
+    let err = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        [2, 1, 1],
+        RingPayload::F64,
+        &WorkerLauncher::Binary("/nonexistent/dplr-worker-binary".into()),
+        &ProcOptions::default(),
+    )
+    .expect_err("nonexistent binary must fail to spawn");
+    let msg = err.to_string();
+    assert!(msg.contains("worker spawn"), "unexpected phase: {msg}");
+    assert!(msg.contains("rank (0, 0, 0)"), "unhelpful error: {msg}");
+}
