@@ -14,11 +14,14 @@
 //! are wall time, so they stay un-gated until the `bench-baseline` job
 //! refreshes `BENCH_baseline.json` (see docs/PERFORMANCE.md).
 //!
-//! A `measured_proc_*` section then times the **process-executed** ranks
-//! (`ProcPppm`: spawned `dplr rank-worker` processes over the Unix-socket
+//! A `measured_proc_resident_*` section then times the **process-executed**
+//! rank-resident pipeline (`ProcPppm`: spawned `dplr rank-worker` processes
+//! keeping their mesh bricks resident across solves, exchanging only site
+//! slabs / ring frames / halos / force slabs over the Unix-socket
 //! transport) and fits measured per-message timings to the alpha-beta
 //! model (`mpisim::fit_alpha_beta`) — printed beside the analytic
-//! `MachineConfig` constants.  Also wall time, also un-gated.
+//! `MachineConfig` constants, together with the per-solve traffic-counter
+//! breakdown (`ProcPppm::traffic`).  Also wall time, also un-gated.
 //!
 //! Flags: `--quick` (CI configuration: fewer reps, skip the model table),
 //! `--json PATH` writes `{"bench": "fig8_fft", "results": {...}}` for the
@@ -185,7 +188,7 @@ fn main() {
     // alpha-beta fit next to the analytic models above.  Needs the dplr
     // binary, which cargo only exposes to bench/test builds — skip (with
     // a note) when it is absent rather than fail.
-    println!("\n=== process-executed ranks (ProcPppm over the socket transport) ===");
+    println!("\n=== process-executed resident ranks (ProcPppm over the socket transport) ===");
     match option_env!("CARGO_BIN_EXE_dplr") {
         None => println!("  (skipped: CARGO_BIN_EXE_dplr not set at compile time)"),
         Some(bin) => {
@@ -222,16 +225,22 @@ fn main() {
                         }))
                         .p50;
                         let key = format!(
-                            "measured_proc_{}{}{}_f64",
+                            "measured_proc_resident_{}{}{}_f64",
                             ranks[0], ranks[1], ranks[2]
                         );
+                        let tr = proc_solver.traffic();
+                        let per_solve =
+                            (tr.sites + tr.control + tr.halo + tr.forces) / tr.solves.max(1);
                         println!(
-                            "  ranks {}x{}x{}: {:9.3} ms/solve over {} messages",
+                            "  ranks {}x{}x{}: {:9.3} ms/solve over {} messages \
+                             ({} B/solve coord<->worker + {} B/solve ring relay)",
                             ranks[0],
                             ranks[1],
                             ranks[2],
                             t * 1e3,
                             proc_solver.message_samples().len(),
+                            per_solve,
+                            tr.ring / tr.solves.max(1),
                         );
                         results.insert(key, Json::Num(t));
                         all_samples.extend_from_slice(proc_solver.message_samples());
@@ -250,8 +259,9 @@ fn main() {
                         mcfg.p2p_latency * 1e6,
                         1e9 / mcfg.link_bandwidth,
                     );
-                    results.insert("measured_proc_alpha".to_string(), Json::Num(alpha));
-                    results.insert("measured_proc_beta".to_string(), Json::Num(beta));
+                    results
+                        .insert("measured_proc_resident_alpha".to_string(), Json::Num(alpha));
+                    results.insert("measured_proc_resident_beta".to_string(), Json::Num(beta));
                 }
             }
         }

@@ -1,39 +1,73 @@
-//! Process-executed rank torus for `--kspace dist --proc`: the same
-//! section-3.1 ring schedule as the emulated [`RankFft`](super::RankFft),
-//! but with each rank holding **its own brick** in a real OS process (or
-//! a loopback-linked thread), exchanging ring payloads over the
-//! [`crate::transport`] layer.
+//! Process-executed rank torus for `--kspace dist --proc`: the full PPPM
+//! pipeline of paper section 3.1 run **rank-resident** — each rank holds
+//! its `MeshDecomp` brick in a real OS process (or a loopback-linked
+//! thread) across steps, and the coordinator exchanges only per-rank
+//! site/charge slabs, ring frames, ghost halos and per-rank force slabs
+//! over the [`crate::transport`] layer.  Spread, Poisson/ik and gather
+//! all run worker-side; nothing O(full mesh) crosses the wire.
 //!
 //! # Topology and protocol
 //!
 //! Workers connect to the coordinator in a star over a Unix-domain
-//! socket; the coordinator relays ring frames between d-neighbours
-//! (recv-all-then-send-all per hop, which is deadlock-free because every
-//! worker sends its hop frame before posting the matching receive).  Per
-//! 3-D transform (4 per PPPM solve):
+//! socket; the coordinator relays ring and halo frames between ranks
+//! (recv-all-then-send-all per phase, which is deadlock-free because
+//! every worker sends its frame before posting the matching receive).
+//! Per solve:
 //!
 //! ```text
 //! coordinator                          worker (x, y, z)
-//!     | -- Transform(fwd, seq, brick) --> |   scatter: per-rank brick
-//!     |    per dim d in z, y, x with R_d > 1:
-//!     | <--------- MaxAbs(line maxes) --- |   (quantized ring only)
-//!     | ---- MaxAbsRed(group maxes) ----> |   exact f64 max-reduce
+//!     | --- Setup(order,alpha,box) ----> |   once, and again after rebuild
+//!     | --- Sites(ids,pos,q slab) -----> |   counting-sort bins: the sites
+//!     |                                  |   touching this rank's brick
+//!     |                                  |   stencil + spread -> resident brick
+//!     |    forward transform, per dim d in z, y, x with R_d > 1:
+//!     | <--------- MaxAbs(line maxes) -- |   (quantized ring only)
+//!     | ---- MaxAbsRed(group maxes) ---> |   exact f64 max-reduce
 //!     |    per hop h in 0 .. R_d - 1:
-//!     | <--------- Ring(block) ---------- |   snapshot sent BEFORE any
-//!     | ---- RingDeliver(to successor) -> |   rank transforms its lines
-//!     | <------ BrickBack(sat, brick) --- |   gather: transformed brick
+//!     | <--------- Ring(block) --------- |   snapshot sent BEFORE any
+//!     | ---- RingDeliver(to successor) > |   rank transforms its lines
+//!     | <--------- EMax(brick max) ----- |   partition-invariant energy:
+//!     | ------ EQuant(shared quantum) -> |   global max fixes the tick size
+//!     |                                  |   Poisson + ik on the brick
+//!     |    3 inverse transforms: the same MaxAbs/Ring relay per dim
+//!     | <--------- Halo(owned ghosts) -- |   order-wide ghost shell,
+//!     | ------ HaloSet(this rank's) ---> |   assembled from all donors
+//!     |                                  |   gather owned sites locally
+//!     | <------ Forces(ticks,sat,rows) - |   per-rank force slab + energy
+//!     |                                  |   ticks, scattered by the bins
 //! ```
 //!
 //! The f64 ring allgathers each rank's **pre-transform** d-segments, so
 //! every rank reassembles each of its grid lines in strict ascending
 //! column order and closes with one whole-line local FFT — exactly the
-//! arithmetic of the emulated fast path, which is why the process run is
-//! bit-identical to `--kspace pppm` at any torus (`tests/proc_parity.rs`).
-//! The quantized ring ships each rank's int32-packed partial spectrum
-//! (8 bytes/value instead of 16, the paper's halved BG traffic) after an
-//! exact f64 max-reduce fixes the per-line scale; packed lane sums are
-//! integer-exact, so the result matches the emulated
-//! [`RingPayload::PackedI32`] ring value for value.
+//! arithmetic of the emulated fast path.  Worker-side spread reproduces
+//! the global kernel's fixed shard grouping and ascending site order
+//! ([`crate::pppm`]'s `brick_spread`), the energy reduction is the
+//! partition-invariant quantum/tick scheme (brick maxima fold to the
+//! same global maximum as grid shards; i128 tick sums are exact for any
+//! grouping), halos ship exact f64 ghost values in the canonical
+//! `for_each_ghost` order, and gather reuses the slab kernels verbatim —
+//! which is why the resident f64 path is **bit-identical** to
+//! `--kspace pppm` at any torus (`tests/proc_parity.rs`).  The quantized
+//! ring ships int32-packed partial spectra (8 bytes/value, the paper's
+//! halved BG traffic) after an exact f64 max-reduce fixes the per-line
+//! scale, and quantized gathers round ghost reads through the int32
+//! payload worker-side with scales from the same canonical ghost scan —
+//! so saturation counts match the emulated
+//! [`RingPayload::PackedI32`](super::RingPayload) path exactly.
+//!
+//! # Traffic accounting
+//!
+//! The coordinator counts payload bytes (frame bodies, both directions)
+//! per protocol family into [`ProcTraffic`]: `setup` is paid once per
+//! geometry (re)send, `sites + halo + control + forces` are the
+//! per-solve coordinator↔worker traffic — O(site slabs + ghost shells),
+//! not O(full mesh) — and `ring` counts the relayed ring/max-reduce
+//! frames (star-relayed here; rank-to-rank on a real torus network).
+//! `tests/proc_parity.rs` and the residency tests assert the brick is
+//! never re-scattered: `setup` stays constant after the first solve and
+//! the per-solve non-ring traffic stays far below the 4-transform
+//! full-mesh scatter/gather the pre-resident protocol paid.
 //!
 //! # Faults
 //!
@@ -48,10 +82,15 @@
 use super::RingPayload;
 use crate::distfft::DistFftSchedule;
 use crate::engine::KspaceSolver;
-use crate::fft::{C64, Fft1d, Fft3dScratch, SegmentFft};
-use crate::pool::ThreadPool;
+use crate::fft::{C64, Fft1d, SegmentFft};
+use crate::pool::{even_shards, ThreadPool};
 use crate::pppm::quant::{self, QuantSpec};
-use crate::pppm::{MeshDecomp, MeshMode, Pppm, PppmConfig};
+use crate::pppm::spline::MAX_ORDER;
+use crate::pppm::{
+    brick_spread, energy_quantum, energy_ticks, for_each_ghost, gather_site, gather_site_ghost,
+    owner_brick, stencil_inside, DecompBins, MeshDecomp, MeshMode, Pppm, PppmConfig,
+    REDUCE_SHARDS,
+};
 use crate::tofu::Torus;
 use crate::transport::{
     accept_with_deadline, loopback_pair, wire, Conn, FramedStream, Peer, TransportError,
@@ -67,15 +106,25 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-const TAG_HELLO: u32 = 1;
-const TAG_HELLO_ACK: u32 = 2;
-const TAG_TRANSFORM: u32 = 3;
-const TAG_RING: u32 = 4;
-const TAG_RING_DELIVER: u32 = 5;
-const TAG_MAXABS: u32 = 6;
-const TAG_MAXABS_RED: u32 = 7;
-const TAG_BRICK_BACK: u32 = 8;
-const TAG_BYE: u32 = 9;
+/// Wire tags of the resident protocol, public so the transport property
+/// suite can fuzz the exact frames the coordinator and workers exchange.
+/// The numbering is part of the coordinator↔worker ABI (both ends are
+/// always the same binary, so a renumbering is safe only when it ships
+/// atomically with the workers that speak it).
+pub const TAG_HELLO: u32 = 1;
+pub const TAG_HELLO_ACK: u32 = 2;
+pub const TAG_SETUP: u32 = 3;
+pub const TAG_SITES: u32 = 4;
+pub const TAG_RING: u32 = 5;
+pub const TAG_RING_DELIVER: u32 = 6;
+pub const TAG_MAXABS: u32 = 7;
+pub const TAG_MAXABS_RED: u32 = 8;
+pub const TAG_EMAX: u32 = 9;
+pub const TAG_EQUANT: u32 = 10;
+pub const TAG_HALO: u32 = 11;
+pub const TAG_HALO_SET: u32 = 12;
+pub const TAG_FORCES: u32 = 13;
+pub const TAG_BYE: u32 = 14;
 
 /// How rank workers are brought up.
 pub enum WorkerLauncher {
@@ -129,6 +178,33 @@ impl Default for ProcOptions {
     }
 }
 
+/// Cumulative coordinator↔worker payload bytes per protocol family
+/// (frame bodies, both directions — the 16-byte frame headers are
+/// excluded), plus the solve count.  The residency contract lives here:
+/// `setup` grows only when geometry is (re)sent, and
+/// `(sites + control + halo + forces) / solves` is the per-solve
+/// traffic — O(site slabs + ghost shells) instead of the full-mesh
+/// scatter/gather of a non-resident protocol.  `ring` counts the
+/// star-relayed ring/max-reduce frames separately (rank-to-rank links
+/// on a real torus network; see `docs/PERFORMANCE.md`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ProcTraffic {
+    /// `Setup` bytes: once at the first solve, again after each rebuild.
+    pub setup: u64,
+    /// `Sites` bytes: per-rank site/charge slabs, every solve.
+    pub sites: u64,
+    /// `Ring` + `RingDeliver` + `MaxAbs` + `MaxAbsRed` bytes.
+    pub ring: u64,
+    /// `EMax` + `EQuant` bytes (the energy reduction round).
+    pub control: u64,
+    /// `Halo` + `HaloSet` bytes (ghost-shell exchange).
+    pub halo: u64,
+    /// `Forces` bytes: per-rank force slabs + energy ticks.
+    pub forces: u64,
+    /// Completed solves the counters cover.
+    pub solves: u64,
+}
+
 /// Everything a rank worker needs to run its passes (parsed from the
 /// `rank-worker` CLI in process mode, built directly in loopback mode).
 pub(crate) struct WorkerCfg {
@@ -171,11 +247,70 @@ fn io_error(peer: Peer, phase: &str, e: &std::io::Error, watchdog: Duration) -> 
     TransportError::new(peer, phase, kind)
 }
 
-/// The process-executed distributed PPPM solver: a [`Pppm`] whose four
-/// 3-D transforms are carried out by real rank workers over the
-/// [`crate::transport`] layer (see the [module docs](self) for the
-/// protocol).  Registered as `dplr run --kspace dist --proc`
-/// (solver name `"dist-proc"`).
+/// The linear rank id owning grid point `(ia, ib, ic)` — the slab
+/// coordinate product both protocol sides use to route halo values.
+#[inline]
+fn owner_lin(dc: &MeshDecomp, ia: usize, ib: usize, ic: usize) -> usize {
+    (dc.slab_of[0][ia] as usize * dc.rdims[1] + dc.slab_of[1][ib] as usize) * dc.rdims[2]
+        + dc.slab_of[2][ic] as usize
+}
+
+/// Static halo-exchange geometry, derived identically on both protocol
+/// sides from the [`MeshDecomp`]: per receiver, how many ghost points
+/// its window holds; per donor, how many of everyone's ghost points it
+/// owns.  Ghost points are enumerated in the canonical
+/// [`for_each_ghost`] 3-shell order per receiver, receivers in linear
+/// rank order — so a single monotonic cursor per donor stream
+/// reassembles every receiver's shell, and payload sizes are fully
+/// predicted (typed protocol errors instead of framing ambiguity).
+struct HaloPlan {
+    /// Total ghost points across all receivers (0 ⇒ no halo round).
+    ghost_total: usize,
+    /// Ghost points per receiver rank.
+    ghosts: Vec<usize>,
+    /// Ghost points (across all receivers) owned by each donor rank.
+    donor_pts: Vec<usize>,
+}
+
+impl HaloPlan {
+    fn new(dc: &MeshDecomp) -> HaloPlan {
+        let nb = dc.bricks.len();
+        let mut ghosts = vec![0usize; nb];
+        let mut donor_pts = vec![0usize; nb];
+        let mut ghost_total = 0usize;
+        for r in 0..nb {
+            for_each_ghost(&dc.bricks[r], &dc.windows[r], |ia, ib, ic| {
+                ghosts[r] += 1;
+                donor_pts[owner_lin(dc, ia, ib, ic)] += 1;
+                ghost_total += 1;
+            });
+        }
+        HaloPlan {
+            ghost_total,
+            ghosts,
+            donor_pts,
+        }
+    }
+}
+
+/// Time one tagged receive into the alpha-beta fit samples.
+fn recv_timed(
+    link: &mut FramedStream<Conn>,
+    tag: u32,
+    phase: &str,
+    samples: &mut Vec<(usize, f64)>,
+) -> Result<Vec<u8>, TransportError> {
+    let t0 = Instant::now();
+    let p = link.recv_expect(tag).map_err(|e| e.in_phase(phase))?;
+    samples.push((p.len(), t0.elapsed().as_secs_f64()));
+    Ok(p)
+}
+
+/// The process-executed distributed PPPM solver: rank-resident bricks
+/// run the full spread / transform / Poisson / gather pipeline in real
+/// rank workers over the [`crate::transport`] layer (see the
+/// [module docs](self) for the protocol).  Registered as
+/// `dplr run --kspace dist --proc` (solver name `"dist-proc"`).
 ///
 /// The typed entry point is [`ProcPppm::try_energy_forces_into`]; the
 /// [`KspaceSolver`] impl wraps it and **panics** on a transport failure
@@ -183,6 +318,8 @@ fn io_error(peer: Peer, phase: &str, e: &std::io::Error, watchdog: Duration) -> 
 /// rank-naming message either way.  After a failure the solver is
 /// poisoned: every subsequent solve returns the first error.
 pub struct ProcPppm {
+    /// Coordinator-side [`Pppm`] — used only for the stencil arithmetic
+    /// behind the counting-sort bins (the workers own the mesh tables).
     inner: Pppm,
     decomp: MeshDecomp,
     sched: DistFftSchedule,
@@ -193,7 +330,14 @@ pub struct ProcPppm {
     samples: Vec<(usize, f64)>,
     err: Option<TransportError>,
     socket_path: Option<PathBuf>,
-    seq: u64,
+    box_len: [f64; 3],
+    bins: DecompBins,
+    si: Vec<u32>,
+    sw: Vec<f64>,
+    halo: HaloPlan,
+    sat: u64,
+    traffic: ProcTraffic,
+    setup_sent: bool,
     done: bool,
 }
 
@@ -242,6 +386,7 @@ impl ProcPppm {
             cfg.grid,
             payload == RingPayload::PackedI32,
         );
+        let halo = HaloPlan::new(&decomp);
         let nranks = ranks[0] * ranks[1] * ranks[2];
         let mut children: Vec<ChildHandle> = Vec::new();
         let mut links: Vec<Option<FramedStream<Conn>>> = (0..nranks).map(|_| None).collect();
@@ -275,12 +420,19 @@ impl ProcPppm {
             samples: Vec::new(),
             err: None,
             socket_path,
-            seq: 0,
+            box_len,
+            bins: DecompBins::default(),
+            si: Vec::new(),
+            sw: Vec::new(),
+            halo,
+            sat: 0,
+            traffic: ProcTraffic::default(),
+            setup_sent: false,
             done: false,
         })
     }
 
-    /// The rank torus the mesh bricks are scattered over.
+    /// The rank torus the mesh bricks are resident on.
     pub fn ranks(&self) -> [usize; 3] {
         self.sched.torus.dims
     }
@@ -296,9 +448,10 @@ impl ProcPppm {
     }
 
     /// Cumulative quantization saturation events gathered from the
-    /// workers (0 for the f64 ring).
+    /// workers — ring packing plus quantized halo round trips (0 for the
+    /// f64 ring).
     pub fn saturations(&self) -> u64 {
-        self.inner.quant_saturations
+        self.sat
     }
 
     /// Per-message `(payload bytes, receive seconds)` samples from every
@@ -306,6 +459,14 @@ impl ProcPppm {
     /// measured alpha-beta fit ([`crate::mpisim::fit_alpha_beta`]).
     pub fn message_samples(&self) -> &[(usize, f64)] {
         &self.samples
+    }
+
+    /// Cumulative protocol traffic counters (see [`ProcTraffic`]): the
+    /// residency tests assert `setup` stops growing after the first
+    /// solve and that per-solve `sites + control + halo + forces` stays
+    /// O(site slabs + ghost shells).
+    pub fn traffic(&self) -> ProcTraffic {
+        self.traffic
     }
 
     /// The first transport failure, if the solver is poisoned.
@@ -358,8 +519,31 @@ impl ProcPppm {
         if let Some(e) = &self.err {
             return Err(e.clone());
         }
-        let seq = self.seq;
-        self.seq += 1;
+        assert_eq!(pos.len(), q.len());
+        out.resize(pos.len(), [0.0; 3]);
+        match self.solve_resident(pos, q, out) {
+            Ok((e, sat)) => {
+                self.sat += sat;
+                self.traffic.solves += 1;
+                Ok(e)
+            }
+            Err(e) => {
+                self.err = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    /// One full resident solve: lazy `Setup`, site scatter by the
+    /// counting-sort bins, ring relay for the 4 transforms, the energy
+    /// quantum round, halo assembly and the force-slab gather (see the
+    /// [module docs](self) for the sequence).
+    fn solve_resident(
+        &mut self,
+        pos: &[[f64; 3]],
+        q: &[f64],
+        out: &mut [[f64; 3]],
+    ) -> Result<(f64, u64), TransportError> {
         let ProcPppm {
             inner,
             decomp,
@@ -367,29 +551,156 @@ impl ProcPppm {
             payload,
             links,
             samples,
+            box_len,
+            bins,
+            si,
+            sw,
+            halo,
+            traffic,
+            setup_sent,
             ..
         } = self;
         let payload = *payload;
-        let mut first_err: Option<TransportError> = None;
-        let mut transform = |g: &mut [C64], fwd: bool, _fs: &mut Fft3dScratch| -> u64 {
-            if first_err.is_some() {
-                return 0; // a failed transform poisons the whole solve
+        let p = inner.cfg.order;
+        let nranks = links.len();
+        // geometry is resident: sent once, and again only after rebuild
+        if !*setup_sent {
+            let mut body = Vec::with_capacity(36);
+            wire::put_u32(&mut body, p as u32);
+            wire::put_f64(&mut body, inner.cfg.alpha);
+            for l in box_len.iter() {
+                wire::put_f64(&mut body, *l);
             }
-            match coordinator_transform(links, sched, payload, samples, g, fwd, seq) {
-                Ok(sat) => sat,
-                Err(e) => {
-                    first_err = Some(e);
-                    0
-                }
+            for link in links.iter_mut() {
+                link.send(TAG_SETUP, &body).map_err(|e| e.in_phase("setup"))?;
+                traffic.setup += body.len() as u64;
             }
-        };
-        let e = inner.energy_forces_with_transform(pos, q, out, &mut transform, Some(decomp));
-        drop(transform);
-        if let Some(err) = first_err {
-            self.err = Some(err.clone());
-            return Err(err);
+            *setup_sent = true;
         }
-        Ok(e)
+        // stage 1a arithmetic feeds only the counting-sort bins here; the
+        // workers recompute the same stencils from the shipped positions
+        inner.stencils_into(pos, si, sw);
+        bins.build(decomp, si, pos.len(), p);
+        for (lin, link) in links.iter_mut().enumerate() {
+            let bin = bins.touching(lin);
+            let mut body = Vec::with_capacity(12 + 36 * bin.len());
+            wire::put_u64(&mut body, pos.len() as u64);
+            wire::put_u32(&mut body, bin.len() as u32);
+            for &iu in bin {
+                let i = iu as usize;
+                wire::put_u32(&mut body, iu);
+                for d in 0..3 {
+                    wire::put_f64(&mut body, pos[i][d]);
+                }
+                wire::put_f64(&mut body, q[i]);
+            }
+            link.send(TAG_SITES, &body)
+                .map_err(|e| e.in_phase("site scatter"))?;
+            traffic.sites += body.len() as u64;
+        }
+        // forward transform ring relay
+        relay_transform(links, sched, payload, samples, traffic)?;
+        // partition-invariant energy: fold the brick maxima (f64 max is
+        // exactly associative over the non-negative terms, so this equals
+        // the host solve's grid-shard maximum), broadcast the quantum
+        let mut emax = 0.0f64;
+        for link in links.iter_mut() {
+            let pl = recv_timed(link, TAG_EMAX, "energy reduce", samples)?;
+            traffic.control += pl.len() as u64;
+            let mut r = wire::Reader::new(&pl, link.peer(), "energy reduce");
+            emax = emax.max(r.f64()?);
+            r.finish()?;
+        }
+        let quantum = energy_quantum(emax);
+        {
+            let mut body = Vec::with_capacity(8);
+            wire::put_f64(&mut body, quantum);
+            for link in links.iter_mut() {
+                link.send(TAG_EQUANT, &body)
+                    .map_err(|e| e.in_phase("energy reduce"))?;
+                traffic.control += body.len() as u64;
+            }
+        }
+        // three inverse transforms (one per field component)
+        for _ in 0..3 {
+            relay_transform(links, sched, payload, samples, traffic)?;
+        }
+        // halo assembly: drain every donor's owned-ghost stream, then
+        // stitch each receiver's shell in the canonical for_each_ghost
+        // order (one monotonic cursor per donor — both sides enumerate
+        // the identical HaloPlan, so consumption is exact by construction)
+        if halo.ghost_total > 0 {
+            let mut streams: Vec<Vec<u8>> = Vec::with_capacity(nranks);
+            for (lin, link) in links.iter_mut().enumerate() {
+                let pl = recv_timed(link, TAG_HALO, "halo exchange", samples)?;
+                if pl.len() != 24 * halo.donor_pts[lin] {
+                    return Err(TransportError::new(
+                        link.peer(),
+                        "halo exchange",
+                        TransportErrorKind::Protocol {
+                            what: format!(
+                                "halo stream of {} bytes, expected {} donor points",
+                                pl.len(),
+                                halo.donor_pts[lin]
+                            ),
+                        },
+                    ));
+                }
+                traffic.halo += pl.len() as u64;
+                streams.push(pl);
+            }
+            let mut cur = vec![0usize; nranks];
+            for rp in 0..nranks {
+                let mut body = Vec::with_capacity(24 * halo.ghosts[rp]);
+                for_each_ghost(&decomp.bricks[rp], &decomp.windows[rp], |ia, ib, ic| {
+                    let o = owner_lin(decomp, ia, ib, ic);
+                    body.extend_from_slice(&streams[o][cur[o]..cur[o] + 24]);
+                    cur[o] += 24;
+                });
+                links[rp]
+                    .send(TAG_HALO_SET, &body)
+                    .map_err(|e| e.in_phase("halo exchange"))?;
+                traffic.halo += body.len() as u64;
+            }
+        }
+        // force-slab gather: ticks sum exactly in i128 (partition
+        // invariance), rows scatter by the same owned bins the workers
+        // selected their sites from
+        let mut ticks: i128 = 0;
+        let mut sat = 0u64;
+        for lin in 0..nranks {
+            let peer = links[lin].peer();
+            let pl = recv_timed(&mut links[lin], TAG_FORCES, "force gather", samples)?;
+            traffic.forces += pl.len() as u64;
+            let own = bins.owned(lin);
+            let mut r = wire::Reader::new(&pl, peer, "force gather");
+            ticks += r.i128()?;
+            sat += r.u64()?;
+            let n = r.u32()? as usize;
+            if n != own.len() {
+                return Err(TransportError::new(
+                    peer,
+                    "force gather",
+                    TransportErrorKind::Protocol {
+                        what: format!(
+                            "rank returned {n} force rows, coordinator owns {}",
+                            own.len()
+                        ),
+                    },
+                ));
+            }
+            for &iu in own {
+                out[iu as usize] = [r.f64()?, r.f64()?, r.f64()?];
+            }
+            r.finish()?;
+        }
+        let energy = if quantum > 0.0 {
+            ticks as f64 * quantum
+        } else {
+            // all-zero (or non-finite) spectrum: no quantum to share
+            emax
+        };
+        Ok((energy, sat))
     }
 
     /// Allocating wrapper around [`Self::try_energy_forces_into`].
@@ -447,18 +758,22 @@ impl KspaceSolver for ProcPppm {
     }
 
     fn set_pool(&mut self, pool: Arc<ThreadPool>) {
-        // only the coordinator-side spread/solve/gather shard over the
-        // pool; the transforms run in the rank workers
+        // only the coordinator-side stencil/bin pass could shard over a
+        // pool; the whole mesh pipeline runs in the rank workers
         self.inner.set_pool(pool);
     }
 
     fn rebuild(&mut self, box_len: [f64; 3]) {
-        // the rank schedule depends only on the grid, which is unchanged
+        // the rank schedule depends only on the grid, which is unchanged;
+        // the workers' resident geometry is refreshed by re-sending Setup
+        // on the next solve
+        self.box_len = box_len;
         self.inner.rebuild(box_len);
+        self.setup_sent = false;
     }
 
     fn saturations(&self) -> u64 {
-        self.inner.quant_saturations
+        self.sat
     }
 
     fn name(&self) -> &'static str {
@@ -656,46 +971,21 @@ fn handshake(
     Ok(coords)
 }
 
-/// One full 3-D transform driven from the coordinator: scatter bricks,
-/// relay the ring schedule per divided dimension (quantized rings get an
-/// exact f64 max-reduce first), gather transformed bricks.  Every
-/// receive is timed into `samples`.
-fn coordinator_transform(
+/// The coordinator's relay for one rank-resident 3-D transform: per
+/// divided dimension (pass order z, y, x like the host FFT), an exact
+/// f64 max-reduce round for quantized rings, then `R_d - 1` ring hops of
+/// recv-all-then-deliver-to-successor.  No brick data moves through
+/// here — the bricks stay resident on the ranks.  Every receive is
+/// timed into `samples`; all bytes count into `traffic.ring`.
+fn relay_transform(
     links: &mut [FramedStream<Conn>],
     sched: &DistFftSchedule,
     payload: RingPayload,
     samples: &mut Vec<(usize, f64)>,
-    g: &mut [C64],
-    forward: bool,
-    seq: u64,
-) -> Result<u64, TransportError> {
+    traffic: &mut ProcTraffic,
+) -> Result<(), TransportError> {
     let ranks = sched.torus.dims;
-    let [_, ny, nz] = sched.grid;
-    let slabs = [sched.segments(0), sched.segments(1), sched.segments(2)];
     let nranks = links.len();
-    // scatter: per-rank brick, i-major within the rank's ranges
-    for lin in 0..nranks {
-        let co = coords_of(lin, ranks);
-        let (r0, r1, r2) = (
-            slabs[0][co[0]].clone(),
-            slabs[1][co[1]].clone(),
-            slabs[2][co[2]].clone(),
-        );
-        let mut body = Vec::with_capacity(12 + 16 * r0.len() * r1.len() * r2.len());
-        wire::put_u32(&mut body, forward as u32);
-        wire::put_u64(&mut body, seq);
-        for i in r0.clone() {
-            for j in r1.clone() {
-                for k in r2.clone() {
-                    wire::put_c64(&mut body, g[(i * ny + j) * nz + k]);
-                }
-            }
-        }
-        links[lin]
-            .send(TAG_TRANSFORM, &body)
-            .map_err(|e| e.in_phase("brick scatter"))?;
-    }
-    // ring relay, pass order z, y, x like the host FFT
     for d in [2usize, 1, 0] {
         let rd = ranks[d];
         if rd <= 1 {
@@ -705,11 +995,8 @@ fn coordinator_transform(
             let phase = format!("maxabs reduce dim {d}");
             let mut per: Vec<Vec<f64>> = Vec::with_capacity(nranks);
             for link in links.iter_mut() {
-                let t0 = Instant::now();
-                let p = link
-                    .recv_expect(TAG_MAXABS)
-                    .map_err(|e| e.in_phase(phase.clone()))?;
-                samples.push((p.len(), t0.elapsed().as_secs_f64()));
+                let p = recv_timed(link, TAG_MAXABS, &phase, samples)?;
+                traffic.ring += p.len() as u64;
                 if p.len() % 8 != 0 {
                     return Err(TransportError::new(
                         link.peer(),
@@ -754,6 +1041,7 @@ fn coordinator_transform(
                 links[lin]
                     .send(TAG_MAXABS_RED, &body)
                     .map_err(|e| e.in_phase(phase.clone()))?;
+                traffic.ring += body.len() as u64;
             }
         }
         for h in 0..rd - 1 {
@@ -763,48 +1051,20 @@ fn coordinator_transform(
             // this drain order cannot deadlock
             let mut blocks: Vec<Vec<u8>> = Vec::with_capacity(nranks);
             for link in links.iter_mut() {
-                let t0 = Instant::now();
-                let b = link
-                    .recv_expect(TAG_RING)
-                    .map_err(|e| e.in_phase(phase.clone()))?;
-                samples.push((b.len(), t0.elapsed().as_secs_f64()));
+                let b = recv_timed(link, TAG_RING, &phase, samples)?;
+                traffic.ring += b.len() as u64;
                 blocks.push(b);
             }
             for (lin, block) in blocks.into_iter().enumerate() {
                 let succ = succ_lin(lin, d, ranks);
+                traffic.ring += block.len() as u64;
                 links[succ]
                     .send(TAG_RING_DELIVER, &block)
                     .map_err(|e| e.in_phase(phase.clone()))?;
             }
         }
     }
-    // gather transformed bricks + saturation counts
-    let mut sat = 0u64;
-    for lin in 0..nranks {
-        let t0 = Instant::now();
-        let peer = links[lin].peer();
-        let p = links[lin]
-            .recv_expect(TAG_BRICK_BACK)
-            .map_err(|e| e.in_phase("brick gather"))?;
-        samples.push((p.len(), t0.elapsed().as_secs_f64()));
-        let co = coords_of(lin, ranks);
-        let (r0, r1, r2) = (
-            slabs[0][co[0]].clone(),
-            slabs[1][co[1]].clone(),
-            slabs[2][co[2]].clone(),
-        );
-        let mut r = wire::Reader::new(&p, peer, "brick gather");
-        sat += r.u64()?;
-        for i in r0.clone() {
-            for j in r1.clone() {
-                for k in r2.clone() {
-                    g[(i * ny + j) * nz + k] = r.c64()?;
-                }
-            }
-        }
-        r.finish()?;
-    }
-    Ok(sat)
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -812,8 +1072,8 @@ fn coordinator_transform(
 // ---------------------------------------------------------------------
 
 /// Entry point of the hidden `dplr rank-worker` subcommand: parse the
-/// worker CLI, connect to the coordinator socket and serve transforms
-/// until `Bye`.  Returns the process exit code.
+/// worker CLI, connect to the coordinator socket and serve resident
+/// solves until `Bye`.  Returns the process exit code.
 pub fn worker_main(args: &Args) -> i32 {
     match worker_run(args) {
         Ok(()) => 0,
@@ -880,8 +1140,9 @@ fn worker_run(args: &Args) -> Result<(), String> {
     worker_loop(cfg, link).map_err(|e| e.to_string())
 }
 
-/// Per-rank state: the brick, the per-dimension slab geometry and the
-/// persistent FFT plans/scratch.
+/// Per-rank transform state: the per-dimension slab geometry and the
+/// persistent FFT plans/scratch.  The brick itself is owned by the
+/// resident state and passed into each [`WorkerState::pass`].
 struct WorkerState {
     cfg: WorkerCfg,
     own: [Range<usize>; 3],
@@ -889,7 +1150,6 @@ struct WorkerState {
     plans: [Fft1d; 3],
     segfft: [SegmentFft; 3],
     blu: Vec<C64>,
-    brick: Vec<C64>,
     xline: Vec<C64>,
     xseg: Vec<C64>,
     stalled: bool,
@@ -999,7 +1259,6 @@ impl WorkerState {
         ];
         let blu_len = plans.iter().map(|p| p.scratch_len()).max().unwrap_or(0);
         let maxn = cfg.grid.iter().copied().max().unwrap_or(1);
-        let brick_len = own.iter().map(|r| r.len()).product();
         WorkerState {
             cfg,
             own,
@@ -1007,25 +1266,13 @@ impl WorkerState {
             plans,
             segfft,
             blu: vec![C64::ZERO; blu_len],
-            brick: vec![C64::ZERO; brick_len],
             xline: vec![C64::ZERO; maxn],
             xseg: vec![C64::ZERO; maxn],
             stalled: false,
         }
     }
 
-    fn load_brick(&mut self, payload: &[u8]) -> Result<bool, TransportError> {
-        let mut r = wire::Reader::new(payload, Peer::Coordinator, "brick scatter");
-        let forward = r.u32()? == 1;
-        let _seq = r.u64()?;
-        for v in self.brick.iter_mut() {
-            *v = r.c64()?;
-        }
-        r.finish()?;
-        Ok(forward)
-    }
-
-    /// One dimension's pass over this rank's brick (see the
+    /// One dimension's pass over the given resident brick (see the
     /// [module docs](self)).  Crucially, the rank's ring block is
     /// snapshotted from the brick and sent **before** any line is
     /// transformed, so peers always combine pre-transform segments.
@@ -1034,6 +1281,7 @@ impl WorkerState {
         d: usize,
         forward: bool,
         link: &mut FramedStream<Conn>,
+        brick: &mut [C64],
     ) -> Result<u64, TransportError> {
         let WorkerState {
             cfg,
@@ -1042,7 +1290,6 @@ impl WorkerState {
             plans,
             segfft,
             blu,
-            brick,
             xline,
             xseg,
             stalled,
@@ -1226,11 +1473,356 @@ fn ring_size_error(d: usize, s: usize, got: usize, want: usize) -> TransportErro
     )
 }
 
+/// The geometry a worker builds on `Setup`: its own [`Pppm`] (stencil
+/// arithmetic + Green/k-vector tables, bit-identical to the
+/// coordinator's), the shared [`MeshDecomp`] and the [`HaloPlan`].
+struct WorkerSetup {
+    pppm: Pppm,
+    decomp: MeshDecomp,
+    plan: HaloPlan,
+}
+
+/// Rank-resident worker state: the transform machinery plus the brick
+/// and field buffers that stay resident across solves.  `field` is a
+/// full-size 3×ntot grid of which only this rank's window (brick + low
+/// halo) is ever touched — global indexing lets the gather kernels of
+/// [`crate::pppm`] run verbatim, which is the bit-parity argument.
+struct ResidentState {
+    ws: WorkerState,
+    lin: usize,
+    setup: Option<WorkerSetup>,
+    /// charge mesh brick, then (after the forward passes) its spectrum
+    spec: Vec<C64>,
+    /// Poisson-solved potential spectrum brick
+    phi: Vec<C64>,
+    /// ik/inverse-transform work brick, one component at a time
+    work: Vec<C64>,
+    /// E_x/E_y/E_z, flat [dim][global grid] — window points only
+    field: Vec<f64>,
+    /// brick-spread partial accumulators
+    parts: Vec<f64>,
+    /// flat stencils of the received touching sites
+    si: Vec<u32>,
+    sw: Vec<f64>,
+    /// received global site ids (ascending), charges and positions
+    gids: Vec<u32>,
+    qs: Vec<f64>,
+    posbuf: Vec<[f64; 3]>,
+}
+
+fn worker_proto_err(phase: &'static str, what: String) -> TransportError {
+    TransportError::new(
+        Peer::Coordinator,
+        phase,
+        TransportErrorKind::Protocol { what },
+    )
+}
+
+impl ResidentState {
+    fn new(cfg: WorkerCfg) -> ResidentState {
+        let lin = lin_of(cfg.coords, cfg.ranks);
+        let ntot: usize = cfg.grid.iter().product();
+        let ws = WorkerState::new(cfg);
+        let bvol: usize = ws.own.iter().map(|r| r.len()).product();
+        ResidentState {
+            ws,
+            lin,
+            setup: None,
+            spec: vec![C64::ZERO; bvol],
+            phi: vec![C64::ZERO; bvol],
+            work: vec![C64::ZERO; bvol],
+            field: vec![0.0; 3 * ntot],
+            parts: Vec::new(),
+            si: Vec::new(),
+            sw: Vec::new(),
+            gids: Vec::new(),
+            qs: Vec::new(),
+            posbuf: Vec::new(),
+        }
+    }
+
+    /// Handle `Setup`: validate the geometry with typed protocol errors
+    /// and (re)build the resident mesh tables.
+    fn setup(&mut self, payload: &[u8]) -> Result<(), TransportError> {
+        let mut r = wire::Reader::new(payload, Peer::Coordinator, "setup");
+        let order = r.u32()? as usize;
+        let alpha = r.f64()?;
+        let box_len = [r.f64()?, r.f64()?, r.f64()?];
+        r.finish()?;
+        let grid = self.ws.cfg.grid;
+        if !(2..=MAX_ORDER).contains(&order) || grid.iter().any(|&n| n < order) {
+            return Err(worker_proto_err(
+                "setup",
+                format!("spline order {order} does not fit grid {grid:?} (supported 2..={MAX_ORDER})"),
+            ));
+        }
+        if !(alpha.is_finite() && alpha > 0.0) {
+            return Err(worker_proto_err(
+                "setup",
+                format!("alpha must be finite and > 0, got {alpha}"),
+            ));
+        }
+        if box_len.iter().any(|l| !(l.is_finite() && *l > 0.0)) {
+            return Err(worker_proto_err(
+                "setup",
+                format!("box lengths must be finite and > 0, got {box_len:?}"),
+            ));
+        }
+        let decomp = MeshDecomp::new(
+            &self.ws.slabs,
+            order - 1,
+            grid,
+            self.ws.cfg.payload == RingPayload::PackedI32,
+        );
+        let plan = HaloPlan::new(&decomp);
+        let pppm = Pppm::new(PppmConfig::new(grid, order, alpha), box_len);
+        self.setup = Some(WorkerSetup { pppm, decomp, plan });
+        Ok(())
+    }
+
+    /// One resident solve, from the `Sites` payload to the `Forces`
+    /// reply (see the [module docs](self) for the sequence the
+    /// coordinator drives in lockstep).
+    fn serve_solve(
+        &mut self,
+        payload: &[u8],
+        link: &mut FramedStream<Conn>,
+    ) -> Result<(), TransportError> {
+        let ResidentState {
+            ws,
+            lin,
+            setup,
+            spec,
+            phi,
+            work,
+            field,
+            parts,
+            si,
+            sw,
+            gids,
+            qs,
+            posbuf,
+        } = self;
+        let lin = *lin;
+        let WorkerSetup { pppm, decomp, plan } = setup
+            .as_ref()
+            .ok_or_else(|| worker_proto_err("site scatter", "Sites before Setup".into()))?;
+        let p = pppm.cfg.order;
+        let [_, n2, n3] = ws.cfg.grid;
+        let ntot: usize = ws.cfg.grid.iter().product();
+        // parse the site slab: ascending global ids with positions and
+        // charges for every site whose stencil touches this brick
+        let mut r = wire::Reader::new(payload, Peer::Coordinator, "site scatter");
+        let nsites_total = r.u64()? as usize;
+        let ntouch = r.u32()? as usize;
+        gids.clear();
+        posbuf.clear();
+        qs.clear();
+        let mut prev: i64 = -1;
+        for _ in 0..ntouch {
+            let gid = r.u32()?;
+            if i64::from(gid) <= prev || gid as usize >= nsites_total {
+                return Err(worker_proto_err(
+                    "site scatter",
+                    format!("site ids must be ascending and < {nsites_total}, got {gid}"),
+                ));
+            }
+            prev = i64::from(gid);
+            gids.push(gid);
+            posbuf.push([r.f64()?, r.f64()?, r.f64()?]);
+            qs.push(r.f64()?);
+        }
+        r.finish()?;
+        // stage 1a+1b, rank-side: the same stencil arithmetic as the
+        // coordinator's bins, then the owner-computes brick spread with
+        // the global fixed shard grouping (bit-identical mesh brick)
+        pppm.stencils_into(posbuf, si, sw);
+        let shards = even_shards(nsites_total, REDUCE_SHARDS);
+        let brick = &decomp.bricks[lin];
+        brick_spread(brick, si, sw, qs, gids, &shards, p, parts, spec);
+        // stage 2: forward transform over the resident brick
+        let mut sat = 0u64;
+        for d in [2usize, 1, 0] {
+            sat += ws.pass(d, true, link, spec)?;
+        }
+        // stage 3: partition-invariant energy — brick-local maximum up,
+        // shared quantum down, then exact i128 ticks alongside Poisson
+        let green = pppm.green();
+        let kvec = pppm.kvec();
+        let mut emax = 0.0f64;
+        {
+            let mut t = 0usize;
+            for ia in brick[0].clone() {
+                for ib in brick[1].clone() {
+                    for ic in brick[2].clone() {
+                        let g = (ia * n2 + ib) * n3 + ic;
+                        emax = emax.max(green[g] * spec[t].norm_sq());
+                        t += 1;
+                    }
+                }
+            }
+        }
+        let mut body = Vec::with_capacity(8);
+        wire::put_f64(&mut body, emax);
+        link.send(TAG_EMAX, &body)
+            .map_err(|e| e.in_phase("energy reduce"))?;
+        let pl = link
+            .recv_expect(TAG_EQUANT)
+            .map_err(|e| e.in_phase("energy reduce"))?;
+        let mut r = wire::Reader::new(&pl, Peer::Coordinator, "energy reduce");
+        let quantum = r.f64()?;
+        r.finish()?;
+        let mut ticks: i128 = 0;
+        {
+            let mut t = 0usize;
+            for ia in brick[0].clone() {
+                for ib in brick[1].clone() {
+                    for ic in brick[2].clone() {
+                        let g = (ia * n2 + ib) * n3 + ic;
+                        let gg = green[g];
+                        if quantum > 0.0 {
+                            ticks += energy_ticks(gg * spec[t].norm_sq(), quantum);
+                        }
+                        // dE/dQ(grid) chain: phi_hat = 2 * Ntot * G * Q_hat
+                        phi[t] = spec[t].scale(2.0 * gg * ntot as f64);
+                        t += 1;
+                    }
+                }
+            }
+        }
+        // stage 4: ik differentiation + three inverse transforms, writing
+        // each component's real part into the global-indexed field window
+        for dcomp in 0..3 {
+            let mut t = 0usize;
+            for ia in brick[0].clone() {
+                for ib in brick[1].clone() {
+                    for ic in brick[2].clone() {
+                        let kd = match dcomp {
+                            0 => kvec[0][ia],
+                            1 => kvec[1][ib],
+                            _ => kvec[2][ic],
+                        };
+                        // -i * k_d * phi_hat
+                        work[t] = C64::new(kd * phi[t].im, -kd * phi[t].re);
+                        t += 1;
+                    }
+                }
+            }
+            for dd in [2usize, 1, 0] {
+                sat += ws.pass(dd, false, link, work)?;
+            }
+            let mut t = 0usize;
+            for ia in brick[0].clone() {
+                for ib in brick[1].clone() {
+                    for ic in brick[2].clone() {
+                        field[dcomp * ntot + (ia * n2 + ib) * n3 + ic] = work[t].re;
+                        t += 1;
+                    }
+                }
+            }
+        }
+        // halo exchange: ship the exact f64 field values this rank owns
+        // of every receiver's ghost shell (ascending receiver order, the
+        // canonical for_each_ghost order within each — the coordinator's
+        // assembly cursor consumes exactly this stream), then fill our
+        // own shell from the assembled reply
+        if plan.ghost_total > 0 {
+            let mut blk = Vec::with_capacity(24 * plan.donor_pts[lin]);
+            for rp in 0..decomp.bricks.len() {
+                if rp == lin {
+                    // 3-shell geometry: a rank never owns its own ghosts
+                    continue;
+                }
+                for_each_ghost(&decomp.bricks[rp], &decomp.windows[rp], |ia, ib, ic| {
+                    if owner_lin(decomp, ia, ib, ic) == lin {
+                        let g = (ia * n2 + ib) * n3 + ic;
+                        wire::put_f64(&mut blk, field[g]);
+                        wire::put_f64(&mut blk, field[ntot + g]);
+                        wire::put_f64(&mut blk, field[2 * ntot + g]);
+                    }
+                });
+            }
+            link.send(TAG_HALO, &blk)
+                .map_err(|e| e.in_phase("halo exchange"))?;
+            let pl = link
+                .recv_expect(TAG_HALO_SET)
+                .map_err(|e| e.in_phase("halo exchange"))?;
+            if pl.len() != 24 * plan.ghosts[lin] {
+                return Err(worker_proto_err(
+                    "halo exchange",
+                    format!(
+                        "halo set of {} bytes, expected {} ghost points",
+                        pl.len(),
+                        plan.ghosts[lin]
+                    ),
+                ));
+            }
+            let mut off = 0usize;
+            let rd8 = |b: &[u8], o: usize| {
+                f64::from_bits(u64::from_le_bytes(b[o..o + 8].try_into().unwrap()))
+            };
+            for_each_ghost(&decomp.bricks[lin], &decomp.windows[lin], |ia, ib, ic| {
+                let g = (ia * n2 + ib) * n3 + ic;
+                field[g] = rd8(&pl, off);
+                field[ntot + g] = rd8(&pl, off + 8);
+                field[2 * ntot + g] = rd8(&pl, off + 16);
+                off += 24;
+            });
+        }
+        // stage 5: gather the owned sites locally.  Quantized halos round
+        // ghost reads through the int32 payload with scales from the same
+        // canonical ghost scan as the emulated path (saturations match).
+        let win = &decomp.windows[lin];
+        let (ex, rest) = field.split_at(ntot);
+        let (ey, ez) = rest.split_at(ntot);
+        let mut scales = [0.0f64; 3];
+        if decomp.quantized {
+            let qspec = QuantSpec::default();
+            let mut maxabs = [0.0f64; 3];
+            for_each_ghost(brick, win, |ia, ib, ic| {
+                let g = (ia * n2 + ib) * n3 + ic;
+                maxabs[0] = maxabs[0].max(ex[g].abs());
+                maxabs[1] = maxabs[1].max(ey[g].abs());
+                maxabs[2] = maxabs[2].max(ez[g].abs());
+            });
+            for (sc, ma) in scales.iter_mut().zip(&maxabs) {
+                *sc = qspec.resolve(*ma, 1);
+            }
+        }
+        let mut fbuf = Vec::new();
+        let mut nowned = 0u32;
+        for li in 0..gids.len() {
+            let o = li * 3 * MAX_ORDER;
+            if owner_brick(decomp, si, o, p) != lin {
+                continue;
+            }
+            let f = if decomp.quantized && !stencil_inside(si, o, p, brick) {
+                gather_site_ghost(si, sw, o, p, n2, n3, ex, ey, ez, brick, &scales, &mut sat)
+            } else {
+                gather_site(si, sw, o, p, n2, n3, ex, ey, ez)
+            };
+            let qi = qs[li];
+            for v in f.iter() {
+                wire::put_f64(&mut fbuf, qi * v);
+            }
+            nowned += 1;
+        }
+        let mut out = Vec::with_capacity(28 + fbuf.len());
+        wire::put_i128(&mut out, ticks);
+        wire::put_u64(&mut out, sat);
+        wire::put_u32(&mut out, nowned);
+        out.extend_from_slice(&fbuf);
+        link.send(TAG_FORCES, &out)
+            .map_err(|e| e.in_phase("force gather"))?;
+        Ok(())
+    }
+}
+
 /// The worker's serve loop (both launch modes run exactly this code):
-/// `Hello` handshake, then `Transform` requests until `Bye` or link
-/// loss.  The watchdog applies while a transform is in flight; idle
-/// waits between solves block indefinitely (coordinator death still
-/// surfaces as EOF).
+/// `Hello` handshake, then `Setup`/`Sites` requests until `Bye` or link
+/// loss.  The watchdog applies while a solve is in flight; idle waits
+/// between solves block indefinitely (coordinator death still surfaces
+/// as EOF).
 pub(crate) fn worker_loop(
     cfg: WorkerCfg,
     mut link: FramedStream<Conn>,
@@ -1244,24 +1836,15 @@ pub(crate) fn worker_loop(
     link.recv_expect(TAG_HELLO_ACK)?;
     let _ = link.stream_mut().set_read_timeout(None);
     let watchdog = cfg.watchdog;
-    let mut st = WorkerState::new(cfg);
+    let mut st = ResidentState::new(cfg);
     loop {
         let (tag, payload) = link.recv()?;
         match tag {
             TAG_BYE => return Ok(()),
-            TAG_TRANSFORM => {
+            TAG_SETUP => st.setup(&payload)?,
+            TAG_SITES => {
                 let _ = link.stream_mut().set_read_timeout(Some(watchdog));
-                let forward = st.load_brick(&payload)?;
-                let mut sat = 0u64;
-                for d in [2usize, 1, 0] {
-                    sat += st.pass(d, forward, &mut link)?;
-                }
-                let mut out = Vec::with_capacity(8 + 16 * st.brick.len());
-                wire::put_u64(&mut out, sat);
-                for v in &st.brick {
-                    wire::put_c64(&mut out, *v);
-                }
-                link.send(TAG_BRICK_BACK, &out)?;
+                st.serve_solve(&payload, &mut link)?;
                 let _ = link.stream_mut().set_read_timeout(None);
             }
             got => {
@@ -1269,7 +1852,7 @@ pub(crate) fn worker_loop(
                     Peer::Coordinator,
                     "worker loop",
                     TransportErrorKind::UnexpectedTag {
-                        expected: TAG_TRANSFORM,
+                        expected: TAG_SITES,
                         got,
                     },
                 ))
@@ -1280,7 +1863,7 @@ pub(crate) fn worker_loop(
 
 #[cfg(test)]
 mod tests {
-    use super::super::{DistPppm, RankFft};
+    use super::super::DistPppm;
     use super::*;
     use crate::util::rng::Rng;
 
@@ -1365,46 +1948,84 @@ mod tests {
                 assert!((a[d] - b[d]).abs() <= 1e-9, "{} vs {}", a[d], b[d]);
             }
         }
+        // ring packing + quantized halo round trips run the identical
+        // quantize calls on identical inputs on both paths
+        assert_eq!(
+            emu.saturations(),
+            proc.saturations(),
+            "ring + halo saturation counts must match the emulated path"
+        );
         proc.shutdown();
     }
 
     #[test]
-    fn raw_transform_matches_emulated_rank_fft() {
-        // drive coordinator_transform directly on a random grid: it must
-        // reproduce the emulated fast-path ring bit for bit
-        let dims = [8usize, 12, 10];
-        let ranks = [2usize, 2, 1];
-        let n = dims[0] * dims[1] * dims[2];
-        let mut r = Rng::new(5150);
-        let base: Vec<C64> = (0..n)
-            .map(|_| C64::new(r.range(-1.0, 1.0), r.range(-1.0, 1.0)))
-            .collect();
-        let mut want = base.clone();
-        let pool = ThreadPool::serial();
-        RankFft::new(dims, ranks, RingPayload::F64).execute(&mut want, true, &pool);
+    fn resident_bricks_keep_per_solve_traffic_at_slabs_plus_halos() {
+        let (pos, q, box_len) = test_sites(40, 31);
         let mut proc = ProcPppm::spawn(
-            PppmConfig::new(dims, 5, 0.3),
-            [9.0, 9.0, 9.0],
-            ranks,
+            cfg(),
+            box_len,
+            [2, 1, 1],
             RingPayload::F64,
             &WorkerLauncher::InProcess,
             &ProcOptions::default(),
         )
         .expect("spawn");
-        let mut got = base.clone();
-        let ProcPppm {
-            sched,
-            payload,
-            links,
-            samples,
-            ..
-        } = &mut proc;
-        coordinator_transform(links, sched, *payload, samples, &mut got, true, 0)
-            .expect("transform");
-        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
-            assert_eq!(a.re.to_bits(), b.re.to_bits(), "[{i}].re");
-            assert_eq!(a.im.to_bits(), b.im.to_bits(), "[{i}].im");
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            proc.try_energy_forces_into(&pos, &q, &mut out).expect("solve");
         }
+        let t = proc.traffic();
+        assert_eq!(t.solves, 3);
+        // geometry went out exactly once (36 payload bytes × 2 ranks):
+        // the bricks are resident, never re-scattered
+        assert_eq!(t.setup, 72, "setup must be sent once, not per solve");
+        assert!(t.sites > 0 && t.halo > 0 && t.control > 0 && t.forces > 0);
+        // the pre-resident protocol shipped the full mesh 8×per solve
+        // (4 transforms × scatter + gather × 16 bytes/point); resident
+        // per-solve traffic is site slabs + ghost shells + O(1) control
+        let ntot = (12 * 18 * 12) as u64;
+        let full_mesh = 4 * 2 * 16 * ntot;
+        let per_solve = (t.sites + t.control + t.halo + t.forces) / t.solves;
+        assert!(
+            per_solve * 2 < full_mesh,
+            "per-solve {per_solve} B should be far below full-mesh {full_mesh} B"
+        );
+        proc.shutdown();
+    }
+
+    #[test]
+    fn rebuild_resends_geometry_and_matches_host() {
+        let (pos, q, box_len) = test_sites(30, 12);
+        let newbox = [box_len[0] * 1.05, box_len[1] * 0.97, box_len[2] * 1.02];
+        let mut host = Pppm::new(cfg(), box_len);
+        let mut proc = ProcPppm::spawn(
+            cfg(),
+            box_len,
+            [2, 2, 1],
+            RingPayload::F64,
+            &WorkerLauncher::InProcess,
+            &ProcOptions::default(),
+        )
+        .expect("spawn");
+        let (he0, _) = host.energy_forces(&pos, &q);
+        let (pe0, _) = proc.energy_forces(&pos, &q).expect("solve");
+        assert_eq!(he0.to_bits(), pe0.to_bits());
+        let setup_before = proc.traffic().setup;
+        host.rebuild(newbox);
+        KspaceSolver::rebuild(&mut proc, newbox);
+        let (he, hf) = host.energy_forces(&pos, &q);
+        let (pe, pf) = proc.energy_forces(&pos, &q).expect("solve after rebuild");
+        assert_eq!(he.to_bits(), pe.to_bits(), "energy after rebuild");
+        for (a, b) in hf.iter().zip(&pf) {
+            for d in 0..3 {
+                assert_eq!(a[d].to_bits(), b[d].to_bits());
+            }
+        }
+        assert_eq!(
+            proc.traffic().setup,
+            2 * setup_before,
+            "rebuild re-sends the resident geometry exactly once"
+        );
         proc.shutdown();
     }
 

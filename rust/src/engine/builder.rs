@@ -73,14 +73,19 @@ pub enum KspaceConfig {
         /// ([`crate::distpppm::LinePath::LocalFft`], the default).
         matvec: bool,
     },
-    /// The **process-executed** rank torus (`--kspace dist --proc`): the
-    /// same mesh and section-3.1 ring schedule as [`KspaceConfig::Dist`],
-    /// but each rank is a real OS process (spawned via the hidden
-    /// `dplr rank-worker` subcommand) holding its own mesh brick and
-    /// exchanging ring payloads over the [`crate::transport`] layer
+    /// The **process-executed rank-resident** torus (`--kspace dist
+    /// --proc`): the same mesh and section-3.1 ring schedule as
+    /// [`KspaceConfig::Dist`], but each rank is a real OS process
+    /// (spawned via the hidden `dplr rank-worker` subcommand) keeping its
+    /// mesh brick resident across steps and running spread, Poisson/ik
+    /// and gather locally — the coordinator ships only per-rank
+    /// site/charge slabs, relays ring and ghost-halo frames, and gathers
+    /// per-rank force slabs over the [`crate::transport`] layer
     /// ([`crate::distpppm::process::ProcPppm`]).  Exact-f64 rings stay
     /// bit-identical to `--kspace pppm`; worker spawn or handshake
-    /// failures surface as build errors naming the rank.
+    /// failures surface as build errors naming the rank.  The rank-local
+    /// line strategy is always the FFT fast path — `--dist-matvec` is an
+    /// emulation-only knob and is rejected together with `--proc`.
     DistProc {
         /// Ewald splitting parameter (as in `PppmAuto`).
         alpha: f64,

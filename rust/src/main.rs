@@ -78,8 +78,11 @@ fn print_help() {
          \x20              --dist-matvec for the O(n^2) Eq.-8 partial-DFT\n\
          \x20              matvecs instead of the rank-local FFT fast path;\n\
          \x20              --proc: execute the ranks as real OS processes\n\
-         \x20              (spawned rank workers over a Unix-socket ring\n\
-         \x20              transport; f64 rings stay bit-identical to pppm);\n\
+         \x20              keeping their mesh bricks resident across steps\n\
+         \x20              (spread/Poisson/gather run rank-side; only site\n\
+         \x20              slabs, ring frames, halos and force slabs cross\n\
+         \x20              the Unix-socket transport; f64 rings stay\n\
+         \x20              bit-identical to pppm);\n\
          \x20              --mts k: solve k-space every k-th step, holding\n\
          \x20              the reciprocal forces in between (--mts-extrap\n\
          \x20              hold|linear; --mts 1 = bit-identical default)\n\

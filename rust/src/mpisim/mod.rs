@@ -55,6 +55,81 @@ pub fn mapped_hops(t: &Torus, mapping_quality: f64) -> f64 {
     1.0 + (mapping_quality - 1.0) * (avg_dim / 4.0)
 }
 
+/// Analytic twin of the rank-resident `--kspace dist --proc` protocol's
+/// per-solve coordinator↔worker payload bytes (the quantities
+/// [`ProcTraffic`](crate::distpppm::process::ProcTraffic) measures):
+/// site slabs in, energy-control round, ghost-halo exchange and force
+/// slabs back — everything **except** the ring relay, which the real
+/// torus network carries rank-to-rank.  Mirrors the wire layout exactly
+/// (36 B/site row + 12 B/rank header, 8 B control scalars, 24 B/ghost
+/// point each way, 28 B/rank force header + 24 B/force row); the only
+/// modelled quantity is the expected site→brick touch multiplicity,
+/// which depends on where the sites actually sit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidentTraffic {
+    /// `Sites` bytes per solve (expected value — see [`proc_resident_traffic`]).
+    pub sites: f64,
+    /// `EMax` + `EQuant` bytes per solve.
+    pub control: f64,
+    /// `Halo` + `HaloSet` bytes per solve (exact ghost-point count).
+    pub halo: f64,
+    /// `Forces` bytes per solve.
+    pub forces: f64,
+}
+
+impl ResidentTraffic {
+    /// Total per-solve coordinator↔worker bytes.
+    pub fn per_solve(&self) -> f64 {
+        self.sites + self.control + self.halo + self.forces
+    }
+}
+
+/// Build the [`ResidentTraffic`] twin for `nsites` charged sites on the
+/// given mesh `grid` / rank torus / spline `order`.  Ghost counts come
+/// from the same slab partition + low-side halo windows the executed
+/// decomposition uses ([`crate::pool::halo_windows`] over
+/// [`crate::pool::even_shards`]), so the halo term is exact; the site
+/// term uses the expected stencil touch multiplicity
+/// `prod_d (1 + r_d (p - 1) / n_d)` (a p-point stencil crosses a slab
+/// boundary when its base lies within `p - 1` cells below one).
+pub fn proc_resident_traffic(
+    grid: [usize; 3],
+    ranks: [usize; 3],
+    order: usize,
+    nsites: usize,
+) -> ResidentTraffic {
+    use crate::pool::{even_shards, halo_windows};
+    let nranks = (ranks[0] * ranks[1] * ranks[2]) as f64;
+    let mut touch = 1.0f64;
+    for d in 0..3 {
+        let m = 1.0 + (ranks[d] * (order - 1)) as f64 / grid[d] as f64;
+        touch *= m.min(ranks[d] as f64);
+    }
+    let slabs: Vec<Vec<std::ops::Range<usize>>> = (0..3)
+        .map(|d| even_shards(grid[d], ranks[d]))
+        .collect();
+    let wins: Vec<_> = (0..3)
+        .map(|d| halo_windows(&slabs[d], order - 1, grid[d]))
+        .collect();
+    let mut ghost_total = 0usize;
+    for i in 0..ranks[0] {
+        for j in 0..ranks[1] {
+            for k in 0..ranks[2] {
+                let brick =
+                    slabs[0][i].len() * slabs[1][j].len() * slabs[2][k].len();
+                let window = wins[0][i].len * wins[1][j].len * wins[2][k].len;
+                ghost_total += window - brick;
+            }
+        }
+    }
+    ResidentTraffic {
+        sites: 12.0 * nranks + 36.0 * nsites as f64 * touch,
+        control: 16.0 * nranks,
+        halo: 2.0 * 24.0 * ghost_total as f64,
+        forces: 28.0 * nranks + 24.0 * nsites as f64,
+    }
+}
+
 /// Least-squares alpha-beta fit `t = alpha + beta * bytes` over measured
 /// `(payload bytes, seconds)` samples — the inverse of [`p2p_time`]'s
 /// model, used by the fig8 bench to sit measured per-message timings from
@@ -127,6 +202,29 @@ mod tests {
         let t = Torus::new([8, 12, 8]);
         assert!((mapped_hops(&t, 1.0) - 1.0).abs() < 1e-12);
         assert!(mapped_hops(&t, 2.0) > 2.0);
+    }
+
+    #[test]
+    fn resident_twin_is_exact_on_the_undivided_torus() {
+        // one rank: every site touches exactly one brick, no ghosts
+        let t = proc_resident_traffic([12, 18, 12], [1, 1, 1], 5, 100);
+        assert_eq!(t.sites, 12.0 + 36.0 * 100.0);
+        assert_eq!(t.halo, 0.0);
+        assert_eq!(t.control, 16.0);
+        assert_eq!(t.forces, 28.0 + 24.0 * 100.0);
+    }
+
+    #[test]
+    fn resident_twin_halo_counts_low_side_ghost_shells() {
+        // grid [8,8,8], ranks [2,1,1], order 5 => halo 4: each brick is
+        // 4x8x8 with an 8x8x8 window => 256 ghosts/rank, 512 total, and
+        // the exchange pays 24 bytes per point each way
+        let t = proc_resident_traffic([8, 8, 8], [2, 1, 1], 5, 10);
+        assert_eq!(t.halo, 2.0 * 24.0 * 512.0);
+        // per-solve traffic stays far below the 4-transform full-mesh
+        // scatter/gather a non-resident protocol would pay
+        let full_mesh = (4 * 2 * 16 * 8 * 8 * 8) as f64;
+        assert!(t.per_solve() < full_mesh / 2.0, "{}", t.per_solve());
     }
 
     #[test]

@@ -31,8 +31,14 @@
 //! The Poisson / ik stage is diagonal in k-space, so its existing fixed
 //! contiguous grid shards *are* the slab decomposition (each shard is a
 //! slab of the flattened spectrum); it needs no separate decomposed
-//! variant, and keeping the fixed shard count preserves the energy
-//! reduction's bit-determinism contract.
+//! variant.  The energy reduction is **partition-invariant** by
+//! construction: the global maximum of the non-negative per-point terms
+//! (f64 max is exactly associative) fixes a shared quantum
+//! ([`energy_quantum`]), each term is rounded to integer ticks of that
+//! quantum ([`energy_ticks`]) and the ticks are summed exactly in
+//! `i128` — so *any* grouping of the spectrum points (grid shards here,
+//! rank bricks in the resident `--kspace dist --proc` backend) reduces
+//! to the same energy bits.
 //!
 //! Hot-path structure (this is the kernel layer the section-3.2 overlap
 //! relies on being lean):
@@ -173,7 +179,7 @@ impl MeshDecomp {
 /// parity is untouched — and the per-brick shards then iterate only
 /// their own sites instead of rescanning the whole site list per brick.
 #[derive(Default)]
-struct DecompBins {
+pub(crate) struct DecompBins {
     /// site ids grouped by owning brick, ascending within each bin
     owner: Vec<u32>,
     /// per-brick `owner` slice starts, length nbricks + 1
@@ -187,7 +193,7 @@ struct DecompBins {
 }
 
 impl DecompBins {
-    fn build(&mut self, dc: &MeshDecomp, si: &[u32], nsites: usize, p: usize) {
+    pub(crate) fn build(&mut self, dc: &MeshDecomp, si: &[u32], nsites: usize, p: usize) {
         let nb = dc.bricks.len();
         self.owner_off.clear();
         self.owner_off.resize(nb + 1, 0);
@@ -229,12 +235,12 @@ impl DecompBins {
     }
 
     /// The ascending site ids brick `r` owns (gather).
-    fn owned(&self, r: usize) -> &[u32] {
+    pub(crate) fn owned(&self, r: usize) -> &[u32] {
         &self.owner[self.owner_off[r]..self.owner_off[r + 1]]
     }
 
     /// The ascending site ids whose stencils reach brick `r` (spread).
-    fn touching(&self, r: usize) -> &[u32] {
+    pub(crate) fn touching(&self, r: usize) -> &[u32] {
         &self.touch[self.touch_off[r]..self.touch_off[r + 1]]
     }
 }
@@ -242,7 +248,7 @@ impl DecompBins {
 /// The brick owning a site: per dimension, the slab holding the stencil
 /// base (the last, highest wrapped index of the per-axis stencil).
 #[inline]
-fn owner_brick(dc: &MeshDecomp, si: &[u32], o: usize, p: usize) -> usize {
+pub(crate) fn owner_brick(dc: &MeshDecomp, si: &[u32], o: usize, p: usize) -> usize {
     let cx = dc.slab_of[0][si[o + p - 1] as usize] as usize;
     let cy = dc.slab_of[1][si[o + MAX_ORDER + p - 1] as usize] as usize;
     let cz = dc.slab_of[2][si[o + 2 * MAX_ORDER + p - 1] as usize] as usize;
@@ -279,7 +285,7 @@ fn for_each_touched(dc: &MeshDecomp, si: &[u32], o: usize, p: usize, mut f: impl
 /// tying it to the pool size — makes the mesh solve bit-for-bit identical
 /// for any `--threads N` (the engine's determinism contract); the pool
 /// simply executes these fixed shards with however many workers it has.
-const REDUCE_SHARDS: usize = 8;
+pub(crate) const REDUCE_SHARDS: usize = 8;
 
 /// Precision / reduction mode of the mesh solve (Table 1 rows).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -377,8 +383,11 @@ struct PppmScratch {
     fgrid: Vec<C64>,
     /// real-space field components E_x/E_y/E_z, flat [dim][grid]
     field: Vec<f64>,
-    /// per-shard energy partials, reduced in shard order by the caller
+    /// per-shard maxima of the energy terms (pass A of the
+    /// partition-invariant reduction), max-reduced by the caller
     epart: Vec<f64>,
+    /// per-shard integer energy ticks (pass B), summed exactly in i128
+    epart_q: Vec<i128>,
     /// per-brick ghost-quantization saturation slots (decomposed gather
     /// only), reduced in brick order
     halo_sat: Vec<u64>,
@@ -404,6 +413,7 @@ impl PppmScratch {
             self.fgrid.resize(3 * ntot, C64::ZERO);
             self.field.resize(3 * ntot, 0.0);
             self.epart.resize(REDUCE_SHARDS, 0.0);
+            self.epart_q.resize(REDUCE_SHARDS, 0);
             self.grid_shards = even_shards(ntot, REDUCE_SHARDS);
             self.fft_scratch.ensure(fft);
         }
@@ -796,8 +806,16 @@ impl Pppm {
             Transform::Ext(f) => f(&mut s.mesh[..], true, &mut s.fft_scratch),
         };
 
-        // 3. energy + Poisson solve over fixed grid shards (energy
-        // partials reduced in shard order below)
+        // 3. energy + Poisson solve over fixed grid shards.  The energy
+        // reduction is the partition-invariant two-pass scheme (see the
+        // module docs): pass A finds the global maximum of the
+        // non-negative terms t_g = G(g) |Q_hat(g)|^2 alongside the
+        // Poisson solve (f64 max is exactly associative, so the shard
+        // grouping cannot change it), the maximum fixes a shared
+        // quantum, and pass B sums the i64-rounded integer ticks
+        // exactly in i128 — any partition of the spectrum (these
+        // shards, or the rank bricks of the resident process backend)
+        // reduces to the same energy bits.
         {
             let phi = SyncSlice::new(&mut s.phi);
             let ep = SyncSlice::new(&mut s.epart);
@@ -806,20 +824,42 @@ impl Pppm {
             let green = &self.green;
             pool.run(shards.len(), &|k| {
                 let r = shards[k].clone();
-                // Safety: grid shards disjoint; one energy slot per shard
+                // Safety: grid shards disjoint; one maximum slot per shard
                 let ps = unsafe { phi.slice_mut(r.start..r.end) };
-                let mut e = 0.0;
+                let mut emax = 0.0f64;
                 for (ph, g) in ps.iter_mut().zip(r.clone()) {
                     let gg = green[g];
-                    e += gg * mesh[g].norm_sq();
+                    emax = emax.max(gg * mesh[g].norm_sq());
                     // dE/dQ(grid) chain: phi_hat = 2 * Ntot * G * Q_hat
                     // (the Ntot compensates our normalised inverse FFT)
                     *ph = mesh[g].scale(2.0 * gg * ntot as f64);
                 }
-                unsafe { *ep.index_mut(k) = e };
+                unsafe { *ep.index_mut(k) = emax };
             });
         }
-        let energy: f64 = s.epart[..s.grid_shards.len()].iter().sum();
+        let emax = s.epart[..s.grid_shards.len()]
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b));
+        let quantum = energy_quantum(emax);
+        let energy = if quantum > 0.0 {
+            let eq = SyncSlice::new(&mut s.epart_q);
+            let mesh = &s.mesh;
+            let shards = &s.grid_shards;
+            let green = &self.green;
+            pool.run(shards.len(), &|k| {
+                let mut acc: i128 = 0;
+                for g in shards[k].clone() {
+                    acc += energy_ticks(green[g] * mesh[g].norm_sq(), quantum);
+                }
+                // Safety: one tick slot per shard
+                unsafe { *eq.index_mut(k) = acc };
+            });
+            let ticks: i128 = s.epart_q[..s.grid_shards.len()].iter().sum();
+            ticks as f64 * quantum
+        } else {
+            // all-zero (or non-finite) spectrum: no quantum to share
+            emax
+        };
 
         // 4. ik differentiation: fill the three spectra (elementwise),
         // then three inverse FFTs, each line-parallel across the pool
@@ -903,42 +943,12 @@ impl Pppm {
                 if dc.quantized {
                     let spec = QuantSpec::default();
                     let mut maxabs = [0.0f64; 3];
-                    let mut scan = |ia: usize, ib: usize, ic: usize| {
+                    for_each_ghost(brick, win, |ia, ib, ic| {
                         let g = (ia * n2 + ib) * n3 + ic;
                         maxabs[0] = maxabs[0].max(ex[g].abs());
                         maxabs[1] = maxabs[1].max(ey[g].abs());
                         maxabs[2] = maxabs[2].max(ez[g].abs());
-                    };
-                    // the ghost shell (window minus brick), covered
-                    // disjointly as ghost-x × win-y × win-z, then
-                    // brick-x × ghost-y × win-z, then brick-x × brick-y
-                    // × ghost-z; halo_windows puts the low-side ghosts
-                    // first in window order, so each dimension's ghost
-                    // run is the window's leading len - brick_len indices
-                    let gx = win[0].len - brick[0].len();
-                    let gy = win[1].len - brick[1].len();
-                    let gz = win[2].len - brick[2].len();
-                    for ia in win[0].iter().take(gx) {
-                        for ib in win[1].iter() {
-                            for ic in win[2].iter() {
-                                scan(ia, ib, ic);
-                            }
-                        }
-                    }
-                    for ia in brick[0].clone() {
-                        for ib in win[1].iter().take(gy) {
-                            for ic in win[2].iter() {
-                                scan(ia, ib, ic);
-                            }
-                        }
-                    }
-                    for ia in brick[0].clone() {
-                        for ib in brick[1].clone() {
-                            for ic in win[2].iter().take(gz) {
-                                scan(ia, ib, ic);
-                            }
-                        }
-                    }
+                    });
                     for (sc, ma) in scales.iter_mut().zip(&maxabs) {
                         *sc = spec.resolve(*ma, 1);
                     }
@@ -999,8 +1009,10 @@ impl Pppm {
     /// indices in ascending grid order plus the matching weights (only the
     /// first `order` entries of each fixed-size array are meaningful).
     /// Fixed-size return so neither this oracle path nor the flat hot-path
-    /// scratch fill allocates.
-    fn stencil(&self, r: &[f64; 3], p: usize) -> [AxisStencil; 3] {
+    /// scratch fill allocates.  Crate-visible so the resident process
+    /// workers compute stencils from the exact same arithmetic the
+    /// coordinator's bins were built from.
+    pub(crate) fn stencil(&self, r: &[f64; 3], p: usize) -> [AxisStencil; 3] {
         let mut out = [([0usize; MAX_ORDER], [0.0f64; MAX_ORDER]); 3];
         let mut w = [0.0f64; MAX_ORDER];
         for d in 0..3 {
@@ -1019,6 +1031,37 @@ impl Pppm {
             }
         }
         out
+    }
+
+    /// Worker seam: fill the flat MAX_ORDER-stride stencil arrays for a
+    /// site list — the same layout stage 1a of the solve produces.
+    /// Serial (per-site arithmetic is independent, so this is
+    /// bit-identical to the pooled fill for any thread count).
+    pub(crate) fn stencils_into(&self, pos: &[[f64; 3]], si: &mut Vec<u32>, sw: &mut Vec<f64>) {
+        let p = self.cfg.order;
+        si.resize(pos.len() * 3 * MAX_ORDER, 0);
+        sw.resize(pos.len() * 3 * MAX_ORDER, 0.0);
+        for (i, r) in pos.iter().enumerate() {
+            let st = self.stencil(r, p);
+            for (d, (gi, wi)) in st.iter().enumerate() {
+                let o = (i * 3 + d) * MAX_ORDER;
+                for j in 0..p {
+                    si[o + j] = gi[j] as u32;
+                    sw[o + j] = wi[j];
+                }
+            }
+        }
+    }
+
+    /// Worker seam: the influence-function table (G with the Euler-spline
+    /// factors folded in; `G[0] = 0`).
+    pub(crate) fn green(&self) -> &[f64] {
+        &self.green
+    }
+
+    /// Worker seam: the signed k-vector component tables, per dimension.
+    pub(crate) fn kvec(&self) -> &[Vec<f64>; 3] {
+        &self.kvec
     }
 
     /// Apply the configured 3-D transform (fwd or inverse-normalised)
@@ -1058,10 +1101,177 @@ impl Pppm {
     }
 }
 
+/// 2^62 as f64 (exact): the tick range of the energy quantum.  Dividing
+/// the maximum term by 2^62 keeps every rounded term inside i64 while
+/// leaving the relative quantization error of the summed energy below
+/// ~ntot * 2^-63 — far under every Table-1 tolerance.
+const EXP2_62: f64 = 4611686018427387904.0;
+
+/// Shared tick size of the partition-invariant energy reduction: the
+/// global maximum of the non-negative per-point terms divided by 2^62.
+/// Returns 0.0 for an all-zero or non-finite maximum (the caller then
+/// reports the maximum itself instead of dividing by it).
+pub(crate) fn energy_quantum(emax: f64) -> f64 {
+    if emax > 0.0 && emax.is_finite() {
+        emax / EXP2_62
+    } else {
+        0.0
+    }
+}
+
+/// One spectrum point's energy contribution in integer ticks of the
+/// shared quantum.  The rounding depends only on the term and the
+/// quantum, and i128 addition is exact, so the summed ticks — and hence
+/// the reduced energy — are identical for any grouping of the points.
+#[inline]
+pub(crate) fn energy_ticks(t: f64, quantum: f64) -> i128 {
+    (t / quantum).round() as i64 as i128
+}
+
+/// Visit brick `r`'s ghost shell (window minus brick) in the canonical
+/// 3-shell order: ghost-x × win-y × win-z, then brick-x × ghost-y ×
+/// win-z, then brick-x × brick-y × ghost-z.  `halo_windows` puts the
+/// low-side ghosts first in window order, so each dimension's ghost run
+/// is the window's leading `len - brick_len` indices.  This enumeration
+/// is shared between the decomposed gather's quantized scale scan and
+/// the resident process workers' halo exchange, which is what makes the
+/// exchanged ghost ordering (and the quantized scales derived from it)
+/// identical on both sides.
+pub(crate) fn for_each_ghost(
+    brick: &[Range<usize>; 3],
+    win: &[WrapWindow; 3],
+    mut f: impl FnMut(usize, usize, usize),
+) {
+    let gx = win[0].len - brick[0].len();
+    let gy = win[1].len - brick[1].len();
+    let gz = win[2].len - brick[2].len();
+    for ia in win[0].iter().take(gx) {
+        for ib in win[1].iter() {
+            for ic in win[2].iter() {
+                f(ia, ib, ic);
+            }
+        }
+    }
+    for ia in brick[0].clone() {
+        for ib in win[1].iter().take(gy) {
+            for ic in win[2].iter() {
+                f(ia, ib, ic);
+            }
+        }
+    }
+    for ia in brick[0].clone() {
+        for ib in brick[1].clone() {
+            for ic in win[2].iter().take(gz) {
+                f(ia, ib, ic);
+            }
+        }
+    }
+}
+
+/// Resident-worker seam: owner-computes charge spread of one rank brick
+/// from its touching sites, reproducing the decomposed spread of
+/// [`Pppm::solve`] (stages 1b + 1c) bit for bit with brick-sized
+/// accumulators.  `si`/`sw` hold the flat stencils of the received
+/// touching sites in ascending global-id order, `gids` their global
+/// ids, `qs` their charges; `shards` is the global fixed spread-shard
+/// plan (`even_shards(nsites_total, REDUCE_SHARDS)`).  Each shard's
+/// contributions accumulate into a private brick-sized grid in
+/// ascending site order, and the partials merge in ascending shard
+/// order — the exact grouping and ordering of the global kernels, so
+/// the merged brick equals the global mesh restricted to the brick.
+/// The result lands in `mesh_brick` (row-major within the brick).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn brick_spread(
+    brick: &[Range<usize>; 3],
+    si: &[u32],
+    sw: &[f64],
+    qs: &[f64],
+    gids: &[u32],
+    shards: &[Range<usize>],
+    p: usize,
+    parts: &mut Vec<f64>,
+    mesh_brick: &mut [C64],
+) {
+    let (ly, lz) = (brick[1].len(), brick[2].len());
+    let bvol = brick[0].len() * ly * lz;
+    let nparts = shards.len();
+    parts.clear();
+    parts.resize(nparts * bvol, 0.0);
+    for (k, shard) in shards.iter().enumerate() {
+        // this brick's touching sites restricted to shard k's global-id
+        // range (the received list is ascending, so two binary searches)
+        let lo = gids.partition_point(|&i| (i as usize) < shard.start);
+        let hi = gids.partition_point(|&i| (i as usize) < shard.end);
+        let acc_off = k * bvol;
+        for li in lo..hi {
+            let o = li * 3 * MAX_ORDER;
+            let (ix, wx) = (&si[o..o + p], &sw[o..o + p]);
+            let (iy, wy) = (
+                &si[o + MAX_ORDER..o + MAX_ORDER + p],
+                &sw[o + MAX_ORDER..o + MAX_ORDER + p],
+            );
+            let (iz, wz) = (
+                &si[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+                &sw[o + 2 * MAX_ORDER..o + 2 * MAX_ORDER + p],
+            );
+            let z0 = iz[0] as usize;
+            let zc = iz[p - 1] as usize == z0 + p - 1;
+            let qi = qs[li];
+            for (ia, wa) in ix.iter().zip(wx) {
+                let ia = *ia as usize;
+                if !brick[0].contains(&ia) {
+                    continue;
+                }
+                let wxa = qi * wa;
+                for (ib, wb) in iy.iter().zip(wy) {
+                    let ib = *ib as usize;
+                    if !brick[1].contains(&ib) {
+                        continue;
+                    }
+                    let w = wxa * wb;
+                    let row =
+                        acc_off + ((ia - brick[0].start) * ly + (ib - brick[1].start)) * lz;
+                    if zc {
+                        // intersect the contiguous z-run with the brick's
+                        // z slab (per-element arithmetic identical to the
+                        // global kernel)
+                        let zl = z0.max(brick[2].start);
+                        let zh = (z0 + p).min(brick[2].end);
+                        if zl < zh {
+                            zline_spread(
+                                &mut parts
+                                    [row + (zl - brick[2].start)..row + (zh - brick[2].start)],
+                                &wz[zl - z0..zh - z0],
+                                w,
+                            );
+                        }
+                    } else {
+                        for (ic, wc) in iz.iter().zip(wz) {
+                            let ic = *ic as usize;
+                            if !brick[2].contains(&ic) {
+                                continue;
+                            }
+                            parts[row + (ic - brick[2].start)] += w * wc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // fixed-order merge, ascending shard — the stage-1c arithmetic
+    for (t, m) in mesh_brick.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for sh in 0..nparts {
+            acc += parts[sh * bvol + t];
+        }
+        *m = C64::new(acc, 0.0);
+    }
+}
+
 /// True when a site's full 3-D stencil footprint lies inside the brick
 /// (no ghost reads needed for its gather).
 #[inline]
-fn stencil_inside(si: &[u32], o: usize, p: usize, brick: &[Range<usize>; 3]) -> bool {
+pub(crate) fn stencil_inside(si: &[u32], o: usize, p: usize, brick: &[Range<usize>; 3]) -> bool {
     (0..3).all(|d| {
         si[o + d * MAX_ORDER..o + d * MAX_ORDER + p]
             .iter()
@@ -1075,7 +1285,7 @@ fn stencil_inside(si: &[u32], o: usize, p: usize, brick: &[Range<usize>; 3]) -> 
 /// which is what makes the slab gather bit-identical to the global one
 /// when the halo payload is exact f64.
 #[inline]
-fn gather_site(
+pub(crate) fn gather_site(
     si: &[u32],
     sw: &[f64],
     o: usize,
@@ -1141,7 +1351,7 @@ fn ghost_roundtrip(v: f64, scale: f64, sat: &mut u64) -> f64 {
 /// the brick's per-component scale.  (Per-site arithmetic stays private,
 /// so thread-count determinism is unaffected.)
 #[inline]
-fn gather_site_ghost(
+pub(crate) fn gather_site_ghost(
     si: &[u32],
     sw: &[f64],
     o: usize,
@@ -1200,7 +1410,7 @@ fn gather_site_ghost(
 /// compiler auto-vectorizes; the `simd` feature dispatches to an explicit
 /// AVX kernel on x86_64 (bit-identical here — no reduction is involved).
 #[inline]
-fn zline_spread(seg: &mut [f64], wz: &[f64], w: f64) {
+pub(crate) fn zline_spread(seg: &mut [f64], wz: &[f64], w: f64) {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     if simd_x86::avx_available() {
         // Safety: AVX probed at runtime

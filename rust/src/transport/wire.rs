@@ -29,6 +29,15 @@ pub fn put_c64(buf: &mut Vec<u8>, v: C64) {
     put_f64(buf, v.im);
 }
 
+/// Append an `i128` as two little-endian `u64` halves (lo | hi) — used
+/// for the partition-invariant energy tick sums of the resident PPPM
+/// protocol, which must cross the wire exactly.
+pub fn put_i128(buf: &mut Vec<u8>, v: i128) {
+    let u = v as u128;
+    put_u64(buf, u as u64);
+    put_u64(buf, (u >> 64) as u64);
+}
+
 /// A cursor over a received payload with typed underrun errors.
 pub struct Reader<'a> {
     buf: &'a [u8],
@@ -89,6 +98,13 @@ impl<'a> Reader<'a> {
         Ok(C64 { re, im })
     }
 
+    /// Read an `i128` (two `u64` halves, lo | hi — exact round trip).
+    pub fn i128(&mut self) -> Result<i128, TransportError> {
+        let lo = self.u64()? as u128;
+        let hi = self.u64()? as u128;
+        Ok((lo | (hi << 64)) as i128)
+    }
+
     /// Require the payload to be fully consumed.
     pub fn finish(self) -> Result<(), TransportError> {
         if self.pos != self.buf.len() {
@@ -130,6 +146,19 @@ mod tests {
         let c = r.c64().unwrap();
         assert_eq!(c.re.to_bits(), 1e-300f64.to_bits());
         assert_eq!(c.im.to_bits(), f64::MAX.to_bits());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn i128_round_trip_is_exact() {
+        let mut buf = Vec::new();
+        for v in [0i128, -1, i128::MAX, i128::MIN, -(1i128 << 100), 42] {
+            put_i128(&mut buf, v);
+        }
+        let mut r = Reader::new(&buf, Peer::Coordinator, "test");
+        for v in [0i128, -1, i128::MAX, i128::MIN, -(1i128 << 100), 42] {
+            assert_eq!(r.i128().unwrap(), v);
+        }
         r.finish().unwrap();
     }
 

@@ -254,6 +254,80 @@ fn proc_worker_spawn_failure_is_a_build_error() {
 }
 
 #[test]
+fn valid_dist_proc_configuration_builds_and_reports_its_backend() {
+    // a sane torus spawns real resident workers at build() and records
+    // the backend; Drop reaps them (proc_fault.rs pins the no-zombie
+    // contract, this pins the happy path through the builder)
+    let _guard = ENV_LOCK.lock().unwrap();
+    let saved = std::env::var("DPLR_WORKER_BIN").ok();
+    std::env::set_var("DPLR_WORKER_BIN", env!("CARGO_BIN_EXE_dplr"));
+
+    let res = builder()
+        .threads(1)
+        .kspace(KspaceConfig::DistProc {
+            alpha: 0.3,
+            ranks: [2, 1, 1],
+            quantized: false,
+        })
+        .build();
+
+    match saved {
+        Some(v) => std::env::set_var("DPLR_WORKER_BIN", v),
+        None => std::env::remove_var("DPLR_WORKER_BIN"),
+    }
+
+    let sim = res.expect("valid dist-proc configuration must build");
+    assert_eq!(sim.kspace_name(), "dist-proc");
+    assert!(
+        sim.pppm_config().is_some(),
+        "dist-proc records its mesh config"
+    );
+}
+
+#[test]
+fn dist_matvec_cannot_be_combined_with_proc_at_the_cli() {
+    // the resident protocol executes the rank-local FFT fast path only;
+    // the O(n^2) --dist-matvec debug pipeline has no process-executed
+    // twin, so the CLI must refuse the combination up front
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_dplr"))
+        .args([
+            "run",
+            "--nmol",
+            "8",
+            "--steps",
+            "1",
+            "--kspace",
+            "dist",
+            "--proc",
+            "--dist-matvec",
+            "--ranks",
+            "2,1,1",
+        ])
+        .output()
+        .expect("run dplr");
+    assert!(!out.status.success(), "the flag combination must be fatal");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("cannot be combined with --dist-matvec"),
+        "unexpected stderr: {stderr}"
+    );
+
+    // malformed rank torus syntax dies in the same early parse
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_dplr"))
+        .args([
+            "run", "--nmol", "8", "--steps", "1", "--kspace", "dist", "--proc", "--ranks", "2,2",
+        ])
+        .output()
+        .expect("run dplr");
+    assert!(!out.status.success(), "a 2-component torus must be fatal");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("--ranks expects X,Y,Z"),
+        "unexpected stderr: {stderr}"
+    );
+}
+
+#[test]
 fn mts_zero_is_rejected_and_valid_strides_are_recorded() {
     let err = builder()
         .threads(1)

@@ -1,8 +1,14 @@
-//! Fault injection for the process-executed rank torus: a rank that dies
-//! or stalls mid-solve must surface as a typed [`TransportError`] naming
-//! the rank's torus coordinates within the watchdog timeout — never a
-//! deadlock — and child processes must be reaped (no zombies) on both
-//! the success and the failure paths.
+//! Fault injection for the process-executed rank torus under the
+//! **resident-brick** protocol: workers keep their mesh bricks across
+//! solves, so a rank that dies or stalls mid-solve must surface as a
+//! typed [`TransportError`] naming the rank's torus coordinates within
+//! the watchdog timeout — never a deadlock — and child processes must be
+//! reaped (no zombies) on both the success and the failure paths.
+//! Cross-step tests additionally pin the residency contract itself:
+//! geometry (`Setup`) crosses the wire once, per-solve traffic stays at
+//! site slabs + halos + force slabs (no full-mesh re-scatter), and the
+//! `--ring-quant` halo saturation counters match the emulated
+//! [`DistPppm`] path step for step.
 //!
 //! CI wraps this suite in a hard job timeout so a regression that *does*
 //! deadlock fails fast instead of hanging the runner.
@@ -10,7 +16,7 @@
 //! Runs from a clean checkout (synthetic seeded weights, no artifacts).
 
 use dplr::distpppm::process::{ProcOptions, ProcPppm, WorkerLauncher};
-use dplr::distpppm::RingPayload;
+use dplr::distpppm::{DistPppm, RingPayload};
 use dplr::pppm::PppmConfig;
 use dplr::transport::TransportErrorKind;
 use dplr::util::rng::Rng;
@@ -248,6 +254,87 @@ fn loopback_stall_injection_times_out_identically() {
         matches!(err.kind, TransportErrorKind::Timeout { .. }),
         "expected a timeout, got: {err}"
     );
+    solver.shutdown();
+}
+
+#[test]
+fn resident_bricks_survive_multi_step_trajectories_without_rescatter() {
+    // a 5-step drifting trajectory on the loopback transport: the brick
+    // geometry must cross the wire exactly once (36 B Setup per rank, no
+    // re-send on later solves), and every solve's coordinator↔worker
+    // payload must stay at site-slab + halo + force-slab scale — far
+    // below the full-mesh scatter/gather a non-resident protocol pays
+    let (mut pos, q, box_len) = test_sites(48, 47);
+    let mut solver = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        [2, 1, 1],
+        RingPayload::F64,
+        &WorkerLauncher::InProcess,
+        &ProcOptions::default(),
+    )
+    .expect("spawn loopback");
+    // full-mesh baseline: 4 transforms x 2 directions x 16 B x 12*18*12
+    let full_mesh = 4 * 2 * 16 * (12 * 18 * 12) as u64;
+    let mut setup_after_first = 0;
+    for step in 0..5u64 {
+        solver.energy_forces(&pos, &q).expect("healthy solve");
+        let t = solver.traffic();
+        assert_eq!(t.solves, step + 1);
+        if step == 0 {
+            // one 36-byte Setup frame per rank, sent exactly once
+            assert_eq!(t.setup, 36 * 2, "unexpected setup bytes");
+            setup_after_first = t.setup;
+        } else {
+            assert_eq!(
+                t.setup, setup_after_first,
+                "brick geometry was re-scattered on solve {step}"
+            );
+        }
+        assert!(t.sites > 0 && t.halo > 0 && t.forces > 0);
+        let per_solve = (t.sites + t.control + t.halo + t.forces) / t.solves;
+        assert!(
+            per_solve * 2 < full_mesh,
+            "per-solve traffic {per_solve} B is not slab-scale \
+             (full mesh would be {full_mesh} B)"
+        );
+        for r in pos.iter_mut() {
+            r[0] += 0.01; // drift so every solve re-bins fresh slabs
+        }
+    }
+    solver.shutdown();
+}
+
+#[test]
+fn quantized_halo_saturations_match_emulated_across_steps() {
+    // --ring-quant residency contract: the rank-resident workers count
+    // int32 saturation events (ring lanes + quantized halo gather) with
+    // exactly the emulated DistPppm's granularity, so the cumulative
+    // counters must agree after every solve of a drifting trajectory
+    let (mut pos, q, box_len) = test_sites(40, 48);
+    let ranks = [2, 3, 1];
+    let mut emu = DistPppm::new(cfg(), box_len, ranks, RingPayload::PackedI32);
+    let mut solver = ProcPppm::spawn(
+        cfg(),
+        box_len,
+        ranks,
+        RingPayload::PackedI32,
+        &WorkerLauncher::InProcess,
+        &ProcOptions::default(),
+    )
+    .expect("spawn loopback");
+    for step in 0..3 {
+        emu.energy_forces(&pos, &q);
+        solver.energy_forces(&pos, &q).expect("healthy solve");
+        assert_eq!(
+            emu.saturations(),
+            solver.saturations(),
+            "saturation counters diverged from the emulated path at solve {step}"
+        );
+        for r in pos.iter_mut() {
+            r[0] += 0.01;
+        }
+    }
     solver.shutdown();
 }
 

@@ -1,7 +1,10 @@
-//! Cross-process bit-parity of the executed rank torus
+//! Cross-process bit-parity of the **rank-resident** executed torus
 //! (`--kspace dist --proc`, `distpppm::process::ProcPppm`): real spawned
-//! `dplr rank-worker` processes exchanging ring payloads over the
-//! Unix-socket transport must reproduce the PR-5 contracts *exactly*:
+//! `dplr rank-worker` processes keep their mesh bricks resident across
+//! solves — spread, Poisson/ik and gather all run rank-side, and only
+//! site slabs, ring frames, ghost halos and force slabs cross the
+//! Unix-socket transport.  The suite must hold the PR-5 contracts
+//! *exactly*:
 //!
 //!  * exact-f64 rings are **bit-identical** to serial `--kspace pppm`
 //!    (and therefore to the in-process emulated `--kspace dist`) at every
@@ -12,7 +15,10 @@
 //!    within Table-1 scale tolerances;
 //!  * a propcheck over random small tori (the `dist_parity.rs`
 //!    generators, shrunk to spawnable sizes) holds the f64 contract on
-//!    the loopback transport, which runs the identical worker code.
+//!    the loopback transport, which runs the identical worker code — and
+//!    a second propcheck crosses random tori with spline orders and the
+//!    `{water, nacl, slab}` scenario site sets against *both* the host
+//!    solver and the emulated `DistPppm`.
 //!
 //! The CI `proc-parity` step runs this suite under `DPLR_THREADS=1` and
 //! `3`; the spawned-process tests set `DPLR_WORKER_BIN` to the real
@@ -75,6 +81,15 @@ fn water_sites(nmol: usize, seed: u64) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
         q.push(Q_WC);
     }
     (pos, q, sys.box_len)
+}
+
+/// Solver-level site set from a scenario system: positions + DPLR ionic
+/// charges.  Parity needs identical inputs on every solver, not the
+/// engine's full Wannier pipeline.
+fn scenario_sites(spec: &str) -> (Vec<[f64; 3]>, Vec<f64>, [f64; 3]) {
+    let sys = scenario::build(spec, NMOL, 21).expect("scenario build");
+    let q = (0..sys.natoms()).map(|i| sys.ionic_charge(i)).collect();
+    (sys.pos.clone(), q, sys.box_len)
 }
 
 fn make_sim_for(spec: &str, kspace: KspaceConfig) -> Simulation {
@@ -244,6 +259,65 @@ fn quantized_process_ring_tracks_the_emulated_quantized_solver() {
         }
     }
     proc_solver.shutdown();
+}
+
+#[test]
+fn f64_contract_propchecked_over_tori_orders_and_scenarios() {
+    // the resident pipeline's full bit-parity surface: random torus x
+    // spline order x scenario site set, each case checked against the
+    // host solver AND the emulated DistPppm (identical arithmetic, two
+    // very different executions).  Loopback workers keep it fast; the
+    // fixed spawned tori above pin the real-process deployment.
+    let fixtures: Vec<(&str, (Vec<[f64; 3]>, Vec<f64>, [f64; 3]))> = ["water", "nacl", "slab"]
+        .iter()
+        .map(|&s| (s, scenario_sites(s)))
+        .collect();
+    check(
+        0xA11E,
+        8,
+        |r: &mut Rng| {
+            (
+                [1 + r.below(3), 1 + r.below(3), 1 + r.below(2)],
+                3 + r.below(3), // spline order in 3..=5 (grid 12 fits all)
+                r.below(fixtures.len()),
+            )
+        },
+        |&(ranks, order, fi)| {
+            let (spec, (pos, q, box_len)) = &fixtures[fi];
+            let box_len = *box_len;
+            let cfg = PppmConfig::new([12, 18, 12], order, ALPHA);
+            let label = format!("{spec} order {order} ranks {ranks:?}");
+            let mut host = Pppm::new(cfg.clone(), box_len);
+            let (e_ref, f_ref) = host.energy_forces(pos, q);
+            let mut emu = DistPppm::new(cfg.clone(), box_len, ranks, RingPayload::F64);
+            let (e_emu, f_emu) = emu.energy_forces(pos, q);
+            let mut solver = ProcPppm::spawn(
+                cfg,
+                box_len,
+                ranks,
+                RingPayload::F64,
+                &WorkerLauncher::InProcess,
+                &ProcOptions::default(),
+            )
+            .map_err(|e| format!("spawn {label}: {e}"))?;
+            let (e, f) = solver
+                .energy_forces(pos, q)
+                .map_err(|e| format!("solve {label}: {e}"))?;
+            for (what, (eo, fo)) in [("host", (e_ref, &f_ref)), ("emulated", (e_emu, &f_emu))] {
+                if e.to_bits() != eo.to_bits() {
+                    return Err(format!("{label}: energy vs {what}: {e} vs {eo}"));
+                }
+                for (i, (a, b)) in fo.iter().zip(&f).enumerate() {
+                    for d in 0..3 {
+                        if a[d].to_bits() != b[d].to_bits() {
+                            return Err(format!("{label}: force[{i}][{d}] vs {what}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

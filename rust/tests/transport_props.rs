@@ -9,6 +9,8 @@
 //! The `transport` module's unit tests pin the same rejections on the
 //! loopback impl; this suite is the cross-impl and randomized coverage.
 
+use dplr::distpppm::process::{TAG_FORCES, TAG_HALO, TAG_SETUP, TAG_SITES};
+use dplr::transport::wire::{put_f64, put_i128, put_u32, put_u64, Reader};
 use dplr::transport::{
     loopback_pair, Conn, FramedStream, Peer, TransportErrorKind, FRAME_MAGIC, HEADER_LEN,
     MAX_FRAME,
@@ -234,6 +236,277 @@ fn unix_dead_peer_reads_as_closed_at_frame_boundary() {
     let err = rx.recv().expect_err("EOF must be typed");
     assert_eq!(err.kind, TransportErrorKind::Closed);
     assert!(err.to_string().contains("rank (2, 2, 2)"), "{err}");
+}
+
+/// Random resident-protocol slabs mirroring the exact wire layouts of
+/// the rank-resident PPPM tags: a `Sites` slab (12 B header + 36 B/row,
+/// strictly ascending gids), a `Forces` slab (28 B header — i128 energy
+/// ticks, saturation count, row count — + 24 B/row) and a `Halo` shell
+/// (24 B/ghost point).
+#[allow(clippy::type_complexity)]
+fn gen_resident_slabs(
+    r: &mut Rng,
+) -> (
+    u64,
+    Vec<(u32, [f64; 3], f64)>,
+    i128,
+    u64,
+    Vec<[f64; 3]>,
+    Vec<[f64; 3]>,
+) {
+    let f3 = |r: &mut Rng| {
+        [
+            r.range(-10.0, 10.0),
+            r.range(-10.0, 10.0),
+            r.range(-10.0, 10.0),
+        ]
+    };
+    let mut gid = 0u32;
+    let sites: Vec<(u32, [f64; 3], f64)> = (0..r.below(24))
+        .map(|_| {
+            gid += 1 + r.below(5) as u32;
+            let p = f3(r);
+            (gid, p, if gid % 2 == 0 { 1.0 } else { -1.0 })
+        })
+        .collect();
+    let nsites_total = gid as u64 + 1 + r.below(8) as u64;
+    let ticks =
+        (r.below(1 << 40) as i128 - (1i128 << 39)) * ((1i128 << 30) + r.below(1 << 20) as i128);
+    let sat = r.below(1 << 20) as u64;
+    let forces: Vec<[f64; 3]> = (0..r.below(24)).map(|_| f3(r)).collect();
+    let ghosts: Vec<[f64; 3]> = (0..r.below(16)).map(|_| f3(r)).collect();
+    (nsites_total, sites, ticks, sat, forces, ghosts)
+}
+
+#[test]
+fn fuzz_resident_slabs_survive_chaos_chunking_bit_exactly() {
+    // the rank-resident protocol's payloads — site slabs in, force slabs
+    // and halo shells back — must survive adversarial fragmentation
+    // bit-exactly: encode with the wire helpers, trickle through the
+    // chaos stream, decode with the typed Reader, require a clean
+    // finish().  f64 comparisons are on the bit pattern, as the
+    // coordinator's are.
+    check(0x7A5A, 16, gen_resident_slabs, |case| {
+        let (nsites_total, sites, ticks, sat, forces, ghosts) = case;
+        let chaos = ChaosStream::new(0xC4A06);
+        let mut fs = FramedStream::new(chaos, Peer::Rank([1, 0, 2]));
+
+        let mut body = Vec::new();
+        put_u64(&mut body, *nsites_total);
+        put_u32(&mut body, sites.len() as u32);
+        for (gid, p, q) in sites {
+            put_u32(&mut body, *gid);
+            for &x in p {
+                put_f64(&mut body, x);
+            }
+            put_f64(&mut body, *q);
+        }
+        fs.send(TAG_SITES, &body).map_err(|e| format!("sites: {e}"))?;
+
+        body.clear();
+        for p in ghosts {
+            for &x in p {
+                put_f64(&mut body, x);
+            }
+        }
+        fs.send(TAG_HALO, &body).map_err(|e| format!("halo: {e}"))?;
+
+        body.clear();
+        put_i128(&mut body, *ticks);
+        put_u64(&mut body, *sat);
+        put_u32(&mut body, forces.len() as u32);
+        for f in forces {
+            for &x in f {
+                put_f64(&mut body, x);
+            }
+        }
+        fs.send(TAG_FORCES, &body).map_err(|e| format!("forces: {e}"))?;
+
+        let pl = fs.recv_expect(TAG_SITES).map_err(|e| e.to_string())?;
+        let mut r = Reader::new(&pl, Peer::Rank([1, 0, 2]), "site scatter");
+        let dec = |e: dplr::transport::TransportError| e.to_string();
+        if r.u64().map_err(dec)? != *nsites_total {
+            return Err("nsites_total mismatch".into());
+        }
+        let n = r.u32().map_err(dec)? as usize;
+        if n != sites.len() {
+            return Err(format!("row count {n} != {}", sites.len()));
+        }
+        let mut last = None;
+        for (gid, p, q) in sites {
+            let g = r.u32().map_err(dec)?;
+            if g != *gid || last.is_some_and(|l| g <= l) {
+                return Err(format!("gid {g} != {gid} (or not ascending)"));
+            }
+            last = Some(g);
+            for &x in p {
+                if r.f64().map_err(dec)?.to_bits() != x.to_bits() {
+                    return Err("site position bits changed".into());
+                }
+            }
+            if r.f64().map_err(dec)?.to_bits() != q.to_bits() {
+                return Err("charge bits changed".into());
+            }
+        }
+        r.finish().map_err(dec)?;
+
+        let pl = fs.recv_expect(TAG_HALO).map_err(|e| e.to_string())?;
+        if pl.len() != 24 * ghosts.len() {
+            return Err(format!("halo shell {} B != {}", pl.len(), 24 * ghosts.len()));
+        }
+        let mut r = Reader::new(&pl, Peer::Rank([1, 0, 2]), "halo exchange");
+        for p in ghosts {
+            for &x in p {
+                if r.f64().map_err(dec)?.to_bits() != x.to_bits() {
+                    return Err("ghost point bits changed".into());
+                }
+            }
+        }
+        r.finish().map_err(dec)?;
+
+        let pl = fs.recv_expect(TAG_FORCES).map_err(|e| e.to_string())?;
+        let mut r = Reader::new(&pl, Peer::Rank([1, 0, 2]), "force gather");
+        if r.i128().map_err(dec)? != *ticks {
+            return Err("energy ticks changed".into());
+        }
+        if r.u64().map_err(dec)? != *sat || r.u32().map_err(dec)? as usize != forces.len() {
+            return Err("forces header mismatch".into());
+        }
+        for f in forces {
+            for &x in f {
+                if r.f64().map_err(dec)?.to_bits() != x.to_bits() {
+                    return Err("force bits changed".into());
+                }
+            }
+        }
+        r.finish().map_err(dec)
+    });
+}
+
+#[test]
+fn sites_slab_claiming_more_rows_than_payload_is_rejected() {
+    // a Sites frame whose 12-byte header promises rows the payload does
+    // not carry must surface as a typed Protocol underrun naming the
+    // rank and phase — never a wild read
+    let mut body = Vec::new();
+    put_u64(&mut body, 8); // nsites_total
+    put_u32(&mut body, 5); // claims 5 touching rows...
+    put_u32(&mut body, 3); // ...but carries one gid and half a position
+    put_f64(&mut body, 1.25);
+    let mut r = Reader::new(&body, Peer::Rank([1, 0, 0]), "site scatter");
+    assert_eq!(r.u64().unwrap(), 8);
+    let n = r.u32().unwrap() as usize;
+    assert_eq!(n, 5);
+    let mut err = None;
+    'rows: for _ in 0..n {
+        for step in 0..5 {
+            let res = if step == 0 {
+                r.u32().map(|_| ())
+            } else {
+                r.f64().map(|_| ())
+            };
+            if let Err(e) = res {
+                err = Some(e);
+                break 'rows;
+            }
+        }
+    }
+    let err = err.expect("truncated slab must not decode");
+    assert!(
+        matches!(err.kind, TransportErrorKind::Protocol { .. }),
+        "{err}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("underrun"), "{msg}");
+    assert!(msg.contains("rank (1, 0, 0)"), "{msg}");
+    assert!(msg.contains("site scatter"), "{msg}");
+}
+
+#[test]
+fn halo_shell_with_a_dangling_partial_point_is_rejected_on_finish() {
+    // ghost points are 24 B each; a shell with trailing bytes decodes
+    // its whole points and then fails finish() with a typed overrun
+    let mut body = Vec::new();
+    for i in 0..7 {
+        put_f64(&mut body, i as f64);
+    }
+    let mut r = Reader::new(&body, Peer::Rank([0, 1, 0]), "halo exchange");
+    while r.remaining() >= 24 {
+        for _ in 0..3 {
+            r.f64().expect("whole points decode");
+        }
+    }
+    let err = r.finish().expect_err("8 trailing bytes must be rejected");
+    assert!(
+        matches!(err.kind, TransportErrorKind::Protocol { .. }),
+        "{err}"
+    );
+    assert!(err.to_string().contains("8 trailing bytes"), "{err}");
+}
+
+#[test]
+fn force_slab_truncated_by_worker_death_reports_missing_bytes() {
+    // a worker dying mid-Forces leaves the frame short on the socket:
+    // the framing layer must type it as Truncated with the byte deficit
+    // (the solve's phase/rank context is added by the coordinator)
+    let (a, b) = UnixStream::pair().expect("socketpair");
+    {
+        let mut raw = a;
+        let claimed = (28 + 24 * 10) as u64;
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        header[4..8].copy_from_slice(&TAG_FORCES.to_le_bytes());
+        header[8..16].copy_from_slice(&claimed.to_le_bytes());
+        raw.write_all(&header).unwrap();
+        raw.write_all(&[0u8; 28]).unwrap(); // header row only, no forces
+    }
+    let mut rx = FramedStream::new(Conn::Unix(b), Peer::Rank([2, 0, 1]));
+    let err = rx.recv().expect_err("short force slab must be rejected");
+    assert!(
+        matches!(err.kind, TransportErrorKind::Truncated { missing } if missing == 240),
+        "{err}"
+    );
+    assert!(err.to_string().contains("rank (2, 0, 1)"), "{err}");
+}
+
+#[test]
+fn setup_frame_shorter_than_geometry_is_rejected() {
+    // Setup is exactly 36 B (order + alpha + box); a short one must be a
+    // typed underrun before any field is trusted
+    let mut body = Vec::new();
+    put_u32(&mut body, 5);
+    put_f64(&mut body, 0.3); // alpha, then the box is missing entirely
+    let mut r = Reader::new(&body, Peer::Coordinator, "setup");
+    assert_eq!(r.u32().unwrap(), 5);
+    assert_eq!(r.f64().unwrap(), 0.3);
+    let err = (0..3)
+        .find_map(|_| r.f64().err())
+        .expect("missing box must not decode");
+    assert!(
+        matches!(err.kind, TransportErrorKind::Protocol { .. }),
+        "{err}"
+    );
+    assert!(err.to_string().contains("underrun"), "{err}");
+    // the sane frame, for contrast, round-trips under its real tag and
+    // decodes cleanly through finish()
+    let mut body = Vec::new();
+    put_u32(&mut body, 5);
+    put_f64(&mut body, 0.3);
+    for &l in &[9.3, 11.1, 9.3] {
+        put_f64(&mut body, l);
+    }
+    assert_eq!(body.len(), 36, "Setup is a fixed 36-byte frame");
+    let (a, b) = loopback_pair();
+    let mut tx = FramedStream::new(Conn::Loopback(a), Peer::Rank([0, 0, 0]));
+    let mut rx = FramedStream::new(Conn::Loopback(b), Peer::Coordinator);
+    tx.send(TAG_SETUP, &body).expect("send setup");
+    let pl = rx.recv_expect(TAG_SETUP).expect("recv setup");
+    let mut r = Reader::new(&pl, Peer::Coordinator, "setup");
+    assert_eq!(r.u32().unwrap(), 5);
+    for want in [0.3, 9.3, 11.1, 9.3] {
+        assert_eq!(r.f64().unwrap().to_bits(), want.to_bits());
+    }
+    r.finish().expect("exact Setup frame must finish clean");
 }
 
 #[test]

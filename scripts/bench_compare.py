@@ -194,12 +194,15 @@ def main() -> int:
         refresh_cmd = ("python3 scripts/refresh_baseline.py --baseline "
                        f"{args.baseline} {' '.join(args.inputs)}")
         print("[bench-compare] key delta vs baseline (all benches, one "
-              "pass).  Refresh the wall-time sections by running the "
+              "pass).  Every key below is an UN-GATED WALL-TIME key "
+              "(deterministic keys fail above instead of landing here) — "
+              "e.g. the fig8 measured_proc_resident_* family stays in this "
+              "state until baselined.  Refresh by running the "
               "bench-baseline workflow_dispatch job on the reference "
               "runner, or locally with exactly:")
         print(f"  {refresh_cmd}")
         for key in missing_in_baseline:
-            print(f"  missing in baseline: {key}")
+            print(f"  missing in baseline (un-gated wall key): {key}")
         for key in stale_in_baseline:
             print(f"  stale in baseline (no longer emitted): {key}")
     if faster:
